@@ -1,0 +1,49 @@
+//! Quickstart: the paper's Listing 2 / `SVM_Example.ipynb` — tune an
+//! RBF-SVM's (C, gamma) on the wine dataset with the default serial
+//! scheduler and the PJRT (AOT JAX+Pallas) surrogate.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mango::ml::cv::cross_val_accuracy;
+use mango::ml::svm::SvmClassifier;
+use mango::ml::wine::default_wine;
+use mango::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Hyperparameter search space (Listing 2: uniform C, loguniform gamma).
+    let space = SearchSpace::builder()
+        .uniform("c", 0.01, 100.0)
+        .loguniform("gamma", 1e-4, 1e3)
+        .build();
+
+    // 2. Objective: 3-fold CV accuracy on wine (fixed folds across configs).
+    let data = default_wine();
+    let objective = move |cfg: &Config| {
+        let svm = SvmClassifier::from_config(cfg);
+        let (c, g) = (svm.c, svm.gamma);
+        Some(cross_val_accuracy(&data, 3, 1234, move || SvmClassifier::new(c, g)))
+    };
+
+    // 3. Tuner: 30 iterations of serial GP-UCB through the AOT artifacts.
+    let config = TunerConfig {
+        num_iterations: 30,
+        optimizer: OptimizerKind::Hallucination,
+        backend: SurrogateBackend::Pjrt,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut tuner = Tuner::new(space, config).with_callback(|rec| {
+        println!(
+            "iter {:>2}: best CV accuracy so far = {:.4} ({:.0} ms)",
+            rec.iteration + 1,
+            rec.best_so_far,
+            rec.wall_ms
+        );
+    });
+    let result = tuner.maximize(objective)?;
+
+    println!("\nbest accuracy: {:.4}", result.best_objective);
+    println!("best params:   {}", result.best_params);
+    println!("evaluations:   {}", result.evaluations);
+    Ok(())
+}

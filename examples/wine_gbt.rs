@@ -1,0 +1,51 @@
+//! Fig. 2 workload, single run: tune the GBT classifier (XGBoost
+//! substitute) on wine over the paper's Listing 1 space, parallel batch of
+//! 5 on the threaded scheduler.
+//!
+//! Run: `cargo run --release --example wine_gbt`
+
+use mango::exp::workloads;
+use mango::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let workload = workloads::by_name("wine_gbt").expect("registered workload");
+    println!(
+        "search space: {} params, ~{:.0e} configurations (paper §1)",
+        workload.space.len(),
+        workload.space.cardinality_estimate()
+    );
+
+    let config = TunerConfig {
+        batch_size: 5,
+        num_iterations: 30,
+        optimizer: OptimizerKind::Hallucination,
+        scheduler: SchedulerKind::Threaded,
+        workers: 5, // paper: max parallelism = batch size
+        backend: SurrogateBackend::Pjrt,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut tuner = Tuner::new(workload.space.clone(), config).with_callback(|rec| {
+        if (rec.iteration + 1) % 5 == 0 {
+            println!(
+                "batch {:>2}: best CV accuracy = {:.4} ({} evals returned, {:.0} ms)",
+                rec.iteration + 1,
+                rec.best_so_far,
+                rec.returned,
+                rec.wall_ms
+            );
+        }
+    });
+    let obj = workload.objective.clone();
+    let result = tuner.maximize(move |cfg| obj(cfg))?;
+
+    println!("\nbest CV accuracy: {:.4}", result.best_objective);
+    println!("best hyperparameters: {}", result.best_params);
+    println!(
+        "evaluations: {} over {} batches, wall {:.1}s",
+        result.evaluations,
+        result.iterations.len(),
+        result.wall_ms / 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT-lower the L2 GP programs to HLO text for the Rust PJRT runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs one file per (program, n) variant plus a manifest the Rust runtime
+reads to pick shapes:
+
+  artifacts/gp_fit_n{N}.hlo.txt
+  artifacts/gp_acquire_n{N}.hlo.txt
+  artifacts/manifest.json
+
+Run via ``make artifacts`` (never on the request path).
+"""
+
+import argparse
+import json
+import os
+import re
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def check_no_custom_calls(text: str, name: str) -> None:
+    """The whole point of compile/linalg.py: nothing jaxlib-specific inside."""
+    hits = set(re.findall(r'custom_call_target="([^"]+)"', text))
+    if hits:
+        raise RuntimeError(f"{name}: HLO contains custom-calls {hits}; "
+                           "these cannot run on the standalone PJRT client")
+
+
+def lower_all(out_dir: str) -> dict:
+    manifest = {
+        "max_dim": model.MAX_DIM,
+        "m_cand": model.M_CAND,
+        "n_variants": list(model.N_VARIANTS),
+        "programs": {},
+    }
+    for n in model.N_VARIANTS:
+        fit = jax.jit(model.gp_fit).lower(*model.fit_spec(n))
+        fit_text = to_hlo_text(fit)
+        check_no_custom_calls(fit_text, f"gp_fit_n{n}")
+        fit_path = f"gp_fit_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, fit_path), "w") as f:
+            f.write(fit_text)
+
+        acq = jax.jit(model.gp_acquire).lower(*model.acquire_spec(n))
+        acq_text = to_hlo_text(acq)
+        check_no_custom_calls(acq_text, f"gp_acquire_n{n}")
+        acq_path = f"gp_acquire_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, acq_path), "w") as f:
+            f.write(acq_text)
+
+        manifest["programs"][str(n)] = {"fit": fit_path, "acquire": acq_path}
+        print(f"n={n}: wrote {fit_path} ({len(fit_text)} chars), "
+              f"{acq_path} ({len(acq_text)} chars)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = lower_all(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernel: ARD-RBF pairwise kernel matrix.
+
+The GP surrogate's compute hot-spot is the pairwise kernel matrix
+``k(X1, X2)[i, j] = exp(-0.5 * ||x1_i - x2_j||^2)`` over *lengthscale-scaled*
+inputs.  We compute it tiled with the classic decomposition
+
+    ||a - b||^2 = ||a||^2 + ||b||^2 - 2 <a, b>
+
+so the inner-product term is a single ``dot_general`` that maps onto the MXU
+systolic array on a real TPU.  Tiles are sized for VMEM: with the default
+(128, 128) blocks over D<=16 features, the three resident blocks are
+128*16*4 B + 128*16*4 B + 128*128*4 B ~= 80 KiB, far under the ~16 MiB VMEM
+budget; ``BlockSpec`` expresses the HBM<->VMEM schedule over the (i, j) grid.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers the kernel to plain
+HLO ops that embed in the surrounding jitted computation (see
+DESIGN.md section "Hardware-Adaptation").
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge.  128 matches both the MXU systolic dimension and the
+# f32 VMEM tiling granularity (8, 128) on TPU.
+BLOCK = 128
+
+
+def _rbf_block_kernel(x_ref, z_ref, o_ref):
+    """One (bn, bm) output tile of the RBF kernel matrix.
+
+    x_ref: (bn, d) lengthscale-scaled rows, resident in VMEM.
+    z_ref: (bm, d) lengthscale-scaled columns, resident in VMEM.
+    o_ref: (bn, bm) output tile.
+    """
+    x = x_ref[...]
+    z = z_ref[...]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)          # (bn, 1)
+    zz = jnp.sum(z * z, axis=1, keepdims=True).T        # (1, bm)
+    # The MXU-shaped term: contract the feature dimension of both operands.
+    cross = jax.lax.dot_general(
+        x,
+        z,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (bn, bm)
+    sq = jnp.maximum(xx + zz - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-0.5 * sq)
+
+
+def _block_edge(n: int) -> int:
+    """Largest tile edge <= BLOCK that divides n (shapes here are powers of 2)."""
+    b = min(n, BLOCK)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def rbf_matrix(x_scaled: jax.Array, z_scaled: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Pairwise RBF correlation matrix over lengthscale-scaled inputs.
+
+    Args:
+      x_scaled: (n, d) float32, rows already divided by per-dim lengthscales.
+      z_scaled: (m, d) float32.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (n, m) float32 with entries exp(-0.5 * ||x_i - z_j||^2).
+    """
+    n, d = x_scaled.shape
+    m, d2 = z_scaled.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    bn = _block_edge(n)
+    bm = _block_edge(m)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        _rbf_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x_scaled, z_scaled)

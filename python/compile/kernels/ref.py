@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the HLO linalg.
+
+These are the reference implementations the pytest suite compares against:
+no Pallas, no custom loops — the most obviously-correct spelling of each
+computation.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def rbf_matrix_ref(x_scaled, z_scaled):
+    """O(n*m*d) dense reference for the RBF correlation matrix."""
+    diff = x_scaled[:, None, :] - z_scaled[None, :, :]
+    sq = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(-0.5 * sq)
+
+
+def gp_posterior_ref(x, y, mask, xc, inv_ls, amp, noise, beta):
+    """Reference GP posterior + UCB with masking semantics.
+
+    Identical contract to model.gp_fit + model.gp_acquire composed:
+    masked rows contribute nothing, K gets identity rows in their place.
+    Uses jax.scipy (LAPACK-backed) — fine for tests, not AOT-exportable.
+    """
+    xs = x * inv_ls[None, :]
+    xcs = xc * inv_ls[None, :]
+    m2 = mask[:, None] * mask[None, :]
+    k = amp * rbf_matrix_ref(xs, xs) * m2 + jnp.diag(noise * mask + (1.0 - mask))
+    l = jnp.linalg.cholesky(k)
+    kc = amp * rbf_matrix_ref(xs, xcs) * mask[:, None]
+    ym = y * mask
+    alpha = jsl.cho_solve((l, True), ym)
+    mean = kc.T @ alpha
+    v = jsl.solve_triangular(l, kc, lower=True)
+    var = jnp.maximum(amp - jnp.sum(v * v, axis=0), 1e-10)
+    ucb = mean + beta * jnp.sqrt(var)
+    return ucb, mean, var

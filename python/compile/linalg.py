@@ -1,0 +1,245 @@
+"""Pure-HLO dense linear algebra for the AOT path.
+
+Why this exists: on CPU, ``jnp.linalg.cholesky`` / ``solve_triangular`` lower
+to LAPACK *custom-calls* (``lapack_spotrf_ffi``, ``lapack_strsm_ffi``) that
+are registered by jaxlib — the standalone xla_extension 0.5.1 used by the
+Rust PJRT client cannot execute them.  These implementations use only core
+HLO ops (while, gather, scatter, dot), so the lowered module round-trips
+through HLO text and runs anywhere.
+
+Algorithms are the vectorized column forms: each ``fori_loop`` iteration is
+O(n) or O(n*m) dense work, so XLA compiles the loop body to tight native
+code and the total cost matches the classic O(n^3) / O(n^2 m) counts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Panel width for the blocked algorithms. All artifact variants are
+# multiples of 64; other sizes fall back to the unblocked loops.
+BLOCK = 64
+
+
+def cholesky_lower_unblocked(a: jax.Array) -> jax.Array:
+    """Lower-triangular Cholesky factor, one column per loop step.
+
+    Column-by-column Cholesky–Banachiewicz: at step j the first j columns of
+    ``l`` hold the final factor and the rest are zero, so the update
+    ``v = a[:, j] - l @ l[j, :]`` needs no masking beyond zeroing the
+    not-yet-written columns (they already are zero).
+
+    Diagonal entries are clamped at 1e-12 before the sqrt so padded /
+    near-singular inputs degrade gracefully instead of producing NaNs.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n)
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        lj = l[j, :]                       # row j: cols < j are final, >= j are 0
+        v = a[:, j] - l @ lj               # (n,)
+        d = jnp.sqrt(jnp.maximum(v[j], 1e-12))
+        col = jnp.where(idx > j, v / d, 0.0)
+        col = col.at[j].set(d)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def _chol_block(a: jax.Array) -> jax.Array:
+    """Unrolled Cholesky of one (BLOCK x BLOCK) diagonal panel.
+
+    Indices are Python ints, so this traces to straight-line HLO with static
+    slices — no while loop, XLA fuses it aggressively.
+    """
+    b = a.shape[0]
+    idx = jnp.arange(b)
+    l = jnp.zeros_like(a)
+    for j in range(b):
+        lj = l[j, :]
+        v = a[:, j] - l @ lj
+        d = jnp.sqrt(jnp.maximum(v[j], 1e-12))
+        col = jnp.where(idx > j, v / d, 0.0)
+        col = col.at[j].set(d)
+        l = l.at[:, j].set(col)
+    return l
+
+
+def _solve_right_lower_t(ark: jax.Array, lkk: jax.Array) -> jax.Array:
+    """Solve X @ Lkk^T = Ark for X (Ark: (r, b), Lkk lower-tri (b, b)).
+
+    Unrolled forward substitution over the b panel columns; each step is a
+    dense (r x j) @ (j,) matvec — MXU-shaped work, not gathers.
+    """
+    b = lkk.shape[0]
+    cols = []
+    for j in range(b):
+        acc = ark[:, j]
+        if j > 0:
+            x_prev = jnp.stack(cols, axis=1)       # (r, j)
+            acc = acc - x_prev @ lkk[j, :j]
+        cols.append(acc / lkk[j, j])
+    return jnp.stack(cols, axis=1)
+
+
+def cholesky_lower_blocked(a: jax.Array, jitter: float = 0.0) -> jax.Array:
+    """Blocked right-looking Cholesky (panel BLOCK), core HLO ops only.
+
+    Per panel: factor the diagonal block (straight-line), solve the
+    sub-diagonal panel against it, then one dense trailing update
+    ``A22 -= X X^T`` — the O(n³) bulk lands in dense XLA dot ops.
+
+    §Perf NOTE: this is the right shape for a *real TPU* (MXU matmuls,
+    compile once, cache). On the CPU testbed the straight-line unrolling
+    inflates the n=512 HLO to ~5 MB and costs ~2 min of PJRT compilation,
+    while the while-loop version executes within ~2-3x of it — so the AOT
+    artifacts use [`cholesky_lower`] (the loop form). Kept and tested as
+    the documented TPU lowering (see EXPERIMENTS.md §Perf iteration log).
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n)
+    if jitter:
+        a = a + jitter * jnp.eye(n, dtype=a.dtype)
+    if n % BLOCK != 0 or n <= BLOCK:
+        return cholesky_lower_unblocked(a)
+
+    l = jnp.zeros_like(a)
+    work = a
+    for k in range(0, n, BLOCK):
+        akk = jax.lax.dynamic_slice(work, (k, k), (BLOCK, BLOCK))
+        lkk = _chol_block(akk)
+        l = jax.lax.dynamic_update_slice(l, lkk, (k, k))
+        rest = n - k - BLOCK
+        if rest > 0:
+            ark = jax.lax.dynamic_slice(work, (k + BLOCK, k), (rest, BLOCK))
+            x = _solve_right_lower_t(ark, lkk)      # (rest, BLOCK)
+            l = jax.lax.dynamic_update_slice(l, x, (k + BLOCK, k))
+            att = jax.lax.dynamic_slice(work, (k + BLOCK, k + BLOCK), (rest, rest))
+            att = att - x @ x.T
+            work = jax.lax.dynamic_update_slice(work, att, (k + BLOCK, k + BLOCK))
+    return l
+
+
+def solve_lower_unblocked(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L x = b by forward substitution (L lower-triangular, b (n, m)).
+
+    Invariant: before step i, rows >= i of x are zero, so ``l[i, :] @ x``
+    only picks up the already-computed prefix (entries of l above the
+    diagonal are zero by construction).
+    """
+    n = l.shape[0]
+
+    def body(i, x):
+        xi = (b[i, :] - l[i, :] @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def solve_lower_t_unblocked(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L^T x = b by back substitution (b (n, m))."""
+    n = l.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (b[i, :] - l[:, i] @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _solve_panel_lower(lkk: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Solve Lkk X = rhs within one (BLOCK x BLOCK) panel, unrolled."""
+    rows = []
+    for i in range(lkk.shape[0]):
+        acc = rhs[i, :]
+        if i > 0:
+            x_prev = jnp.stack(rows, axis=0)        # (i, m)
+            acc = acc - lkk[i, :i] @ x_prev
+        rows.append(acc / lkk[i, i])
+    return jnp.stack(rows, axis=0)
+
+
+def _solve_panel_lower_t(lkk: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Solve Lkk^T X = rhs within one panel, unrolled back substitution."""
+    b = lkk.shape[0]
+    rows = [None] * b
+    computed = []                                   # rows i+1.. in order
+    for i in reversed(range(b)):
+        acc = rhs[i, :]
+        if computed:
+            x_next = jnp.stack(computed, axis=0)    # (b-1-i, m), rows i+1..b-1
+            acc = acc - lkk[i + 1:, i] @ x_next
+        rows[i] = acc / lkk[i, i]
+        computed.insert(0, rows[i])
+    return jnp.stack(rows, axis=0)
+
+
+def solve_lower_blocked(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Blocked forward substitution: panel solves + dense panel matmuls.
+    Same CPU-testbed caveat as [`cholesky_lower_blocked`].
+    """
+    n = l.shape[0]
+    if n % BLOCK != 0 or n <= BLOCK:
+        return solve_lower_unblocked(l, b)
+    x = jnp.zeros_like(b)
+    for k in range(0, n, BLOCK):
+        rhs = b[k:k + BLOCK, :]
+        if k > 0:
+            rhs = rhs - l[k:k + BLOCK, :k] @ x[:k, :]
+        xb = _solve_panel_lower(l[k:k + BLOCK, k:k + BLOCK], rhs)
+        x = jax.lax.dynamic_update_slice(x, xb, (k, 0))
+    return x
+
+
+def solve_lower_t_blocked(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Blocked back substitution for L^T x = b (same caveat)."""
+    n = l.shape[0]
+    if n % BLOCK != 0 or n <= BLOCK:
+        return solve_lower_t_unblocked(l, b)
+    x = jnp.zeros_like(b)
+    for k in reversed(range(0, n, BLOCK)):
+        rhs = b[k:k + BLOCK, :]
+        hi = k + BLOCK
+        if hi < n:
+            # L^T[k:k+B, hi:] = L[hi:, k:k+B]^T
+            rhs = rhs - l[hi:, k:hi].T @ x[hi:, :]
+        xb = _solve_panel_lower_t(l[k:hi, k:hi], rhs)
+        x = jax.lax.dynamic_update_slice(x, xb, (k, 0))
+    return x
+
+
+def spd_inverse_from_cholesky(l: jax.Array) -> jax.Array:
+    """K^{-1} = L^{-T} L^{-1} given the Cholesky factor L of K."""
+    n = l.shape[0]
+    eye = jnp.eye(n, dtype=l.dtype)
+    linv = solve_lower(l, eye)
+    return solve_lower_t(l, linv)
+
+
+def logdet_from_cholesky(l: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """log det K = 2 * sum log diag(L); masked rows (diag 1.0) contribute 0."""
+    d = jnp.diagonal(l)
+    logs = 2.0 * jnp.log(jnp.maximum(d, 1e-12))
+    if mask is not None:
+        logs = logs * mask
+    return jnp.sum(logs)
+
+
+# Default implementations used by the AOT artifacts: the loop forms (compact
+# HLO, fast PJRT compile, within ~2-3x of the blocked execution on CPU).
+def cholesky_lower(a: jax.Array, jitter: float = 0.0) -> jax.Array:
+    """Lower Cholesky factor (loop form; see cholesky_lower_blocked)."""
+    if jitter:
+        a = a + jitter * jnp.eye(a.shape[0], dtype=a.dtype)
+    return cholesky_lower_unblocked(a)
+
+
+def solve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L x = b (loop form)."""
+    return solve_lower_unblocked(l, b)
+
+
+def solve_lower_t(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L^T x = b (loop form)."""
+    return solve_lower_t_unblocked(l, b)

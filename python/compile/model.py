@@ -1,0 +1,105 @@
+"""Layer-2 JAX model: the GP-UCB surrogate as two AOT-exportable programs.
+
+The MANGO optimizer's hot path is (1) fitting a GP posterior over the
+observed (config, score) pairs and (2) scoring a large Monte-Carlo candidate
+set with the UCB acquisition.  We split these into two programs so the cubic
+fit runs once per posterior update while the matmul-only acquire runs per
+candidate chunk (MXU-friendly, no sequential loops):
+
+  gp_fit(x, y, mask, inv_ls, params)      -> (alpha, kinv, logdet)
+  gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+                                          -> (ucb, mean, var, w)
+
+Static shapes (HLO is shape-monomorphic): N in N_VARIANTS observation slots,
+D = MAX_DIM encoded feature slots, M = M_CAND candidate slots per acquire
+call.  The Rust runtime pads + masks to the nearest variant and chunks
+candidate sets.  Masking contract:
+
+  * mask[i] = 1.0 for a real observation, 0.0 for padding;
+  * padded rows of K are replaced by identity rows, padded y by 0, so alpha
+    is exactly 0 there and they contribute nothing to the posterior;
+  * unused feature dims carry inv_ls = 0 so they never affect distances.
+
+``params`` packs [amp, noise, beta] to keep the artifact arity small.
+The within-batch hallucination (GP-BUCB constant-liar) is a rank-1 update
+performed by the Rust coordinator on (kinv, w) — see rust/src/gp/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import linalg
+from compile.kernels import rbf
+
+# Static-shape configuration shared with the Rust runtime via the manifest.
+MAX_DIM = 16
+M_CAND = 512
+N_VARIANTS = (64, 128, 256, 384, 512)
+
+
+def gp_fit(x, y, mask, inv_ls, params):
+    """Fit the GP posterior: returns (alpha, kinv, logdet).
+
+    x: (n, MAX_DIM) encoded configs (unit-cube scaled), padded with zeros.
+    y: (n,) normalized objective values (zero-mean/unit-var on valid rows).
+    mask: (n,) 1.0 valid / 0.0 padding.
+    inv_ls: (MAX_DIM,) per-dim inverse lengthscales (0 for unused dims).
+    params: (3,) [amp, noise, _unused].
+    """
+    amp = params[0]
+    noise = params[1]
+    n = x.shape[0]
+    xs = x * inv_ls[None, :]
+    corr = rbf.rbf_matrix(xs, xs)
+    m2 = mask[:, None] * mask[None, :]
+    k = amp * corr * m2 + jnp.diag(noise * mask + (1.0 - mask))
+    l = linalg.cholesky_lower(k)
+    kinv = linalg.spd_inverse_from_cholesky(l)
+    alpha = kinv @ (y * mask)
+    logdet = linalg.logdet_from_cholesky(l, mask)
+    return alpha, kinv, logdet
+
+
+def gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params):
+    """Score M_CAND candidates with posterior mean/var and UCB.
+
+    Returns (ucb, mean, var, w) where w = K^{-1} k_c (needed by the Rust
+    coordinator for GP-BUCB rank-1 hallucination updates).
+    Maximization convention: the Rust side negates y for minimization.
+    """
+    amp = params[0]
+    beta = params[2]
+    xs = x * inv_ls[None, :]
+    xcs = xc * inv_ls[None, :]
+    kc = amp * rbf.rbf_matrix(xs, xcs) * mask[:, None]    # (n, m)
+    mean = kc.T @ alpha                                    # (m,)
+    w = kinv @ kc                                          # (n, m)
+    var = jnp.maximum(amp - jnp.sum(kc * w, axis=0), 1e-10)
+    ucb = mean + beta * jnp.sqrt(var)
+    return ucb, mean, var, w
+
+
+def fit_spec(n: int):
+    """ShapeDtypeStructs for a gp_fit variant with n observation slots."""
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, MAX_DIM), f),   # x
+        jax.ShapeDtypeStruct((n,), f),           # y
+        jax.ShapeDtypeStruct((n,), f),           # mask
+        jax.ShapeDtypeStruct((MAX_DIM,), f),     # inv_ls
+        jax.ShapeDtypeStruct((3,), f),           # params
+    )
+
+
+def acquire_spec(n: int, m: int = M_CAND):
+    """ShapeDtypeStructs for a gp_acquire variant."""
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, MAX_DIM), f),   # x
+        jax.ShapeDtypeStruct((n,), f),           # mask
+        jax.ShapeDtypeStruct((m, MAX_DIM), f),   # xc
+        jax.ShapeDtypeStruct((n,), f),           # alpha
+        jax.ShapeDtypeStruct((n, n), f),         # kinv
+        jax.ShapeDtypeStruct((MAX_DIM,), f),     # inv_ls
+        jax.ShapeDtypeStruct((3,), f),           # params
+    )

@@ -1,0 +1,60 @@
+"""AOT lowering sanity: HLO text parses, is custom-call free, manifest sane."""
+
+import json
+import os
+import re
+
+import jax
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lowered_small():
+    """Lower the smallest variant once (cheap) for the text checks."""
+    fit = jax.jit(model.gp_fit).lower(*model.fit_spec(64))
+    acq = jax.jit(model.gp_acquire).lower(*model.acquire_spec(64))
+    return aot.to_hlo_text(fit), aot.to_hlo_text(acq)
+
+
+def test_no_custom_calls(lowered_small):
+    fit_text, acq_text = lowered_small
+    aot.check_no_custom_calls(fit_text, "gp_fit_n64")
+    aot.check_no_custom_calls(acq_text, "gp_acquire_n64")
+
+
+def test_hlo_entry_is_tuple(lowered_small):
+    """return_tuple=True — the Rust side unwraps with to_tuple3/to_tuple4."""
+    fit_text, acq_text = lowered_small
+    assert "ENTRY" in fit_text and "ENTRY" in acq_text
+    root_fit = [l for l in fit_text.splitlines() if "ROOT" in l]
+    assert any("tuple" in l for l in root_fit), "fit root must be a tuple"
+
+
+def test_fit_shapes_in_text(lowered_small):
+    fit_text, _ = lowered_small
+    assert re.search(r"f32\[64,16\]", fit_text), "x param shape missing"
+    assert re.search(r"f32\[64,64\]", fit_text), "kinv output shape missing"
+
+
+def test_check_no_custom_calls_raises():
+    bad = 'x = f32[2] custom-call(y), custom_call_target="lapack_spotrf_ffi"'
+    with pytest.raises(RuntimeError):
+        aot.check_no_custom_calls(bad, "bad")
+
+
+def test_manifest_roundtrip(tmp_path):
+    """Full lower_all on all variants; manifest must index every file."""
+    manifest = aot.lower_all(str(tmp_path))
+    for n, entry in manifest["programs"].items():
+        for key in ("fit", "acquire"):
+            p = tmp_path / entry[key]
+            assert p.exists() and p.stat().st_size > 1000
+    assert manifest["max_dim"] == model.MAX_DIM
+    assert manifest["m_cand"] == model.M_CAND
+    (tmp_path / "manifest.json").write_text(json.dumps(manifest))
+    back = json.loads((tmp_path / "manifest.json").read_text())
+    assert back == manifest

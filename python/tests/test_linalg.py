@@ -1,0 +1,122 @@
+"""Pure-HLO linalg (compile/linalg.py) vs LAPACK-backed jax.scipy."""
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _spd(key, n, cond_boost=1.0):
+    a = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    return a @ a.T + cond_boost * n * jnp.eye(n, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 16, 64, 128])
+def test_cholesky_matches_lapack(n):
+    a = _spd(jax.random.PRNGKey(n), n)
+    got = np.asarray(linalg.cholesky_lower(a))
+    want = np.asarray(jnp.linalg.cholesky(a))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=96),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_cholesky_reconstructs(n, seed):
+    a = _spd(jax.random.PRNGKey(seed), n)
+    l = linalg.cholesky_lower(a)
+    np.testing.assert_allclose(np.asarray(l @ l.T), np.asarray(a),
+                               rtol=1e-3, atol=1e-3)
+    # strictly upper part must be exactly zero
+    lu = np.triu(np.asarray(l), k=1)
+    assert np.all(lu == 0.0)
+
+
+@pytest.mark.parametrize("n,m", [(4, 1), (16, 8), (64, 32), (128, 128)])
+def test_solve_lower_matches_scipy(n, m):
+    key = jax.random.PRNGKey(n * 100 + m)
+    l = jnp.linalg.cholesky(_spd(key, n))
+    b = jax.random.normal(jax.random.PRNGKey(m), (n, m), dtype=jnp.float32)
+    got = np.asarray(linalg.solve_lower(l, b))
+    want = np.asarray(jsl.solve_triangular(l, b, lower=True))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("n,m", [(4, 1), (16, 8), (64, 32), (128, 128)])
+def test_solve_lower_t_matches_scipy(n, m):
+    key = jax.random.PRNGKey(n * 7 + m)
+    l = jnp.linalg.cholesky(_spd(key, n))
+    b = jax.random.normal(jax.random.PRNGKey(m + 1), (n, m), dtype=jnp.float32)
+    got = np.asarray(linalg.solve_lower_t(l, b))
+    want = np.asarray(jsl.solve_triangular(l, b, trans="T", lower=True))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=1, max_value=64),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_spd_inverse(n, seed):
+    a = _spd(jax.random.PRNGKey(seed), n)
+    l = linalg.cholesky_lower(a)
+    kinv = linalg.spd_inverse_from_cholesky(l)
+    np.testing.assert_allclose(np.asarray(a @ kinv), np.eye(n),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_logdet_matches_slogdet():
+    a = _spd(jax.random.PRNGKey(5), 32)
+    l = linalg.cholesky_lower(a)
+    got = float(linalg.logdet_from_cholesky(l))
+    want = float(jnp.linalg.slogdet(a)[1])
+    assert abs(got - want) < 1e-2 * max(1.0, abs(want))
+
+
+def test_logdet_mask_ignores_padding():
+    """Identity rows (padding) must contribute 0 to the masked logdet."""
+    n, valid = 32, 20
+    a = _spd(jax.random.PRNGKey(6), valid)
+    big = jnp.eye(n, dtype=jnp.float32)
+    big = big.at[:valid, :valid].set(a)
+    mask = jnp.concatenate([jnp.ones(valid), jnp.zeros(n - valid)]).astype(jnp.float32)
+    l = linalg.cholesky_lower(big)
+    got = float(linalg.logdet_from_cholesky(l, mask))
+    want = float(jnp.linalg.slogdet(a)[1])
+    assert abs(got - want) < 1e-2 * max(1.0, abs(want))
+
+
+def test_cholesky_degenerate_does_not_nan():
+    """Singular input: clamped diagonal keeps the factor finite."""
+    a = jnp.ones((8, 8), dtype=jnp.float32)  # rank-1, singular
+    l = np.asarray(linalg.cholesky_lower(a))
+    assert np.isfinite(l).all()
+
+
+@pytest.mark.parametrize("n", [128, 192, 256])
+def test_blocked_cholesky_matches_unblocked(n):
+    """The blocked path (n % BLOCK == 0, n > BLOCK) must agree with both the
+    unblocked loop and LAPACK."""
+    a = _spd(jax.random.PRNGKey(n), n)
+    blocked = np.asarray(linalg.cholesky_lower_blocked(a))
+    unblocked = np.asarray(linalg.cholesky_lower_unblocked(a))
+    lapack = np.asarray(jnp.linalg.cholesky(a))
+    np.testing.assert_allclose(blocked, unblocked, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(blocked, lapack, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("n,m", [(128, 64), (192, 128), (256, 32)])
+def test_blocked_solves_match_scipy(n, m):
+    key = jax.random.PRNGKey(n + m)
+    l = jnp.linalg.cholesky(_spd(key, n))
+    b = jax.random.normal(jax.random.PRNGKey(m + 2), (n, m), dtype=jnp.float32)
+    got_f = np.asarray(linalg.solve_lower_blocked(l, b))
+    want_f = np.asarray(jsl.solve_triangular(l, b, lower=True))
+    np.testing.assert_allclose(got_f, want_f, rtol=5e-3, atol=5e-3)
+    got_b = np.asarray(linalg.solve_lower_t_blocked(l, b))
+    want_b = np.asarray(jsl.solve_triangular(l, b, trans="T", lower=True))
+    np.testing.assert_allclose(got_b, want_b, rtol=5e-3, atol=5e-3)

@@ -1,0 +1,125 @@
+"""L2 GP programs (gp_fit + gp_acquire) vs the LAPACK-backed reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+AMP, NOISE, BETA = 1.0, 1e-3, 2.0
+
+
+def _problem(seed, n_valid, n_slots, d_valid, m=64):
+    """Random padded GP problem with the runtime's masking contract."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jnp.zeros((n_slots, model.MAX_DIM), dtype=jnp.float32)
+    x = x.at[:n_valid, :d_valid].set(
+        jax.random.uniform(keys[0], (n_valid, d_valid), dtype=jnp.float32))
+    y = jnp.zeros((n_slots,), dtype=jnp.float32)
+    y = y.at[:n_valid].set(jax.random.normal(keys[1], (n_valid,), dtype=jnp.float32))
+    mask = jnp.concatenate(
+        [jnp.ones(n_valid), jnp.zeros(n_slots - n_valid)]).astype(jnp.float32)
+    xc = jnp.zeros((m, model.MAX_DIM), dtype=jnp.float32)
+    xc = xc.at[:, :d_valid].set(
+        jax.random.uniform(keys[2], (m, d_valid), dtype=jnp.float32))
+    inv_ls = jnp.concatenate(
+        [jnp.full((d_valid,), 3.0), jnp.zeros(model.MAX_DIM - d_valid)]
+    ).astype(jnp.float32)
+    params = jnp.array([AMP, NOISE, BETA], dtype=jnp.float32)
+    return x, y, mask, xc, inv_ls, params
+
+
+def _run_pair(x, y, mask, xc, inv_ls, params):
+    alpha, kinv, logdet = model.gp_fit(x, y, mask, inv_ls, params)
+    ucb, mean, var, w = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    return ucb, mean, var, w, alpha, kinv, logdet
+
+
+@pytest.mark.parametrize("n_valid,n_slots,d_valid", [
+    (3, 64, 2), (20, 64, 7), (64, 64, 16), (50, 128, 4), (100, 128, 7),
+])
+def test_fit_acquire_matches_reference(n_valid, n_slots, d_valid):
+    x, y, mask, xc, inv_ls, params = _problem(42, n_valid, n_slots, d_valid)
+    ucb, mean, var, *_ = _run_pair(x, y, mask, xc, inv_ls, params)
+    ucb_r, mean_r, var_r = ref.gp_posterior_ref(x, y, mask, xc, inv_ls, AMP, NOISE, BETA)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_r), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_r), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ucb), np.asarray(ucb_r), rtol=1e-3, atol=1e-3)
+
+
+def test_padding_invariance():
+    """Same valid data in 64 vs 128 slots must give identical posteriors."""
+    x64, y64, m64, xc, inv_ls, params = _problem(7, 30, 64, 5)
+    x128 = jnp.zeros((128, model.MAX_DIM), dtype=jnp.float32).at[:64].set(x64)
+    y128 = jnp.zeros((128,), dtype=jnp.float32).at[:64].set(y64)
+    m128 = jnp.zeros((128,), dtype=jnp.float32).at[:64].set(m64)
+    u1, me1, v1, *_ = _run_pair(x64, y64, m64, xc, inv_ls, params)
+    u2, me2, v2, *_ = _run_pair(x128, y128, m128, xc, inv_ls, params)
+    np.testing.assert_allclose(np.asarray(me1), np.asarray(me2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-4, atol=1e-5)
+
+
+def test_padding_rows_have_zero_alpha():
+    x, y, mask, xc, inv_ls, params = _problem(3, 10, 64, 3)
+    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    np.testing.assert_allclose(np.asarray(alpha)[10:], 0.0, atol=1e-6)
+
+
+def test_posterior_interpolates_training_points():
+    """With tiny noise, the posterior mean at training inputs ~= y."""
+    x, y, mask, _, inv_ls, params = _problem(11, 25, 64, 4)
+    xc = jnp.zeros((64, model.MAX_DIM), dtype=jnp.float32).at[:25].set(x[:25])
+    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    _, mean, var, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    np.testing.assert_allclose(np.asarray(mean)[:25], np.asarray(y)[:25],
+                               rtol=5e-2, atol=5e-2)
+    assert float(jnp.max(var[:25])) < 0.05, "variance must collapse at data"
+
+
+def test_variance_far_from_data_approaches_prior():
+    x, y, mask, _, inv_ls, params = _problem(13, 20, 64, 3)
+    xc = jnp.full((64, model.MAX_DIM), 50.0, dtype=jnp.float32)  # far away
+    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    _, mean, var, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    np.testing.assert_allclose(np.asarray(var), AMP, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(mean), 0.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       n_valid=st.integers(min_value=2, max_value=60),
+       d=st.integers(min_value=1, max_value=16))
+def test_ucb_monotone_in_beta_hypothesis(seed, n_valid, d):
+    x, y, mask, xc, inv_ls, _ = _problem(seed, n_valid, 64, d)
+    p1 = jnp.array([AMP, NOISE, 1.0], dtype=jnp.float32)
+    p2 = jnp.array([AMP, NOISE, 3.0], dtype=jnp.float32)
+    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, p1)
+    u1, _, _, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, p1)
+    u2, _, _, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, p2)
+    assert np.all(np.asarray(u2) >= np.asarray(u1) - 1e-6)
+
+
+def test_w_output_consistent_with_kinv():
+    """w = K^{-1} k_c — the contract the Rust hallucinator relies on."""
+    x, y, mask, xc, inv_ls, params = _problem(17, 40, 64, 6)
+    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    _, _, _, w = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    xs = x * inv_ls[None, :]
+    xcs = xc * inv_ls[None, :]
+    kc = AMP * ref.rbf_matrix_ref(xs, xcs) * mask[:, None]
+    np.testing.assert_allclose(np.asarray(w), np.asarray(kinv @ kc),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_logdet_positive_definite_sanity():
+    x, y, mask, _, inv_ls, params = _problem(19, 30, 64, 4)
+    _, _, logdet = model.gp_fit(x, y, mask, inv_ls, params)
+    # K has unit diagonal + tiny noise; logdet must be finite and negative-ish
+    assert np.isfinite(float(logdet))
+    assert float(logdet) < 30.0

@@ -1,0 +1,36 @@
+//! Ablation A1 (DESIGN.md): batch-size sweep for both Mango parallel
+//! algorithms on the mixed Branin — how much does per-batch information
+//! lag cost, and do k evaluations per batch still beat k serial ones on
+//! wall-clock-per-improvement?
+//!
+//! Run: `cargo bench --bench ablation_batch`
+
+mod common;
+
+use common::{env_usize, run_figure, Strategy};
+use mango::exp::workloads;
+use mango::optimizer::OptimizerKind;
+
+fn main() {
+    let iters = env_usize("MANGO_ITERS", 30);
+    let repeats = env_usize("MANGO_REPEATS", 5);
+    let workload = workloads::by_name("mixed_branin").unwrap();
+    let strategies = [
+        Strategy { label: "hallucination k=1", optimizer: OptimizerKind::Hallucination, batch_size: 1 },
+        Strategy { label: "hallucination k=2", optimizer: OptimizerKind::Hallucination, batch_size: 2 },
+        Strategy { label: "hallucination k=5", optimizer: OptimizerKind::Hallucination, batch_size: 5 },
+        Strategy { label: "hallucination k=10", optimizer: OptimizerKind::Hallucination, batch_size: 10 },
+        Strategy { label: "clustering k=2", optimizer: OptimizerKind::Clustering, batch_size: 2 },
+        Strategy { label: "clustering k=5", optimizer: OptimizerKind::Clustering, batch_size: 5 },
+        Strategy { label: "clustering k=10", optimizer: OptimizerKind::Clustering, batch_size: 10 },
+    ];
+    let checkpoints = [5, 10, 20, iters];
+    let all = run_figure("ablation_batch", &workload, &strategies, iters, repeats, &checkpoints);
+    println!("\n# sample-efficiency: best-so-far per *evaluation* budget of 30");
+    for s in &all {
+        // iteration index whose cumulative evaluations first reach 30
+        let k: usize = s.label.rsplit('=').next().unwrap().parse().unwrap();
+        let idx = (30 / k).min(s.mean.len()).saturating_sub(1);
+        println!("{:<22} {:.5}", s.label, s.mean[idx]);
+    }
+}

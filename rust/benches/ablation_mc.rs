@@ -1,0 +1,54 @@
+//! Ablation A2 (DESIGN.md): Monte-Carlo acquisition sample count — the
+//! paper's heuristic (a function of #params and space complexity,
+//! user-overridable) vs fixed sizes. Too few samples miss the acquisition
+//! optimum; past a few thousand the curves saturate, which is what makes
+//! the heuristic safe.
+//!
+//! Run: `cargo bench --bench ablation_mc`
+
+mod common;
+
+use common::{backend, env_usize};
+use mango::coordinator::TunerConfig;
+use mango::exp::harness::{print_series, print_summary_row, run_trials};
+use mango::exp::workloads;
+use mango::optimizer::OptimizerKind;
+
+fn main() {
+    let iters = env_usize("MANGO_ITERS", 25);
+    let repeats = env_usize("MANGO_REPEATS", 5);
+    for workload_name in ["branin", "hartmann6"] {
+        let workload = workloads::by_name(workload_name).unwrap();
+        println!(
+            "# ablation_mc on {workload_name} (heuristic = {} samples): label,iteration,mean,std",
+            workload.space.mc_samples_heuristic()
+        );
+        let mut all = Vec::new();
+        for &(label, mc) in &[
+            ("mc=64", 64usize),
+            ("mc=256", 256),
+            ("mc=1024", 1024),
+            ("mc=heuristic", 0),
+            ("mc=8192", 8192),
+        ] {
+            let cfg = TunerConfig {
+                batch_size: 1,
+                num_iterations: iters,
+                optimizer: OptimizerKind::Hallucination,
+                backend: backend(),
+                mc_samples: mc,
+                seed: 7_000,
+                ..Default::default()
+            };
+            let label_full = format!("{workload_name}/{label}");
+            let series = run_trials(&workload, &cfg, repeats, &label_full).expect("trials");
+            print_series(&series);
+            all.push(series);
+        }
+        println!("\n# summary at iterations [10, {iters}] (+ mean wall/trial)");
+        for s in &all {
+            print_summary_row(s, &[10, iters]);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,38 @@
+//! Ablation A4 (DESIGN.md): all four optimizers across the benchmark
+//! function family at batch size 5 — which batch strategy wins where
+//! (smooth vs rugged vs mixed-type landscapes)?
+//!
+//! Run: `cargo bench --bench ablation_strategies`
+
+mod common;
+
+use common::{env_usize, run_figure, Strategy};
+use mango::exp::workloads;
+use mango::optimizer::OptimizerKind;
+
+fn main() {
+    let iters = env_usize("MANGO_ITERS", 25);
+    let repeats = env_usize("MANGO_REPEATS", 5);
+    let strategies = [
+        Strategy { label: "random k=5", optimizer: OptimizerKind::Random, batch_size: 5 },
+        Strategy { label: "tpe k=5", optimizer: OptimizerKind::Tpe, batch_size: 5 },
+        Strategy {
+            label: "hallucination k=5",
+            optimizer: OptimizerKind::Hallucination,
+            batch_size: 5,
+        },
+        Strategy { label: "clustering k=5", optimizer: OptimizerKind::Clustering, batch_size: 5 },
+    ];
+    for name in ["branin", "mixed_branin", "cat_branin", "rosenbrock", "ackley", "hartmann6"] {
+        let workload = workloads::by_name(name).unwrap();
+        println!("\n## {name}");
+        run_figure(
+            &format!("ablation_strategies/{name}"),
+            &workload,
+            &strategies,
+            iters,
+            repeats,
+            &[10, iters],
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Shared helpers for the figure/ablation bench harnesses.
+#![allow(dead_code)] // shared across benches; each uses a subset
+//!
+//! Env knobs (keep default runs fast; the paper-scale settings are noted in
+//! EXPERIMENTS.md):
+//!   MANGO_REPEATS  — trials per strategy (figures: paper uses 20 / 10)
+//!   MANGO_ITERS    — optimizer iterations per trial
+//!   MANGO_BACKEND  — pjrt | native
+
+use mango::coordinator::TunerConfig;
+use mango::exp::harness::{print_series, print_summary_row, run_trials, TrialSeries};
+use mango::exp::workloads::Workload;
+use mango::optimizer::{OptimizerKind, SurrogateBackend};
+use mango::scheduler::SchedulerKind;
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn backend() -> SurrogateBackend {
+    match std::env::var("MANGO_BACKEND").as_deref() {
+        Ok("native") => SurrogateBackend::Native,
+        _ => SurrogateBackend::Pjrt,
+    }
+}
+
+/// A named strategy row in a figure.
+pub struct Strategy {
+    pub label: &'static str,
+    pub optimizer: OptimizerKind,
+    pub batch_size: usize,
+}
+
+pub fn base_config(iters: usize, strategy: &Strategy) -> TunerConfig {
+    TunerConfig {
+        batch_size: strategy.batch_size,
+        num_iterations: iters,
+        optimizer: strategy.optimizer,
+        backend: backend(),
+        // Parallel batches use the threaded scheduler (paper: parallelism =
+        // batch size); serial uses the serial scheduler.
+        scheduler: if strategy.batch_size > 1 {
+            SchedulerKind::Threaded
+        } else {
+            SchedulerKind::Serial
+        },
+        workers: strategy.batch_size,
+        seed: 10_000,
+        ..Default::default()
+    }
+}
+
+/// Run every strategy and print both the CSV series and a summary table.
+pub fn run_figure(
+    figure: &str,
+    workload: &Workload,
+    strategies: &[Strategy],
+    iters: usize,
+    repeats: usize,
+    checkpoints: &[usize],
+) -> Vec<TrialSeries> {
+    eprintln!(
+        "[{figure}] workload={} iters={iters} repeats={repeats} backend={:?}",
+        workload.name,
+        backend()
+    );
+    println!("# {figure}: label,iteration,mean,std  ({repeats} trials)");
+    let mut all = Vec::new();
+    for s in strategies {
+        let cfg = base_config(iters, s);
+        let t = std::time::Instant::now();
+        let series = run_trials(workload, &cfg, repeats, s.label).expect("trial run");
+        eprintln!(
+            "[{figure}] {}: {:.1}s total",
+            s.label,
+            t.elapsed().as_secs_f64()
+        );
+        print_series(&series);
+        all.push(series);
+    }
+    println!("\n# summary: best-so-far at iterations {checkpoints:?}");
+    for s in &all {
+        print_summary_row(s, checkpoints);
+    }
+    all
+}

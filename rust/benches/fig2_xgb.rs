@@ -1,0 +1,46 @@
+//! Fig. 2 reproduction: tuning the XGBoost-substitute GBT classifier on the
+//! wine dataset (Listing 1 search space). Strategies exactly as the paper's
+//! figure: random, Hyperopt(TPE) serial + parallel, Mango serial, and both
+//! Mango parallel algorithms with batch size 5. Results averaged over
+//! MANGO_REPEATS trials (paper: 20). "Number of iterations" = batches.
+//!
+//! Run: `cargo bench --bench fig2_xgb`
+//! Paper scale: `MANGO_REPEATS=20 MANGO_ITERS=60 cargo bench --bench fig2_xgb`
+
+mod common;
+
+use common::{env_usize, run_figure, Strategy};
+use mango::exp::workloads;
+use mango::optimizer::OptimizerKind;
+
+fn main() {
+    let iters = env_usize("MANGO_ITERS", 60);
+    let repeats = env_usize("MANGO_REPEATS", 5);
+    let workload = workloads::by_name("wine_gbt").unwrap();
+    let strategies = [
+        Strategy { label: "random", optimizer: OptimizerKind::Random, batch_size: 1 },
+        Strategy { label: "hyperopt(tpe) serial", optimizer: OptimizerKind::Tpe, batch_size: 1 },
+        Strategy {
+            label: "mango serial",
+            optimizer: OptimizerKind::Hallucination,
+            batch_size: 1,
+        },
+        Strategy {
+            label: "hyperopt(tpe) parallel k=5",
+            optimizer: OptimizerKind::Tpe,
+            batch_size: 5,
+        },
+        Strategy {
+            label: "mango hallucination k=5",
+            optimizer: OptimizerKind::Hallucination,
+            batch_size: 5,
+        },
+        Strategy {
+            label: "mango clustering k=5",
+            optimizer: OptimizerKind::Clustering,
+            batch_size: 5,
+        },
+    ];
+    let checkpoints = [10, 20, 40, iters];
+    run_figure("fig2", &workload, &strategies, iters, repeats, &checkpoints);
+}

@@ -1,0 +1,46 @@
+//! Fig. 3 reproduction: the modified mixed discrete-continuous Branin
+//! function (Halstrup 2016). Paper setup: serial and parallel regimes,
+//! hallucination algorithm only for Mango, averaged over MANGO_REPEATS
+//! trials (paper: 10).
+//!
+//! Run: `cargo bench --bench fig3_branin`
+//! Paper scale: `MANGO_REPEATS=10 MANGO_ITERS=50 cargo bench --bench fig3_branin`
+
+mod common;
+
+use common::{env_usize, run_figure, Strategy};
+use mango::exp::workloads;
+use mango::optimizer::OptimizerKind;
+
+fn main() {
+    let iters = env_usize("MANGO_ITERS", 50);
+    let repeats = env_usize("MANGO_REPEATS", 10);
+    let workload = workloads::by_name("mixed_branin").unwrap();
+    let strategies = [
+        Strategy { label: "random", optimizer: OptimizerKind::Random, batch_size: 1 },
+        Strategy { label: "hyperopt(tpe) serial", optimizer: OptimizerKind::Tpe, batch_size: 1 },
+        Strategy {
+            label: "mango serial",
+            optimizer: OptimizerKind::Hallucination,
+            batch_size: 1,
+        },
+        Strategy {
+            label: "hyperopt(tpe) parallel k=5",
+            optimizer: OptimizerKind::Tpe,
+            batch_size: 5,
+        },
+        Strategy {
+            label: "mango hallucination k=5",
+            optimizer: OptimizerKind::Hallucination,
+            batch_size: 5,
+        },
+    ];
+    let checkpoints = [10, 20, 30, iters];
+    let all = run_figure("fig3", &workload, &strategies, iters, repeats, &checkpoints);
+    let optimum = workload.optimum.unwrap();
+    println!("\n# regret vs known optimum {optimum:.5} at final iteration");
+    for s in &all {
+        let last = s.mean.last().copied().unwrap_or(f64::NAN);
+        println!("{:<28} {:.5}", s.label, last - optimum);
+    }
+}

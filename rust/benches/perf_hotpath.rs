@@ -1,0 +1,114 @@
+//! Perf bench: micro-timings of every hot-path stage, per layer — feeds
+//! EXPERIMENTS.md §Perf. Not a figure; a profiler.
+//!
+//! Rows:
+//!   L2/L1 via PJRT: gp_fit / gp_acquire per variant (steady state,
+//!                   compile excluded) vs the native-Rust GP oracle
+//!   L3: hallucination step, MC candidate sampling + encoding, TPE propose,
+//!       scheduler dispatch overhead (serial / threaded / celery, no-op
+//!       objective), end-to-end tuner iteration on branin
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use mango::exp::benchkit::bench;
+use mango::exp::workloads;
+use mango::gp::update::BatchHallucinator;
+use mango::gp::{normalize_y, GpParams, NativeGp, Surrogate};
+use mango::linalg::Matrix;
+use mango::optimizer::{BatchOptimizer, History};
+use mango::runtime::PjrtSurrogate;
+use mango::scheduler::{self, SchedulerKind};
+use mango::space::{Config, Encoder};
+use mango::util::rng::Pcg64;
+
+fn gp_inputs(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix) {
+    let mut rng = Pcg64::new(seed);
+    let x = Matrix::from_fn(n, d, |_, _| rng.next_f64());
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let xc = Matrix::from_fn(512, d, |_, _| rng.next_f64());
+    let (yn, _, _) = normalize_y(&y);
+    (x, yn, xc)
+}
+
+fn main() {
+    let d = 7;
+    let params = GpParams::new(d);
+    println!("# layer L2/L1 (PJRT artifacts, steady state) vs native oracle");
+    let mut pjrt = PjrtSurrogate::from_default_artifacts().expect("run `make artifacts`");
+    let mut native = NativeGp;
+    for n in [64usize, 128, 256, 384, 512] {
+        let (x, yn, xc) = gp_inputs(n, d, n as u64);
+        // warmup includes compile; bench excludes it
+        let fit = pjrt.fit(&x, &yn, &params).unwrap();
+        println!("{}", bench(&format!("pjrt gp_fit n={n}"), 2, 15, || {
+            std::hint::black_box(pjrt.fit(&x, &yn, &params).unwrap());
+        }).row());
+        println!("{}", bench(&format!("pjrt gp_acquire n={n} m=512"), 2, 15, || {
+            std::hint::black_box(pjrt.acquire(&x, &fit, &xc, &params).unwrap());
+        }).row());
+        let nfit = native.fit(&x, &yn, &params).unwrap();
+        println!("{}", bench(&format!("native gp_fit n={n}"), 1, 5, || {
+            std::hint::black_box(native.fit(&x, &yn, &params).unwrap());
+        }).row());
+        println!("{}", bench(&format!("native gp_acquire n={n} m=512"), 1, 5, || {
+            std::hint::black_box(native.acquire(&x, &nfit, &xc, &params).unwrap());
+        }).row());
+    }
+
+    println!("\n# layer L3: batch selection and sampling");
+    let (x, yn, xc) = gp_inputs(256, d, 1);
+    let fit = pjrt.fit(&x, &yn, &params).unwrap();
+    let acq = pjrt.acquire(&x, &fit, &xc, &params).unwrap();
+    println!("{}", bench("hallucinate 5-batch from 512 cands (n=256)", 2, 20, || {
+        let mut h = BatchHallucinator::new(&x, &xc, &acq, &params);
+        for _ in 0..5 {
+            std::hint::black_box(h.select_next());
+        }
+    }).row());
+
+    let space = mango::space::xgboost_space();
+    let encoder = Encoder::new(&space);
+    let mut rng = Pcg64::new(2);
+    println!("{}", bench("MC sample+encode 3000 configs (xgb space)", 2, 20, || {
+        let cands = space.sample_n(&mut rng, 3000);
+        std::hint::black_box(encoder.encode_batch(&cands));
+    }).row());
+
+    let mut tpe = mango::optimizer::tpe::TpeOptimizer::new(space.clone());
+    let mut hist = History::new();
+    let mut rng2 = Pcg64::new(3);
+    for cfg in space.sample_n(&mut rng2, 100) {
+        let v = cfg.get_f64("learning_rate").unwrap();
+        hist.push(cfg, v);
+    }
+    println!("{}", bench("tpe propose k=5 (100 obs)", 2, 20, || {
+        std::hint::black_box(tpe.propose(&hist, 5, &mut rng2).unwrap());
+    }).row());
+
+    println!("\n# layer L3: scheduler dispatch overhead (no-op objective, batch=8)");
+    let batch: Vec<Config> = space.sample_n(&mut rng2, 8);
+    for kind in [SchedulerKind::Serial, SchedulerKind::Threaded, SchedulerKind::Celery] {
+        let mut sched = scheduler::build(kind, 8, 1);
+        println!("{}", bench(&format!("{:?} dispatch 8 no-op tasks", kind), 3, 30, || {
+            std::hint::black_box(sched.evaluate(&|_| Some(1.0), &batch));
+        }).row());
+    }
+
+    println!("\n# end-to-end: one tuner iteration (branin, pjrt, k=5)");
+    let workload = workloads::by_name("branin").unwrap();
+    let cfg = mango::coordinator::TunerConfig {
+        batch_size: 5,
+        num_iterations: 20,
+        backend: mango::optimizer::SurrogateBackend::Pjrt,
+        scheduler: SchedulerKind::Threaded,
+        workers: 5,
+        seed: 4,
+        ..Default::default()
+    };
+    let obj = workload.objective.clone();
+    println!("{}", bench("tuner 20 iters branin k=5 (pjrt)", 1, 3, || {
+        let mut tuner = mango::coordinator::Tuner::new(workload.space.clone(), cfg.clone());
+        let obj = obj.clone();
+        std::hint::black_box(tuner.minimize(move |c| obj(c)).unwrap());
+    }).row());
+}

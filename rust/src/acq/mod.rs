@@ -1,0 +1,198 @@
+//! Acquisition machinery: the adaptive UCB exploration schedule and the
+//! Monte-Carlo candidate generation the paper describes in §2.3.
+
+use crate::space::{Config, SearchSpace};
+use crate::util::rng::Pcg64;
+
+/// Adaptive exploration weight (paper: "adaptive exploitation vs exploration
+/// trade-off as a function of search space size, number of evaluations, and
+/// parallel batch size").
+///
+/// GP-UCB theory (Srinivas et al.; Desautels et al. for batches) sets
+/// β_t = 2 log(|D| t² π² / 6δ). We use its square root (our UCB multiplies
+/// σ, not σ²), grow t by whole batches (each batch is one information
+/// round), and clamp to a practical band so early iterations are not
+/// absurdly exploratory.
+pub fn adaptive_beta(iteration: usize, cardinality: f64, batch_size: usize) -> f64 {
+    let t = (iteration + 1) as f64;
+    let d = cardinality.max(2.0);
+    let delta = 0.1;
+    let raw = 2.0 * (d.ln() + 2.0 * t.ln() + (std::f64::consts::PI.powi(2) / (6.0 * delta)).ln());
+    // Batched selection hallucinates k-1 points per round; slightly larger
+    // beta compensates for the information lag (Desautels' C-factor).
+    let batch_boost = 1.0 + 0.05 * (batch_size.saturating_sub(1) as f64).sqrt();
+    (raw.sqrt() * 0.4 * batch_boost).clamp(1.0, 4.0)
+}
+
+/// Monte-Carlo candidate set: valid configurations sampled from the space's
+/// own distributions (the acquisition is only evaluated at valid points —
+/// the paper's treatment of discrete/categorical variables).
+pub fn mc_candidates(space: &SearchSpace, n_override: usize, rng: &mut Pcg64) -> Vec<Config> {
+    let n = if n_override > 0 { n_override } else { space.mc_samples_heuristic() };
+    space.sample_n(rng, n)
+}
+
+/// Expected improvement at a (mean, var) pair given the incumbent best
+/// (maximization). Provided as an alternative acquisition (extension; the
+/// paper's algorithms use UCB).
+pub fn expected_improvement(mean: f64, var: f64, best: f64) -> f64 {
+    let sigma = var.sqrt();
+    if sigma < 1e-12 {
+        return (mean - best).max(0.0);
+    }
+    let z = (mean - best) / sigma;
+    (mean - best) * norm_cdf(z) + sigma * norm_pdf(z)
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ⁻¹(p) via Acklam's rational approximation (|rel err| < 1.15e-9).
+pub fn norm_ppf(p: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&p));
+    let p = p.clamp(1e-12, 1.0 - 1e-12);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+        1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+        6.680131188771972e+01, -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+        -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -norm_ppf(1.0 - p)
+    }
+}
+
+/// Rank-Gaussian (Gaussian copula) transform of objective values: maps the
+/// i-th ranked value to Φ⁻¹((rank + 0.5)/n). Robust to the huge outliers
+/// objective landscapes like Branin produce (a 300x outlier would otherwise
+/// compress the whole interesting region into a flat GP).
+pub fn rank_gauss(y: &[f64]) -> Vec<f64> {
+    let n = y.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| y[a].partial_cmp(&y[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        // average ranks over ties so equal values map identically
+        let mut j = i;
+        while j + 1 < n && y[order[j + 1]] == y[order[i]] {
+            j += 1;
+        }
+        let rank = (i + j) as f64 / 2.0;
+        let z = norm_ppf((rank + 0.5) / n as f64);
+        for &idx in &order[i..=j] {
+            out[idx] = z;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Φ(z) via Abramowitz–Stegun 7.1.26 (|err| < 7.5e-8).
+pub fn norm_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    let erf = if x >= 0.0 { y } else { -y };
+    0.5 * (1.0 + erf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::xgboost_space;
+
+    #[test]
+    fn beta_grows_with_time_and_space() {
+        let b1 = adaptive_beta(1, 1e3, 1);
+        let b10 = adaptive_beta(10, 1e3, 1);
+        assert!(b10 >= b1);
+        let big = adaptive_beta(1, 1e9, 1);
+        assert!(big >= b1);
+        for t in 0..100 {
+            let b = adaptive_beta(t, 1e6, 5);
+            assert!((1.0..=4.0).contains(&b));
+        }
+    }
+
+    #[test]
+    fn beta_batch_boost() {
+        assert!(adaptive_beta(5, 1e6, 10) > adaptive_beta(5, 1e6, 1));
+    }
+
+    #[test]
+    fn mc_candidates_sizes() {
+        let s = xgboost_space();
+        let mut rng = Pcg64::new(1);
+        assert_eq!(mc_candidates(&s, 123, &mut rng).len(), 123);
+        let heuristic = mc_candidates(&s, 0, &mut rng).len();
+        assert_eq!(heuristic, s.mc_samples_heuristic());
+    }
+
+    #[test]
+    fn ei_properties() {
+        assert!(expected_improvement(1.0, 1.0, 0.0) > expected_improvement(0.0, 1.0, 0.0));
+        assert_eq!(expected_improvement(2.0, 0.0, 1.0), 1.0);
+        assert_eq!(expected_improvement(0.5, 0.0, 1.0), 0.0);
+        assert!(expected_improvement(0.0, 1.0, 0.5) > 0.0);
+    }
+
+    #[test]
+    fn norm_cdf_sanity() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((norm_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ppf_inverts_cdf() {
+        for p in [0.001, 0.025, 0.2, 0.5, 0.8, 0.975, 0.999] {
+            let z = norm_ppf(p);
+            assert!((norm_cdf(z) - p).abs() < 1e-6, "p={p} z={z}");
+        }
+        assert_eq!(norm_ppf(0.5), 0.0);
+    }
+
+    #[test]
+    fn rank_gauss_properties() {
+        // Monotone, zero-mean-ish, outlier-bounded.
+        let y = [1.0, 2.0, 3.0, 300.0]; // huge outlier
+        let z = rank_gauss(&y);
+        assert!(z[0] < z[1] && z[1] < z[2] && z[2] < z[3]);
+        assert!(z[3] < 2.0, "outlier must be bounded, got {}", z[3]);
+        assert!(z.iter().sum::<f64>().abs() < 1e-9, "symmetric ranks");
+        // ties map identically
+        let zt = rank_gauss(&[1.0, 1.0, 5.0]);
+        assert_eq!(zt[0], zt[1]);
+        assert!(zt[2] > zt[0]);
+        assert!(rank_gauss(&[]).is_empty());
+    }
+}

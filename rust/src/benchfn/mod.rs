@@ -1,0 +1,327 @@
+//! Synthetic benchmark functions (paper §3, Fig. 3 + ablation workloads).
+//!
+//! All functions are *minimization* problems exposing a [`BenchFunction`]
+//! trait: a search space plus an objective over [`Config`]s. The modified
+//! mixed discrete-continuous Branin follows Halstrup (2016), the benchmark
+//! the paper's `Branin_Benchmark.ipynb` uses.
+
+use crate::space::{Config, SearchSpace};
+
+/// A synthetic optimization benchmark (minimization convention).
+pub trait BenchFunction: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn space(&self) -> SearchSpace;
+    fn eval(&self, cfg: &Config) -> f64;
+    /// Known global minimum value (for regret curves).
+    fn optimum(&self) -> f64;
+}
+
+/// Classic continuous Branin on [-5, 10] x [0, 15]; min 0.397887.
+pub struct Branin;
+
+pub(crate) fn branin_raw(x1: f64, x2: f64) -> f64 {
+    let a = 1.0;
+    let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+    let c = 5.0 / std::f64::consts::PI;
+    let r = 6.0;
+    let s = 10.0;
+    let t = 1.0 / (8.0 * std::f64::consts::PI);
+    a * (x2 - b * x1 * x1 + c * x1 - r).powi(2) + s * (1.0 - t) * x1.cos() + s
+}
+
+impl BenchFunction for Branin {
+    fn name(&self) -> &'static str {
+        "branin"
+    }
+
+    fn space(&self) -> SearchSpace {
+        SearchSpace::builder()
+            .uniform("x1", -5.0, 10.0)
+            .uniform("x2", 0.0, 15.0)
+            .build()
+    }
+
+    fn eval(&self, cfg: &Config) -> f64 {
+        branin_raw(cfg.get_f64("x1").unwrap(), cfg.get_f64("x2").unwrap())
+    }
+
+    fn optimum(&self) -> f64 {
+        0.397887
+    }
+}
+
+/// Modified Branin with mixed discrete and continuous variables (Halstrup
+/// 2016; the paper's Fig. 3 benchmark): x1 continuous on [-5, 10], x2
+/// discretized to the integers {0..15}.
+pub struct MixedBranin;
+
+impl BenchFunction for MixedBranin {
+    fn name(&self) -> &'static str {
+        "mixed_branin"
+    }
+
+    fn space(&self) -> SearchSpace {
+        SearchSpace::builder()
+            .uniform("x1", -5.0, 10.0)
+            .int("x2", 0, 15)
+            .build()
+    }
+
+    fn eval(&self, cfg: &Config) -> f64 {
+        let x1 = cfg.get_f64("x1").unwrap();
+        let x2 = cfg.get_i64("x2").unwrap() as f64;
+        branin_raw(x1, x2)
+    }
+
+    fn optimum(&self) -> f64 {
+        // min over integer x2 (computed numerically): branin(-3.0792, 12)
+        // = 0.43234.
+        0.43234
+    }
+}
+
+/// Harder extension used by the ablations (not a paper figure): the mixed
+/// Branin plus a *categorical* branch with a per-branch offset — stresses
+/// joint reasoning over continuous, integer and categorical types, and is
+/// a known lock-in trap for TPE-style per-dimension density models.
+pub struct CatBranin;
+
+impl BenchFunction for CatBranin {
+    fn name(&self) -> &'static str {
+        "cat_branin"
+    }
+
+    fn space(&self) -> SearchSpace {
+        SearchSpace::builder()
+            .uniform("x1", -5.0, 10.0)
+            .int("x2", 0, 15)
+            .choice("branch", &["low", "mid", "high"])
+            .build()
+    }
+
+    fn eval(&self, cfg: &Config) -> f64 {
+        let x1 = cfg.get_f64("x1").unwrap();
+        let x2 = cfg.get_i64("x2").unwrap() as f64;
+        let offset = match cfg.get_str("branch").unwrap() {
+            "low" => 0.0,
+            "mid" => 5.0,
+            _ => 15.0,
+        };
+        branin_raw(x1, x2) + offset
+    }
+
+    fn optimum(&self) -> f64 {
+        // Global minimum sits on the 'low' branch at the MixedBranin optimum.
+        0.43234
+    }
+}
+
+/// Rosenbrock in d dims on [-2, 2]^d; min 0 at (1, ..., 1).
+pub struct Rosenbrock(pub usize);
+
+impl BenchFunction for Rosenbrock {
+    fn name(&self) -> &'static str {
+        "rosenbrock"
+    }
+
+    fn space(&self) -> SearchSpace {
+        let mut b = SearchSpace::builder();
+        for i in 0..self.0 {
+            b = b.uniform(&format!("x{i}"), -2.0, 2.0);
+        }
+        b.build()
+    }
+
+    fn eval(&self, cfg: &Config) -> f64 {
+        let x: Vec<f64> = (0..self.0).map(|i| cfg.get_f64(&format!("x{i}")).unwrap()).collect();
+        (0..self.0 - 1)
+            .map(|i| 100.0 * (x[i + 1] - x[i] * x[i]).powi(2) + (1.0 - x[i]).powi(2))
+            .sum()
+    }
+
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Ackley in d dims on [-5, 5]^d; min 0 at the origin.
+pub struct Ackley(pub usize);
+
+impl BenchFunction for Ackley {
+    fn name(&self) -> &'static str {
+        "ackley"
+    }
+
+    fn space(&self) -> SearchSpace {
+        let mut b = SearchSpace::builder();
+        for i in 0..self.0 {
+            b = b.uniform(&format!("x{i}"), -5.0, 5.0);
+        }
+        b.build()
+    }
+
+    fn eval(&self, cfg: &Config) -> f64 {
+        let d = self.0 as f64;
+        let x: Vec<f64> = (0..self.0).map(|i| cfg.get_f64(&format!("x{i}")).unwrap()).collect();
+        let s1: f64 = x.iter().map(|v| v * v).sum::<f64>() / d;
+        let s2: f64 =
+            x.iter().map(|v| (2.0 * std::f64::consts::PI * v).cos()).sum::<f64>() / d;
+        -20.0 * (-0.2 * s1.sqrt()).exp() - s2.exp() + 20.0 + std::f64::consts::E
+    }
+
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Hartmann-6 on [0, 1]^6; min -3.32237.
+pub struct Hartmann6;
+
+impl BenchFunction for Hartmann6 {
+    fn name(&self) -> &'static str {
+        "hartmann6"
+    }
+
+    fn space(&self) -> SearchSpace {
+        let mut b = SearchSpace::builder();
+        for i in 0..6 {
+            b = b.uniform(&format!("x{i}"), 0.0, 1.0);
+        }
+        b.build()
+    }
+
+    fn eval(&self, cfg: &Config) -> f64 {
+        const ALPHA: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+        const A: [[f64; 6]; 4] = [
+            [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+            [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+            [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+            [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+        ];
+        const P: [[f64; 6]; 4] = [
+            [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+            [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+            [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+            [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+        ];
+        let x: Vec<f64> = (0..6).map(|i| cfg.get_f64(&format!("x{i}")).unwrap()).collect();
+        -(0..4)
+            .map(|i| {
+                let inner: f64 = (0..6).map(|j| A[i][j] * (x[j] - P[i][j]).powi(2)).sum();
+                ALPHA[i] * (-inner).exp()
+            })
+            .sum::<f64>()
+    }
+
+    fn optimum(&self) -> f64 {
+        -3.32237
+    }
+}
+
+/// All benchmark functions by name (used by the CLI and ablation benches).
+pub fn by_name(name: &str) -> Option<Box<dyn BenchFunction>> {
+    match name {
+        "branin" => Some(Box::new(Branin)),
+        "mixed_branin" => Some(Box::new(MixedBranin)),
+        "cat_branin" => Some(Box::new(CatBranin)),
+        "rosenbrock" => Some(Box::new(Rosenbrock(4))),
+        "ackley" => Some(Box::new(Ackley(4))),
+        "hartmann6" => Some(Box::new(Hartmann6)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+    use crate::util::rng::Pcg64;
+
+    fn cfg2(x1: f64, x2: f64) -> Config {
+        Config::new(vec![("x1".into(), ParamValue::F64(x1)), ("x2".into(), ParamValue::F64(x2))])
+    }
+
+    #[test]
+    fn branin_known_minima() {
+        for (x1, x2) in [
+            (-std::f64::consts::PI, 12.275),
+            (std::f64::consts::PI, 2.275),
+            (9.42478, 2.475),
+        ] {
+            let v = Branin.eval(&cfg2(x1, x2));
+            assert!((v - 0.397887).abs() < 1e-4, "branin({x1},{x2}) = {v}");
+        }
+    }
+
+    #[test]
+    fn cat_branin_branch_offsets() {
+        let base = Config::new(vec![
+            ("x1".into(), ParamValue::F64(3.0)),
+            ("x2".into(), ParamValue::Int(2)),
+            ("branch".into(), ParamValue::Str("low".into())),
+        ]);
+        let mut mid = base.clone();
+        mid.set("branch", ParamValue::Str("mid".into()));
+        let mut high = base.clone();
+        high.set("branch", ParamValue::Str("high".into()));
+        let (a, b, c) = (CatBranin.eval(&base), CatBranin.eval(&mid), CatBranin.eval(&high));
+        assert!((b - a - 5.0).abs() < 1e-12);
+        assert!((c - a - 15.0).abs() < 1e-12);
+        // mixed == cat on the low branch
+        let mixed = Config::new(vec![
+            ("x1".into(), ParamValue::F64(3.0)),
+            ("x2".into(), ParamValue::Int(2)),
+        ]);
+        assert_eq!(MixedBranin.eval(&mixed), a);
+    }
+
+    #[test]
+    fn mixed_branin_optimum_reachable() {
+        let f = MixedBranin;
+        let s = f.space();
+        let mut rng = Pcg64::new(1);
+        let best = (0..20_000)
+            .map(|_| f.eval(&s.sample(&mut rng)))
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < f.optimum() + 0.5, "best random = {best}");
+        assert!(best >= f.optimum() - 1e-6, "optimum documented too high: {best}");
+    }
+
+    #[test]
+    fn rosenbrock_zero_at_ones() {
+        let f = Rosenbrock(4);
+        let cfg =
+            Config::new((0..4).map(|i| (format!("x{i}"), ParamValue::F64(1.0))).collect());
+        assert!(f.eval(&cfg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ackley_zero_at_origin() {
+        let f = Ackley(3);
+        let cfg =
+            Config::new((0..3).map(|i| (format!("x{i}"), ParamValue::F64(0.0))).collect());
+        assert!(f.eval(&cfg).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hartmann6_known_minimum() {
+        let xstar = [0.20169, 0.150011, 0.476874, 0.275332, 0.311652, 0.6573];
+        let cfg = Config::new(
+            xstar.iter().enumerate().map(|(i, &v)| (format!("x{i}"), ParamValue::F64(v))).collect(),
+        );
+        let v = Hartmann6.eval(&cfg);
+        assert!((v - (-3.32237)).abs() < 1e-3, "{v}");
+    }
+
+    #[test]
+    fn registry_covers_all() {
+        for name in ["branin", "mixed_branin", "cat_branin", "rosenbrock", "ackley", "hartmann6"] {
+            let f = by_name(name).unwrap();
+            let mut rng = Pcg64::new(0);
+            let v = f.eval(&f.space().sample(&mut rng));
+            assert!(v.is_finite());
+            assert!(v >= f.optimum() - 1e-6);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,151 @@
+//! Command-line argument parsing (no clap in the offline registry).
+//!
+//! Grammar: `mango <subcommand> [--flag value | --switch] ...`.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Flags that take no value.
+const SWITCHES: [&str; 4] = ["json", "verbose", "tune-lengthscale", "help"];
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(anyhow!("unexpected positional argument '{arg}'"));
+            };
+            if SWITCHES.contains(&name) {
+                out.switches.push(name.to_string());
+            } else {
+                let value = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                out.flags.insert(name.to_string(), value);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{flag}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{flag}: '{v}' is not an integer")),
+        }
+    }
+
+    /// Error on flags the subcommand doesn't understand.
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(anyhow!("unknown flag --{k} (known: {known:?})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The CLI usage text.
+pub const USAGE: &str = "\
+mango — parallel hyperparameter tuning (MANGO reproduction)
+
+USAGE:
+  mango tune --workload <name> [options]   run one tuning job
+  mango experiment --config <file.json>    run a repeated experiment
+  mango list                               list workloads/optimizers/schedulers
+  mango info                               show artifact + platform info
+
+TUNE OPTIONS:
+  --workload <name>        wine_gbt | knn_wine | svm_wine | branin |
+                           mixed_branin | rosenbrock | ackley | hartmann6
+  --optimizer <name>       hallucination | clustering | random | tpe | thompson
+  --scheduler <name>       serial | threaded | celery        [serial]
+  --backend <name>         pjrt | native                     [pjrt]
+  --batch-size <k>         configurations per iteration      [1]
+  --iterations <n>         optimizer iterations (batches)    [60]
+  --initial-random <n>     random evals before surrogate     [2]
+  --workers <n>            parallel workers                  [batch size]
+  --mc-samples <n>         MC acquisition samples (0 = heuristic)
+  --seed <s>               RNG seed                          [0]
+  --early-stop <n>         stop after n iterations without improvement
+  --tune-lengthscale       GP lengthscale by marginal likelihood
+  --json                   machine-readable output
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse("tune --workload branin --batch-size 5 --json").unwrap();
+        assert_eq!(a.subcommand, "tune");
+        assert_eq!(a.get("workload"), Some("branin"));
+        assert_eq!(a.get_usize("batch-size", 1).unwrap(), 5);
+        assert!(a.has("json"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse("tune --workload").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("tune --batch-size five").unwrap();
+        assert!(a.get_usize("batch-size", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("tune --bogus 1").unwrap();
+        assert!(a.ensure_known(&["workload"]).is_err());
+        assert!(a.ensure_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("tune").unwrap();
+        assert_eq!(a.get_or("optimizer", "hallucination"), "hallucination");
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: a hand-rolled JSON value type + parser/serializer (the
+//! offline registry has no serde) and the typed experiment/tuner config
+//! loaded by the CLI.
+
+pub mod json;
+pub mod settings;
+
+pub use json::{parse as parse_json, Json};
+pub use settings::{ExperimentConfig, RunConfig};

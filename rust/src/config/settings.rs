@@ -1,0 +1,199 @@
+//! Typed configuration loaded from JSON files or CLI flags.
+
+use super::json::Json;
+use anyhow::{anyhow, Result};
+
+/// How one tuning run is configured — mirrors MANGO's user-controlled
+/// options (§2.4: batch size, algorithm, max iterations, initial random
+/// evaluations, acquisition sample-size override).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Batch size k: configurations proposed per iteration.
+    pub batch_size: usize,
+    /// Number of optimizer iterations (batches), the paper's x-axis.
+    pub num_iterations: usize,
+    /// Random configurations evaluated before the surrogate takes over.
+    pub initial_random: usize,
+    /// "hallucination" | "clustering" | "random" | "tpe".
+    pub optimizer: String,
+    /// "serial" | "threaded" | "celery".
+    pub scheduler: String,
+    /// Worker count for parallel schedulers.
+    pub workers: usize,
+    /// Override for the Monte-Carlo acquisition sample count (0 = heuristic).
+    pub mc_samples: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// GP surrogate backend: "pjrt" (artifacts) or "native".
+    pub backend: String,
+    /// Optimize GP lengthscale by marginal likelihood grid search.
+    pub tune_lengthscale: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 1,
+            num_iterations: 60,
+            initial_random: 2,
+            optimizer: "hallucination".into(),
+            scheduler: "serial".into(),
+            workers: 1,
+            mc_samples: 0,
+            seed: 0,
+            backend: "pjrt".into(),
+            tune_lengthscale: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON object, falling back to defaults per field.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow!("run config must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "batch_size" => c.batch_size = num(v, k)? as usize,
+                "num_iterations" => c.num_iterations = num(v, k)? as usize,
+                "initial_random" => c.initial_random = num(v, k)? as usize,
+                "workers" => c.workers = num(v, k)? as usize,
+                "mc_samples" => c.mc_samples = num(v, k)? as usize,
+                "seed" => c.seed = num(v, k)? as u64,
+                "optimizer" => c.optimizer = str_(v, k)?,
+                "scheduler" => c.scheduler = str_(v, k)?,
+                "backend" => c.backend = str_(v, k)?,
+                "tune_lengthscale" => {
+                    c.tune_lengthscale = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
+                }
+                _ => return Err(anyhow!("unknown run config key '{k}'")),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_size == 0 {
+            return Err(anyhow!("batch_size must be >= 1"));
+        }
+        if self.num_iterations == 0 {
+            return Err(anyhow!("num_iterations must be >= 1"));
+        }
+        const OPTS: [&str; 5] = ["hallucination", "clustering", "random", "tpe", "thompson"];
+        if !OPTS.contains(&self.optimizer.as_str()) {
+            return Err(anyhow!("unknown optimizer '{}' (one of {OPTS:?})", self.optimizer));
+        }
+        const SCHEDS: [&str; 3] = ["serial", "threaded", "celery"];
+        if !SCHEDS.contains(&self.scheduler.as_str()) {
+            return Err(anyhow!("unknown scheduler '{}' (one of {SCHEDS:?})", self.scheduler));
+        }
+        const BACKENDS: [&str; 2] = ["pjrt", "native"];
+        if !BACKENDS.contains(&self.backend.as_str()) {
+            return Err(anyhow!("unknown backend '{}' (one of {BACKENDS:?})", self.backend));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("num_iterations", Json::Num(self.num_iterations as f64)),
+            ("initial_random", Json::Num(self.initial_random as f64)),
+            ("optimizer", Json::Str(self.optimizer.clone())),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("mc_samples", Json::Num(self.mc_samples as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("backend", Json::Str(self.backend.clone())),
+            ("tune_lengthscale", Json::Bool(self.tune_lengthscale)),
+        ])
+    }
+}
+
+/// A whole experiment: a run config repeated `repeats` times on a named
+/// workload (what the figure harnesses consume).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub workload: String,
+    pub repeats: usize,
+    pub run: RunConfig,
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("experiment must be an object"))?;
+        let name = obj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("experiment needs 'name'"))?
+            .to_string();
+        let workload = obj
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("experiment needs 'workload'"))?
+            .to_string();
+        let repeats = obj.get("repeats").and_then(|v| v.as_usize()).unwrap_or(1);
+        let run = match obj.get("run") {
+            Some(r) => RunConfig::from_json(r)?,
+            None => RunConfig::default(),
+        };
+        Ok(Self { name, workload, repeats, run })
+    }
+}
+
+fn num(v: &Json, k: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("{k}: expected number"))
+}
+
+fn str_(v: &Json, k: &str) -> Result<String> {
+    Ok(v.as_str().ok_or_else(|| anyhow!("{k}: expected string"))?.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::parse;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = parse(r#"{"batch_size": 5, "optimizer": "clustering", "seed": 7}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.batch_size, 5);
+        assert_eq!(c.optimizer, "clustering");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.num_iterations, 60); // default preserved
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_values() {
+        assert!(RunConfig::from_json(&parse(r#"{"bogus": 1}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&parse(r#"{"batch_size": 0}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&parse(r#"{"optimizer": "sgd"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = RunConfig { batch_size: 5, seed: 42, ..Default::default() };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn experiment_parse() {
+        let j = parse(
+            r#"{"name": "fig2", "workload": "wine_gbt", "repeats": 20,
+                "run": {"batch_size": 5}}"#,
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(e.repeats, 20);
+        assert_eq!(e.run.batch_size, 5);
+    }
+}

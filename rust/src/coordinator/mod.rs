@@ -1,0 +1,9 @@
+//! The coordinator: [`Tuner`] ties the search space, a parallel optimizer,
+//! and a scheduler into the paper's workflow (Fig. 1): propose a batch →
+//! schedule evaluations → absorb (possibly partial) results → repeat.
+
+mod results;
+mod tuner;
+
+pub use results::{IterationRecord, TuningResult};
+pub use tuner::{ObjectiveFn, Tuner, TunerConfig};

@@ -1,0 +1,71 @@
+//! Tuning run results: per-iteration records + the final summary.
+
+use crate::config::json::Json;
+use crate::space::Config;
+
+/// What happened in one optimizer iteration (one batch).
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub iteration: usize,
+    /// Configurations proposed this iteration.
+    pub proposed: usize,
+    /// Evaluations that actually returned (partial results!).
+    pub returned: usize,
+    /// Best objective seen so far (user sense).
+    pub best_so_far: f64,
+    /// Wall time of this iteration in ms (propose + evaluate).
+    pub wall_ms: f64,
+}
+
+/// Final result of a tuning run (user objective sense throughout).
+#[derive(Clone, Debug)]
+pub struct TuningResult {
+    pub best_params: Config,
+    pub best_objective: f64,
+    /// All completed evaluations in arrival order.
+    pub history: Vec<(Config, f64)>,
+    /// Best-so-far after each iteration — the paper's figures' y-axis.
+    pub best_series: Vec<f64>,
+    pub iterations: Vec<IterationRecord>,
+    pub evaluations: usize,
+    pub wall_ms: f64,
+}
+
+impl TuningResult {
+    /// Machine-readable dump (CLI --json).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("best_params", self.best_params.to_json()),
+            ("best_objective", Json::Num(self.best_objective)),
+            ("evaluations", Json::Num(self.evaluations as f64)),
+            ("iterations", Json::Num(self.iterations.len() as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            (
+                "best_series",
+                Json::Arr(self.best_series.iter().map(|&v| Json::Num(v)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+
+    #[test]
+    fn json_dump_contains_series() {
+        let r = TuningResult {
+            best_params: Config::new(vec![("x".into(), ParamValue::F64(1.0))]),
+            best_objective: 2.0,
+            history: vec![],
+            best_series: vec![1.0, 2.0],
+            iterations: vec![],
+            evaluations: 2,
+            wall_ms: 3.5,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("best_objective").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("best_series").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

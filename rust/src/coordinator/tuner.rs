@@ -1,0 +1,418 @@
+//! The [`Tuner`]: MANGO's user-facing entry point.
+
+use super::results::{IterationRecord, TuningResult};
+use crate::config::settings::RunConfig;
+use crate::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
+use crate::scheduler::{self, BatchResult, SchedulerKind};
+use crate::space::{Config, SearchSpace};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+use anyhow::{anyhow, Result};
+
+/// Per-config objective closure type (boxed form used by the CLI).
+pub type ObjectiveFn = Box<dyn Fn(&Config) -> Option<f64> + Sync>;
+
+/// Tuner configuration — the paper's user-controlled options (§2.4).
+#[derive(Clone, Debug)]
+pub struct TunerConfig {
+    pub batch_size: usize,
+    pub num_iterations: usize,
+    pub initial_random: usize,
+    pub optimizer: OptimizerKind,
+    pub scheduler: SchedulerKind,
+    pub workers: usize,
+    /// 0 = the space's Monte-Carlo heuristic.
+    pub mc_samples: usize,
+    pub seed: u64,
+    pub backend: SurrogateBackend,
+    pub tune_lengthscale: bool,
+    /// Stop after this many iterations without improvement (None = never).
+    pub early_stop: Option<usize>,
+    /// Largest history the surrogate sees (PJRT artifacts cap at 512).
+    pub max_surrogate_obs: usize,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 1,
+            num_iterations: 60,
+            initial_random: 2,
+            optimizer: OptimizerKind::Hallucination,
+            scheduler: SchedulerKind::Serial,
+            workers: 1,
+            mc_samples: 0,
+            seed: 0,
+            backend: SurrogateBackend::Pjrt,
+            tune_lengthscale: false,
+            early_stop: None,
+            max_surrogate_obs: 512,
+        }
+    }
+}
+
+impl TunerConfig {
+    /// Build from the JSON-level [`RunConfig`].
+    pub fn from_run_config(rc: &RunConfig) -> Result<Self> {
+        Ok(Self {
+            batch_size: rc.batch_size,
+            num_iterations: rc.num_iterations,
+            initial_random: rc.initial_random,
+            optimizer: OptimizerKind::from_str(&rc.optimizer)
+                .ok_or_else(|| anyhow!("bad optimizer {}", rc.optimizer))?,
+            scheduler: SchedulerKind::from_str(&rc.scheduler)
+                .ok_or_else(|| anyhow!("bad scheduler {}", rc.scheduler))?,
+            workers: rc.workers.max(1),
+            mc_samples: rc.mc_samples,
+            seed: rc.seed,
+            backend: SurrogateBackend::from_str(&rc.backend)
+                .ok_or_else(|| anyhow!("bad backend {}", rc.backend))?,
+            tune_lengthscale: rc.tune_lengthscale,
+            early_stop: None,
+            max_surrogate_obs: 512,
+        })
+    }
+}
+
+/// Objective sense.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Sense {
+    Maximize,
+    Minimize,
+}
+
+/// The paper's Fig. 1 coordinator.
+pub struct Tuner {
+    space: SearchSpace,
+    config: TunerConfig,
+    /// Optional per-iteration callback (progress bars, early inspection).
+    callback: Option<Box<dyn FnMut(&IterationRecord)>>,
+}
+
+impl Tuner {
+    pub fn new(space: SearchSpace, config: TunerConfig) -> Self {
+        Self { space, config, callback: None }
+    }
+
+    /// Register a per-iteration callback.
+    pub fn with_callback(mut self, cb: impl FnMut(&IterationRecord) + 'static) -> Self {
+        self.callback = Some(Box::new(cb));
+        self
+    }
+
+    pub fn config(&self) -> &TunerConfig {
+        &self.config
+    }
+
+    /// Maximize a per-config objective using the configured scheduler.
+    pub fn maximize<F>(&mut self, objective: F) -> Result<TuningResult>
+    where
+        F: Fn(&Config) -> Option<f64> + Sync,
+    {
+        let mut sched =
+            scheduler::build(self.config.scheduler, self.config.workers, self.config.seed);
+        self.run(Sense::Maximize, &mut |batch| sched.evaluate(&objective, batch))
+    }
+
+    /// Minimize a per-config objective.
+    pub fn minimize<F>(&mut self, objective: F) -> Result<TuningResult>
+    where
+        F: Fn(&Config) -> Option<f64> + Sync,
+    {
+        let mut sched =
+            scheduler::build(self.config.scheduler, self.config.workers, self.config.seed);
+        self.run(Sense::Minimize, &mut |batch| sched.evaluate(&objective, batch))
+    }
+
+    /// Maximize with a user-supplied *batch* objective — the paper's
+    /// decoupling: bring any scheduling framework by consuming the whole
+    /// batch yourself and returning (possibly partial) `(evals, params)`.
+    pub fn maximize_batch<F>(&mut self, mut batch_objective: F) -> Result<TuningResult>
+    where
+        F: FnMut(&[Config]) -> BatchResult,
+    {
+        self.run(Sense::Maximize, &mut batch_objective)
+    }
+
+    /// Minimize with a user-supplied batch objective.
+    pub fn minimize_batch<F>(&mut self, mut batch_objective: F) -> Result<TuningResult>
+    where
+        F: FnMut(&[Config]) -> BatchResult,
+    {
+        self.run(Sense::Minimize, &mut batch_objective)
+    }
+
+    fn run(
+        &mut self,
+        sense: Sense,
+        evaluate: &mut dyn FnMut(&[Config]) -> BatchResult,
+    ) -> Result<TuningResult> {
+        let cfg = &self.config;
+        let opts = GpOptions {
+            backend: cfg.backend,
+            mc_samples: cfg.mc_samples,
+            initial_random: cfg.initial_random,
+            tune_lengthscale: cfg.tune_lengthscale,
+            ..Default::default()
+        };
+        let mut optimizer: Box<dyn BatchOptimizer> =
+            optimizer::build(cfg.optimizer, &self.space, &opts)?;
+        let mut rng = Pcg64::new(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+
+        let total = Stopwatch::start();
+        let mut history = History::new(); // maximization convention
+        let mut user_history: Vec<(Config, f64)> = Vec::new();
+        let mut best_series = Vec::with_capacity(cfg.num_iterations);
+        let mut iterations = Vec::with_capacity(cfg.num_iterations);
+        let mut since_improvement = 0usize;
+        let mut best_so_far = f64::NEG_INFINITY; // internal sense
+
+        for iteration in 0..cfg.num_iterations {
+            let it_timer = Stopwatch::start();
+            // Surrogate history is capped to the artifact capacity: keep the
+            // most recent window (the GP forgets the oldest points).
+            let mut opt_view = history.clone();
+            opt_view.truncate_to_recent(cfg.max_surrogate_obs);
+            let batch = optimizer.propose(&opt_view, cfg.batch_size, &mut rng)?;
+            anyhow::ensure!(!batch.is_empty(), "optimizer proposed an empty batch");
+
+            let result = evaluate(&batch);
+            anyhow::ensure!(
+                result.evals.len() == result.params.len(),
+                "objective returned misaligned evals/params"
+            );
+            for (cfg_done, v) in result.params.into_iter().zip(result.evals) {
+                anyhow::ensure!(v.is_finite(), "objective returned a non-finite value");
+                let internal = match sense {
+                    Sense::Maximize => v,
+                    Sense::Minimize => -v,
+                };
+                best_so_far = best_so_far.max(internal);
+                history.push(cfg_done.clone(), internal);
+                user_history.push((cfg_done, v));
+            }
+
+            let user_best = match sense {
+                Sense::Maximize => best_so_far,
+                Sense::Minimize => -best_so_far,
+            };
+            best_series.push(user_best);
+            let record = IterationRecord {
+                iteration,
+                proposed: batch.len(),
+                returned: history.len() - iterations.iter().map(|r: &IterationRecord| r.returned).sum::<usize>(),
+                best_so_far: user_best,
+                wall_ms: it_timer.elapsed_ms(),
+            };
+            if let Some(cb) = &mut self.callback {
+                cb(&record);
+            }
+            crate::log_debug!(
+                "iter {iteration}: proposed {} returned {} best {:.6}",
+                record.proposed,
+                record.returned,
+                user_best
+            );
+            // Early stopping on no improvement.
+            let improved = best_series.len() < 2
+                || match sense {
+                    Sense::Maximize => {
+                        best_series[best_series.len() - 1] > best_series[best_series.len() - 2]
+                    }
+                    Sense::Minimize => {
+                        best_series[best_series.len() - 1] < best_series[best_series.len() - 2]
+                    }
+                };
+            since_improvement = if improved { 0 } else { since_improvement + 1 };
+            iterations.push(record);
+            if let Some(stop) = cfg.early_stop {
+                if since_improvement >= stop {
+                    crate::log_info!("early stop after {iteration} iterations");
+                    break;
+                }
+            }
+        }
+
+        let (best_cfg, best_internal) = history
+            .best()
+            .ok_or_else(|| anyhow!("no evaluation ever succeeded"))?;
+        let best_objective = match sense {
+            Sense::Maximize => best_internal,
+            Sense::Minimize => -best_internal,
+        };
+        Ok(TuningResult {
+            best_params: best_cfg.clone(),
+            best_objective,
+            evaluations: user_history.len(),
+            history: user_history,
+            best_series,
+            iterations,
+            wall_ms: total.elapsed_ms(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+
+    fn tuner(optimizer: OptimizerKind, iters: usize, batch: usize) -> Tuner {
+        let space = crate::space::svm_space();
+        Tuner::new(
+            space,
+            TunerConfig {
+                optimizer,
+                num_iterations: iters,
+                batch_size: batch,
+                backend: SurrogateBackend::Native,
+                seed: 11,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn quad(cfg: &Config) -> Option<f64> {
+        let c = cfg.get_f64("c")?;
+        Some(-(c - 60.0) * (c - 60.0))
+    }
+
+    #[test]
+    fn maximize_converges_and_reports() {
+        let mut t = tuner(OptimizerKind::Hallucination, 20, 1);
+        let r = t.maximize(quad).unwrap();
+        assert_eq!(r.best_series.len(), 20);
+        assert_eq!(r.evaluations, 20);
+        assert!(r.best_objective > -100.0, "best {}", r.best_objective);
+        // best_series is monotone non-decreasing for maximization
+        for w in r.best_series.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert_eq!(r.best_objective, *r.best_series.last().unwrap());
+    }
+
+    #[test]
+    fn minimize_flips_sense() {
+        let mut t = tuner(OptimizerKind::Hallucination, 15, 1);
+        let r = t.minimize(|cfg| {
+            let c = cfg.get_f64("c")?;
+            Some((c - 60.0) * (c - 60.0))
+        }).unwrap();
+        assert!(r.best_objective < 100.0);
+        for w in r.best_series.windows(2) {
+            assert!(w[1] <= w[0], "minimize series must not increase");
+        }
+    }
+
+    #[test]
+    fn batch_mode_with_partial_results() {
+        let mut t = tuner(OptimizerKind::Random, 10, 4);
+        let mut calls = 0usize;
+        let r = t
+            .maximize_batch(|batch| {
+                calls += 1;
+                let mut out = BatchResult::default();
+                // Lose every other evaluation (straggler simulation).
+                for (i, cfg) in batch.iter().enumerate() {
+                    if i % 2 == 0 {
+                        out.push(cfg.clone(), quad(cfg).unwrap());
+                    }
+                }
+                out
+            })
+            .unwrap();
+        assert_eq!(calls, 10);
+        assert_eq!(r.evaluations, 20, "half of 40 proposals returned");
+    }
+
+    #[test]
+    fn early_stop_halts() {
+        let space = crate::space::svm_space();
+        let mut t = Tuner::new(
+            space,
+            TunerConfig {
+                optimizer: OptimizerKind::Random,
+                num_iterations: 50,
+                early_stop: Some(3),
+                backend: SurrogateBackend::Native,
+                seed: 1,
+                ..Default::default()
+            },
+        );
+        // Constant objective: never improves after the first iteration.
+        let r = t.maximize(|_| Some(1.0)).unwrap();
+        assert!(r.best_series.len() <= 6, "ran {} iters", r.best_series.len());
+    }
+
+    #[test]
+    fn callback_sees_every_iteration() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let seen = Rc::new(RefCell::new(0usize));
+        let seen2 = seen.clone();
+        let space = crate::space::svm_space();
+        let mut t = Tuner::new(
+            space,
+            TunerConfig {
+                optimizer: OptimizerKind::Random,
+                num_iterations: 7,
+                backend: SurrogateBackend::Native,
+                ..Default::default()
+            },
+        )
+        .with_callback(move |rec| {
+            assert!(rec.proposed >= 1);
+            *seen2.borrow_mut() += 1;
+        });
+        t.maximize(|_| Some(0.0)).unwrap();
+        assert_eq!(*seen.borrow(), 7);
+    }
+
+    #[test]
+    fn all_failures_is_an_error() {
+        let mut t = tuner(OptimizerKind::Random, 3, 2);
+        let err = t.maximize(|_| None).unwrap_err();
+        assert!(err.to_string().contains("no evaluation"));
+    }
+
+    #[test]
+    fn non_finite_objective_rejected() {
+        let mut t = tuner(OptimizerKind::Random, 2, 1);
+        assert!(t.maximize(|_| Some(f64::NAN)).is_err());
+    }
+
+    #[test]
+    fn tpe_and_clustering_run_end_to_end() {
+        for kind in [OptimizerKind::Tpe, OptimizerKind::Clustering] {
+            let mut t = tuner(kind, 10, 3);
+            let r = t.maximize(quad).unwrap();
+            assert_eq!(r.evaluations, 30);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut t = tuner(OptimizerKind::Hallucination, 8, 2);
+            t.maximize(quad).unwrap().best_objective
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn from_run_config_maps() {
+        let rc = RunConfig {
+            optimizer: "clustering".into(),
+            scheduler: "threaded".into(),
+            backend: "native".into(),
+            batch_size: 5,
+            workers: 8,
+            ..Default::default()
+        };
+        let tc = TunerConfig::from_run_config(&rc).unwrap();
+        assert_eq!(tc.optimizer, OptimizerKind::Clustering);
+        assert_eq!(tc.scheduler, SchedulerKind::Threaded);
+        assert_eq!(tc.workers, 8);
+        let _ = Config::new(vec![("x".into(), ParamValue::F64(0.0))]); // silence import
+    }
+}

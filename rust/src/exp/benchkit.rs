@@ -1,0 +1,62 @@
+//! Timing kit for the perf benches (no criterion in the offline registry):
+//! warmup + timed iterations, robust summary statistics.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Timing summary over bench iterations (all in microseconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} iters={:<5} mean={:>10.1}us p50={:>10.1}us p99={:>10.1}us min={:>10.1}us",
+            self.name, self.iters, self.mean_us, self.p50_us, self.p99_us, self.min_us
+        )
+    }
+}
+
+/// Measure `f` after `warmup` unrecorded calls.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_us: stats::mean(&samples),
+        p50_us: stats::quantile(&samples, 0.5),
+        p99_us: stats::quantile(&samples, 0.99),
+        min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min_us <= s.p50_us);
+        assert!(s.p50_us <= s.p99_us + 1e-9);
+        assert!(s.mean_us > 0.0);
+        assert!(s.row().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Repeated-trial experiment runner — regenerates the paper's figures:
+//! run a (workload, tuner config) pair `repeats` times with shifted seeds,
+//! average the best-so-far series (the paper averages 20 runs for Fig. 2,
+//! 10 for Fig. 3).
+
+use super::workloads::Workload;
+use crate::coordinator::{Tuner, TunerConfig};
+use crate::util::stats;
+use anyhow::Result;
+
+/// Aggregated result of repeated tuning trials.
+#[derive(Clone, Debug)]
+pub struct TrialSeries {
+    pub label: String,
+    /// best-so-far per iteration, one inner vec per trial (user sense).
+    pub per_trial: Vec<Vec<f64>>,
+    /// Mean across trials at each iteration.
+    pub mean: Vec<f64>,
+    /// Std-dev across trials at each iteration.
+    pub std: Vec<f64>,
+    /// Mean total evaluations per trial.
+    pub mean_evaluations: f64,
+    /// Mean wall time per trial (ms).
+    pub mean_wall_ms: f64,
+}
+
+/// Run `repeats` trials of `workload` under `base` (seed shifted per trial).
+pub fn run_trials(
+    workload: &Workload,
+    base: &TunerConfig,
+    repeats: usize,
+    label: &str,
+) -> Result<TrialSeries> {
+    let mut per_trial = Vec::with_capacity(repeats);
+    let mut evals = Vec::with_capacity(repeats);
+    let mut walls = Vec::with_capacity(repeats);
+    for r in 0..repeats {
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(1000 * r as u64 + 17);
+        let mut tuner = Tuner::new(workload.space.clone(), cfg);
+        let obj = workload.objective.clone();
+        let result = if workload.minimize {
+            tuner.minimize(move |c| obj(c))?
+        } else {
+            tuner.maximize(move |c| obj(c))?
+        };
+        per_trial.push(result.best_series.clone());
+        evals.push(result.evaluations as f64);
+        walls.push(result.wall_ms);
+    }
+    let mean = stats::mean_series(&per_trial);
+    let n_iters = mean.len();
+    let std = (0..n_iters)
+        .map(|i| {
+            let vals: Vec<f64> =
+                per_trial.iter().filter_map(|s| s.get(i).copied()).collect();
+            stats::std_dev(&vals)
+        })
+        .collect();
+    Ok(TrialSeries {
+        label: label.to_string(),
+        per_trial,
+        mean,
+        std,
+        mean_evaluations: stats::mean(&evals),
+        mean_wall_ms: stats::mean(&walls),
+    })
+}
+
+/// Print one series as CSV rows: `label,iteration,mean,std`.
+pub fn print_series(s: &TrialSeries) {
+    for (i, (m, sd)) in s.mean.iter().zip(&s.std).enumerate() {
+        println!("{},{},{:.6},{:.6}", s.label, i + 1, m, sd);
+    }
+}
+
+/// Print a compact per-strategy summary table row.
+pub fn print_summary_row(s: &TrialSeries, checkpoints: &[usize]) {
+    let mut cells = Vec::new();
+    for &cp in checkpoints {
+        let idx = cp.min(s.mean.len()).saturating_sub(1);
+        cells.push(format!("{:.4}", s.mean.get(idx).copied().unwrap_or(f64::NAN)));
+    }
+    println!(
+        "{:<28} {}  (evals/trial {:.0}, {:.0} ms/trial)",
+        s.label,
+        cells.join("  "),
+        s.mean_evaluations,
+        s.mean_wall_ms
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::workloads;
+    use crate::optimizer::{OptimizerKind, SurrogateBackend};
+
+    #[test]
+    fn trials_aggregate_and_differ_by_seed() {
+        let w = workloads::by_name("branin").unwrap();
+        let cfg = TunerConfig {
+            optimizer: OptimizerKind::Random,
+            backend: SurrogateBackend::Native,
+            num_iterations: 10,
+            ..Default::default()
+        };
+        let t = run_trials(&w, &cfg, 3, "rand").unwrap();
+        assert_eq!(t.per_trial.len(), 3);
+        assert_eq!(t.mean.len(), 10);
+        assert_ne!(t.per_trial[0], t.per_trial[1], "seeds must differ");
+        // minimization: mean series non-increasing
+        for w2 in t.mean.windows(2) {
+            assert!(w2[1] <= w2[0] + 1e-9);
+        }
+        assert_eq!(t.mean_evaluations, 10.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: named workloads (the paper's evaluation tasks),
+//! repeated-trial runners for the figure benches, and a small timing kit
+//! for the perf pass.
+
+pub mod benchkit;
+pub mod harness;
+pub mod workloads;
+
+pub use harness::{run_trials, TrialSeries};
+pub use workloads::Workload;

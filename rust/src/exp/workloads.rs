@@ -1,0 +1,166 @@
+//! Named tuning workloads: the paper's two evaluation tasks plus the
+//! ablation benchmark functions and two extra classifier workloads
+//! (`KNN_Celery.ipynb`, `SVM_Example.ipynb` analogues).
+
+use crate::benchfn;
+use crate::ml::cv::cross_val_accuracy;
+use crate::ml::gbt::{GbtClassifier, GbtParams};
+use crate::ml::knn::KnnClassifier;
+use crate::ml::svm::SvmClassifier;
+use crate::ml::wine::default_wine;
+use crate::ml::Dataset;
+use crate::space::{Config, SearchSpace};
+use std::sync::{Arc, OnceLock};
+
+/// A named tuning problem.
+#[derive(Clone)]
+pub struct Workload {
+    pub name: String,
+    pub space: SearchSpace,
+    /// true = minimize (benchmark functions), false = maximize (accuracy).
+    pub minimize: bool,
+    pub objective: Arc<dyn Fn(&Config) -> Option<f64> + Send + Sync>,
+    /// Known optimum, when there is one (regret reporting).
+    pub optimum: Option<f64>,
+}
+
+/// The wine dataset is shared across all Fig. 2 evaluations (and threads).
+fn wine() -> &'static Dataset {
+    static WINE: OnceLock<Dataset> = OnceLock::new();
+    WINE.get_or_init(default_wine)
+}
+
+/// CV folds used by the classifier workloads (fixed seed: every config
+/// sees identical folds, as in the paper's setup).
+const CV_FOLDS: usize = 3;
+const CV_SEED: u64 = 1234;
+
+/// Fig. 2 workload: tune the GBT (XGBoost-substitute) on wine, Listing 1
+/// search space, objective = mean CV accuracy.
+pub fn wine_gbt() -> Workload {
+    Workload {
+        name: "wine_gbt".into(),
+        space: crate::space::xgboost_space(),
+        minimize: false,
+        objective: Arc::new(|cfg| {
+            let params = GbtParams::from_config(cfg);
+            Some(cross_val_accuracy(wine(), CV_FOLDS, CV_SEED, || {
+                GbtClassifier::new(params.clone())
+            }))
+        }),
+        optimum: None,
+    }
+}
+
+/// `KNN_Celery.ipynb` analogue: kNN on wine.
+pub fn knn_wine() -> Workload {
+    Workload {
+        name: "knn_wine".into(),
+        space: SearchSpace::builder()
+            .range("n_neighbors", 1, 50)
+            .choice("weights", &["uniform", "distance"])
+            .int("p", 1, 4)
+            .build(),
+        minimize: false,
+        objective: Arc::new(|cfg| {
+            let knn = KnnClassifier::from_config(cfg);
+            let (k, w, p) = (knn.k, knn.weighting, knn.p);
+            Some(cross_val_accuracy(wine(), CV_FOLDS, CV_SEED, move || {
+                KnnClassifier::new(k, w, p)
+            }))
+        }),
+        optimum: None,
+    }
+}
+
+/// `SVM_Example.ipynb` analogue: Listing 2 space, RBF-SVM on wine.
+pub fn svm_wine() -> Workload {
+    Workload {
+        name: "svm_wine".into(),
+        space: crate::space::svm_space(),
+        minimize: false,
+        objective: Arc::new(|cfg| {
+            let svm = SvmClassifier::from_config(cfg);
+            let (c, g) = (svm.c, svm.gamma);
+            Some(cross_val_accuracy(wine(), CV_FOLDS, CV_SEED, move || {
+                SvmClassifier::new(c, g)
+            }))
+        }),
+        optimum: None,
+    }
+}
+
+/// Wrap a [`benchfn::BenchFunction`] as a workload (minimization).
+pub fn from_benchfn(name: &str) -> Option<Workload> {
+    let f = benchfn::by_name(name)?;
+    let space = f.space();
+    let optimum = Some(f.optimum());
+    let f: Arc<dyn benchfn::BenchFunction> = Arc::from(f);
+    Some(Workload {
+        name: name.to_string(),
+        space,
+        minimize: true,
+        objective: Arc::new(move |cfg| Some(f.eval(cfg))),
+        optimum,
+    })
+}
+
+/// Look up any workload by name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    match name {
+        "wine_gbt" => Some(wine_gbt()),
+        "knn_wine" => Some(knn_wine()),
+        "svm_wine" => Some(svm_wine()),
+        other => from_benchfn(other),
+    }
+}
+
+/// All workload names (CLI `list`).
+pub fn all_names() -> Vec<&'static str> {
+    vec![
+        "wine_gbt",
+        "knn_wine",
+        "svm_wine",
+        "branin",
+        "mixed_branin",
+        "cat_branin",
+        "rosenbrock",
+        "ackley",
+        "hartmann6",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn all_workloads_evaluate() {
+        for name in all_names() {
+            let w = by_name(name).unwrap();
+            let mut rng = Pcg64::new(1);
+            let cfg = w.space.sample(&mut rng);
+            let v = (w.objective)(&cfg).unwrap();
+            assert!(v.is_finite(), "{name} returned {v}");
+            if !w.minimize {
+                assert!((0.0..=1.0).contains(&v), "{name}: accuracy {v}");
+            }
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn wine_gbt_space_is_listing1() {
+        let w = wine_gbt();
+        assert_eq!(w.space.len(), 5);
+        assert!(!w.minimize);
+    }
+
+    #[test]
+    fn benchfn_workloads_carry_optimum() {
+        let w = by_name("mixed_branin").unwrap();
+        assert!(w.minimize);
+        assert!(w.optimum.unwrap() > 0.0);
+    }
+}

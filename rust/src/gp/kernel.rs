@@ -1,0 +1,94 @@
+//! Native ARD-RBF kernel — the Rust twin of the L1 Pallas kernel
+//! (`python/compile/kernels/rbf.py`), same math, used by the native backend
+//! and by the Rust-side GP-BUCB updates.
+
+use crate::linalg::Matrix;
+
+/// k(a, b) = exp(-0.5 * sum_d ((a_d - b_d) * inv_ls_d)^2) for one pair.
+#[inline]
+pub fn rbf_pair(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut sq = 0.0;
+    for d in 0..a.len() {
+        let il = if d < inv_ls.len() { inv_ls[d] } else { 0.0 };
+        let diff = (a[d] - b[d]) * il;
+        sq += diff * diff;
+    }
+    (-0.5 * sq).exp()
+}
+
+/// Full (n x m) correlation matrix between row sets.
+pub fn rbf_kernel(x: &Matrix, z: &Matrix, inv_ls: &[f64]) -> Matrix {
+    assert_eq!(x.cols(), z.cols(), "feature dims differ");
+    Matrix::from_fn(x.rows(), z.rows(), |i, j| rbf_pair(x.row(i), z.row(j), inv_ls))
+}
+
+/// Kernel vector k(X, z) for one probe point z.
+pub fn rbf_vec(x: &Matrix, z: &[f64], inv_ls: &[f64]) -> Vec<f64> {
+    (0..x.rows()).map(|i| rbf_pair(x.row(i), z, inv_ls)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn identity_at_zero_distance() {
+        let a = [0.3, 0.7, 0.1];
+        assert!((rbf_pair(&a, &a, &[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn known_value() {
+        // distance^2 = (1*2)^2 = 4 -> exp(-2)
+        let k = rbf_pair(&[0.0], &[1.0], &[2.0]);
+        assert!((k - (-2.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_is_symmetric_psd_diag_one() {
+        check("rbf gram sanity", 32, |g| {
+            let n = g.usize_range(1, 12);
+            let d = g.usize_range(1, 6);
+            let x = Matrix::from_fn(n, d, |_, _| g.f64_range(0.0, 1.0));
+            let inv = vec![3.0; d];
+            let k = rbf_kernel(&x, &x, &inv);
+            for i in 0..n {
+                if (k[(i, i)] - 1.0).abs() > 1e-12 {
+                    return Err(format!("diag {i}: {}", k[(i, i)]));
+                }
+                for j in 0..n {
+                    if (k[(i, j)] - k[(j, i)]).abs() > 1e-12 {
+                        return Err("asymmetric".into());
+                    }
+                    if !(0.0..=1.0 + 1e-12).contains(&k[(i, j)]) {
+                        return Err(format!("out of range: {}", k[(i, j)]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extra_dims_beyond_inv_ls_are_ignored() {
+        // Padding contract: dims without an inverse lengthscale contribute 0.
+        let a = [0.5, 999.0];
+        let b = [0.5, -999.0];
+        assert!((rbf_pair(&a, &b, &[1.0]) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn vec_matches_matrix_row() {
+        let x = Matrix::from_fn(5, 3, |i, j| (i * 3 + j) as f64 * 0.1);
+        let z = [0.2, 0.4, 0.6];
+        let inv = [1.0, 2.0, 0.5];
+        let v = rbf_vec(&x, &z, &inv);
+        let zm = Matrix::from_vec(1, 3, z.to_vec());
+        let km = rbf_kernel(&x, &zm, &inv);
+        for i in 0..5 {
+            assert!((v[i] - km[(i, 0)]).abs() < 1e-15);
+        }
+    }
+}

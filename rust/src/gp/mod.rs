@@ -1,0 +1,276 @@
+//! Gaussian-process surrogate: shared types, the [`Surrogate`] backend
+//! trait, a pure-Rust reference backend ([`NativeGp`]), and the GP-BUCB
+//! incremental hallucination machinery ([`update`]).
+//!
+//! Two backends implement [`Surrogate`]:
+//! * [`NativeGp`] — this module; the correctness oracle and the fallback
+//!   when artifacts are absent.
+//! * [`crate::runtime::PjrtSurrogate`] — the AOT path: the JAX/Pallas
+//!   programs in `artifacts/` executed through PJRT (the production path).
+//!
+//! Contract parity between the two is enforced by integration tests in
+//! `rust/tests/pjrt_vs_native.rs`.
+
+pub mod kernel;
+pub mod update;
+
+use crate::linalg::{self, Matrix};
+use anyhow::Result;
+
+/// GP hyperparameters over the *encoded* (unit-cube) feature space.
+#[derive(Clone, Debug)]
+pub struct GpParams {
+    /// Signal amplitude (prior variance). y is normalized, so 1.0.
+    pub amp: f64,
+    /// Observation noise added to the kernel diagonal.
+    pub noise: f64,
+    /// UCB exploration weight (set per-iteration by the adaptive schedule).
+    pub beta: f64,
+    /// Per-dimension inverse lengthscales.
+    pub inv_lengthscale: Vec<f64>,
+}
+
+impl GpParams {
+    /// Defaults for `dims` encoded dimensions: unit amplitude, small noise,
+    /// lengthscale 0.3 in the unit cube (≈ a third of each axis).
+    pub fn new(dims: usize) -> Self {
+        Self {
+            amp: 1.0,
+            noise: 1e-3,
+            beta: 2.0,
+            inv_lengthscale: vec![1.0 / 0.3; dims],
+        }
+    }
+
+    pub fn with_lengthscale(mut self, ls: f64) -> Self {
+        for v in &mut self.inv_lengthscale {
+            *v = 1.0 / ls;
+        }
+        self
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+}
+
+/// Output of a posterior fit. `kinv` is dense (n x n) — needed both for
+/// acquisition (via the backend) and for the Rust-side GP-BUCB updates.
+#[derive(Clone, Debug)]
+pub struct FitOut {
+    pub alpha: Vec<f64>,
+    pub kinv: Matrix,
+    pub logdet: f64,
+}
+
+impl FitOut {
+    /// Log marginal likelihood of the fitted GP (used by the optional
+    /// lengthscale grid search). y must be the same vector passed to fit.
+    pub fn log_marginal_likelihood(&self, y: &[f64]) -> f64 {
+        let n = y.len() as f64;
+        let fit_term: f64 = y.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        -0.5 * fit_term - 0.5 * self.logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+}
+
+/// Acquisition outputs over a candidate set.
+#[derive(Clone, Debug)]
+pub struct AcquireOut {
+    pub ucb: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+    /// w = K^{-1} k_c, (n x m): consumed by [`update::BatchHallucinator`].
+    pub w: Matrix,
+}
+
+/// A GP surrogate backend. `x` rows are encoded configs; `y` must already be
+/// normalized (zero mean / unit variance) and in maximization convention.
+pub trait Surrogate {
+    /// Fit the posterior over `n = x.rows()` observations.
+    fn fit(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut>;
+
+    /// Score candidates (mean/var/UCB + the `w` matrix) under a fit.
+    fn acquire(
+        &mut self,
+        x: &Matrix,
+        fit: &FitOut,
+        xc: &Matrix,
+        params: &GpParams,
+    ) -> Result<AcquireOut>;
+
+    /// Backend name for logs/EXPERIMENTS.md.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust GP backend: mirrors `python/compile/model.py` exactly
+/// (same kernel, same clamps) so the two backends agree numerically.
+#[derive(Default)]
+pub struct NativeGp;
+
+impl Surrogate for NativeGp {
+    fn fit(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut> {
+        let n = x.rows();
+        anyhow::ensure!(y.len() == n, "y length {} != x rows {}", y.len(), n);
+        let corr = kernel::rbf_kernel(x, x, &params.inv_lengthscale);
+        let mut k = corr;
+        for i in 0..n {
+            for j in 0..n {
+                k[(i, j)] *= params.amp;
+            }
+            k[(i, i)] += params.noise;
+        }
+        let l = linalg::cholesky(&k);
+        let kinv = linalg::spd_inverse(&l);
+        let alpha = kinv.matvec(y);
+        let logdet = linalg::logdet_from_cholesky(&l);
+        Ok(FitOut { alpha, kinv, logdet })
+    }
+
+    fn acquire(
+        &mut self,
+        x: &Matrix,
+        fit: &FitOut,
+        xc: &Matrix,
+        params: &GpParams,
+    ) -> Result<AcquireOut> {
+        let (n, m) = (x.rows(), xc.rows());
+        anyhow::ensure!(fit.alpha.len() == n, "fit/x size mismatch");
+        // kc: (n x m) cross-kernel.
+        let mut kc = kernel::rbf_kernel(x, xc, &params.inv_lengthscale);
+        for v in kc.data_mut() {
+            *v *= params.amp;
+        }
+        let mean = kc.matvec_t(&fit.alpha);
+        let w = fit.kinv.matmul(&kc);
+        let mut var = vec![0.0; m];
+        for c in 0..m {
+            let mut s = 0.0;
+            for i in 0..n {
+                s += kc[(i, c)] * w[(i, c)];
+            }
+            var[c] = (params.amp - s).max(1e-10);
+        }
+        let ucb = mean
+            .iter()
+            .zip(&var)
+            .map(|(mu, v)| mu + params.beta * v.sqrt())
+            .collect();
+        Ok(AcquireOut { ucb, mean, var, w })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Normalize y to zero mean / unit variance; returns (normalized, mean, std).
+/// Constant y gets std 1.0 so early iterations stay well-posed.
+pub fn normalize_y(y: &[f64]) -> (Vec<f64>, f64, f64) {
+    let mean = crate::util::stats::mean(y);
+    let mut std = crate::util::stats::std_dev_pop(y);
+    if std < 1e-12 {
+        std = 1.0;
+    }
+    (y.iter().map(|v| (v - mean) / std).collect(), mean, std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg64;
+
+    fn toy_problem(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x = Matrix::from_fn(n, d, |_, _| rng.next_f64());
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let r = x.row(i);
+                (2.0 * std::f64::consts::PI * r[0]).sin() + 0.5 * r.get(1).copied().unwrap_or(0.0)
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn posterior_interpolates_training_data() {
+        let (x, y) = toy_problem(30, 2, 1);
+        let (yn, _, _) = normalize_y(&y);
+        let params = GpParams::new(2);
+        let mut gp = NativeGp;
+        let fit = gp.fit(&x, &yn, &params).unwrap();
+        let out = gp.acquire(&x, &fit, &x, &params).unwrap();
+        for i in 0..x.rows() {
+            assert!(
+                (out.mean[i] - yn[i]).abs() < 0.05,
+                "mean[{i}] {} vs {}",
+                out.mean[i],
+                yn[i]
+            );
+            assert!(out.var[i] < 0.02, "var[{i}] = {}", out.var[i]);
+        }
+    }
+
+    #[test]
+    fn variance_reverts_to_prior_far_away() {
+        let (x, y) = toy_problem(20, 2, 2);
+        let (yn, _, _) = normalize_y(&y);
+        let params = GpParams::new(2);
+        let mut gp = NativeGp;
+        let fit = gp.fit(&x, &yn, &params).unwrap();
+        let far = Matrix::from_fn(4, 2, |_, _| 100.0);
+        let out = gp.acquire(&x, &fit, &far, &params).unwrap();
+        for c in 0..4 {
+            assert!((out.var[c] - params.amp).abs() < 1e-6);
+            assert!(out.mean[c].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ucb_is_mean_plus_beta_sigma_property() {
+        check("ucb = mean + beta*sqrt(var)", 32, |g| {
+            let n = g.usize_range(2, 20);
+            let (x, y) = toy_problem(n, 3, g.rng().next_u64());
+            let (yn, _, _) = normalize_y(&y);
+            let beta = g.f64_range(0.0, 5.0);
+            let params = GpParams::new(3).with_beta(beta);
+            let mut gp = NativeGp;
+            let fit = gp.fit(&x, &yn, &params).map_err(|e| e.to_string())?;
+            let xc = Matrix::from_fn(8, 3, |_, _| g.f64_range(0.0, 1.0));
+            let out = gp.acquire(&x, &fit, &xc, &params).map_err(|e| e.to_string())?;
+            for c in 0..8 {
+                let want = out.mean[c] + beta * out.var[c].sqrt();
+                if (out.ucb[c] - want).abs() > 1e-9 {
+                    return Err(format!("ucb[{c}] {} vs {}", out.ucb[c], want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lml_prefers_true_lengthscale_region() {
+        // Data drawn smoothly: tiny lengthscales should not win the LML.
+        let (x, y) = toy_problem(40, 1, 3);
+        let (yn, _, _) = normalize_y(&y);
+        let mut gp = NativeGp;
+        let mut lml = |ls: f64| {
+            let p = GpParams::new(1).with_lengthscale(ls);
+            let fit = gp.fit(&x, &yn, &p).unwrap();
+            fit.log_marginal_likelihood(&yn)
+        };
+        assert!(lml(0.2) > lml(0.01), "smooth data should reject ls=0.01");
+    }
+
+    #[test]
+    fn normalize_y_moments_and_constant_input() {
+        let (yn, m, s) = normalize_y(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!(s > 0.0);
+        assert!(crate::util::stats::mean(&yn).abs() < 1e-12);
+        let (yc, _, sc) = normalize_y(&[5.0, 5.0, 5.0]);
+        assert_eq!(sc, 1.0);
+        assert!(yc.iter().all(|v| v.abs() < 1e-12));
+    }
+}

@@ -1,0 +1,61 @@
+//! # mango — parallel hyperparameter tuning in Rust + JAX + Pallas
+//!
+//! A full reproduction of *MANGO: A Python Library for Parallel
+//! Hyperparameter Tuning* (Sandha et al., 2020) as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the MANGO coordinator: search-space DSL
+//!   ([`space`]), batch Bayesian optimizers ([`optimizer`]), decoupled
+//!   schedulers with fault tolerance ([`scheduler`]), and the [`coordinator`]
+//!   tying them together.
+//! * **Layer 2** — the GP-UCB surrogate authored in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text and executed from
+//!   Rust through PJRT ([`runtime`]).
+//! * **Layer 1** — the Pallas ARD-RBF kernel-matrix kernel
+//!   (`python/compile/kernels/rbf.py`) embedded in the L2 program.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L2/L1
+//! programs once; the Rust binary is self-contained afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mango::prelude::*;
+//!
+//! let space = SearchSpace::builder()
+//!     .uniform("c", 0.01, 100.0)
+//!     .loguniform("gamma", 1e-4, 1e3)
+//!     .build();
+//! let mut tuner = Tuner::new(space, TunerConfig::default());
+//! let result = tuner
+//!     .maximize(|cfg: &Config| {
+//!         let c = cfg.get_f64("c")?;
+//!         let g = cfg.get_f64("gamma")?;
+//!         Some(-(c - 10.0).powi(2) - (g.log10() + 1.0).powi(2))
+//!     })
+//!     .unwrap();
+//! println!("best = {} @ {}", result.best_params, result.best_objective);
+//! ```
+
+pub mod util;
+pub mod config;
+pub mod linalg;
+pub mod space;
+pub mod gp;
+pub mod acq;
+pub mod runtime;
+pub mod optimizer;
+pub mod scheduler;
+pub mod coordinator;
+pub mod ml;
+pub mod benchfn;
+pub mod exp;
+pub mod cli;
+
+/// Convenience re-exports covering the common tuning workflow.
+pub mod prelude {
+    pub use crate::coordinator::{ObjectiveFn, Tuner, TunerConfig, TuningResult};
+    pub use crate::optimizer::{OptimizerKind, SurrogateBackend};
+    pub use crate::scheduler::{BatchResult, Scheduler, SchedulerKind};
+    pub use crate::space::{Config, ParamValue, SearchSpace};
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,168 @@
+//! Dense linear algebra substrate (no external crates): row-major [`Matrix`]
+//! with the factorizations the native GP and the GP-BUCB rank-1
+//! hallucination updates need. Mirrors `python/compile/linalg.py` so the
+//! native backend is a bit-faithful oracle for the PJRT artifacts.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// Cholesky factorization K = L L^T for SPD K; returns lower-triangular L.
+///
+/// Returns `None` if a pivot is non-positive beyond the 1e-12 clamp used by
+/// the HLO twin (we clamp exactly like compile/linalg.py so the two backends
+/// agree on degenerate inputs).
+pub fn cholesky(k: &Matrix) -> Matrix {
+    let n = k.rows();
+    assert_eq!(n, k.cols(), "cholesky needs a square matrix");
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        // v = K[:, j] - L[:, :j] @ L[j, :j]
+        for i in j..n {
+            let mut s = k[(i, j)];
+            for p in 0..j {
+                s -= l[(i, p)] * l[(j, p)];
+            }
+            if i == j {
+                l[(j, j)] = s.max(1e-12).sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    l
+}
+
+/// Solve L x = b (forward substitution), b and x length n.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[(i, j)] * x[j];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve L^T x = b (back substitution).
+pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in (i + 1)..n {
+            s -= l[(j, i)] * x[j];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve K x = b via Cholesky (K SPD).
+pub fn solve_spd(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// K^{-1} from the Cholesky factor.
+pub fn spd_inverse(l: &Matrix) -> Matrix {
+    let n = l.rows();
+    let mut inv = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        let col = solve_spd(l, &e);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    inv
+}
+
+/// log det K = 2 Σ log L_ii.
+pub fn logdet_from_cholesky(l: &Matrix) -> f64 {
+    (0..l.rows()).map(|i| 2.0 * l[(i, i)].max(1e-300).ln()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn spd_from_gen(g: &mut Gen, n: usize) -> Matrix {
+        Matrix::from_vec(n, n, g.spd_matrix(n))
+    }
+
+    #[test]
+    fn cholesky_reconstructs_property() {
+        check("cholesky L L^T == K", 64, |g| {
+            let n = g.usize_range(1, 17);
+            let k = spd_from_gen(g, n);
+            let l = cholesky(&k);
+            let kk = l.matmul_transb(&l);
+            for i in 0..n {
+                for j in 0..n {
+                    if (kk[(i, j)] - k[(i, j)]).abs() > 1e-6 * (n as f64) {
+                        return Err(format!("({i},{j}): {} vs {}", kk[(i, j)], k[(i, j)]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_spd_property() {
+        check("K @ solve(K, b) == b", 64, |g| {
+            let n = g.usize_range(1, 17);
+            let k = spd_from_gen(g, n);
+            let b = g.vec_f64(n, -5.0, 5.0);
+            let l = cholesky(&k);
+            let x = solve_spd(&l, &b);
+            let kb = k.matvec(&x);
+            for i in 0..n {
+                if (kb[i] - b[i]).abs() > 1e-6 * n as f64 {
+                    return Err(format!("row {i}: {} vs {}", kb[i], b[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_property() {
+        check("K K^-1 == I", 32, |g| {
+            let n = g.usize_range(1, 13);
+            let k = spd_from_gen(g, n);
+            let inv = spd_inverse(&cholesky(&k));
+            let prod = k.matmul(&inv);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (prod[(i, j)] - want).abs() > 1e-6 * n as f64 {
+                        return Err(format!("({i},{j}) = {}", prod[(i, j)]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn logdet_matches_diag_product() {
+        let k = Matrix::from_vec(2, 2, vec![4.0, 0.0, 0.0, 9.0]);
+        let l = cholesky(&k);
+        assert!((logdet_from_cholesky(&l) - (36.0f64).ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn degenerate_input_stays_finite() {
+        let k = Matrix::from_vec(3, 3, vec![1.0; 9]); // rank-1
+        let l = cholesky(&k);
+        assert!(l.data().iter().all(|v| v.is_finite()));
+    }
+}

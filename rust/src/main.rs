@@ -1,0 +1,158 @@
+//! `mango` CLI — the leader entrypoint: one-off tuning jobs, repeated
+//! experiments, and environment introspection.
+
+use anyhow::{anyhow, Result};
+use mango::cli::{Args, USAGE};
+use mango::config::json::parse as parse_json;
+use mango::config::settings::ExperimentConfig;
+use mango::coordinator::{Tuner, TunerConfig};
+use mango::exp::{harness, workloads};
+use mango::optimizer::{OptimizerKind, SurrogateBackend};
+use mango::scheduler::SchedulerKind;
+use mango::util::log;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    if args.has("verbose") {
+        log::set_level(log::Level::Debug);
+    }
+    if args.has("help") || args.subcommand.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_str() {
+        "tune" => cmd_tune(&args),
+        "experiment" => cmd_experiment(&args),
+        "list" => cmd_list(),
+        "info" => cmd_info(),
+        other => Err(anyhow!("unknown subcommand '{other}'\n{USAGE}")),
+    }
+}
+
+fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConfig> {
+    let batch_size = args.get_usize("batch-size", batch_default)?;
+    Ok(TunerConfig {
+        batch_size,
+        num_iterations: args.get_usize("iterations", 60)?,
+        initial_random: args.get_usize("initial-random", 2)?,
+        optimizer: OptimizerKind::from_str(args.get_or("optimizer", "hallucination"))
+            .ok_or_else(|| anyhow!("bad --optimizer"))?,
+        scheduler: SchedulerKind::from_str(args.get_or("scheduler", "serial"))
+            .ok_or_else(|| anyhow!("bad --scheduler"))?,
+        workers: args.get_usize("workers", batch_size)?,
+        mc_samples: args.get_usize("mc-samples", 0)?,
+        seed: args.get_u64("seed", 0)?,
+        backend: SurrogateBackend::from_str(args.get_or("backend", "pjrt"))
+            .ok_or_else(|| anyhow!("bad --backend"))?,
+        tune_lengthscale: args.has("tune-lengthscale"),
+        early_stop: match args.get_usize("early-stop", 0)? {
+            0 => None,
+            n => Some(n),
+        },
+        max_surrogate_obs: 512,
+    })
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
+        "initial-random", "workers", "mc-samples", "seed", "early-stop",
+    ])?;
+    let name = args
+        .get("workload")
+        .ok_or_else(|| anyhow!("--workload is required (see `mango list`)"))?;
+    let workload = workloads::by_name(name)
+        .ok_or_else(|| anyhow!("unknown workload '{name}' (see `mango list`)"))?;
+    let config = tuner_config_from_args(args, 1)?;
+    let sense = if workload.minimize { "minimize" } else { "maximize" };
+    mango::log_info!(
+        "tuning {} ({} dims, {sense}) with {:?}/{:?} backend {:?}",
+        workload.name,
+        workload.space.len(),
+        config.optimizer,
+        config.scheduler,
+        config.backend
+    );
+    let mut tuner = Tuner::new(workload.space.clone(), config);
+    let obj = workload.objective.clone();
+    let result = if workload.minimize {
+        tuner.minimize(move |c| obj(c))?
+    } else {
+        tuner.maximize(move |c| obj(c))?
+    };
+    if args.has("json") {
+        println!("{}", result.to_json());
+    } else {
+        println!("best objective: {:.6}", result.best_objective);
+        println!("best params:    {}", result.best_params);
+        println!(
+            "evaluations: {}   iterations: {}   wall: {:.0} ms",
+            result.evaluations,
+            result.iterations.len(),
+            result.wall_ms
+        );
+        if let Some(opt) = workload.optimum {
+            println!("known optimum: {opt:.6} (regret {:.6})", result.best_objective - opt);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.ensure_known(&["config", "repeats"])?;
+    let path = args.get("config").ok_or_else(|| anyhow!("--config <file.json> required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = parse_json(&text)?;
+    let experiments = match &doc {
+        j @ mango::config::json::Json::Obj(_) => vec![ExperimentConfig::from_json(j)?],
+        mango::config::json::Json::Arr(items) => items
+            .iter()
+            .map(ExperimentConfig::from_json)
+            .collect::<Result<Vec<_>>>()?,
+        _ => return Err(anyhow!("config must be an experiment object or array")),
+    };
+    for e in experiments {
+        let workload = workloads::by_name(&e.workload)
+            .ok_or_else(|| anyhow!("unknown workload '{}'", e.workload))?;
+        let config = TunerConfig::from_run_config(&e.run)?;
+        let repeats = args.get_usize("repeats", e.repeats)?;
+        mango::log_info!("experiment {}: {repeats} trials of {}", e.name, e.workload);
+        let series = harness::run_trials(&workload, &config, repeats, &e.name)?;
+        harness::print_series(&series);
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("workloads:  {}", workloads::all_names().join(", "));
+    println!("optimizers: hallucination, clustering, random, tpe, thompson");
+    println!("schedulers: serial, threaded, celery");
+    println!("backends:   pjrt, native");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = mango::runtime::default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match mango::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("  max_dim {}  m_cand {}", m.max_dim, m.m_cand);
+            for v in &m.variants {
+                println!("  variant n={}: {:?}", v.n, v.fit_path.file_name().unwrap());
+            }
+            let surrogate = mango::runtime::PjrtSurrogate::new(&dir)?;
+            let _ = surrogate;
+            println!("PJRT CPU client: ok");
+        }
+        Err(e) => println!("  (artifacts unavailable: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Dense classification datasets + stratified splitting.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+
+/// A labelled dataset: row-major features + integer class labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+    pub feature_names: Vec<String>,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, y: Vec<usize>, n_classes: usize) -> Self {
+        assert_eq!(x.rows(), y.len(), "feature/label count mismatch");
+        assert!(y.iter().all(|&c| c < n_classes), "label out of range");
+        let d = x.cols();
+        Self {
+            x,
+            y,
+            n_classes,
+            feature_names: (0..d).map(|i| format!("f{i}")).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        self.x.row(i)
+    }
+
+    /// Standardize features to zero mean / unit variance in place
+    /// (returns per-feature (mean, std) for applying to new data).
+    pub fn standardize(&mut self) -> Vec<(f64, f64)> {
+        let n = self.len() as f64;
+        let d = self.n_features();
+        let mut stats = Vec::with_capacity(d);
+        for j in 0..d {
+            let mean: f64 = (0..self.len()).map(|i| self.x[(i, j)]).sum::<f64>() / n;
+            let var: f64 =
+                (0..self.len()).map(|i| (self.x[(i, j)] - mean).powi(2)).sum::<f64>() / n;
+            let std = var.sqrt().max(1e-12);
+            for i in 0..self.len() {
+                self.x[(i, j)] = (self.x[(i, j)] - mean) / std;
+            }
+            stats.push((mean, std));
+        }
+        stats
+    }
+
+    /// Stratified k-fold indices: each fold preserves class proportions.
+    /// Returns `k` (train, test) index pairs.
+    pub fn stratified_kfold(&self, k: usize, rng: &mut Pcg64) -> Vec<(Vec<usize>, Vec<usize>)> {
+        assert!(k >= 2, "need at least 2 folds");
+        // Shuffle indices within each class, then deal them round-robin.
+        let mut fold_of = vec![0usize; self.len()];
+        for class in 0..self.n_classes {
+            let mut idx: Vec<usize> =
+                (0..self.len()).filter(|&i| self.y[i] == class).collect();
+            rng.shuffle(&mut idx);
+            for (pos, &i) in idx.iter().enumerate() {
+                fold_of[i] = pos % k;
+            }
+        }
+        (0..k)
+            .map(|f| {
+                let test: Vec<usize> =
+                    (0..self.len()).filter(|&i| fold_of[i] == f).collect();
+                let train: Vec<usize> =
+                    (0..self.len()).filter(|&i| fold_of[i] != f).collect();
+                (train, test)
+            })
+            .collect()
+    }
+
+    /// Per-class sample counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0; self.n_classes];
+        for &y in &self.y {
+            c[y] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Matrix::from_fn(12, 2, |i, j| (i * 2 + j) as f64);
+        let y = vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2];
+        Dataset::new(x, y, 3)
+    }
+
+    #[test]
+    fn kfold_partitions_and_stratifies() {
+        let d = tiny();
+        let mut rng = Pcg64::new(1);
+        let folds = d.stratified_kfold(4, &mut rng);
+        assert_eq!(folds.len(), 4);
+        let mut seen = vec![false; 12];
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 12);
+            // test fold has one sample of each class
+            let classes: Vec<usize> = test.iter().map(|&i| d.y[i]).collect();
+            for c in 0..3 {
+                assert_eq!(classes.iter().filter(|&&x| x == c).count(), 1);
+            }
+            for &i in test {
+                assert!(!seen[i], "index {i} in two test folds");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = tiny();
+        d.standardize();
+        for j in 0..2 {
+            let mean: f64 = (0..12).map(|i| d.x[(i, j)]).sum::<f64>() / 12.0;
+            let var: f64 = (0..12).map(|i| d.x[(i, j)].powi(2)).sum::<f64>() / 12.0;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(tiny().class_counts(), vec![4, 4, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn bad_labels_rejected() {
+        Dataset::new(Matrix::zeros(2, 1), vec![0, 5], 3);
+    }
+}

@@ -1,0 +1,138 @@
+//! k-nearest-neighbours classifier (the paper's `KNN_Celery.ipynb` workload).
+
+use super::dataset::Dataset;
+use super::Classifier;
+use crate::space::Config;
+
+/// Distance weighting mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Weighting {
+    Uniform,
+    Distance,
+}
+
+/// kNN with Minkowski-p distance over standardized features.
+pub struct KnnClassifier {
+    pub k: usize,
+    pub weighting: Weighting,
+    pub p: f64,
+    train: Vec<(Vec<f64>, usize)>,
+    stats: Vec<(f64, f64)>,
+    n_classes: usize,
+}
+
+impl KnnClassifier {
+    pub fn new(k: usize, weighting: Weighting, p: f64) -> Self {
+        assert!(k >= 1 && p > 0.0);
+        Self { k, weighting, p, train: Vec::new(), stats: Vec::new(), n_classes: 0 }
+    }
+
+    /// Tuner mapping: `n_neighbors`, `weights` in {uniform, distance}, `p`.
+    pub fn from_config(cfg: &Config) -> Self {
+        let k = cfg.get_i64("n_neighbors").unwrap_or(5).max(1) as usize;
+        let weighting = match cfg.get_str("weights") {
+            Some("distance") => Weighting::Distance,
+            _ => Weighting::Uniform,
+        };
+        let p = cfg.get_f64("p").unwrap_or(2.0).max(0.5);
+        Self::new(k, weighting, p)
+    }
+
+    fn dist(&self, a: &[f64], b: &[f64]) -> f64 {
+        let s: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs().powf(self.p))
+            .sum();
+        s.powf(1.0 / self.p)
+    }
+
+    fn standardize(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .enumerate()
+            .map(|(j, &v)| {
+                let (m, s) = self.stats[j];
+                (v - m) / s
+            })
+            .collect()
+    }
+}
+
+impl Classifier for KnnClassifier {
+    fn fit(&mut self, data: &Dataset, train_idx: &[usize]) {
+        self.n_classes = data.n_classes;
+        let n = train_idx.len() as f64;
+        let d = data.n_features();
+        self.stats = (0..d)
+            .map(|j| {
+                let mean: f64 = train_idx.iter().map(|&i| data.x[(i, j)]).sum::<f64>() / n;
+                let var: f64 =
+                    train_idx.iter().map(|&i| (data.x[(i, j)] - mean).powi(2)).sum::<f64>() / n;
+                (mean, var.sqrt().max(1e-12))
+            })
+            .collect();
+        self.train = train_idx
+            .iter()
+            .map(|&i| (self.standardize(data.row(i)), data.y[i]))
+            .collect();
+    }
+
+    fn predict_one(&self, row: &[f64]) -> usize {
+        let q = self.standardize(row);
+        let mut dists: Vec<(f64, usize)> =
+            self.train.iter().map(|(x, y)| (self.dist(&q, x), *y)).collect();
+        let k = self.k.min(dists.len());
+        dists.select_nth_unstable_by(k.saturating_sub(1), |a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0.0; self.n_classes];
+        for &(d, y) in dists.iter().take(k) {
+            let w = match self.weighting {
+                Weighting::Uniform => 1.0,
+                Weighting::Distance => 1.0 / (d + 1e-9),
+            };
+            votes[y] += w;
+        }
+        crate::util::stats::argmax(&votes).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::cv::cross_val_accuracy;
+    use crate::ml::wine::default_wine;
+    use crate::space::ParamValue;
+
+    #[test]
+    fn knn_does_well_on_wine() {
+        let data = default_wine();
+        let acc =
+            cross_val_accuracy(&data, 5, 3, || KnnClassifier::new(7, Weighting::Distance, 2.0));
+        assert!(acc > 0.85, "kNN accuracy {acc}");
+    }
+
+    #[test]
+    fn k_one_memorizes_training_data() {
+        let data = default_wine();
+        let idx: Vec<usize> = (0..data.len()).collect();
+        let mut knn = KnnClassifier::new(1, Weighting::Uniform, 2.0);
+        knn.fit(&data, &idx);
+        let pred = knn.predict(&data, &idx);
+        assert_eq!(pred, data.y, "1-NN must be perfect on its own train set");
+    }
+
+    #[test]
+    fn from_config_defaults_and_mapping() {
+        let cfg = Config::new(vec![
+            ("n_neighbors".into(), ParamValue::Int(11)),
+            ("weights".into(), ParamValue::Str("distance".into())),
+            ("p".into(), ParamValue::F64(1.0)),
+        ]);
+        let knn = KnnClassifier::from_config(&cfg);
+        assert_eq!(knn.k, 11);
+        assert_eq!(knn.weighting, Weighting::Distance);
+        assert_eq!(knn.p, 1.0);
+        let d = KnnClassifier::from_config(&Config::default());
+        assert_eq!(d.k, 5);
+        assert_eq!(d.weighting, Weighting::Uniform);
+    }
+}

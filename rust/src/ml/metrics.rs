@@ -1,0 +1,71 @@
+//! Classification metrics.
+
+/// Fraction of matching predictions.
+pub fn accuracy(y_true: &[usize], y_pred: &[usize]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let hits = y_true.iter().zip(y_pred).filter(|(a, b)| a == b).count();
+    hits as f64 / y_true.len() as f64
+}
+
+/// Row = true class, column = predicted class.
+pub fn confusion_matrix(y_true: &[usize], y_pred: &[usize], n_classes: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; n_classes]; n_classes];
+    for (&t, &p) in y_true.iter().zip(y_pred) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+/// Macro-averaged F1 score.
+pub fn macro_f1(y_true: &[usize], y_pred: &[usize], n_classes: usize) -> f64 {
+    let cm = confusion_matrix(y_true, y_pred, n_classes);
+    let mut f1s = Vec::with_capacity(n_classes);
+    for c in 0..n_classes {
+        let tp = cm[c][c] as f64;
+        let fp: f64 = (0..n_classes).filter(|&r| r != c).map(|r| cm[r][c] as f64).sum();
+        let fn_: f64 = (0..n_classes).filter(|&p| p != c).map(|p| cm[c][p] as f64).sum();
+        let precision = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+        let recall = if tp + fn_ > 0.0 { tp / (tp + fn_) } else { 0.0 };
+        let f1 = if precision + recall > 0.0 {
+            2.0 * precision * recall / (precision + recall)
+        } else {
+            0.0
+        };
+        f1s.push(f1);
+    }
+    f1s.iter().sum::<f64>() / n_classes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 2, 1], &[0, 1, 1, 1]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_matrix_counts() {
+        let cm = confusion_matrix(&[0, 0, 1, 1], &[0, 1, 1, 1], 2);
+        assert_eq!(cm, vec![vec![1, 1], vec![0, 2]]);
+    }
+
+    #[test]
+    fn perfect_f1_is_one() {
+        let y = [0, 1, 2, 0, 1, 2];
+        assert!((macro_f1(&y, &y, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_degrades_with_errors() {
+        let yt = [0, 0, 1, 1];
+        let yp = [0, 1, 0, 1];
+        let f1 = macro_f1(&yt, &yp, 2);
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,28 @@
+//! ML substrate: everything the paper's evaluation workloads need, built
+//! from scratch — datasets ([`dataset`], [`wine`]), classifiers
+//! ([`gbt`] = the XGBoost substitute, [`knn`], [`svm`]), cross-validation
+//! ([`cv`]) and metrics ([`metrics`]).
+
+pub mod cv;
+pub mod dataset;
+pub mod gbt;
+pub mod knn;
+pub mod metrics;
+pub mod svm;
+pub mod wine;
+
+pub use dataset::Dataset;
+
+/// A trainable multi-class classifier over dense feature rows.
+pub trait Classifier {
+    /// Fit on rows `x[train_idx]` with labels `y[train_idx]`.
+    fn fit(&mut self, data: &Dataset, train_idx: &[usize]);
+
+    /// Predict the class of one feature row.
+    fn predict_one(&self, row: &[f64]) -> usize;
+
+    /// Predict classes for a set of rows of `data`.
+    fn predict(&self, data: &Dataset, idx: &[usize]) -> Vec<usize> {
+        idx.iter().map(|&i| self.predict_one(data.row(i))).collect()
+    }
+}

@@ -1,0 +1,172 @@
+//! RBF-kernel SVM (squared-hinge, one-vs-rest) for the paper's Listing 2 /
+//! `SVM_Example.ipynb` workload. Trained by gradient descent in the kernel
+//! dual coefficients — a compact substitute for libsvm's SMO that exposes
+//! the same two hyperparameters (`C`, `gamma`) with the same qualitative
+//! response surface (DESIGN.md §2).
+
+use super::dataset::Dataset;
+use super::Classifier;
+use crate::space::Config;
+
+pub struct SvmClassifier {
+    pub c: f64,
+    pub gamma: f64,
+    epochs: usize,
+    /// Per-class dual-ish coefficients over training points + bias.
+    coef: Vec<Vec<f64>>,
+    bias: Vec<f64>,
+    train_x: Vec<Vec<f64>>,
+    stats: Vec<(f64, f64)>,
+    n_classes: usize,
+}
+
+impl SvmClassifier {
+    pub fn new(c: f64, gamma: f64) -> Self {
+        assert!(c > 0.0 && gamma > 0.0);
+        Self {
+            c,
+            gamma,
+            epochs: 120,
+            coef: Vec::new(),
+            bias: Vec::new(),
+            train_x: Vec::new(),
+            stats: Vec::new(),
+            n_classes: 0,
+        }
+    }
+
+    /// Listing 2 mapping: `c` uniform, `gamma` loguniform.
+    pub fn from_config(cfg: &Config) -> Self {
+        Self::new(
+            cfg.get_f64("c").unwrap_or(1.0).max(1e-3),
+            cfg.get_f64("gamma").unwrap_or(0.1).max(1e-6),
+        )
+    }
+
+    fn standardize(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .enumerate()
+            .map(|(j, &v)| {
+                let (m, s) = self.stats[j];
+                (v - m) / s
+            })
+            .collect()
+    }
+
+    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
+        let sq: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        (-self.gamma * sq).exp()
+    }
+
+    /// Decision value for class k on a standardized row.
+    fn decision(&self, k: usize, q: &[f64]) -> f64 {
+        let mut s = self.bias[k];
+        for (i, x) in self.train_x.iter().enumerate() {
+            let a = self.coef[k][i];
+            if a != 0.0 {
+                s += a * self.kernel(q, x);
+            }
+        }
+        s
+    }
+}
+
+impl Classifier for SvmClassifier {
+    fn fit(&mut self, data: &Dataset, train_idx: &[usize]) {
+        self.n_classes = data.n_classes;
+        let n = train_idx.len();
+        let d = data.n_features();
+        let nf = n as f64;
+        self.stats = (0..d)
+            .map(|j| {
+                let mean: f64 = train_idx.iter().map(|&i| data.x[(i, j)]).sum::<f64>() / nf;
+                let var: f64 =
+                    train_idx.iter().map(|&i| (data.x[(i, j)] - mean).powi(2)).sum::<f64>() / nf;
+                (mean, var.sqrt().max(1e-12))
+            })
+            .collect();
+        self.train_x = train_idx.iter().map(|&i| self.standardize(data.row(i))).collect();
+
+        // Precompute the Gram matrix (n <= few hundred).
+        let mut gram = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let k = self.kernel(&self.train_x[i], &self.train_x[j]);
+                gram[i * n + j] = k;
+                gram[j * n + i] = k;
+            }
+        }
+
+        self.coef = vec![vec![0.0; n]; self.n_classes];
+        self.bias = vec![0.0; self.n_classes];
+        // Functional gradient descent on regularized logistic loss:
+        //   L = (1/n) Σ log(1 + e^{-y f_i}) + (λ/2n) αᵀKα,  λ = 1/C.
+        // Step in function space (precondition by K): α -= lr (g + λα/n),
+        // where g_i = -y_i σ(-y_i f_i)/n. Bounded gradients -> stable for
+        // any C, unlike raw squared-hinge steps.
+        let lambda = 1.0 / self.c;
+        let lr = 2.0;
+        for k in 0..self.n_classes {
+            let ys: Vec<f64> = train_idx
+                .iter()
+                .map(|&i| if data.y[i] == k { 1.0 } else { -1.0 })
+                .collect();
+            for _ in 0..self.epochs {
+                // f = K α + b (recomputed; n is small).
+                let mut f = vec![self.bias[k]; n];
+                for i in 0..n {
+                    let a = self.coef[k][i];
+                    if a != 0.0 {
+                        for j in 0..n {
+                            f[j] += a * gram[j * n + i];
+                        }
+                    }
+                }
+                let mut db = 0.0;
+                for i in 0..n {
+                    let s = 1.0 / (1.0 + (ys[i] * f[i]).exp()); // σ(-y f)
+                    let g = -ys[i] * s / nf;
+                    self.coef[k][i] -= lr * (g + lambda * self.coef[k][i] / nf);
+                    db += g;
+                }
+                self.bias[k] -= lr * db;
+            }
+        }
+    }
+
+    fn predict_one(&self, row: &[f64]) -> usize {
+        let q = self.standardize(row);
+        let scores: Vec<f64> = (0..self.n_classes).map(|k| self.decision(k, &q)).collect();
+        crate::util::stats::argmax(&scores).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::cv::cross_val_accuracy;
+    use crate::ml::wine::default_wine;
+
+    #[test]
+    fn svm_reasonable_on_wine() {
+        let data = default_wine();
+        let acc = cross_val_accuracy(&data, 3, 5, || SvmClassifier::new(10.0, 0.05));
+        assert!(acc > 0.82, "SVM accuracy {acc}");
+    }
+
+    #[test]
+    fn extreme_gamma_overfits_to_chance() {
+        // gamma huge -> kernel ~ identity -> no generalization.
+        let data = default_wine();
+        let good = cross_val_accuracy(&data, 3, 5, || SvmClassifier::new(10.0, 0.05));
+        let bad = cross_val_accuracy(&data, 3, 5, || SvmClassifier::new(10.0, 1000.0));
+        assert!(good > bad + 0.15, "good {good} vs bad {bad}");
+    }
+
+    #[test]
+    fn from_config_clamps() {
+        let svm = SvmClassifier::from_config(&Config::default());
+        assert_eq!(svm.c, 1.0);
+        assert_eq!(svm.gamma, 0.1);
+    }
+}

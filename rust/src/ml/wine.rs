@@ -1,0 +1,138 @@
+//! Wine-like dataset generator (substitution for UCI wine, see DESIGN.md §2).
+//!
+//! The UCI wine dataset is 178 samples x 13 chemical features, 3 cultivars
+//! with counts (59, 71, 48). This generator reproduces those shapes and the
+//! published per-class feature statistics (means/spreads from the UCI
+//! summary), with controlled between-class overlap so that classifier
+//! accuracy responds to hyperparameters the way Fig. 2's response surface
+//! does: bad configs ~0.6-0.85, tuned configs >= 0.95.
+//!
+//! Deterministic given a seed — every Fig. 2 repeat sees the same data.
+
+use super::dataset::Dataset;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Feature names of the UCI wine dataset.
+pub const FEATURES: [&str; 13] = [
+    "alcohol",
+    "malic_acid",
+    "ash",
+    "alcalinity",
+    "magnesium",
+    "total_phenols",
+    "flavanoids",
+    "nonflavanoid_phenols",
+    "proanthocyanins",
+    "color_intensity",
+    "hue",
+    "od280_od315",
+    "proline",
+];
+
+/// Per-class feature means, shaped on the UCI wine class statistics.
+const CLASS_MEANS: [[f64; 13]; 3] = [
+    // cultivar 1 (n=59): high alcohol, high flavanoids, high proline
+    [13.74, 2.01, 2.46, 17.0, 106.3, 2.84, 2.98, 0.29, 1.90, 5.53, 1.06, 3.16, 1115.0],
+    // cultivar 2 (n=71): low alcohol, low color intensity
+    [12.28, 1.93, 2.24, 20.2, 94.5, 2.26, 2.08, 0.36, 1.63, 3.09, 1.06, 2.79, 519.0],
+    // cultivar 3 (n=48): high malic acid, high color, low flavanoids
+    [13.15, 3.33, 2.44, 21.4, 99.3, 1.68, 0.78, 0.45, 1.15, 7.40, 0.68, 1.68, 630.0],
+];
+
+/// Per-feature standard deviations (shared across classes; inflated by
+/// `overlap` to control class separability).
+const FEATURE_STD: [f64; 13] =
+    [0.46, 0.99, 0.27, 3.3, 14.3, 0.55, 0.70, 0.12, 0.55, 1.6, 0.20, 0.50, 210.0];
+
+/// Class sizes of the real dataset.
+pub const CLASS_SIZES: [usize; 3] = [59, 71, 48];
+
+/// Generate the wine-like dataset. `overlap` >= 1.0 widens class spread
+/// (1.6 gives a Fig.2-like accuracy dynamic range; 1.0 is nearly separable).
+pub fn generate(seed: u64, overlap: f64) -> Dataset {
+    let n: usize = CLASS_SIZES.iter().sum();
+    let mut rng = Pcg64::new(seed ^ SEED_SALT);
+    let mut x = Matrix::zeros(n, 13);
+    let mut y = Vec::with_capacity(n);
+    let mut row = 0;
+    for (class, &size) in CLASS_SIZES.iter().enumerate() {
+        for _ in 0..size {
+            for j in 0..13 {
+                let mut v = rng.normal_scaled(CLASS_MEANS[class][j], FEATURE_STD[j] * overlap);
+                // Heavier tails on a few features (real wine data is skewed):
+                if j == 1 || j == 9 || j == 12 {
+                    v += rng.normal().abs() * FEATURE_STD[j] * 0.4 * overlap;
+                }
+                // physical floors
+                v = v.max(0.01);
+                x[(row, j)] = v;
+            }
+            y.push(class);
+            row += 1;
+        }
+    }
+    // Shuffle rows so folds don't align with generation order.
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let xs = Matrix::from_fn(n, 13, |i, j| x[(order[i], j)]);
+    let ys: Vec<usize> = order.iter().map(|&i| y[i]).collect();
+    let mut d = Dataset::new(xs, ys, 3);
+    d.feature_names = FEATURES.iter().map(|s| s.to_string()).collect();
+    d
+}
+
+/// The default wine dataset used by Fig. 2 (seed 0, overlap 1.45 —
+/// calibrated so the GBT's random-config CV accuracy spreads ~0.65–0.94
+/// with a rare >0.93 top: tuned configs clearly separate from untuned,
+/// matching Fig. 2's dynamic range).
+pub fn default_wine() -> Dataset {
+    generate(0, 1.45)
+}
+
+/// Seed salt so wine data streams never collide with tuner RNG streams.
+const SEED_SALT: u64 = 0x5749_4E45; // "WINE"
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_uci_wine() {
+        let d = default_wine();
+        assert_eq!(d.len(), 178);
+        assert_eq!(d.n_features(), 13);
+        assert_eq!(d.n_classes, 3);
+        let mut counts = d.class_counts();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![48, 59, 71]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(7, 1.6);
+        let b = generate(7, 1.6);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.y, b.y);
+        let c = generate(8, 1.6);
+        assert_ne!(a.x.data(), c.x.data());
+    }
+
+    #[test]
+    fn class_means_preserved_roughly() {
+        let d = generate(3, 1.0);
+        // mean proline of class 0 should be far above class 1 (1115 vs 519)
+        let m = |class: usize, j: usize| {
+            let idx: Vec<usize> = (0..d.len()).filter(|&i| d.y[i] == class).collect();
+            idx.iter().map(|&i| d.x[(i, j)]).sum::<f64>() / idx.len() as f64
+        };
+        assert!(m(0, 12) > m(1, 12) + 300.0);
+        assert!(m(2, 6) < m(0, 6) - 1.0, "flavanoids separate class 3");
+    }
+
+    #[test]
+    fn features_physical() {
+        let d = default_wine();
+        assert!(d.x.data().iter().all(|&v| v > 0.0), "all features positive");
+    }
+}

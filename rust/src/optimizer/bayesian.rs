@@ -1,0 +1,182 @@
+//! Shared GP-UCB machinery for the two batch Bayesian algorithms:
+//! history encoding, y-normalization, surrogate fitting (with optional
+//! lengthscale selection by marginal likelihood), adaptive beta, and
+//! Monte-Carlo acquisition scoring.
+
+use super::{GpOptions, History, SurrogateBackend, YTransform};
+use crate::acq;
+use crate::gp::{normalize_y, AcquireOut, GpParams, NativeGp, Surrogate};
+use crate::linalg::Matrix;
+use crate::runtime::PjrtSurrogate;
+use crate::space::{Config, Encoder, SearchSpace};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// One fit-and-score round over the history: everything a batch-selection
+/// strategy needs.
+pub struct Scored {
+    /// Encoded observation matrix (n x d).
+    pub x_obs: Matrix,
+    /// Candidate configurations (the MC sample).
+    pub candidates: Vec<Config>,
+    /// Encoded candidates (m x d).
+    pub xc: Matrix,
+    pub acq: AcquireOut,
+    pub params: GpParams,
+}
+
+pub struct BayesianCore {
+    pub space: SearchSpace,
+    pub encoder: Encoder,
+    pub opts: GpOptions,
+    surrogate: Box<dyn Surrogate>,
+    /// Iterations seen (drives the adaptive beta schedule).
+    pub rounds: usize,
+}
+
+impl BayesianCore {
+    pub fn new(space: SearchSpace, opts: GpOptions) -> Result<Self> {
+        let surrogate: Box<dyn Surrogate> = match opts.backend {
+            SurrogateBackend::Native => Box::new(NativeGp),
+            SurrogateBackend::Pjrt => Box::new(PjrtSurrogate::from_default_artifacts()?),
+        };
+        let encoder = Encoder::new(&space);
+        Ok(Self { space, encoder, opts, surrogate, rounds: 0 })
+    }
+
+    /// Max observations the surrogate can hold (PJRT artifacts are bounded).
+    pub fn max_obs(&self) -> usize {
+        // Mirror of PjrtSurrogate::max_obs without downcasting: the largest
+        // artifact variant. Native has no limit.
+        match self.opts.backend {
+            SurrogateBackend::Native => usize::MAX,
+            SurrogateBackend::Pjrt => 512,
+        }
+    }
+
+    /// Encode history into a padded-free (n x d) matrix.
+    fn encode_history(&self, history: &History) -> Matrix {
+        let d = self.encoder.dims();
+        let flat = self.encoder.encode_batch(history.configs());
+        Matrix::from_vec(history.len(), d, flat)
+    }
+
+    /// Fit the surrogate and score an MC candidate set.
+    ///
+    /// `batch_size` feeds the adaptive beta (paper: exploration depends on
+    /// batch size); `rng` drives candidate sampling and (if enabled) the
+    /// lengthscale grid.
+    pub fn fit_and_score(
+        &mut self,
+        history: &History,
+        batch_size: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Scored> {
+        let x_obs = self.encode_history(history);
+        let yn = match self.opts.y_transform {
+            YTransform::Normalize => normalize_y(history.values()).0,
+            YTransform::RankGauss => acq::rank_gauss(history.values()),
+        };
+        let d = self.encoder.dims();
+
+        let beta = self.opts.fixed_beta.unwrap_or_else(|| {
+            acq::adaptive_beta(self.rounds, self.space.cardinality_estimate(), batch_size)
+        });
+        self.rounds += 1;
+
+        // Lengthscale: fixed default or LML grid search (paper: Mango
+        // internally selects GP hyperparameters).
+        let mut params = GpParams::new(d).with_beta(beta);
+        params.noise = self.opts.noise;
+        let fit = if self.opts.tune_lengthscale {
+            let mut best: Option<(f64, GpParams, crate::gp::FitOut)> = None;
+            for ls in [0.1, 0.2, 0.3, 0.5, 0.8] {
+                let p = GpParams::new(d).with_beta(beta).with_lengthscale(ls);
+                let f = self.surrogate.fit(&x_obs, &yn, &p)?;
+                let lml = f.log_marginal_likelihood(&yn);
+                if best.as_ref().map_or(true, |(b, _, _)| lml > *b) {
+                    best = Some((lml, p, f));
+                }
+            }
+            let (_, p, f) = best.unwrap();
+            params = p;
+            f
+        } else {
+            self.surrogate.fit(&x_obs, &yn, &params)?
+        };
+
+        let candidates = acq::mc_candidates(&self.space, self.opts.mc_samples, rng);
+        let flat = self.encoder.encode_batch(&candidates);
+        let xc = Matrix::from_vec(candidates.len(), d, flat);
+        let acq_out = self.surrogate.acquire(&x_obs, &fit, &xc, &params)?;
+        Ok(Scored { x_obs, candidates, xc, acq: acq_out, params })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.surrogate.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::svm_space;
+
+    fn history_from(space: &SearchSpace, n: usize, seed: u64) -> History {
+        let mut rng = Pcg64::new(seed);
+        let mut h = History::new();
+        for cfg in space.sample_n(&mut rng, n) {
+            let v = -(cfg.get_f64("c").unwrap() - 50.0).abs();
+            h.push(cfg, v);
+        }
+        h
+    }
+
+    #[test]
+    fn fit_and_score_shapes() {
+        let space = svm_space();
+        let mut core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let h = history_from(&space, 12, 3);
+        let mut rng = Pcg64::new(4);
+        let s = core.fit_and_score(&h, 1, &mut rng).unwrap();
+        assert_eq!(s.x_obs.rows(), 12);
+        assert_eq!(s.candidates.len(), s.xc.rows());
+        assert_eq!(s.acq.ucb.len(), s.candidates.len());
+        assert_eq!(s.acq.w.rows(), 12);
+    }
+
+    #[test]
+    fn rounds_advance_beta() {
+        let space = svm_space();
+        let mut core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let h = history_from(&space, 8, 5);
+        let mut rng = Pcg64::new(6);
+        let s1 = core.fit_and_score(&h, 1, &mut rng).unwrap();
+        let s2 = core.fit_and_score(&h, 1, &mut rng).unwrap();
+        assert!(s2.params.beta >= s1.params.beta);
+        assert_eq!(core.rounds, 2);
+    }
+
+    #[test]
+    fn fixed_beta_respected() {
+        let space = svm_space();
+        let opts = GpOptions { fixed_beta: Some(1.7), ..Default::default() };
+        let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+        let h = history_from(&space, 8, 5);
+        let mut rng = Pcg64::new(6);
+        let s = core.fit_and_score(&h, 4, &mut rng).unwrap();
+        assert_eq!(s.params.beta, 1.7);
+    }
+
+    #[test]
+    fn lengthscale_tuning_runs() {
+        let space = svm_space();
+        let opts = GpOptions { tune_lengthscale: true, ..Default::default() };
+        let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+        let h = history_from(&space, 15, 8);
+        let mut rng = Pcg64::new(9);
+        let s = core.fit_and_score(&h, 1, &mut rng).unwrap();
+        let ls = 1.0 / s.params.inv_lengthscale[0];
+        assert!([0.1, 0.2, 0.3, 0.5, 0.8].iter().any(|&v| (ls - v).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,155 @@
+//! k-means (k-means++ init, Lloyd iterations) over encoded candidate
+//! vectors — the clustering substrate for the second batch algorithm.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Cluster assignment result.
+pub struct KMeansResult {
+    /// assignment[i] = cluster of row i.
+    pub assignment: Vec<usize>,
+    pub centroids: Matrix,
+    pub k: usize,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Lloyd's algorithm with k-means++ seeding. `rows` is (n x d); panics if
+/// n == 0; k is clamped to n.
+pub fn kmeans(rows: &Matrix, k: usize, rng: &mut Pcg64, max_iter: usize) -> KMeansResult {
+    let n = rows.rows();
+    let d = rows.cols();
+    assert!(n > 0, "kmeans over empty set");
+    let k = k.clamp(1, n);
+
+    // k-means++ seeding.
+    let mut centroids = Matrix::zeros(k, d);
+    let first = rng.uniform_usize(0, n);
+    centroids.row_mut(0).copy_from_slice(rows.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sq_dist(rows.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let idx = rng.weighted_index(&d2);
+        centroids.row_mut(c).copy_from_slice(rows.row(idx));
+        for i in 0..n {
+            d2[i] = d2[i].min(sq_dist(rows.row(i), centroids.row(c)));
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for iter in 0..max_iter {
+        // Assign.
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = (f64::INFINITY, 0);
+            for c in 0..k {
+                let dd = sq_dist(rows.row(i), centroids.row(c));
+                if dd < best.0 {
+                    best = (dd, c);
+                }
+            }
+            if assignment[i] != best.1 {
+                assignment[i] = best.1;
+                changed = true;
+            }
+        }
+        // Always run at least one update (initial assignment may already
+        // equal the all-zeros default without centroids being means).
+        if !changed && iter > 0 {
+            break;
+        }
+        // Update.
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, d);
+        for i in 0..n {
+            let c = assignment[i];
+            counts[c] += 1;
+            for j in 0..d {
+                sums[(c, j)] += rows[(i, j)];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..d {
+                    centroids[(c, j)] = sums[(c, j)] / counts[c] as f64;
+                }
+            } else {
+                // Re-seed empty cluster at the farthest point.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(rows.row(a), centroids.row(assignment[a]));
+                        let db = sq_dist(rows.row(b), centroids.row(assignment[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(rows.row(far));
+            }
+        }
+    }
+    KMeansResult { assignment, centroids, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[(f64, f64)], rng: &mut Pcg64) -> Matrix {
+        let n = n_per * centers.len();
+        let mut m = Matrix::zeros(n, 2);
+        for (c, &(cx, cy)) in centers.iter().enumerate() {
+            for i in 0..n_per {
+                let r = c * n_per + i;
+                m[(r, 0)] = cx + rng.normal() * 0.05;
+                m[(r, 1)] = cy + rng.normal() * 0.05;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn separates_clear_blobs() {
+        let mut rng = Pcg64::new(1);
+        let rows = blobs(20, &[(0.0, 0.0), (5.0, 5.0), (0.0, 5.0)], &mut rng);
+        let res = kmeans(&rows, 3, &mut rng, 50);
+        // All members of a generated blob must share one cluster id.
+        for blob in 0..3 {
+            let ids: Vec<usize> =
+                (0..20).map(|i| res.assignment[blob * 20 + i]).collect();
+            assert!(ids.iter().all(|&x| x == ids[0]), "blob {blob} split: {ids:?}");
+        }
+        // And the three blobs use three distinct ids.
+        let mut distinct: Vec<usize> =
+            (0..3).map(|b| res.assignment[b * 20]).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert_eq!(distinct.len(), 3);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Pcg64::new(2);
+        let rows = Matrix::from_fn(3, 2, |i, j| (i + j) as f64);
+        let res = kmeans(&rows, 10, &mut rng, 10);
+        assert_eq!(res.k, 3);
+    }
+
+    #[test]
+    fn single_cluster_centroid_is_mean() {
+        let mut rng = Pcg64::new(3);
+        let rows = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let res = kmeans(&rows, 1, &mut rng, 10);
+        assert!((res.centroids[(0, 0)] - 2.5).abs() < 1e-12);
+        assert!(res.assignment.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Pcg64::new(9);
+        let mut r2 = Pcg64::new(9);
+        let rows = blobs(10, &[(0.0, 0.0), (3.0, 3.0)], &mut Pcg64::new(5));
+        let a = kmeans(&rows, 2, &mut r1, 20);
+        let b = kmeans(&rows, 2, &mut r2, 20);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -1,0 +1,240 @@
+//! Parallel optimization algorithms (paper §2.3).
+//!
+//! All optimizers implement [`BatchOptimizer`]: given the evaluation
+//! [`History`], propose the next batch of configurations. Implemented
+//! algorithms, matching the paper's list:
+//!
+//! * [`hallucinate::HallucinationOptimizer`] — batched GP-UCB with
+//!   hallucinated observations (Desautels et al. 2014),
+//! * [`cluster::ClusteringOptimizer`] — k-means clustering of the
+//!   acquisition surface, max per cluster (Groves & Pyzer-Knapp 2018),
+//! * [`random::RandomOptimizer`] — the random baseline,
+//! * [`tpe::TpeOptimizer`] — Tree-structured Parzen Estimator, the in-repo
+//!   Hyperopt comparator (DESIGN.md §2).
+//!
+//! Values in [`History`] are always in *maximization* convention — the
+//! coordinator negates for minimization problems.
+
+pub mod bayesian;
+pub mod cluster;
+pub mod hallucinate;
+pub mod kmeans;
+pub mod random;
+pub mod thompson;
+pub mod tpe;
+
+use crate::space::{Config, SearchSpace};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Evaluation history: aligned (config, value) pairs, maximization values.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    configs: Vec<Config>,
+    values: Vec<f64>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, config: Config, value: f64) {
+        self.configs.push(config);
+        self.values.push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn configs(&self) -> &[Config] {
+        &self.configs
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Best (config, value) so far, maximization.
+    pub fn best(&self) -> Option<(&Config, f64)> {
+        crate::util::stats::argmax(&self.values).map(|i| (&self.configs[i], self.values[i]))
+    }
+
+    /// Keep only the most recent `cap` observations (artifact capacity).
+    pub fn truncate_to_recent(&mut self, cap: usize) {
+        if self.len() > cap {
+            let cut = self.len() - cap;
+            self.configs.drain(..cut);
+            self.values.drain(..cut);
+        }
+    }
+}
+
+/// A batch-proposing optimizer.
+pub trait BatchOptimizer {
+    /// Propose `batch_size` configurations to evaluate next.
+    fn propose(
+        &mut self,
+        history: &History,
+        batch_size: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Config>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which optimizer to build (CLI / config string form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Hallucination,
+    Clustering,
+    Random,
+    Tpe,
+    /// Batch Thompson sampling (extension; the paper's stated future work).
+    Thompson,
+}
+
+impl OptimizerKind {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "hallucination" => Some(Self::Hallucination),
+            "clustering" => Some(Self::Clustering),
+            "random" => Some(Self::Random),
+            "tpe" => Some(Self::Tpe),
+            "thompson" => Some(Self::Thompson),
+            _ => None,
+        }
+    }
+}
+
+/// Which surrogate backend the GP optimizers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SurrogateBackend {
+    /// AOT artifacts through PJRT (production path).
+    Pjrt,
+    /// Pure-Rust oracle (no artifacts needed).
+    Native,
+}
+
+impl SurrogateBackend {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(Self::Pjrt),
+            "native" => Some(Self::Native),
+            _ => None,
+        }
+    }
+}
+
+/// How observed objective values are conditioned before the GP fit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum YTransform {
+    /// Zero-mean / unit-variance scaling.
+    Normalize,
+    /// Rank-Gaussian (Gaussian copula) warp — robust to objective outliers
+    /// (default; see [`crate::acq::rank_gauss`]).
+    RankGauss,
+}
+
+/// Optimizer-level options shared by the GP algorithms.
+#[derive(Clone, Debug)]
+pub struct GpOptions {
+    pub backend: SurrogateBackend,
+    /// 0 = use the space's heuristic (paper §2.3).
+    pub mc_samples: usize,
+    /// Evaluations proposed at random before the surrogate engages.
+    pub initial_random: usize,
+    /// Grid-search the GP lengthscale by marginal likelihood each fit.
+    pub tune_lengthscale: bool,
+    pub noise: f64,
+    /// Fixed exploration weight; None = adaptive schedule (paper default).
+    pub fixed_beta: Option<f64>,
+    pub y_transform: YTransform,
+}
+
+impl Default for GpOptions {
+    fn default() -> Self {
+        Self {
+            backend: SurrogateBackend::Native,
+            mc_samples: 0,
+            initial_random: 2,
+            tune_lengthscale: false,
+            noise: 1e-3,
+            fixed_beta: None,
+            y_transform: YTransform::RankGauss,
+        }
+    }
+}
+
+/// Build an optimizer by kind.
+pub fn build(
+    kind: OptimizerKind,
+    space: &SearchSpace,
+    opts: &GpOptions,
+) -> Result<Box<dyn BatchOptimizer>> {
+    Ok(match kind {
+        OptimizerKind::Random => Box::new(random::RandomOptimizer::new(space.clone())),
+        OptimizerKind::Tpe => Box::new(tpe::TpeOptimizer::new(space.clone())),
+        OptimizerKind::Hallucination => Box::new(hallucinate::HallucinationOptimizer::new(
+            bayesian::BayesianCore::new(space.clone(), opts.clone())?,
+        )),
+        OptimizerKind::Clustering => Box::new(cluster::ClusteringOptimizer::new(
+            bayesian::BayesianCore::new(space.clone(), opts.clone())?,
+        )),
+        OptimizerKind::Thompson => Box::new(thompson::ThompsonOptimizer::new(
+            bayesian::BayesianCore::new(space.clone(), opts.clone())?,
+        )),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+
+    #[test]
+    fn history_best_and_truncate() {
+        let mut h = History::new();
+        for (i, v) in [0.1, 0.9, 0.4].iter().enumerate() {
+            h.push(
+                Config::new(vec![("i".into(), ParamValue::Int(i as i64))]),
+                *v,
+            );
+        }
+        let (c, v) = h.best().unwrap();
+        assert_eq!(v, 0.9);
+        assert_eq!(c.get_i64("i"), Some(1));
+        h.truncate_to_recent(2);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.configs()[0].get_i64("i"), Some(1));
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(OptimizerKind::from_str("hallucination"), Some(OptimizerKind::Hallucination));
+        assert_eq!(OptimizerKind::from_str("clustering"), Some(OptimizerKind::Clustering));
+        assert_eq!(OptimizerKind::from_str("tpe"), Some(OptimizerKind::Tpe));
+        assert_eq!(OptimizerKind::from_str("random"), Some(OptimizerKind::Random));
+        assert_eq!(OptimizerKind::from_str("sgd"), None);
+    }
+
+    #[test]
+    fn build_all_kinds_native() {
+        let space = crate::space::svm_space();
+        for kind in [
+            OptimizerKind::Random,
+            OptimizerKind::Tpe,
+            OptimizerKind::Hallucination,
+            OptimizerKind::Clustering,
+            OptimizerKind::Thompson,
+        ] {
+            let opt = build(kind, &space, &GpOptions::default()).unwrap();
+            assert!(!opt.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Random search baseline (paper §2.3: "Mango also supports a random
+//! optimizer which selects a batch of random configurations").
+
+use super::{BatchOptimizer, History};
+use crate::space::{Config, SearchSpace};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+pub struct RandomOptimizer {
+    space: SearchSpace,
+}
+
+impl RandomOptimizer {
+    pub fn new(space: SearchSpace) -> Self {
+        Self { space }
+    }
+}
+
+impl BatchOptimizer for RandomOptimizer {
+    fn propose(
+        &mut self,
+        _history: &History,
+        batch_size: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Config>> {
+        Ok(self.space.sample_n(rng, batch_size))
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::xgboost_space;
+
+    #[test]
+    fn proposes_requested_batch() {
+        let mut opt = RandomOptimizer::new(xgboost_space());
+        let mut rng = Pcg64::new(1);
+        let batch = opt.propose(&History::new(), 5, &mut rng).unwrap();
+        assert_eq!(batch.len(), 5);
+        // batches differ across calls
+        let batch2 = opt.propose(&History::new(), 5, &mut rng).unwrap();
+        assert_ne!(batch, batch2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Batch Thompson sampling — the paper's conclusion names "more parallel
+//! optimization algorithms" as future work; this is the canonical next one
+//! (Kandasamy et al. 2018: parallelised Thompson sampling).
+//!
+//! Over a discrete Monte-Carlo candidate set, each batch slot draws an
+//! independent approximate posterior sample (mean + σ·z per candidate,
+//! marginal approximation — exact joint sampling needs the m×m candidate
+//! covariance) and takes its argmax. Distinct draws decorrelate the batch
+//! naturally: no hallucination bookkeeping, no clustering pass.
+
+use super::bayesian::BayesianCore;
+use super::{BatchOptimizer, History};
+use crate::space::Config;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+pub struct ThompsonOptimizer {
+    core: BayesianCore,
+}
+
+impl ThompsonOptimizer {
+    pub fn new(core: BayesianCore) -> Self {
+        Self { core }
+    }
+}
+
+impl BatchOptimizer for ThompsonOptimizer {
+    fn propose(
+        &mut self,
+        history: &History,
+        batch_size: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Config>> {
+        if history.len() < self.core.opts.initial_random.max(2) {
+            return Ok(self.core.space.sample_n(rng, batch_size));
+        }
+        let scored = self.core.fit_and_score(history, batch_size, rng)?;
+        let m = scored.candidates.len();
+        let sigmas: Vec<f64> = scored.acq.var.iter().map(|v| v.sqrt()).collect();
+
+        let mut batch: Vec<Config> = Vec::with_capacity(batch_size);
+        let mut taken = vec![false; m];
+        for _slot in 0..batch_size {
+            // One posterior sample per slot; argmax over untaken candidates.
+            let mut best: Option<(f64, usize)> = None;
+            for c in 0..m {
+                if taken[c] {
+                    continue;
+                }
+                let draw = scored.acq.mean[c] + sigmas[c] * rng.normal();
+                if best.map_or(true, |(b, _)| draw > b) {
+                    best = Some((draw, c));
+                }
+            }
+            match best {
+                Some((_, c)) => {
+                    taken[c] = true;
+                    batch.push(scored.candidates[c].clone());
+                }
+                None => break,
+            }
+        }
+        while batch.len() < batch_size {
+            batch.push(self.core.space.sample(rng));
+        }
+        Ok(batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "thompson"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::GpOptions;
+    use crate::space::svm_space;
+
+    fn seeded_history(n: usize) -> History {
+        let space = svm_space();
+        let mut rng = Pcg64::new(23);
+        let mut h = History::new();
+        for cfg in space.sample_n(&mut rng, n) {
+            let c = cfg.get_f64("c").unwrap();
+            h.push(cfg, -(c - 45.0).abs());
+        }
+        h
+    }
+
+    #[test]
+    fn batch_is_distinct_and_full() {
+        let space = svm_space();
+        let core = BayesianCore::new(space, GpOptions::default()).unwrap();
+        let mut opt = ThompsonOptimizer::new(core);
+        let mut rng = Pcg64::new(31);
+        let batch = opt.propose(&seeded_history(15), 6, &mut rng).unwrap();
+        assert_eq!(batch.len(), 6);
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                assert_ne!(batch[i], batch[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_1d_target() {
+        let space = svm_space();
+        let core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let mut opt = ThompsonOptimizer::new(core);
+        let mut rng = Pcg64::new(37);
+        let mut h = History::new();
+        for _ in 0..20 {
+            for cfg in opt.propose(&h, 2, &mut rng).unwrap() {
+                let c = cfg.get_f64("c").unwrap();
+                h.push(cfg, -(c - 45.0).abs());
+            }
+        }
+        let best = h.best().unwrap().1;
+        assert!(best > -8.0, "thompson best {best}");
+    }
+
+    #[test]
+    fn draws_differ_across_slots() {
+        // Stochastic acquisition: two consecutive batch-1 proposals on the
+        // same history should usually differ (unlike greedy UCB argmax).
+        let space = svm_space();
+        let core = BayesianCore::new(space, GpOptions::default()).unwrap();
+        let mut opt = ThompsonOptimizer::new(core);
+        let mut rng = Pcg64::new(41);
+        let h = seeded_history(12);
+        let proposals: Vec<_> = (0..6)
+            .map(|_| opt.propose(&h, 1, &mut rng).unwrap().remove(0))
+            .collect();
+        let distinct = proposals
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| proposals[..*i].iter().all(|q| &q != p))
+            .count();
+        assert!(distinct >= 3, "posterior draws should vary, got {distinct}/6 distinct");
+    }
+}

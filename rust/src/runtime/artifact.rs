@@ -1,0 +1,155 @@
+//! Artifact manifest: what `python/compile/aot.py` produced, and which
+//! static-shape variant serves a given observation count.
+
+use crate::config::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One static-shape variant of the GP programs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variant {
+    /// Observation slots (rows of x / y / mask).
+    pub n: usize,
+    pub fit_path: PathBuf,
+    pub acquire_path: PathBuf,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub max_dim: usize,
+    pub m_cand: usize,
+    /// Variants sorted ascending by n.
+    pub variants: Vec<Variant>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let max_dim = j
+            .get("max_dim")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing max_dim"))?;
+        let m_cand = j
+            .get("m_cand")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing m_cand"))?;
+        let programs = j
+            .get("programs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing programs"))?;
+        let mut variants = Vec::new();
+        for (n_str, entry) in programs {
+            let n: usize = n_str.parse().with_context(|| format!("bad variant key {n_str}"))?;
+            let fit = entry
+                .get("fit")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("variant {n}: missing fit"))?;
+            let acq = entry
+                .get("acquire")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("variant {n}: missing acquire"))?;
+            variants.push(Variant {
+                n,
+                fit_path: dir.join(fit),
+                acquire_path: dir.join(acq),
+            });
+        }
+        anyhow::ensure!(!variants.is_empty(), "manifest has no variants");
+        variants.sort_by_key(|v| v.n);
+        for v in &variants {
+            anyhow::ensure!(v.fit_path.exists(), "missing artifact {:?}", v.fit_path);
+            anyhow::ensure!(v.acquire_path.exists(), "missing artifact {:?}", v.acquire_path);
+        }
+        Ok(Self { max_dim, m_cand, variants, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest variant with capacity for `n_obs` observations.
+    pub fn variant_for(&self, n_obs: usize) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.n >= n_obs)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact variant can hold {n_obs} observations (max {}); \
+                     the tuner caps history at the largest variant",
+                    self.variants.last().map(|v| v.n).unwrap_or(0)
+                )
+            })
+    }
+
+    /// Largest observation capacity across variants.
+    pub fn max_obs(&self) -> usize {
+        self.variants.last().map(|v| v.n).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn touch(dir: &Path, name: &str) {
+        std::fs::write(dir.join(name), "HloModule x").unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects_variants() {
+        let tmp = std::env::temp_dir().join(format!("mango_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        for n in [64, 128] {
+            touch(&tmp, &format!("gp_fit_n{n}.hlo.txt"));
+            touch(&tmp, &format!("gp_acquire_n{n}.hlo.txt"));
+        }
+        write_manifest(
+            &tmp,
+            r#"{"max_dim":16,"m_cand":512,"n_variants":[64,128],"programs":{
+                "64":{"fit":"gp_fit_n64.hlo.txt","acquire":"gp_acquire_n64.hlo.txt"},
+                "128":{"fit":"gp_fit_n128.hlo.txt","acquire":"gp_acquire_n128.hlo.txt"}}}"#,
+        );
+        let m = ArtifactManifest::load(&tmp).unwrap();
+        assert_eq!(m.max_dim, 16);
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variant_for(1).unwrap().n, 64);
+        assert_eq!(m.variant_for(64).unwrap().n, 64);
+        assert_eq!(m.variant_for(65).unwrap().n, 128);
+        assert!(m.variant_for(129).is_err());
+        assert_eq!(m.max_obs(), 128);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let tmp = std::env::temp_dir().join(format!("mango_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        write_manifest(
+            &tmp,
+            r#"{"max_dim":16,"m_cand":512,"programs":{
+                "64":{"fit":"nope.hlo.txt","acquire":"nope2.hlo.txt"}}}"#,
+        );
+        assert!(ArtifactManifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_parses_if_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.max_obs() >= 128);
+            assert_eq!(m.max_dim, 16);
+        }
+    }
+}

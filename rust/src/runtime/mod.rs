@@ -1,0 +1,33 @@
+//! PJRT runtime: loads the AOT-compiled L2/L1 artifacts (HLO text) and runs
+//! them on the request path. Python never executes here — `make artifacts`
+//! is the only place JAX runs.
+//!
+//! * [`artifact`] — manifest parsing + variant selection (static shapes).
+//! * [`pjrt`] — the [`PjrtSurrogate`]: [`crate::gp::Surrogate`] implemented
+//!   by compiling `gp_fit_n*.hlo.txt` / `gp_acquire_n*.hlo.txt` once per
+//!   variant and executing them with padded/masked inputs.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactManifest, Variant};
+pub use pjrt::PjrtSurrogate;
+
+/// Default artifacts directory (relative to the repo root / cwd), override
+/// with `MANGO_ARTIFACTS`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MANGO_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd so examples/benches/tests all find the repo root.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

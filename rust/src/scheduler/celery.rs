@@ -1,0 +1,234 @@
+//! Celery-like distributed task-queue simulator (paper Listing 4 +
+//! DESIGN.md §2 substitution for the Celery/Kubernetes deployment).
+//!
+//! Architecture mirrors a Celery deployment:
+//! * a **broker** queue of tasks (`delay(par)` in Listing 4),
+//! * N **worker** threads pulling tasks, each with simulated network/queue
+//!   latency, straggler slowdowns, and crash probability,
+//! * a **collector** (`process.get()`) that gathers results until all
+//!   surviving tasks report or the result timeout expires.
+//!
+//! Crashed and timed-out tasks never report — the scheduler returns the
+//! partial `(evals, params)` the paper's fault-tolerance contract expects.
+
+use super::{BatchResult, Objective, Scheduler};
+use crate::space::Config;
+use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+/// Fault/latency model for the simulated cluster.
+#[derive(Clone, Debug)]
+pub struct CelerySimConfig {
+    pub workers: usize,
+    /// Mean queue+network latency added to each task (ms).
+    pub base_latency_ms: f64,
+    /// Probability a task lands on a straggler worker…
+    pub straggler_prob: f64,
+    /// …which multiplies its latency by this factor.
+    pub straggler_factor: f64,
+    /// Probability a task is lost (worker crash / OOM-kill): never reports.
+    pub crash_prob: f64,
+    /// Collector gives up on missing results after this long.
+    pub result_timeout: Duration,
+}
+
+impl Default for CelerySimConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            base_latency_ms: 2.0,
+            straggler_prob: 0.05,
+            straggler_factor: 8.0,
+            crash_prob: 0.02,
+            result_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Counters exposed for tests and the metrics report.
+#[derive(Clone, Debug, Default)]
+pub struct CeleryStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub crashed: u64,
+    pub straggled: u64,
+    pub timed_out: u64,
+}
+
+pub struct CelerySimScheduler {
+    config: CelerySimConfig,
+    rng: Pcg64,
+    pub stats: CeleryStats,
+}
+
+impl CelerySimScheduler {
+    pub fn new(config: CelerySimConfig, seed: u64) -> Self {
+        Self { config, rng: Pcg64::new(seed ^ 0xCE1E_27), stats: CeleryStats::default() }
+    }
+}
+
+/// A task on the broker: index + pre-rolled fate (determinism: fates are
+/// drawn from the scheduler RNG at submit time, like task routing).
+struct Task {
+    index: usize,
+    crash: bool,
+    latency: Duration,
+}
+
+impl Scheduler for CelerySimScheduler {
+    fn evaluate(&mut self, objective: Objective<'_>, batch: &[Config]) -> BatchResult {
+        let cfg = self.config.clone();
+        let workers = cfg.workers.min(batch.len()).max(1);
+
+        // Submit: roll each task's fate, enqueue on the broker.
+        let mut queue = VecDeque::with_capacity(batch.len());
+        for (index, _) in batch.iter().enumerate() {
+            let crash = self.rng.next_f64() < cfg.crash_prob;
+            let straggle = self.rng.next_f64() < cfg.straggler_prob;
+            let mult = if straggle { cfg.straggler_factor } else { 1.0 };
+            // exponential-ish latency: -ln(u) * mean
+            let lat_ms = -self.rng.next_f64().max(1e-12).ln() * cfg.base_latency_ms * mult;
+            self.stats.submitted += 1;
+            if crash {
+                self.stats.crashed += 1;
+            }
+            if straggle {
+                self.stats.straggled += 1;
+            }
+            queue.push_back(Task { index, crash, latency: Duration::from_secs_f64(lat_ms / 1e3) });
+        }
+        let expected = batch.len() - queue.iter().filter(|t| t.crash).count();
+        let broker = Mutex::new(queue);
+        let (tx, rx) = mpsc::channel::<(usize, Option<f64>)>();
+
+        let mut out = BatchResult::default();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let broker = &broker;
+                scope.spawn(move || loop {
+                    let task = { broker.lock().unwrap().pop_front() };
+                    let Some(task) = task else { break };
+                    std::thread::sleep(task.latency);
+                    if task.crash {
+                        continue; // worker dies with the task: no report
+                    }
+                    let v = objective(&batch[task.index]);
+                    if tx.send((task.index, v)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            // Collector: gather until all surviving tasks report or timeout.
+            let deadline = std::time::Instant::now() + cfg.result_timeout;
+            let mut received = 0;
+            while received < expected {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    self.stats.timed_out += (expected - received) as u64;
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok((i, Some(v))) => {
+                        received += 1;
+                        self.stats.completed += 1;
+                        out.push(batch[i].clone(), v);
+                    }
+                    Ok((_, None)) => received += 1, // objective-level failure
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.stats.timed_out += (expected - received) as u64;
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        });
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "celery"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+
+    fn batch_of(n: usize) -> Vec<Config> {
+        (0..n)
+            .map(|i| Config::new(vec![("i".into(), ParamValue::Int(i as i64))]))
+            .collect()
+    }
+
+    fn reliable_config(workers: usize) -> CelerySimConfig {
+        CelerySimConfig {
+            workers,
+            base_latency_ms: 0.5,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            crash_prob: 0.0,
+            result_timeout: Duration::from_secs(10),
+        }
+    }
+
+    #[test]
+    fn reliable_cluster_returns_everything() {
+        let mut s = CelerySimScheduler::new(reliable_config(4), 1);
+        let res = s.evaluate(&|c| Some(c.get_i64("i").unwrap() as f64), &batch_of(20));
+        assert_eq!(res.len(), 20);
+        assert_eq!(s.stats.completed, 20);
+        assert_eq!(s.stats.crashed, 0);
+        // params/evals stay aligned even out-of-order
+        for (cfg, v) in res.params.iter().zip(&res.evals) {
+            assert_eq!(*v, cfg.get_i64("i").unwrap() as f64);
+        }
+    }
+
+    #[test]
+    fn crashes_produce_partial_results() {
+        let mut cfg = reliable_config(4);
+        cfg.crash_prob = 0.5;
+        let mut s = CelerySimScheduler::new(cfg, 7);
+        let res = s.evaluate(&|c| Some(c.get_i64("i").unwrap() as f64), &batch_of(40));
+        assert!(res.len() < 40, "some tasks must be lost");
+        assert!(!res.is_empty(), "but not all");
+        assert_eq!(res.len() as u64, s.stats.completed);
+        assert_eq!(s.stats.crashed, 40 - res.len() as u64);
+    }
+
+    #[test]
+    fn stragglers_hit_the_timeout() {
+        let cfg = CelerySimConfig {
+            workers: 2,
+            base_latency_ms: 1.0,
+            straggler_prob: 1.0, // every task straggles…
+            straggler_factor: 400.0,
+            crash_prob: 0.0,
+            result_timeout: Duration::from_millis(60),
+        };
+        let mut s = CelerySimScheduler::new(cfg, 3);
+        let res = s.evaluate(&|c| Some(c.get_i64("i").unwrap() as f64), &batch_of(12));
+        assert!(res.len() < 12, "timeout must cut off stragglers, got {}", res.len());
+        assert!(s.stats.timed_out > 0);
+    }
+
+    #[test]
+    fn deterministic_fates_per_seed() {
+        let mut cfg = reliable_config(3);
+        cfg.crash_prob = 0.3;
+        let run = |seed: u64| {
+            let mut s = CelerySimScheduler::new(cfg.clone(), seed);
+            let r = s.evaluate(&|c| Some(c.get_i64("i").unwrap() as f64), &batch_of(30));
+            let mut ids: Vec<i64> =
+                r.params.iter().map(|c| c.get_i64("i").unwrap()).collect();
+            ids.sort_unstable();
+            ids
+        };
+        assert_eq!(run(5), run(5), "same seed, same surviving set");
+    }
+}

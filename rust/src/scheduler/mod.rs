@@ -1,0 +1,109 @@
+//! Schedulers (paper §2.4): evaluation of configuration batches, decoupled
+//! from the optimizer.
+//!
+//! The paper's contract: the objective consumes a *batch* and returns
+//! `(evals, params)` — out-of-order and **possibly partial** (stragglers and
+//! crashed workers simply don't report). [`BatchResult`] encodes exactly
+//! that; every scheduler and the coordinator honour it.
+//!
+//! * [`serial::SerialScheduler`] — Listing 3: sequential evaluation.
+//! * [`threaded::ThreadedScheduler`] — local parallelism ("to use all cores
+//!   in local machine, threading can be used").
+//! * [`celery::CelerySimScheduler`] — Listing 4's Celery-on-Kubernetes
+//!   deployment as an in-repo distributed task-queue simulator: broker
+//!   queue, worker pool, latency distributions, stragglers, crashes and
+//!   result timeouts (DESIGN.md §2).
+
+pub mod celery;
+pub mod serial;
+pub mod threaded;
+
+use crate::space::Config;
+
+/// Per-config objective: `None` = evaluation failed (worker crash, NaN, …).
+pub type Objective<'a> = &'a (dyn Fn(&Config) -> Option<f64> + Sync);
+
+/// What a batch evaluation returned — the paper's `(evals, params)` pair.
+/// `params[i]` produced `evals[i]`; configs missing from `params` were lost
+/// (fault tolerance: the optimizer proceeds with what arrived).
+#[derive(Clone, Debug, Default)]
+pub struct BatchResult {
+    pub evals: Vec<f64>,
+    pub params: Vec<Config>,
+}
+
+impl BatchResult {
+    pub fn len(&self) -> usize {
+        self.evals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.evals.is_empty()
+    }
+
+    pub fn push(&mut self, cfg: Config, value: f64) {
+        self.params.push(cfg);
+        self.evals.push(value);
+    }
+}
+
+/// A batch evaluation engine.
+pub trait Scheduler {
+    /// Evaluate a batch; may return fewer results than configs.
+    fn evaluate(&mut self, objective: Objective<'_>, batch: &[Config]) -> BatchResult;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Scheduler selection (CLI / config string form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Serial,
+    Threaded,
+    Celery,
+}
+
+impl SchedulerKind {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "serial" => Some(Self::Serial),
+            "threaded" => Some(Self::Threaded),
+            "celery" => Some(Self::Celery),
+            _ => None,
+        }
+    }
+}
+
+/// Build a scheduler by kind with `workers` parallelism.
+pub fn build(kind: SchedulerKind, workers: usize, seed: u64) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Serial => Box::new(serial::SerialScheduler),
+        SchedulerKind::Threaded => Box::new(threaded::ThreadedScheduler::new(workers)),
+        SchedulerKind::Celery => Box::new(celery::CelerySimScheduler::new(
+            celery::CelerySimConfig { workers, ..Default::default() },
+            seed,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(SchedulerKind::from_str("serial"), Some(SchedulerKind::Serial));
+        assert_eq!(SchedulerKind::from_str("threaded"), Some(SchedulerKind::Threaded));
+        assert_eq!(SchedulerKind::from_str("celery"), Some(SchedulerKind::Celery));
+        assert_eq!(SchedulerKind::from_str("slurm"), None);
+    }
+
+    #[test]
+    fn batch_result_push() {
+        let mut r = BatchResult::default();
+        assert!(r.is_empty());
+        r.push(Config::default(), 1.5);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.evals[0], 1.5);
+    }
+}

@@ -1,0 +1,64 @@
+//! Serial scheduler — the paper's Listing 3 skeleton.
+
+use super::{BatchResult, Objective, Scheduler};
+use crate::space::Config;
+
+pub struct SerialScheduler;
+
+impl Scheduler for SerialScheduler {
+    fn evaluate(&mut self, objective: Objective<'_>, batch: &[Config]) -> BatchResult {
+        let mut out = BatchResult::default();
+        for cfg in batch {
+            if let Some(v) = objective(cfg) {
+                out.push(cfg.clone(), v);
+            }
+            // failed evaluations are simply omitted — partial results
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{svm_space, ParamValue};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn evaluates_in_order() {
+        let space = svm_space();
+        let mut rng = Pcg64::new(1);
+        let batch = space.sample_n(&mut rng, 4);
+        let mut s = SerialScheduler;
+        let res = s.evaluate(&|cfg| cfg.get_f64("c"), &batch);
+        assert_eq!(res.len(), 4);
+        for (i, cfg) in batch.iter().enumerate() {
+            assert_eq!(&res.params[i], cfg);
+            assert_eq!(res.evals[i], cfg.get_f64("c").unwrap());
+        }
+    }
+
+    #[test]
+    fn partial_results_on_failure() {
+        let batch = vec![
+            Config::new(vec![("x".into(), ParamValue::F64(1.0))]),
+            Config::new(vec![("x".into(), ParamValue::F64(-1.0))]),
+            Config::new(vec![("x".into(), ParamValue::F64(2.0))]),
+        ];
+        let mut s = SerialScheduler;
+        // negative x "crashes"
+        let res = s.evaluate(
+            &|cfg| {
+                let x = cfg.get_f64("x").unwrap();
+                (x > 0.0).then_some(x)
+            },
+            &batch,
+        );
+        assert_eq!(res.len(), 2);
+        assert_eq!(res.evals, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Local thread-pool scheduler ("to use all cores in local machine,
+//! threading can be used to evaluate a set of values" — paper §2.2).
+
+use super::{BatchResult, Objective, Scheduler};
+use crate::space::Config;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+pub struct ThreadedScheduler {
+    workers: usize,
+}
+
+impl ThreadedScheduler {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+}
+
+impl Scheduler for ThreadedScheduler {
+    fn evaluate(&mut self, objective: Objective<'_>, batch: &[Config]) -> BatchResult {
+        // The paper: "maximum level of parallelism per job is decided by the
+        // size of the batch".
+        let workers = self.workers.min(batch.len()).max(1);
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Option<f64>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= batch.len() {
+                        break;
+                    }
+                    let v = objective(&batch[i]);
+                    if tx.send((i, v)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        // Results arrive out of order; keep arrival order (the optimizer
+        // matches on params, not position — the paper's contract).
+        let mut out = BatchResult::default();
+        for (i, v) in rx {
+            if let Some(v) = v {
+                out.push(batch[i].clone(), v);
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+
+    fn batch_of(n: usize) -> Vec<Config> {
+        (0..n)
+            .map(|i| Config::new(vec![("i".into(), ParamValue::Int(i as i64))]))
+            .collect()
+    }
+
+    #[test]
+    fn evaluates_all_and_matches_params() {
+        let batch = batch_of(16);
+        let mut s = ThreadedScheduler::new(4);
+        let res = s.evaluate(&|cfg| Some(cfg.get_i64("i").unwrap() as f64 * 2.0), &batch);
+        assert_eq!(res.len(), 16);
+        for (cfg, v) in res.params.iter().zip(&res.evals) {
+            assert_eq!(*v, cfg.get_i64("i").unwrap() as f64 * 2.0);
+        }
+    }
+
+    #[test]
+    fn really_parallel() {
+        // 8 tasks of ~30ms on 8 workers must finish well under 8*30ms.
+        let batch = batch_of(8);
+        let mut s = ThreadedScheduler::new(8);
+        let t = std::time::Instant::now();
+        let res = s.evaluate(
+            &|_| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Some(1.0)
+            },
+            &batch,
+        );
+        let ms = t.elapsed().as_millis();
+        assert_eq!(res.len(), 8);
+        assert!(ms < 160, "took {ms}ms — not parallel");
+    }
+
+    #[test]
+    fn failures_are_partial() {
+        let batch = batch_of(10);
+        let mut s = ThreadedScheduler::new(3);
+        let res = s.evaluate(
+            &|cfg| {
+                let i = cfg.get_i64("i").unwrap();
+                (i % 2 == 0).then_some(i as f64)
+            },
+            &batch,
+        );
+        assert_eq!(res.len(), 5);
+        for cfg in &res.params {
+            assert_eq!(cfg.get_i64("i").unwrap() % 2, 0);
+        }
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_serial() {
+        let batch = batch_of(5);
+        let mut s = ThreadedScheduler::new(1);
+        let res = s.evaluate(&|cfg| Some(cfg.get_i64("i").unwrap() as f64), &batch);
+        assert_eq!(res.len(), 5);
+    }
+}

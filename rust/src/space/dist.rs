@@ -1,0 +1,127 @@
+//! Custom-distribution extension point (the analogue of defining new
+//! scipy.stats distributions in the paper).
+
+use crate::util::rng::Pcg64;
+
+/// A user-defined continuous distribution.
+///
+/// Implementors must provide `sample` (the paper: "Distributions must
+/// provide a method for sampling") and finite `bounds` used for GP encoding.
+pub trait Distribution: Send + Sync {
+    /// Draw one value.
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+
+    /// (lo, hi) support bounds used to scale values into the GP unit cube.
+    fn bounds(&self) -> (f64, f64);
+
+    /// Human-readable name for Debug output.
+    fn name(&self) -> &str {
+        "custom"
+    }
+}
+
+/// Truncated exponential — ships as a worked example of the extension point
+/// (the paper ships `loguniform` as its example; we ship both).
+pub struct TruncExp {
+    pub rate: f64,
+    pub hi: f64,
+}
+
+impl Distribution for TruncExp {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        // Inverse-CDF of Exp(rate) truncated to [0, hi].
+        let cdf_hi = 1.0 - (-self.rate * self.hi).exp();
+        let u = rng.next_f64() * cdf_hi;
+        -(1.0 - u).ln() / self.rate
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (0.0, self.hi)
+    }
+
+    fn name(&self) -> &str {
+        "truncexp"
+    }
+}
+
+/// Beta(a, b) via the Jöhnk/gamma-ratio method — a second worked example,
+/// covering bounded asymmetric priors.
+pub struct Beta {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl Beta {
+    fn gamma_sample(shape: f64, rng: &mut Pcg64) -> f64 {
+        // Marsaglia–Tsang for shape >= 1; boost for shape < 1.
+        if shape < 1.0 {
+            let u = rng.next_f64().max(1e-300);
+            return Self::gamma_sample(shape + 1.0, rng) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = rng.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = rng.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+}
+
+impl Distribution for Beta {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let x = Self::gamma_sample(self.a, rng);
+        let y = Self::gamma_sample(self.b, rng);
+        x / (x + y)
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (0.0, 1.0)
+    }
+
+    fn name(&self) -> &str {
+        "beta"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncexp_in_bounds() {
+        let d = TruncExp { rate: 2.0, hi: 3.0 };
+        let mut rng = Pcg64::new(4);
+        for _ in 0..2000 {
+            let v = d.sample(&mut rng);
+            assert!((0.0..=3.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn truncexp_mean_close_to_untruncated() {
+        // rate=2, hi=3: truncation is mild; mean should be near 1/2.
+        let d = TruncExp { rate: 2.0, hi: 3.0 };
+        let mut rng = Pcg64::new(5);
+        let n = 20_000;
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((m - 0.49).abs() < 0.03, "mean {m}");
+    }
+
+    #[test]
+    fn beta_moments() {
+        let d = Beta { a: 2.0, b: 5.0 };
+        let mut rng = Pcg64::new(6);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        assert!((mean - 2.0 / 7.0).abs() < 0.01, "mean {mean}");
+        assert!(samples.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}

@@ -1,0 +1,197 @@
+//! GP feature encoding: configurations → unit-cube vectors.
+//!
+//! Continuous domains min-max scale to [0, 1] (loguniform in log space,
+//! normals over mean ± 3σ); integers scale like continuous; categoricals
+//! one-hot encode. This is the Garrido-Merchán & Hernández-Lobato treatment
+//! the paper cites: the acquisition is only ever *evaluated at valid
+//! configurations* (we sample configs, then encode), so the GP never sees
+//! fractional categories.
+
+use super::{Config, Domain, SearchSpace};
+
+/// Precomputed encoding layout for a [`SearchSpace`].
+#[derive(Clone, Debug)]
+pub struct Encoder {
+    dims: usize,
+    /// Per-parameter (offset, width) into the encoded vector.
+    layout: Vec<(usize, usize)>,
+    space: SearchSpace,
+}
+
+impl Encoder {
+    pub fn new(space: &SearchSpace) -> Self {
+        let mut layout = Vec::with_capacity(space.len());
+        let mut off = 0;
+        for p in space.params() {
+            let w = p.domain.encoded_width();
+            layout.push((off, w));
+            off += w;
+        }
+        Self { dims: off, layout, space: space.clone() }
+    }
+
+    /// Number of encoded feature dimensions.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Encode one configuration into `out[..self.dims()]`.
+    pub fn encode_into(&self, cfg: &Config, out: &mut [f64]) {
+        assert!(out.len() >= self.dims);
+        out[..self.dims].fill(0.0);
+        for (p, &(off, width)) in self.space.params().iter().zip(&self.layout) {
+            let v = cfg
+                .get(&p.name)
+                .unwrap_or_else(|| panic!("config missing parameter '{}'", p.name));
+            match (&p.domain, v) {
+                (Domain::Uniform { lo, hi }, _) | (Domain::QUniform { lo, hi, .. }, _) => {
+                    let x = v.as_f64().expect("numeric param");
+                    out[off] = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+                }
+                (Domain::LogUniform { lo, hi }, _) => {
+                    let x = v.as_f64().expect("numeric param").max(*lo);
+                    out[off] = ((x.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0);
+                }
+                (Domain::Normal { mean, std }, _) => {
+                    let x = v.as_f64().expect("numeric param");
+                    out[off] = ((x - (mean - 3.0 * std)) / (6.0 * std)).clamp(0.0, 1.0);
+                }
+                (Domain::Range { lo, hi }, _) => {
+                    let x = v.as_f64().expect("numeric param");
+                    let span = (*hi - *lo).max(1) as f64;
+                    out[off] = ((x - *lo as f64) / span).clamp(0.0, 1.0);
+                }
+                (Domain::Choice(vals), v) => {
+                    let idx = vals
+                        .iter()
+                        .position(|c| c == v)
+                        .unwrap_or_else(|| panic!("'{v}' not a valid choice for '{}'", p.name));
+                    out[off + idx] = 1.0;
+                    let _ = width;
+                }
+                (Domain::Custom(d), _) => {
+                    let (lo, hi) = d.bounds();
+                    let x = v.as_f64().expect("numeric param");
+                    out[off] = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Encode one configuration (allocating).
+    pub fn encode(&self, cfg: &Config) -> Vec<f64> {
+        let mut out = vec![0.0; self.dims];
+        self.encode_into(cfg, &mut out);
+        out
+    }
+
+    /// Encode a batch into a flat row-major (n x dims) buffer.
+    pub fn encode_batch(&self, cfgs: &[Config]) -> Vec<f64> {
+        let mut out = vec![0.0; cfgs.len() * self.dims];
+        for (i, cfg) in cfgs.iter().enumerate() {
+            self.encode_into(cfg, &mut out[i * self.dims..(i + 1) * self.dims]);
+        }
+        out
+    }
+
+    /// Euclidean distance in encoded space (used by the k-means batcher).
+    pub fn encoded_distance(&self, a: &Config, b: &Config) -> f64 {
+        let ea = self.encode(a);
+        let eb = self.encode(b);
+        ea.iter().zip(&eb).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{xgboost_space, ParamValue, SearchSpace};
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn xgboost_layout() {
+        let s = xgboost_space();
+        let enc = Encoder::new(&s);
+        assert_eq!(enc.dims(), 7);
+        let mut rng = Pcg64::new(1);
+        let cfg = s.sample(&mut rng);
+        let v = enc.encode(&cfg);
+        assert_eq!(v.len(), 7);
+        // one-hot block sums to exactly 1
+        let onehot_sum: f64 = v[4..7].iter().sum();
+        assert!((onehot_sum - 1.0).abs() < 1e-12);
+        assert_eq!(v[4..7].iter().filter(|&&x| x == 1.0).count(), 1);
+    }
+
+    #[test]
+    fn encoded_values_in_unit_cube_property() {
+        let s = xgboost_space();
+        let enc = Encoder::new(&s);
+        check("encodings in [0,1]", 256, |g| {
+            let cfg = s.sample(g.rng());
+            let v = enc.encode(&cfg);
+            for (i, x) in v.iter().enumerate() {
+                if !(0.0..=1.0).contains(x) {
+                    return Err(format!("dim {i} = {x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loguniform_encodes_log_linearly() {
+        let s = SearchSpace::builder().loguniform("g", 1e-4, 1e4).build();
+        let enc = Encoder::new(&s);
+        let at = |x: f64| {
+            enc.encode(&Config::new(vec![("g".into(), ParamValue::F64(x))]))[0]
+        };
+        assert!((at(1e-4) - 0.0).abs() < 1e-9);
+        assert!((at(1.0) - 0.5).abs() < 1e-9);
+        assert!((at(1e4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_endpoints() {
+        let s = SearchSpace::builder().range("d", 1, 10).build(); // values 1..=9
+        let enc = Encoder::new(&s);
+        let at = |x: i64| {
+            enc.encode(&Config::new(vec![("d".into(), ParamValue::Int(x))]))[0]
+        };
+        assert_eq!(at(1), 0.0);
+        assert_eq!(at(9), 1.0);
+        assert!((at(5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_encoding_matches_single() {
+        let s = xgboost_space();
+        let enc = Encoder::new(&s);
+        let mut rng = Pcg64::new(3);
+        let cfgs = s.sample_n(&mut rng, 5);
+        let batch = enc.encode_batch(&cfgs);
+        for (i, cfg) in cfgs.iter().enumerate() {
+            assert_eq!(&batch[i * 7..(i + 1) * 7], enc.encode(cfg).as_slice());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "missing parameter")]
+    fn missing_param_panics() {
+        let s = xgboost_space();
+        let enc = Encoder::new(&s);
+        enc.encode(&Config::default());
+    }
+
+    #[test]
+    fn distance_zero_iff_same() {
+        let s = xgboost_space();
+        let enc = Encoder::new(&s);
+        let mut rng = Pcg64::new(7);
+        let a = s.sample(&mut rng);
+        let b = s.sample(&mut rng);
+        assert_eq!(enc.encoded_distance(&a, &a), 0.0);
+        assert!(enc.encoded_distance(&a, &b) > 0.0);
+    }
+}

@@ -1,0 +1,383 @@
+//! Hyperparameter search-space DSL (paper §2.1).
+//!
+//! A [`SearchSpace`] is an ordered set of named parameters, each with a
+//! [`Domain`]: continuous distributions (uniform, loguniform, normal, …),
+//! quantized variants, integer ranges (Python's `range(lo, hi)`), and
+//! categorical choices (Python lists). Custom distributions plug in through
+//! the [`dist::Distribution`] trait — the analogue of extending
+//! `scipy.stats` constructs.
+//!
+//! ```no_run
+//! use mango::space::SearchSpace;
+//! // Listing 1 of the paper: XGBoost's XGBClassifier space.
+//! let space = SearchSpace::builder()
+//!     .uniform("learning_rate", 0.0, 1.0)
+//!     .uniform("gamma", 0.0, 5.0)
+//!     .range("max_depth", 1, 10)
+//!     .range("n_estimators", 1, 300)
+//!     .choice("booster", &["gbtree", "gblinear", "dart"])
+//!     .build();
+//! assert_eq!(space.len(), 5);
+//! assert!(space.cardinality_estimate() >= 1e6);
+//! ```
+
+pub mod dist;
+pub mod encode;
+mod value;
+
+pub use encode::Encoder;
+pub use value::{Config, ParamValue};
+
+use crate::util::rng::Pcg64;
+use dist::Distribution;
+use std::sync::Arc;
+
+/// The domain of a single hyperparameter.
+#[derive(Clone)]
+pub enum Domain {
+    /// Continuous uniform on [lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// Log-uniform on [lo, hi) (the paper's predefined `loguniform`).
+    LogUniform { lo: f64, hi: f64 },
+    /// Uniform quantized to multiples of `q`.
+    QUniform { lo: f64, hi: f64, q: f64 },
+    /// Normal(mean, std), clipped to mean ± 6 std for encoding bounds.
+    Normal { mean: f64, std: f64 },
+    /// Integer uniform on [lo, hi] inclusive — Python `range(lo, hi)` is
+    /// expressed as `Range { lo, hi: hi - 1 }` by the builder.
+    Range { lo: i64, hi: i64 },
+    /// Categorical over explicit values (strings, numbers, …).
+    Choice(Vec<ParamValue>),
+    /// User-defined distribution (scipy.stats-style extension point).
+    Custom(Arc<dyn Distribution>),
+}
+
+impl std::fmt::Debug for Domain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Domain::Uniform { lo, hi } => write!(f, "Uniform({lo}, {hi})"),
+            Domain::LogUniform { lo, hi } => write!(f, "LogUniform({lo}, {hi})"),
+            Domain::QUniform { lo, hi, q } => write!(f, "QUniform({lo}, {hi}, q={q})"),
+            Domain::Normal { mean, std } => write!(f, "Normal({mean}, {std})"),
+            Domain::Range { lo, hi } => write!(f, "Range({lo}..={hi})"),
+            Domain::Choice(v) => write!(f, "Choice({} values)", v.len()),
+            Domain::Custom(d) => write!(f, "Custom({})", d.name()),
+        }
+    }
+}
+
+impl Domain {
+    /// Draw one value.
+    pub fn sample(&self, rng: &mut Pcg64) -> ParamValue {
+        match self {
+            Domain::Uniform { lo, hi } => ParamValue::F64(rng.uniform(*lo, *hi)),
+            Domain::LogUniform { lo, hi } => {
+                let (ll, lh) = (lo.ln(), hi.ln());
+                ParamValue::F64(rng.uniform(ll, lh).exp())
+            }
+            Domain::QUniform { lo, hi, q } => {
+                let v = rng.uniform(*lo, *hi);
+                ParamValue::F64((v / q).round() * q)
+            }
+            Domain::Normal { mean, std } => ParamValue::F64(rng.normal_scaled(*mean, *std)),
+            Domain::Range { lo, hi } => {
+                ParamValue::Int(rng.uniform_usize(0, (*hi - *lo + 1) as usize) as i64 + lo)
+            }
+            Domain::Choice(vals) => vals[rng.uniform_usize(0, vals.len())].clone(),
+            Domain::Custom(d) => ParamValue::F64(d.sample(rng)),
+        }
+    }
+
+    /// How many GP feature dims this domain encodes to (one-hot categoricals).
+    pub fn encoded_width(&self) -> usize {
+        match self {
+            Domain::Choice(vals) => vals.len(),
+            _ => 1,
+        }
+    }
+
+    /// Approximate number of distinct values (for the MC heuristic and the
+    /// paper's "cardinality of the search space" discussion).
+    pub fn cardinality(&self) -> f64 {
+        match self {
+            Domain::Uniform { .. }
+            | Domain::LogUniform { .. }
+            | Domain::Normal { .. }
+            | Domain::Custom(_) => 100.0, // continuous: treated as ~100 distinguishable levels
+            Domain::QUniform { lo, hi, q } => ((hi - lo) / q).abs().max(1.0),
+            Domain::Range { lo, hi } => (hi - lo + 1) as f64,
+            Domain::Choice(vals) => vals.len() as f64,
+        }
+    }
+
+    /// True if values are discrete (integer or categorical).
+    pub fn is_discrete(&self) -> bool {
+        matches!(self, Domain::Range { .. } | Domain::Choice(_))
+    }
+}
+
+/// A named parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub domain: Domain,
+}
+
+/// Ordered collection of parameters; the library's central abstraction.
+#[derive(Clone, Debug, Default)]
+pub struct SearchSpace {
+    params: Vec<Param>,
+}
+
+impl SearchSpace {
+    pub fn builder() -> SearchSpaceBuilder {
+        SearchSpaceBuilder::default()
+    }
+
+    pub fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    pub fn param(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Sample one full configuration.
+    pub fn sample(&self, rng: &mut Pcg64) -> Config {
+        Config::new(
+            self.params
+                .iter()
+                .map(|p| (p.name.clone(), p.domain.sample(rng)))
+                .collect(),
+        )
+    }
+
+    /// Sample a batch of configurations.
+    pub fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<Config> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Total GP-encoded feature width.
+    pub fn encoded_dim(&self) -> usize {
+        self.params.iter().map(|p| p.domain.encoded_width()).sum()
+    }
+
+    /// Product of per-parameter cardinalities (paper §1: ~1e6 for Listing 1).
+    pub fn cardinality_estimate(&self) -> f64 {
+        self.params.iter().map(|p| p.domain.cardinality()).product()
+    }
+
+    /// The paper's heuristic for the Monte-Carlo acquisition sample count:
+    /// grows with the number of parameters and the log-cardinality of the
+    /// space, clamped to keep each acquisition call bounded. User-overridable
+    /// via `RunConfig::mc_samples`.
+    pub fn mc_samples_heuristic(&self) -> usize {
+        let d = self.len().max(1) as f64;
+        let logcard = self.cardinality_estimate().max(1.0).ln();
+        let n = 400.0 * d + 100.0 * logcard;
+        (n as usize).clamp(1000, 10_000)
+    }
+}
+
+/// Fluent builder mirroring the paper's dict-style space definitions.
+#[derive(Default)]
+pub struct SearchSpaceBuilder {
+    params: Vec<Param>,
+}
+
+impl SearchSpaceBuilder {
+    fn push(mut self, name: &str, domain: Domain) -> Self {
+        assert!(
+            !self.params.iter().any(|p| p.name == name),
+            "duplicate parameter '{name}'"
+        );
+        self.params.push(Param { name: name.to_string(), domain });
+        self
+    }
+
+    /// `"x": uniform(lo, hi)` — continuous uniform.
+    pub fn uniform(self, name: &str, lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "uniform({name}): hi must exceed lo");
+        self.push(name, Domain::Uniform { lo, hi })
+    }
+
+    /// `"x": loguniform(lo, hi)` — the paper's predefined distribution.
+    pub fn loguniform(self, name: &str, lo: f64, hi: f64) -> Self {
+        assert!(lo > 0.0 && hi > lo, "loguniform({name}): need 0 < lo < hi");
+        self.push(name, Domain::LogUniform { lo, hi })
+    }
+
+    /// Uniform quantized to multiples of q.
+    pub fn quniform(self, name: &str, lo: f64, hi: f64, q: f64) -> Self {
+        assert!(hi > lo && q > 0.0, "quniform({name}): bad arguments");
+        self.push(name, Domain::QUniform { lo, hi, q })
+    }
+
+    /// Normal(mean, std).
+    pub fn normal(self, name: &str, mean: f64, std: f64) -> Self {
+        assert!(std > 0.0, "normal({name}): std must be positive");
+        self.push(name, Domain::Normal { mean, std })
+    }
+
+    /// Python `range(lo, hi)`: integers lo..hi-1 inclusive.
+    pub fn range(self, name: &str, lo: i64, hi: i64) -> Self {
+        assert!(hi > lo, "range({name}): hi must exceed lo");
+        self.push(name, Domain::Range { lo, hi: hi - 1 })
+    }
+
+    /// Inclusive integer interval.
+    pub fn int(self, name: &str, lo: i64, hi: i64) -> Self {
+        assert!(hi >= lo, "int({name}): hi must be >= lo");
+        self.push(name, Domain::Range { lo, hi })
+    }
+
+    /// Categorical over strings (Python list of str).
+    pub fn choice(self, name: &str, values: &[&str]) -> Self {
+        assert!(!values.is_empty(), "choice({name}): empty values");
+        self.push(
+            name,
+            Domain::Choice(values.iter().map(|s| ParamValue::Str(s.to_string())).collect()),
+        )
+    }
+
+    /// Categorical over arbitrary values.
+    pub fn choice_values(self, name: &str, values: Vec<ParamValue>) -> Self {
+        assert!(!values.is_empty(), "choice_values({name}): empty values");
+        self.push(name, Domain::Choice(values))
+    }
+
+    /// Custom distribution (scipy.stats-style extension point).
+    pub fn custom(self, name: &str, d: Arc<dyn Distribution>) -> Self {
+        self.push(name, Domain::Custom(d))
+    }
+
+    pub fn build(self) -> SearchSpace {
+        SearchSpace { params: self.params }
+    }
+}
+
+/// The paper's Listing 1: XGBoost XGBClassifier space (reused by examples,
+/// tests and the Fig. 2 harness).
+pub fn xgboost_space() -> SearchSpace {
+    SearchSpace::builder()
+        .uniform("learning_rate", 0.0, 1.0)
+        .uniform("gamma", 0.0, 5.0)
+        .range("max_depth", 1, 10)
+        .range("n_estimators", 1, 300)
+        .choice("booster", &["gbtree", "gblinear", "dart"])
+        .build()
+}
+
+/// The paper's Listing 2: SVM space (C uniform, gamma loguniform).
+pub fn svm_space() -> SearchSpace {
+    SearchSpace::builder()
+        .uniform("c", 0.01, 100.0)
+        .loguniform("gamma", 1e-4, 1e3)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn xgboost_space_matches_listing1() {
+        let s = xgboost_space();
+        assert_eq!(s.len(), 5);
+        // 100 * 500(gamma~100) levels... cardinality must be ~1e6 as in §1.
+        assert!(s.cardinality_estimate() >= 1e6);
+        assert_eq!(s.encoded_dim(), 7); // 4 numeric + 3-way one-hot
+    }
+
+    #[test]
+    fn samples_respect_domains() {
+        let s = xgboost_space();
+        let mut rng = Pcg64::new(1);
+        for _ in 0..500 {
+            let c = s.sample(&mut rng);
+            let lr = c.get_f64("learning_rate").unwrap();
+            assert!((0.0..1.0).contains(&lr));
+            let depth = c.get_i64("max_depth").unwrap();
+            assert!((1..10).contains(&depth), "range(1,10) excludes 10");
+            let booster = c.get_str("booster").unwrap();
+            assert!(["gbtree", "gblinear", "dart"].contains(&booster));
+        }
+    }
+
+    #[test]
+    fn loguniform_spans_decades() {
+        let s = svm_space();
+        let mut rng = Pcg64::new(2);
+        let mut small = 0;
+        let mut large = 0;
+        for _ in 0..2000 {
+            let g = s.sample(&mut rng).get_f64("gamma").unwrap();
+            assert!((1e-4..1e3).contains(&g));
+            if g < 1e-2 {
+                small += 1;
+            }
+            if g > 1.0 {
+                large += 1;
+            }
+        }
+        // log-uniform: ~2/7 of draws below 1e-2, ~3/7 above 1.
+        assert!(small > 350 && large > 500, "small={small} large={large}");
+    }
+
+    #[test]
+    fn quniform_quantizes() {
+        let s = SearchSpace::builder().quniform("q", 0.0, 1.0, 0.25).build();
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let v = s.sample(&mut rng).get_f64("q").unwrap();
+            let r = (v / 0.25).round() * 0.25;
+            assert!((v - r).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let s = xgboost_space();
+        let a = s.sample_n(&mut Pcg64::new(9), 10);
+        let b = s.sample_n(&mut Pcg64::new(9), 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate parameter")]
+    fn duplicate_names_rejected() {
+        let _ = SearchSpace::builder().uniform("x", 0.0, 1.0).uniform("x", 0.0, 2.0);
+    }
+
+    #[test]
+    fn mc_heuristic_scales_with_space() {
+        let small = svm_space().mc_samples_heuristic();
+        let large = xgboost_space().mc_samples_heuristic();
+        assert!(large > small, "{large} vs {small}");
+        assert!((1000..=10_000).contains(&small));
+        assert!((1000..=10_000).contains(&large));
+    }
+
+    #[test]
+    fn property_sample_always_in_domain() {
+        check("range samples in bounds", 128, |g| {
+            let lo = g.rng().uniform(-100.0, 100.0) as i64;
+            let span = g.usize_range(1, 50) as i64;
+            let s = SearchSpace::builder().int("v", lo, lo + span).build();
+            let v = s.sample(&mut g.rng().split()).get_i64("v").unwrap();
+            if v < lo || v > lo + span {
+                return Err(format!("{v} outside [{lo}, {}]", lo + span));
+            }
+            Ok(())
+        });
+    }
+}

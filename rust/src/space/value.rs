@@ -1,0 +1,163 @@
+//! Parameter values and configurations (the `params` dicts of the paper).
+
+use crate::config::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One hyperparameter value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    F64(f64),
+    Int(i64),
+    Str(String),
+}
+
+impl ParamValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::F64(v) => Some(*v),
+            ParamValue::Int(v) => Some(*v as f64),
+            ParamValue::Str(_) => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ParamValue::F64(v) => Json::Num(*v),
+            ParamValue::Int(v) => Json::Num(*v as f64),
+            ParamValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::F64(v) => write!(f, "{v:.6}"),
+            ParamValue::Int(v) => write!(f, "{v}"),
+            ParamValue::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A full hyperparameter configuration: ordered (name, value) pairs.
+///
+/// Order follows the search-space definition, so encoding and display are
+/// deterministic. Lookup is by name (spaces are small: <= dozens of params).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Config {
+    entries: Vec<(String, ParamValue)>,
+}
+
+impl Config {
+    pub fn new(entries: Vec<(String, ParamValue)>) -> Self {
+        Self { entries }
+    }
+
+    pub fn entries(&self) -> &[(String, ParamValue)] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamValue> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_i64(&self, name: &str) -> Option<i64> {
+        self.get(name).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.get(name).and_then(|v| v.as_str())
+    }
+
+    pub fn set(&mut self, name: &str, value: ParamValue) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 = value;
+        } else {
+            self.entries.push((name.to_string(), value));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let map: BTreeMap<String, Json> =
+            self.entries.iter().map(|(n, v)| (n.clone(), v.to_json())).collect();
+        Json::Obj(map)
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, (n, v)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{n}: {v}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_access() {
+        let c = Config::new(vec![
+            ("lr".into(), ParamValue::F64(0.1)),
+            ("depth".into(), ParamValue::Int(5)),
+            ("booster".into(), ParamValue::Str("dart".into())),
+        ]);
+        assert_eq!(c.get_f64("lr"), Some(0.1));
+        assert_eq!(c.get_f64("depth"), Some(5.0)); // int coerces to f64
+        assert_eq!(c.get_i64("depth"), Some(5));
+        assert_eq!(c.get_str("booster"), Some("dart"));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn set_overwrites_or_appends() {
+        let mut c = Config::default();
+        c.set("a", ParamValue::Int(1));
+        c.set("a", ParamValue::Int(2));
+        assert_eq!(c.get_i64("a"), Some(2));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn json_and_display() {
+        let c = Config::new(vec![
+            ("x".into(), ParamValue::F64(1.5)),
+            ("kind".into(), ParamValue::Str("rbf".into())),
+        ]);
+        assert_eq!(c.to_json().to_string(), r#"{"kind":"rbf","x":1.5}"#);
+        assert_eq!(c.to_string(), "{x: 1.500000, kind: rbf}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities the offline registry forces us to own:
+//! RNG ([`rng`]), summary statistics ([`stats`]), a timing/logging kit
+//! ([`log`], [`timer`]), and a miniature property-testing harness
+//! ([`proptest`]) used by the L3 invariant tests.
+
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,138 @@
+//! Miniature property-testing harness (the offline registry has no
+//! `proptest`/`quickcheck`).
+//!
+//! Usage pattern, mirroring proptest's ergonomics at small scale:
+//!
+//! ```no_run
+//! use mango::util::proptest::{check, Gen};
+//! check("abs is non-negative", 256, |g| {
+//!     let x = g.f64_range(-1e6, 1e6);
+//!     if x.abs() < 0.0 { return Err(format!("abs({x}) < 0")); }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Failures report the generator seed and case index so any counterexample
+//! replays deterministically.
+
+use super::rng::Pcg64;
+
+/// Wrapper over [`Pcg64`] with input-generation conveniences.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg64::new(seed) }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.uniform_usize(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of uniform f64 values.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_range(0, xs.len())]
+    }
+
+    /// A random SPD matrix (row-major, n x n) = A A^T + n*I.
+    pub fn spd_matrix(&mut self, n: usize) -> Vec<f64> {
+        let a: Vec<f64> = (0..n * n).map(|_| self.rng.normal()).collect();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for l in 0..n {
+                    s += a[i * n + l] * a[j * n + l];
+                }
+                k[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        k
+    }
+}
+
+/// Run `cases` random cases of `property`, panicking with a replayable
+/// seed report on the first failure.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, 0x5EED_0000, cases, &mut property)
+}
+
+/// Like [`check`] with an explicit base seed (replay a failure).
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: usize, property: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("square non-negative", 128, |g| {
+            let x = g.f64_range(-10.0, 10.0);
+            if x * x >= 0.0 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn spd_matrix_is_symmetric_posdef_diag() {
+        check("spd", 16, |g| {
+            let n = g.usize_range(1, 9);
+            let k = g.spd_matrix(n);
+            for i in 0..n {
+                if k[i * n + i] <= 0.0 {
+                    return Err(format!("diag[{i}] = {}", k[i * n + i]));
+                }
+                for j in 0..n {
+                    if (k[i * n + j] - k[j * n + i]).abs() > 1e-9 {
+                        return Err("asymmetric".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

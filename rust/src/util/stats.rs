@@ -1,0 +1,146 @@
+//! Summary statistics used by the experiment harness and optimizers.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation; 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    v.sqrt()
+}
+
+/// Population standard deviation (used for y-normalization in the GP).
+pub fn std_dev_pop(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    v.sqrt()
+}
+
+/// Quantile with linear interpolation, q in [0, 1]. NaNs not supported.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median (q = 0.5).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Index of the maximum (first on ties); None for empty input.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if best.map_or(true, |(_, b)| x > b) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Index of the minimum (first on ties); None for empty input.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if best.map_or(true, |(_, b)| x < b) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Running best-so-far transform (cummax for maximization).
+pub fn cummax(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut best = f64::NEG_INFINITY;
+    for &x in xs {
+        best = best.max(x);
+        out.push(best);
+    }
+    out
+}
+
+/// Running best-so-far transform (cummin for minimization).
+pub fn cummin(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut best = f64::INFINITY;
+    for &x in xs {
+        best = best.min(x);
+        out.push(best);
+    }
+    out
+}
+
+/// Mean of per-trial series at each index (series may be ragged; averages
+/// over the trials that have the index).
+pub fn mean_series(series: &[Vec<f64>]) -> Vec<f64> {
+    let max_len = series.iter().map(|s| s.len()).max().unwrap_or(0);
+    (0..max_len)
+        .map(|i| {
+            let vals: Vec<f64> = series.iter().filter_map(|s| s.get(i).copied()).collect();
+            mean(&vals)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev_pop(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arg_extrema() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0];
+        assert_eq!(argmax(&xs), Some(4));
+        assert_eq!(argmin(&xs), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn cummax_cummin() {
+        assert_eq!(cummax(&[1.0, 3.0, 2.0]), vec![1.0, 3.0, 3.0]);
+        assert_eq!(cummin(&[3.0, 1.0, 2.0]), vec![3.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn mean_series_ragged() {
+        let s = vec![vec![1.0, 2.0], vec![3.0]];
+        let m = mean_series(&s);
+        assert_eq!(m, vec![2.0, 2.0]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Timing helpers for the perf pass and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Scoped stopwatch: `let t = Stopwatch::start(); ...; t.elapsed_ms()`.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Accumulates per-phase wall time across a run (hot-path accounting).
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and charge it to `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _)| n == phase) {
+            e.1 += d;
+        } else {
+            self.phases.push((phase.to_string(), d));
+        }
+    }
+
+    pub fn get_ms(&self, phase: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, d)| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.phases.iter().map(|(_, d)| d.as_secs_f64() * 1e3).sum()
+    }
+
+    /// Render a one-line breakdown sorted by cost.
+    pub fn report(&self) -> String {
+        let mut v: Vec<_> = self.phases.iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.iter()
+            .map(|(n, d)| format!("{n}={:.1}ms", d.as_secs_f64() * 1e3))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", Duration::from_millis(5));
+        pt.add("a", Duration::from_millis(7));
+        pt.add("b", Duration::from_millis(1));
+        assert!((pt.get_ms("a") - 12.0).abs() < 1e-9);
+        assert!(pt.total_ms() >= 13.0 - 1e-9);
+        assert!(pt.report().starts_with("a="));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(pt.get_ms("x") >= 0.0);
+    }
+}

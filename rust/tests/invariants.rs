@@ -1,0 +1,158 @@
+//! Cross-module property tests: invariants that must hold across the
+//! optimizer/scheduler/space boundaries for *any* search space.
+
+use mango::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind};
+use mango::scheduler::{self, SchedulerKind};
+use mango::space::{Config, Domain, ParamValue, SearchSpace};
+use mango::util::proptest::{check, Gen};
+use mango::util::rng::Pcg64;
+
+/// Build a random search space with mixed domain types.
+fn random_space(g: &mut Gen) -> SearchSpace {
+    let n_params = g.usize_range(1, 5);
+    let mut b = SearchSpace::builder();
+    for i in 0..n_params {
+        let name = format!("p{i}");
+        match g.usize_range(0, 4) {
+            0 => {
+                let lo = g.f64_range(-10.0, 10.0);
+                b = b.uniform(&name, lo, lo + g.f64_range(0.1, 20.0));
+            }
+            1 => {
+                let lo = g.f64_range(1e-4, 1.0);
+                b = b.loguniform(&name, lo, lo * g.f64_range(10.0, 1e4));
+            }
+            2 => {
+                let lo = g.f64_range(-50.0, 50.0) as i64;
+                b = b.int(&name, lo, lo + g.usize_range(1, 30) as i64);
+            }
+            _ => {
+                b = b.choice(&name, &["a", "b", "c", "d"][..g.usize_range(2, 5)]);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Does `value` lie inside `domain`?
+fn in_domain(domain: &Domain, v: &ParamValue) -> bool {
+    match (domain, v) {
+        // closed intervals: scipy.stats.uniform's support is [loc, loc+scale]
+        (Domain::Uniform { lo, hi }, ParamValue::F64(x)) => (lo..=hi).contains(&x),
+        (Domain::LogUniform { lo, hi }, ParamValue::F64(x)) => (lo..=hi).contains(&x),
+        (Domain::Range { lo, hi }, ParamValue::Int(x)) => (lo..=hi).contains(&x),
+        (Domain::Choice(vals), v) => vals.contains(v),
+        _ => false,
+    }
+}
+
+/// Every optimizer's proposals must be valid members of the space —
+/// the paper's "acquisition evaluated at valid configurations only".
+#[test]
+fn all_optimizers_propose_valid_configs() {
+    check("optimizer proposals in-domain", 24, |g| {
+        let space = random_space(g);
+        let kind = *g.choose(&[
+            OptimizerKind::Random,
+            OptimizerKind::Tpe,
+            OptimizerKind::Hallucination,
+            OptimizerKind::Clustering,
+        ]);
+        // Native backend: these property runs hammer many tiny spaces.
+        let opts = GpOptions { mc_samples: 128, ..Default::default() };
+        let mut opt = optimizer::build(kind, &space, &opts).map_err(|e| e.to_string())?;
+        let mut rng = Pcg64::new(g.rng().next_u64());
+        // Seed a synthetic history so the model-based paths engage.
+        let mut history = History::new();
+        for (i, cfg) in space.sample_n(&mut rng, 25).into_iter().enumerate() {
+            history.push(cfg, (i as f64 * 0.7).sin());
+        }
+        let k = g.usize_range(1, 7);
+        let batch = opt.propose(&history, k, &mut rng).map_err(|e| e.to_string())?;
+        if batch.len() != k {
+            return Err(format!("{kind:?} proposed {} of {k}", batch.len()));
+        }
+        for cfg in &batch {
+            for p in space.params() {
+                let v = cfg
+                    .get(&p.name)
+                    .ok_or_else(|| format!("{kind:?}: missing {}", p.name))?;
+                if !in_domain(&p.domain, v) {
+                    return Err(format!("{kind:?}: {} = {v} outside {:?}", p.name, p.domain));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler results must be a subset of the submitted batch with aligned
+/// (evals, params) — the paper's fault-tolerance contract.
+#[test]
+fn schedulers_return_aligned_subsets() {
+    check("scheduler subset+alignment", 20, |g| {
+        let space = random_space(g);
+        let mut rng = Pcg64::new(g.rng().next_u64());
+        let batch = space.sample_n(&mut rng, g.usize_range(1, 12));
+        let kind = *g.choose(&[
+            SchedulerKind::Serial,
+            SchedulerKind::Threaded,
+            SchedulerKind::Celery,
+        ]);
+        let mut sched = scheduler::build(kind, 4, g.rng().next_u64());
+        // Deterministic value function with occasional failures.
+        let f = |cfg: &Config| {
+            let h = format!("{cfg}").len() as f64;
+            if (h as u64) % 7 == 0 {
+                None
+            } else {
+                Some(h * 0.1)
+            }
+        };
+        let result = sched.evaluate(&f, &batch);
+        if result.evals.len() != result.params.len() {
+            return Err("misaligned".into());
+        }
+        if result.len() > batch.len() {
+            return Err("more results than tasks".into());
+        }
+        for (cfg, v) in result.params.iter().zip(&result.evals) {
+            if !batch.contains(cfg) {
+                return Err(format!("result config {cfg} not in batch"));
+            }
+            match f(cfg) {
+                Some(want) if (want - v).abs() < 1e-12 => {}
+                other => return Err(format!("value mismatch: {v} vs {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// History truncation keeps the most recent window (surrogate cap).
+#[test]
+fn history_truncation_keeps_recent() {
+    check("history window", 32, |g| {
+        let n = g.usize_range(1, 200);
+        let cap = g.usize_range(1, 64);
+        let mut h = History::new();
+        for i in 0..n {
+            h.push(
+                Config::new(vec![("i".into(), ParamValue::Int(i as i64))]),
+                i as f64,
+            );
+        }
+        h.truncate_to_recent(cap);
+        let kept = h.len();
+        if kept != n.min(cap) {
+            return Err(format!("kept {kept}, want {}", n.min(cap)));
+        }
+        if let Some(first) = h.configs().first() {
+            let want = (n - kept) as i64;
+            if first.get_i64("i") != Some(want) {
+                return Err(format!("oldest kept is {:?}, want {want}", first.get_i64("i")));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,134 @@
+//! Backend parity: the PJRT artifacts (JAX + Pallas, AOT-lowered) must agree
+//! with the native-Rust GP on fits and acquisitions — this is the test that
+//! proves the three-layer bridge carries correct numerics.
+
+use mango::gp::{normalize_y, GpParams, NativeGp, Surrogate};
+use mango::linalg::Matrix;
+use mango::runtime::PjrtSurrogate;
+use mango::util::rng::Pcg64;
+
+fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix) {
+    let mut rng = Pcg64::new(seed);
+    let x = Matrix::from_fn(n, d, |_, _| rng.next_f64());
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            (7.0 * r[0]).sin() + 0.3 * r[d.min(1)] - 0.1 * r[0] * r[0]
+        })
+        .collect();
+    let xc = Matrix::from_fn(97, d, |_, _| rng.next_f64()); // non-multiple of 512 chunks
+    (x, y, xc)
+}
+
+fn parity_case(n: usize, d: usize, seed: u64, tol: f64) {
+    let (x, y, xc) = toy(n, d, seed);
+    let (yn, _, _) = normalize_y(&y);
+    let params = GpParams::new(d);
+
+    let mut native = NativeGp;
+    let fit_n = native.fit(&x, &yn, &params).unwrap();
+    let acq_n = native.acquire(&x, &fit_n, &xc, &params).unwrap();
+
+    let mut pjrt = PjrtSurrogate::from_default_artifacts().expect("artifacts built?");
+    let fit_p = pjrt.fit(&x, &yn, &params).unwrap();
+    let acq_p = pjrt.acquire(&x, &fit_p, &xc, &params).unwrap();
+
+    for i in 0..n {
+        assert!(
+            (fit_n.alpha[i] - fit_p.alpha[i]).abs() < tol * 10.0,
+            "alpha[{i}]: native {} vs pjrt {}",
+            fit_n.alpha[i],
+            fit_p.alpha[i]
+        );
+    }
+    assert!(
+        (fit_n.logdet - fit_p.logdet).abs() < 0.05 * fit_n.logdet.abs().max(1.0),
+        "logdet: native {} vs pjrt {}",
+        fit_n.logdet,
+        fit_p.logdet
+    );
+    for c in 0..xc.rows() {
+        assert!(
+            (acq_n.mean[c] - acq_p.mean[c]).abs() < tol,
+            "mean[{c}]: {} vs {}",
+            acq_n.mean[c],
+            acq_p.mean[c]
+        );
+        assert!(
+            (acq_n.var[c] - acq_p.var[c]).abs() < tol,
+            "var[{c}]: {} vs {}",
+            acq_n.var[c],
+            acq_p.var[c]
+        );
+        assert!(
+            (acq_n.ucb[c] - acq_p.ucb[c]).abs() < tol * 3.0,
+            "ucb[{c}]: {} vs {}",
+            acq_n.ucb[c],
+            acq_p.ucb[c]
+        );
+    }
+}
+
+#[test]
+fn parity_small() {
+    parity_case(10, 3, 1, 2e-3);
+}
+
+#[test]
+fn parity_medium_fills_variant() {
+    parity_case(64, 7, 2, 2e-3); // exactly the n=64 variant
+}
+
+#[test]
+fn parity_crosses_variant_boundary() {
+    parity_case(65, 7, 3, 2e-3); // must pick the n=128 variant
+}
+
+#[test]
+fn parity_large_chunked_candidates() {
+    // Candidate count > m_cand to exercise the chunking path.
+    let (x, y, _) = toy(40, 5, 4);
+    let (yn, _, _) = normalize_y(&y);
+    let params = GpParams::new(5);
+    let mut rng = Pcg64::new(99);
+    let xc = Matrix::from_fn(1200, 5, |_, _| rng.next_f64());
+
+    let mut native = NativeGp;
+    let fit_n = native.fit(&x, &yn, &params).unwrap();
+    let acq_n = native.acquire(&x, &fit_n, &xc, &params).unwrap();
+
+    let mut pjrt = PjrtSurrogate::from_default_artifacts().unwrap();
+    let fit_p = pjrt.fit(&x, &yn, &params).unwrap();
+    let acq_p = pjrt.acquire(&x, &fit_p, &xc, &params).unwrap();
+    assert!(pjrt.acquire_calls >= 3, "1200 candidates need >= 3 chunks");
+
+    for c in 0..1200 {
+        assert!((acq_n.ucb[c] - acq_p.ucb[c]).abs() < 5e-3);
+    }
+}
+
+#[test]
+fn w_matrix_parity_supports_hallucination() {
+    // The w output feeds BatchHallucinator; verify cross-backend agreement
+    // and that hallucination on PJRT outputs matches native hallucination.
+    use mango::gp::update::BatchHallucinator;
+    let (x, y, xc) = toy(30, 4, 7);
+    let (yn, _, _) = normalize_y(&y);
+    let params = GpParams::new(4);
+
+    let mut native = NativeGp;
+    let fit_n = native.fit(&x, &yn, &params).unwrap();
+    let acq_n = native.acquire(&x, &fit_n, &xc, &params).unwrap();
+
+    let mut pjrt = PjrtSurrogate::from_default_artifacts().unwrap();
+    let fit_p = pjrt.fit(&x, &yn, &params).unwrap();
+    let acq_p = pjrt.acquire(&x, &fit_p, &xc, &params).unwrap();
+
+    let mut hn = BatchHallucinator::new(&x, &xc, &acq_n, &params);
+    let mut hp = BatchHallucinator::new(&x, &xc, &acq_p, &params);
+    for step in 0..5 {
+        let bn = hn.select_next().unwrap();
+        let bp = hp.select_next().unwrap();
+        assert_eq!(bn, bp, "step {step}: backends picked different candidates");
+    }
+}

@@ -1,0 +1,131 @@
+//! End-to-end coordinator tests over the real PJRT artifacts: full tuning
+//! runs exercising optimizer + scheduler + runtime together.
+
+use mango::coordinator::{Tuner, TunerConfig};
+use mango::exp::workloads;
+use mango::optimizer::{OptimizerKind, SurrogateBackend};
+use mango::scheduler::celery::{CelerySimConfig, CelerySimScheduler};
+use mango::scheduler::{Scheduler, SchedulerKind};
+
+fn base(kind: OptimizerKind, iters: usize, batch: usize, seed: u64) -> TunerConfig {
+    TunerConfig {
+        optimizer: kind,
+        num_iterations: iters,
+        batch_size: batch,
+        backend: SurrogateBackend::Pjrt,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pjrt_tuner_beats_random_on_branin() {
+    let workload = workloads::by_name("branin").unwrap();
+    let run = |kind: OptimizerKind, seed: u64| {
+        let mut tuner = Tuner::new(workload.space.clone(), base(kind, 25, 1, seed));
+        let obj = workload.objective.clone();
+        tuner.minimize(move |c| obj(c)).unwrap().best_objective
+    };
+    let seeds = [1u64, 2, 3];
+    let gp: f64 =
+        seeds.iter().map(|&s| run(OptimizerKind::Hallucination, s)).sum::<f64>() / 3.0;
+    let rnd: f64 = seeds.iter().map(|&s| run(OptimizerKind::Random, s)).sum::<f64>() / 3.0;
+    assert!(
+        gp < rnd + 0.5,
+        "GP-UCB ({gp:.3}) should at least match random ({rnd:.3}) on 25 evals"
+    );
+    assert!(gp < 2.5, "GP-UCB should get close to the optimum, got {gp:.3}");
+}
+
+#[test]
+fn history_crosses_artifact_variant_boundary() {
+    // 70 serial iterations -> 70 observations: the surrogate must switch
+    // from the n=64 variant to n=128 mid-run without a hiccup.
+    let workload = workloads::by_name("branin").unwrap();
+    let mut tuner = Tuner::new(
+        workload.space.clone(),
+        base(OptimizerKind::Hallucination, 70, 1, 9),
+    );
+    let obj = workload.objective.clone();
+    let result = tuner.minimize(move |c| obj(c)).unwrap();
+    assert_eq!(result.evaluations, 70);
+    assert!(result.best_objective < 3.0);
+}
+
+#[test]
+fn parallel_batches_run_on_threaded_scheduler() {
+    let workload = workloads::by_name("mixed_branin").unwrap();
+    let mut cfg = base(OptimizerKind::Clustering, 12, 5, 3);
+    cfg.scheduler = SchedulerKind::Threaded;
+    cfg.workers = 5;
+    let mut tuner = Tuner::new(workload.space.clone(), cfg);
+    let obj = workload.objective.clone();
+    let result = tuner.minimize(move |c| obj(c)).unwrap();
+    assert_eq!(result.evaluations, 60);
+    assert!(result.best_objective < 6.0);
+}
+
+#[test]
+fn faulty_celery_cluster_still_converges() {
+    // A lossy cluster must produce partial results and a usable optimum.
+    let workload = workloads::by_name("branin").unwrap();
+    let cluster = CelerySimConfig {
+        workers: 4,
+        base_latency_ms: 0.5,
+        straggler_prob: 0.1,
+        straggler_factor: 5.0,
+        crash_prob: 0.25,
+        result_timeout: std::time::Duration::from_millis(400),
+    };
+    let mut sched = CelerySimScheduler::new(cluster, 11);
+    let mut tuner = Tuner::new(
+        workload.space.clone(),
+        base(OptimizerKind::Hallucination, 20, 5, 13),
+    );
+    let obj = workload.objective.clone();
+    let result = tuner
+        .maximize_batch(|batch| {
+            // negate: maximize_batch with -f == minimize f
+            let mut r = sched.evaluate(&|c| obj(c).map(|v| -v), batch);
+            r.evals.iter_mut().for_each(|_| {});
+            r
+        })
+        .unwrap();
+    assert!(sched.stats.crashed > 0, "fault injection must fire");
+    assert!(
+        result.evaluations < 100 && result.evaluations > 40,
+        "partial results expected, got {}",
+        result.evaluations
+    );
+    assert!(-result.best_objective < 3.0, "still converges despite loss");
+}
+
+#[test]
+fn seeded_runs_reproduce_exactly_on_pjrt() {
+    let workload = workloads::by_name("mixed_branin").unwrap();
+    let run = || {
+        let mut tuner = Tuner::new(
+            workload.space.clone(),
+            base(OptimizerKind::Hallucination, 10, 2, 77),
+        );
+        let obj = workload.objective.clone();
+        tuner.minimize(move |c| obj(c)).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.best_objective, b.best_objective);
+    assert_eq!(a.best_series, b.best_series);
+    assert_eq!(a.best_params, b.best_params);
+}
+
+#[test]
+fn tpe_full_run_on_wine_knn() {
+    // Classifier workload end-to-end with the TPE baseline (no GP).
+    let workload = workloads::by_name("knn_wine").unwrap();
+    let mut cfg = base(OptimizerKind::Tpe, 15, 2, 5);
+    cfg.backend = SurrogateBackend::Native; // TPE needs no surrogate at all
+    let mut tuner = Tuner::new(workload.space.clone(), cfg);
+    let obj = workload.objective.clone();
+    let result = tuner.maximize(move |c| obj(c)).unwrap();
+    assert!(result.best_objective > 0.90, "kNN tunable to >0.9, got {}", result.best_objective);
+}
