@@ -1,0 +1,124 @@
+//! Event-loop vs batch-barrier coordination under the Celery simulator's
+//! straggler/crash fault model (ISSUE 1 acceptance benchmark).
+//!
+//! Same proposal budget (`iters x batch`), same 8-worker simulated cluster
+//! with `straggler_prob = 0.3, straggler_factor = 8`:
+//! * `mode = "sync"` — one barrier per batch: every straggler idles the
+//!   other 7 workers until the batch (or the result timeout) ends.
+//! * `mode = "async"` — the event loop refills the in-flight window as
+//!   results trickle in, and retries crashed/timed-out tasks.
+//!
+//! Run: `cargo bench --bench async_vs_sync`
+//! Knobs: MANGO_ITERS (8), MANGO_BATCH (8), MANGO_REPEATS (3)
+
+use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
+use mango::exp::workloads;
+use mango::optimizer::{OptimizerKind, SurrogateBackend};
+use mango::scheduler::celery::CelerySimConfig;
+use mango::scheduler::SchedulerKind;
+use std::time::{Duration, Instant};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    label: &'static str,
+    wall_ms: f64,
+    evals: f64,
+    utilization: f64,
+    queue_wait_ms: f64,
+    retried: f64,
+    lost: f64,
+    best: f64,
+}
+
+fn run_mode(mode: ExecutionMode, iters: usize, batch: usize, repeats: usize) -> Row {
+    let workload = workloads::by_name("branin").expect("branin workload");
+    let workers = 8;
+    let cluster = CelerySimConfig {
+        workers,
+        base_latency_ms: 20.0,
+        straggler_prob: 0.3,
+        straggler_factor: 8.0,
+        crash_prob: 0.05,
+        result_timeout: Duration::from_secs(2),
+    };
+    let (mut wall, mut evals, mut util, mut qwait, mut retried, mut lost, mut best) =
+        (0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+    for r in 0..repeats {
+        let cfg = TunerConfig {
+            batch_size: batch,
+            num_iterations: iters,
+            optimizer: OptimizerKind::Hallucination,
+            scheduler: SchedulerKind::Celery,
+            workers,
+            backend: SurrogateBackend::Native,
+            seed: 1000 + r as u64,
+            mode,
+            celery: Some(cluster.clone()),
+            ..Default::default()
+        };
+        let mut tuner = Tuner::new(workload.space.clone(), cfg);
+        let obj = workload.objective.clone();
+        let t = Instant::now();
+        let result = tuner.minimize(move |c| obj(c)).expect("tuning run");
+        wall += t.elapsed().as_secs_f64() * 1e3;
+        evals += result.evaluations as f64;
+        util += result.utilization(workers);
+        if !result.completions.is_empty() {
+            qwait += result.completions.iter().map(|c| c.queue_wait_ms).sum::<f64>()
+                / result.completions.len() as f64;
+        }
+        retried += result.retried as f64;
+        lost += result.lost as f64;
+        best += result.best_objective;
+    }
+    let n = repeats as f64;
+    Row {
+        label: match mode {
+            ExecutionMode::Sync => "sync (batch barrier)",
+            ExecutionMode::Async => "async (event loop)",
+        },
+        wall_ms: wall / n,
+        evals: evals / n,
+        utilization: util / n,
+        queue_wait_ms: qwait / n,
+        retried: retried / n,
+        lost: lost / n,
+        best: best / n,
+    }
+}
+
+fn main() {
+    let iters = env_usize("MANGO_ITERS", 8);
+    let batch = env_usize("MANGO_BATCH", 8);
+    let repeats = env_usize("MANGO_REPEATS", 3);
+    eprintln!(
+        "[async_vs_sync] branin, budget {} evals ({iters}x{batch}), 8 workers, \
+         straggler_prob 0.3 x8, crash_prob 0.05, {repeats} repeats"
+    );
+    println!(
+        "{:<22} {:>10} {:>8} {:>6} {:>11} {:>8} {:>6} {:>10}",
+        "mode", "wall_ms", "evals", "util", "queue_ms", "retried", "lost", "best"
+    );
+    let rows = [
+        run_mode(ExecutionMode::Sync, iters, batch, repeats),
+        run_mode(ExecutionMode::Async, iters, batch, repeats),
+    ];
+    for r in &rows {
+        println!(
+            "{:<22} {:>10.0} {:>8.1} {:>6.2} {:>11.1} {:>8.1} {:>6.1} {:>10.4}",
+            r.label, r.wall_ms, r.evals, r.utilization, r.queue_wait_ms, r.retried, r.lost,
+            r.best
+        );
+    }
+    let speedup = rows[0].wall_ms / rows[1].wall_ms.max(1e-9);
+    println!("\n# async speedup over sync barrier: {speedup:.2}x wall-clock");
+    println!(
+        "# async completed {:.1} of {} budgeted evals (sync: {:.1} — losses are silent drops)",
+        rows[1].evals,
+        iters * batch,
+        rows[0].evals
+    );
+}

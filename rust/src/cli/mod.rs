@@ -95,13 +95,17 @@ TUNE OPTIONS:
   --optimizer <name>       hallucination | clustering | random | tpe | thompson
   --scheduler <name>       serial | threaded | celery        [serial]
   --backend <name>         pjrt | native                     [pjrt]
+  --mode <name>            sync (batch barriers) | async (event loop) [sync]
   --batch-size <k>         configurations per iteration      [1]
   --iterations <n>         optimizer iterations (batches)    [60]
   --initial-random <n>     random evals before surrogate     [2]
   --workers <n>            parallel workers                  [batch size]
+  --async-window <n>       async in-flight window (0 = max(batch, workers))
+  --max-retries <n>        async retries per lost evaluation [2]
   --mc-samples <n>         MC acquisition samples (0 = heuristic)
   --seed <s>               RNG seed                          [0]
   --early-stop <n>         stop after n iterations without improvement
+  --max-surrogate-obs <n>  history window the GP sees        [512]
   --tune-lengthscale       GP lengthscale by marginal likelihood
   --json                   machine-readable output
 ";

@@ -28,6 +28,16 @@ pub struct RunConfig {
     pub backend: String,
     /// Optimize GP lengthscale by marginal likelihood grid search.
     pub tune_lengthscale: bool,
+    /// Stop after this many iterations without improvement (0 = never).
+    pub early_stop: usize,
+    /// Largest history the surrogate sees (PJRT artifacts cap at 512).
+    pub max_surrogate_obs: usize,
+    /// "sync" (batch barriers, the paper) or "async" (event loop).
+    pub mode: String,
+    /// Async mode: in-flight window size (0 = max(batch_size, workers)).
+    pub async_window: usize,
+    /// Async mode: resubmissions allowed per lost evaluation.
+    pub max_retries: usize,
 }
 
 impl Default for RunConfig {
@@ -43,6 +53,11 @@ impl Default for RunConfig {
             seed: 0,
             backend: "pjrt".into(),
             tune_lengthscale: false,
+            early_stop: 0,
+            max_surrogate_obs: 512,
+            mode: "sync".into(),
+            async_window: 0,
+            max_retries: 2,
         }
     }
 }
@@ -60,9 +75,14 @@ impl RunConfig {
                 "workers" => c.workers = num(v, k)? as usize,
                 "mc_samples" => c.mc_samples = num(v, k)? as usize,
                 "seed" => c.seed = num(v, k)? as u64,
+                "early_stop" => c.early_stop = num(v, k)? as usize,
+                "max_surrogate_obs" => c.max_surrogate_obs = num(v, k)? as usize,
+                "async_window" => c.async_window = num(v, k)? as usize,
+                "max_retries" => c.max_retries = num(v, k)? as usize,
                 "optimizer" => c.optimizer = str_(v, k)?,
                 "scheduler" => c.scheduler = str_(v, k)?,
                 "backend" => c.backend = str_(v, k)?,
+                "mode" => c.mode = str_(v, k)?,
                 "tune_lengthscale" => {
                     c.tune_lengthscale = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
                 }
@@ -92,6 +112,13 @@ impl RunConfig {
         if !BACKENDS.contains(&self.backend.as_str()) {
             return Err(anyhow!("unknown backend '{}' (one of {BACKENDS:?})", self.backend));
         }
+        const MODES: [&str; 2] = ["sync", "async"];
+        if !MODES.contains(&self.mode.as_str()) {
+            return Err(anyhow!("unknown mode '{}' (one of {MODES:?})", self.mode));
+        }
+        if self.max_surrogate_obs == 0 {
+            return Err(anyhow!("max_surrogate_obs must be >= 1"));
+        }
         Ok(())
     }
 
@@ -107,6 +134,11 @@ impl RunConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("backend", Json::Str(self.backend.clone())),
             ("tune_lengthscale", Json::Bool(self.tune_lengthscale)),
+            ("early_stop", Json::Num(self.early_stop as f64)),
+            ("max_surrogate_obs", Json::Num(self.max_surrogate_obs as f64)),
+            ("mode", Json::Str(self.mode.clone())),
+            ("async_window", Json::Num(self.async_window as f64)),
+            ("max_retries", Json::Num(self.max_retries as f64)),
         ])
     }
 }
@@ -180,9 +212,37 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let c = RunConfig { batch_size: 5, seed: 42, ..Default::default() };
+        let c = RunConfig {
+            batch_size: 5,
+            seed: 42,
+            early_stop: 4,
+            max_surrogate_obs: 256,
+            mode: "async".into(),
+            async_window: 9,
+            max_retries: 3,
+            ..Default::default()
+        };
         let c2 = RunConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn async_fields_parse_and_validate() {
+        let j = parse(
+            r#"{"mode": "async", "async_window": 6, "max_retries": 1,
+                "early_stop": 5, "max_surrogate_obs": 64}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.mode, "async");
+        assert_eq!(c.async_window, 6);
+        assert_eq!(c.max_retries, 1);
+        assert_eq!(c.early_stop, 5);
+        assert_eq!(c.max_surrogate_obs, 64);
+        assert!(RunConfig::from_json(&parse(r#"{"mode": "batch"}"#).unwrap()).is_err());
+        assert!(
+            RunConfig::from_json(&parse(r#"{"max_surrogate_obs": 0}"#).unwrap()).is_err()
+        );
     }
 
     #[test]

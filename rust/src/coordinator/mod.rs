@@ -1,9 +1,14 @@
 //! The coordinator: [`Tuner`] ties the search space, a parallel optimizer,
-//! and a scheduler into the paper's workflow (Fig. 1): propose a batch →
-//! schedule evaluations → absorb (possibly partial) results → repeat.
+//! and a scheduler into the paper's workflow (Fig. 1) in one of two modes:
+//!
+//! * **sync** — propose a batch → schedule evaluations → absorb (possibly
+//!   partial) results → repeat (one barrier per batch).
+//! * **async** — an event loop over the submit/poll scheduler contract:
+//!   keep a bounded in-flight window full, fold in each completion as it
+//!   arrives, retry lost work, and record per-completion telemetry.
 
 mod results;
 mod tuner;
 
-pub use results::{IterationRecord, TuningResult};
-pub use tuner::{ObjectiveFn, Tuner, TunerConfig};
+pub use results::{CompletionOutcome, CompletionRecord, IterationRecord, TuningResult};
+pub use tuner::{ExecutionMode, ObjectiveFn, Tuner, TunerConfig};

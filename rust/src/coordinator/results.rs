@@ -1,9 +1,13 @@
-//! Tuning run results: per-iteration records + the final summary.
+//! Tuning run results: per-iteration records, per-completion telemetry
+//! (async mode), and the final summary.
 
 use crate::config::json::Json;
+use crate::scheduler::AsyncStats;
 use crate::space::Config;
 
-/// What happened in one optimizer iteration (one batch).
+/// What happened in one optimizer iteration. In sync mode an iteration is
+/// one batch (barrier); in async mode it is one *concluded* proposal —
+/// a completion that delivered a value, failed, or exhausted its retries.
 #[derive(Clone, Debug)]
 pub struct IterationRecord {
     pub iteration: usize,
@@ -13,8 +17,37 @@ pub struct IterationRecord {
     pub returned: usize,
     /// Best objective seen so far (user sense).
     pub best_so_far: f64,
-    /// Wall time of this iteration in ms (propose + evaluate).
+    /// Wall time in ms: propose + evaluate (sync), or the concluded task's
+    /// end-to-end latency — queue wait + eval (async).
     pub wall_ms: f64,
+}
+
+/// How one async completion concluded (see [`CompletionRecord`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionOutcome {
+    /// Delivered a value into the history.
+    Done,
+    /// The objective declined (`None`); not retried.
+    Failed,
+    /// Lost (crash/timeout) with retries exhausted.
+    Lost,
+    /// Lost but resubmitted — a later record concludes the same proposal.
+    Resubmitted,
+}
+
+/// Per-completion telemetry from the async event loop (queue wait, eval
+/// wall, retry count) — one record per completion event, including the
+/// `Resubmitted` intermediates of retried proposals.
+#[derive(Clone, Debug)]
+pub struct CompletionRecord {
+    pub task_id: u64,
+    /// Submit → evaluation start (broker queue + simulated network).
+    pub queue_wait_ms: f64,
+    /// Time inside the objective.
+    pub eval_ms: f64,
+    /// Retries consumed by this proposal so far.
+    pub retries: usize,
+    pub outcome: CompletionOutcome,
 }
 
 /// Final result of a tuning run (user objective sense throughout).
@@ -29,12 +62,20 @@ pub struct TuningResult {
     pub iterations: Vec<IterationRecord>,
     pub evaluations: usize,
     pub wall_ms: f64,
+    /// Async mode: one record per completion event (empty in sync mode).
+    pub completions: Vec<CompletionRecord>,
+    /// Async mode: the scheduler's own counters.
+    pub scheduler_stats: Option<AsyncStats>,
+    /// Async mode: lost evaluations that were resubmitted.
+    pub retried: u64,
+    /// Async mode: proposals abandoned after exhausting their retries.
+    pub lost: u64,
 }
 
 impl TuningResult {
     /// Machine-readable dump (CLI --json).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("best_params", self.best_params.to_json()),
             ("best_objective", Json::Num(self.best_objective)),
             ("evaluations", Json::Num(self.evaluations as f64)),
@@ -44,7 +85,39 @@ impl TuningResult {
                 "best_series",
                 Json::Arr(self.best_series.iter().map(|&v| Json::Num(v)).collect()),
             ),
-        ])
+        ];
+        if let Some(stats) = &self.scheduler_stats {
+            fields.push(("retried", Json::Num(self.retried as f64)));
+            fields.push(("lost", Json::Num(self.lost as f64)));
+            fields.push((
+                "scheduler",
+                Json::obj(vec![
+                    ("submitted", Json::Num(stats.submitted as f64)),
+                    ("completed", Json::Num(stats.completed as f64)),
+                    ("failed", Json::Num(stats.failed as f64)),
+                    ("lost", Json::Num(stats.lost as f64)),
+                    ("cancelled", Json::Num(stats.cancelled as f64)),
+                    ("max_in_flight", Json::Num(stats.max_in_flight as f64)),
+                ]),
+            ));
+            let n = self.completions.len().max(1) as f64;
+            let mean_queue: f64 =
+                self.completions.iter().map(|c| c.queue_wait_ms).sum::<f64>() / n;
+            let mean_eval: f64 = self.completions.iter().map(|c| c.eval_ms).sum::<f64>() / n;
+            fields.push(("mean_queue_wait_ms", Json::Num(mean_queue)));
+            fields.push(("mean_eval_ms", Json::Num(mean_eval)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Worker-utilization estimate for async runs: total objective time
+    /// over `workers x` run wall time. 1.0 = the pool never idled.
+    pub fn utilization(&self, workers: usize) -> f64 {
+        if self.wall_ms <= 0.0 || workers == 0 {
+            return 0.0;
+        }
+        let busy: f64 = self.completions.iter().map(|c| c.eval_ms).sum();
+        busy / (self.wall_ms * workers as f64)
     }
 }
 
@@ -53,9 +126,8 @@ mod tests {
     use super::*;
     use crate::space::ParamValue;
 
-    #[test]
-    fn json_dump_contains_series() {
-        let r = TuningResult {
+    fn base_result() -> TuningResult {
+        TuningResult {
             best_params: Config::new(vec![("x".into(), ParamValue::F64(1.0))]),
             best_objective: 2.0,
             history: vec![],
@@ -63,9 +135,63 @@ mod tests {
             iterations: vec![],
             evaluations: 2,
             wall_ms: 3.5,
-        };
-        let j = r.to_json();
+            completions: vec![],
+            scheduler_stats: None,
+            retried: 0,
+            lost: 0,
+        }
+    }
+
+    #[test]
+    fn json_dump_contains_series() {
+        let j = base_result().to_json();
         assert_eq!(j.get("best_objective").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("best_series").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("scheduler").is_none(), "sync dumps omit async fields");
+    }
+
+    #[test]
+    fn json_dump_includes_async_telemetry() {
+        let mut r = base_result();
+        r.scheduler_stats = Some(AsyncStats { submitted: 4, completed: 2, ..Default::default() });
+        r.retried = 1;
+        r.lost = 1;
+        r.completions = vec![
+            CompletionRecord {
+                task_id: 0,
+                queue_wait_ms: 2.0,
+                eval_ms: 10.0,
+                retries: 0,
+                outcome: CompletionOutcome::Done,
+            },
+            CompletionRecord {
+                task_id: 1,
+                queue_wait_ms: 4.0,
+                eval_ms: 20.0,
+                retries: 1,
+                outcome: CompletionOutcome::Lost,
+            },
+        ];
+        let j = r.to_json();
+        assert_eq!(j.get("retried").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("lost").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("scheduler").unwrap().get("submitted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("mean_queue_wait_ms").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("mean_eval_ms").unwrap().as_f64(), Some(15.0));
+    }
+
+    #[test]
+    fn utilization_is_busy_over_capacity() {
+        let mut r = base_result();
+        r.wall_ms = 100.0;
+        r.completions = vec![CompletionRecord {
+            task_id: 0,
+            queue_wait_ms: 0.0,
+            eval_ms: 50.0,
+            retries: 0,
+            outcome: CompletionOutcome::Done,
+        }];
+        assert!((r.utilization(2) - 0.25).abs() < 1e-12);
+        assert_eq!(r.utilization(0), 0.0);
     }
 }

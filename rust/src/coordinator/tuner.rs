@@ -1,16 +1,63 @@
 //! The [`Tuner`]: MANGO's user-facing entry point.
+//!
+//! Two execution modes share the optimizer/scheduler/space plumbing:
+//!
+//! * **`mode = "sync"`** (default) — the paper's Fig. 1 workflow: propose a
+//!   batch → schedule → absorb (possibly partial) results → repeat. One
+//!   barrier per batch; Fig. 2/3 parity semantics.
+//! * **`mode = "async"`** — an event-loop coordinator over the
+//!   [`AsyncScheduler`](crate::scheduler::AsyncScheduler) submit/poll
+//!   contract: a bounded in-flight window (`async_window`) is kept full;
+//!   each completion immediately updates the history and triggers a
+//!   replacement proposal conditioned on the configs still in flight
+//!   ([`BatchOptimizer::propose_pending`]), so stragglers never idle the
+//!   rest of the pool. Lost evaluations (worker crash / result timeout)
+//!   are retried up to `max_retries` times; per-completion telemetry
+//!   (queue wait, eval wall, retries) lands in
+//!   [`TuningResult::completions`]. The total evaluation budget is
+//!   `num_iterations * batch_size` — identical to sync mode.
 
-use super::results::{IterationRecord, TuningResult};
+use super::results::{CompletionOutcome, CompletionRecord, IterationRecord, TuningResult};
 use crate::config::settings::RunConfig;
 use crate::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
-use crate::scheduler::{self, BatchResult, SchedulerKind};
+use crate::scheduler::{
+    self, AsyncScheduler, BatchResult, Completion, CompletionStatus, SchedulerKind,
+};
 use crate::space::{Config, SearchSpace};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
 
 /// Per-config objective closure type (boxed form used by the CLI).
 pub type ObjectiveFn = Box<dyn Fn(&Config) -> Option<f64> + Sync>;
+
+/// How evaluations are coordinated: batch barriers or the event loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// One barrier per batch (the paper's semantics).
+    Sync,
+    /// Submit/poll event loop with a bounded in-flight window.
+    Async,
+}
+
+impl ExecutionMode {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "sync" => Some(Self::Sync),
+            "async" => Some(Self::Async),
+            _ => None,
+        }
+    }
+}
+
+/// How long one event-loop poll waits before re-checking the window.
+const POLL_TIMEOUT: Duration = Duration::from_millis(25);
+/// Abort an async run if nothing completes for this long (a worker died
+/// without reporting — the in-repo schedulers themselves never go silent,
+/// so this is a deadlock backstop, set far above any sane eval time).
+const STALL_TIMEOUT: Duration = Duration::from_secs(3600);
 
 /// Tuner configuration — the paper's user-controlled options (§2.4).
 #[derive(Clone, Debug)]
@@ -27,9 +74,18 @@ pub struct TunerConfig {
     pub backend: SurrogateBackend,
     pub tune_lengthscale: bool,
     /// Stop after this many iterations without improvement (None = never).
+    /// Async mode counts `early_stop * batch_size` concluded proposals.
     pub early_stop: Option<usize>,
     /// Largest history the surrogate sees (PJRT artifacts cap at 512).
     pub max_surrogate_obs: usize,
+    /// Batch barriers (paper) or the submit/poll event loop.
+    pub mode: ExecutionMode,
+    /// Async mode: in-flight window size; 0 = max(batch_size, workers).
+    pub async_window: usize,
+    /// Async mode: resubmissions allowed per lost evaluation.
+    pub max_retries: usize,
+    /// Override the Celery simulator's fault/latency model.
+    pub celery: Option<scheduler::celery::CelerySimConfig>,
 }
 
 impl Default for TunerConfig {
@@ -47,6 +103,10 @@ impl Default for TunerConfig {
             tune_lengthscale: false,
             early_stop: None,
             max_surrogate_obs: 512,
+            mode: ExecutionMode::Sync,
+            async_window: 0,
+            max_retries: 2,
+            celery: None,
         }
     }
 }
@@ -68,9 +128,24 @@ impl TunerConfig {
             backend: SurrogateBackend::from_str(&rc.backend)
                 .ok_or_else(|| anyhow!("bad backend {}", rc.backend))?,
             tune_lengthscale: rc.tune_lengthscale,
-            early_stop: None,
-            max_surrogate_obs: 512,
+            early_stop: match rc.early_stop {
+                0 => None,
+                n => Some(n),
+            },
+            max_surrogate_obs: rc.max_surrogate_obs,
+            mode: ExecutionMode::from_str(&rc.mode)
+                .ok_or_else(|| anyhow!("bad mode {}", rc.mode))?,
+            async_window: rc.async_window,
+            max_retries: rc.max_retries,
+            celery: None,
         })
+    }
+
+    /// Effective in-flight window for async mode.
+    fn window(&self) -> usize {
+        let auto = self.batch_size.max(self.workers);
+        let w = if self.async_window == 0 { auto } else { self.async_window };
+        w.max(1)
     }
 }
 
@@ -79,6 +154,12 @@ impl TunerConfig {
 enum Sense {
     Maximize,
     Minimize,
+}
+
+/// Coordinator-side record of one in-flight evaluation.
+struct PendingTask {
+    config: Config,
+    retries: usize,
 }
 
 /// The paper's Fig. 1 coordinator.
@@ -104,14 +185,13 @@ impl Tuner {
         &self.config
     }
 
-    /// Maximize a per-config objective using the configured scheduler.
+    /// Maximize a per-config objective using the configured scheduler
+    /// (dispatches on [`TunerConfig::mode`]).
     pub fn maximize<F>(&mut self, objective: F) -> Result<TuningResult>
     where
         F: Fn(&Config) -> Option<f64> + Sync,
     {
-        let mut sched =
-            scheduler::build(self.config.scheduler, self.config.workers, self.config.seed);
-        self.run(Sense::Maximize, &mut |batch| sched.evaluate(&objective, batch))
+        self.run_objective(Sense::Maximize, &objective)
     }
 
     /// Minimize a per-config objective.
@@ -119,14 +199,32 @@ impl Tuner {
     where
         F: Fn(&Config) -> Option<f64> + Sync,
     {
-        let mut sched =
-            scheduler::build(self.config.scheduler, self.config.workers, self.config.seed);
-        self.run(Sense::Minimize, &mut |batch| sched.evaluate(&objective, batch))
+        self.run_objective(Sense::Minimize, &objective)
+    }
+
+    fn run_objective(
+        &mut self,
+        sense: Sense,
+        objective: &(dyn Fn(&Config) -> Option<f64> + Sync),
+    ) -> Result<TuningResult> {
+        match self.config.mode {
+            ExecutionMode::Sync => {
+                let mut sched = scheduler::build_custom(
+                    self.config.scheduler,
+                    self.config.workers,
+                    self.config.seed,
+                    self.config.celery.clone(),
+                );
+                self.run(sense, &mut |batch| sched.evaluate(objective, batch))
+            }
+            ExecutionMode::Async => self.run_async(sense, objective),
+        }
     }
 
     /// Maximize with a user-supplied *batch* objective — the paper's
     /// decoupling: bring any scheduling framework by consuming the whole
     /// batch yourself and returning (possibly partial) `(evals, params)`.
+    /// Always batch-synchronous regardless of [`TunerConfig::mode`].
     pub fn maximize_batch<F>(&mut self, mut batch_objective: F) -> Result<TuningResult>
     where
         F: FnMut(&[Config]) -> BatchResult,
@@ -142,19 +240,24 @@ impl Tuner {
         self.run(Sense::Minimize, &mut batch_objective)
     }
 
+    fn gp_options(&self) -> GpOptions {
+        GpOptions {
+            backend: self.config.backend,
+            mc_samples: self.config.mc_samples,
+            initial_random: self.config.initial_random,
+            tune_lengthscale: self.config.tune_lengthscale,
+            ..Default::default()
+        }
+    }
+
+    /// The batch-synchronous coordinator (one barrier per iteration).
     fn run(
         &mut self,
         sense: Sense,
         evaluate: &mut dyn FnMut(&[Config]) -> BatchResult,
     ) -> Result<TuningResult> {
         let cfg = &self.config;
-        let opts = GpOptions {
-            backend: cfg.backend,
-            mc_samples: cfg.mc_samples,
-            initial_random: cfg.initial_random,
-            tune_lengthscale: cfg.tune_lengthscale,
-            ..Default::default()
-        };
+        let opts = self.gp_options();
         let mut optimizer: Box<dyn BatchOptimizer> =
             optimizer::build(cfg.optimizer, &self.space, &opts)?;
         let mut rng = Pcg64::new(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
@@ -166,13 +269,13 @@ impl Tuner {
         let mut iterations = Vec::with_capacity(cfg.num_iterations);
         let mut since_improvement = 0usize;
         let mut best_so_far = f64::NEG_INFINITY; // internal sense
+        let mut returned_total = 0usize; // running count: O(1) per iteration
 
         for iteration in 0..cfg.num_iterations {
             let it_timer = Stopwatch::start();
             // Surrogate history is capped to the artifact capacity: keep the
             // most recent window (the GP forgets the oldest points).
-            let mut opt_view = history.clone();
-            opt_view.truncate_to_recent(cfg.max_surrogate_obs);
+            let opt_view = history.recent(cfg.max_surrogate_obs);
             let batch = optimizer.propose(&opt_view, cfg.batch_size, &mut rng)?;
             anyhow::ensure!(!batch.is_empty(), "optimizer proposed an empty batch");
 
@@ -200,10 +303,11 @@ impl Tuner {
             let record = IterationRecord {
                 iteration,
                 proposed: batch.len(),
-                returned: history.len() - iterations.iter().map(|r: &IterationRecord| r.returned).sum::<usize>(),
+                returned: history.len() - returned_total,
                 best_so_far: user_best,
                 wall_ms: it_timer.elapsed_ms(),
             };
+            returned_total = history.len();
             if let Some(cb) = &mut self.callback {
                 cb(&record);
             }
@@ -248,6 +352,278 @@ impl Tuner {
             best_series,
             iterations,
             wall_ms: total.elapsed_ms(),
+            completions: Vec::new(),
+            scheduler_stats: None,
+            retried: 0,
+            lost: 0,
+        })
+    }
+
+    /// The asynchronous coordinator: spawn the scheduler's workers on a
+    /// scope that lives exactly as long as the run, then drive the event
+    /// loop against the submit/poll contract.
+    fn run_async(
+        &mut self,
+        sense: Sense,
+        objective: &(dyn Fn(&Config) -> Option<f64> + Sync),
+    ) -> Result<TuningResult> {
+        let cfg = self.config.clone();
+        let opts = self.gp_options();
+        let mut optimizer = optimizer::build(cfg.optimizer, &self.space, &opts)?;
+        let space = self.space.clone();
+        std::thread::scope(|scope| {
+            let mut sched = scheduler::build_async(
+                cfg.scheduler,
+                cfg.workers,
+                cfg.seed,
+                cfg.celery.clone(),
+                scope,
+                objective,
+            );
+            self.event_loop(sense, &cfg, &space, optimizer.as_mut(), sched.as_mut())
+        })
+    }
+
+    /// One replacement proposal, conditioned on the in-flight set. Each
+    /// proposal draws from its own seed-derived RNG stream (keyed by its
+    /// index), so the stream is independent of how completions happened to
+    /// be grouped into polls. Returns `Ok(None)` when every candidate the
+    /// optimizer and the space can produce is already in flight (tiny
+    /// discrete spaces) — the caller then waits for a completion to free a
+    /// point instead of double-submitting one.
+    fn propose_one(
+        cfg: &TunerConfig,
+        space: &SearchSpace,
+        optimizer: &mut dyn BatchOptimizer,
+        history: &History,
+        pending: &BTreeMap<u64, PendingTask>,
+        proposal_idx: u64,
+    ) -> Result<Option<Config>> {
+        let pending_cfgs: Vec<Config> = pending.values().map(|p| p.config.clone()).collect();
+        // Leave surrogate room for the hallucinated pending observations.
+        let cap = cfg.max_surrogate_obs.saturating_sub(pending_cfgs.len()).max(1);
+        let opt_view = history.recent(cap);
+        let mut rng = Pcg64::new(
+            cfg.seed
+                .wrapping_mul(0x9E37_79B9)
+                .wrapping_add(0xA5F0_0000)
+                .wrapping_add(proposal_idx),
+        );
+        let mut proposal = optimizer
+            .propose_pending(&opt_view, &pending_cfgs, 1, &mut rng)?
+            .into_iter()
+            .next()
+            .unwrap_or_else(|| space.sample(&mut rng));
+        // Hard guarantee: never submit a config already in flight.
+        let mut tries = 0;
+        while pending_cfgs.contains(&proposal) {
+            if tries >= 32 {
+                return Ok(None); // space saturated by the in-flight window
+            }
+            proposal = space.sample(&mut rng);
+            tries += 1;
+        }
+        Ok(Some(proposal))
+    }
+
+    /// The event loop: keep `window` evaluations in flight; fold each
+    /// completion into the history the moment it arrives; retry lost work.
+    fn event_loop(
+        &mut self,
+        sense: Sense,
+        cfg: &TunerConfig,
+        space: &SearchSpace,
+        optimizer: &mut dyn BatchOptimizer,
+        sched: &mut dyn AsyncScheduler,
+    ) -> Result<TuningResult> {
+        let budget = cfg.num_iterations * cfg.batch_size;
+        let window = cfg.window().min(budget.max(1));
+        let early_stop_events = cfg.early_stop.map(|n| (n * cfg.batch_size).max(1));
+
+        let total = Stopwatch::start();
+        let mut history = History::new(); // maximization convention
+        let mut user_history: Vec<(Config, f64)> = Vec::new();
+        let mut best_series = Vec::with_capacity(budget);
+        let mut iterations = Vec::with_capacity(budget);
+        let mut completion_log: Vec<CompletionRecord> = Vec::new();
+        let mut pending: BTreeMap<u64, PendingTask> = BTreeMap::new();
+        let mut proposals_made = 0usize;
+        let mut proposed_since_record = 0usize;
+        let mut best_so_far = f64::NEG_INFINITY; // internal sense
+        let mut since_improvement = 0usize;
+        let mut stopped_early = false;
+        let mut retried = 0u64;
+        let mut lost = 0u64;
+        let mut last_progress = std::time::Instant::now();
+
+        loop {
+            // ---- refill: keep the in-flight window full ----
+            while !stopped_early && pending.len() < window && proposals_made < budget {
+                let Some(proposal) = Self::propose_one(
+                    cfg,
+                    space,
+                    optimizer,
+                    &history,
+                    &pending,
+                    proposals_made as u64,
+                )?
+                else {
+                    // Every distinct config is in flight: wait for a
+                    // completion to free a point before proposing again.
+                    break;
+                };
+                let ids = sched.submit(std::slice::from_ref(&proposal));
+                anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
+                pending.insert(ids[0], PendingTask { config: proposal, retries: 0 });
+                proposals_made += 1;
+                proposed_since_record += 1;
+            }
+
+            if pending.is_empty() {
+                break; // budget exhausted (or early-stopped), nothing in flight
+            }
+
+            // ---- wait for completions ----
+            let completions: Vec<Completion> = sched.poll(POLL_TIMEOUT);
+            if completions.is_empty() {
+                if sched.in_flight() == 0 {
+                    // Scheduler lost track of outstanding work.
+                    lost += pending.len() as u64;
+                    pending.clear();
+                    break;
+                }
+                anyhow::ensure!(
+                    last_progress.elapsed() < STALL_TIMEOUT,
+                    "async scheduler stalled: {} tasks in flight, none completed in {:?}",
+                    sched.in_flight(),
+                    STALL_TIMEOUT
+                );
+                continue;
+            }
+            last_progress = std::time::Instant::now();
+
+            // ---- fold completions in (poll returns them sorted by id) ----
+            for comp in completions {
+                let Some(mut task) = pending.remove(&comp.id) else { continue };
+                let outcome = match comp.status {
+                    CompletionStatus::Done(v) => {
+                        anyhow::ensure!(
+                            v.is_finite(),
+                            "objective returned a non-finite value"
+                        );
+                        let internal = match sense {
+                            Sense::Maximize => v,
+                            Sense::Minimize => -v,
+                        };
+                        best_so_far = best_so_far.max(internal);
+                        history.push(task.config.clone(), internal);
+                        user_history.push((task.config.clone(), v));
+                        CompletionOutcome::Done
+                    }
+                    CompletionStatus::Failed => CompletionOutcome::Failed,
+                    CompletionStatus::Lost(reason) => {
+                        // After early stop, a retried result could no longer
+                        // change anything — let the proposal die instead.
+                        if !stopped_early && task.retries < cfg.max_retries {
+                            task.retries += 1;
+                            retried += 1;
+                            crate::log_debug!(
+                                "task {} lost ({reason:?}); retry {}/{}",
+                                comp.id,
+                                task.retries,
+                                cfg.max_retries
+                            );
+                            completion_log.push(CompletionRecord {
+                                task_id: comp.id,
+                                queue_wait_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                                retries: task.retries,
+                                outcome: CompletionOutcome::Resubmitted,
+                            });
+                            let ids = sched.submit(std::slice::from_ref(&task.config));
+                            anyhow::ensure!(ids.len() == 1, "resubmit must assign one id");
+                            pending.insert(ids[0], task);
+                            continue; // not concluded: no iteration record
+                        }
+                        lost += 1;
+                        CompletionOutcome::Lost
+                    }
+                };
+
+                // ---- one concluded proposal = one iteration record ----
+                completion_log.push(CompletionRecord {
+                    task_id: comp.id,
+                    queue_wait_ms: comp.queue_wait_ms,
+                    eval_ms: comp.eval_ms,
+                    retries: task.retries,
+                    outcome,
+                });
+                let user_best = match sense {
+                    Sense::Maximize => best_so_far,
+                    Sense::Minimize => -best_so_far,
+                };
+                best_series.push(user_best);
+                let improved = best_series.len() < 2
+                    || match sense {
+                        Sense::Maximize => {
+                            best_series[best_series.len() - 1]
+                                > best_series[best_series.len() - 2]
+                        }
+                        Sense::Minimize => {
+                            best_series[best_series.len() - 1]
+                                < best_series[best_series.len() - 2]
+                        }
+                    };
+                since_improvement = if improved { 0 } else { since_improvement + 1 };
+                let record = IterationRecord {
+                    iteration: iterations.len(),
+                    proposed: proposed_since_record,
+                    returned: usize::from(outcome == CompletionOutcome::Done),
+                    best_so_far: user_best,
+                    wall_ms: comp.queue_wait_ms + comp.eval_ms,
+                };
+                proposed_since_record = 0;
+                if let Some(cb) = &mut self.callback {
+                    cb(&record);
+                }
+                iterations.push(record);
+
+                if let Some(stop) = early_stop_events {
+                    if since_improvement >= stop && !stopped_early {
+                        stopped_early = true;
+                        let cancelled = sched.cancel_pending();
+                        for id in &cancelled {
+                            pending.remove(id);
+                        }
+                        crate::log_info!(
+                            "async early stop after {} completions ({} queued cancelled)",
+                            iterations.len(),
+                            cancelled.len()
+                        );
+                    }
+                }
+            }
+        }
+
+        let (best_cfg, best_internal) = history
+            .best()
+            .ok_or_else(|| anyhow!("no evaluation ever succeeded"))?;
+        let best_objective = match sense {
+            Sense::Maximize => best_internal,
+            Sense::Minimize => -best_internal,
+        };
+        Ok(TuningResult {
+            best_params: best_cfg.clone(),
+            best_objective,
+            evaluations: user_history.len(),
+            history: user_history,
+            best_series,
+            iterations,
+            wall_ms: total.elapsed_ms(),
+            completions: completion_log,
+            scheduler_stats: Some(sched.stats()),
+            retried,
+            lost,
         })
     }
 }
@@ -267,6 +643,22 @@ mod tests {
                 batch_size: batch,
                 backend: SurrogateBackend::Native,
                 seed: 11,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn async_tuner(optimizer: OptimizerKind, iters: usize, batch: usize) -> Tuner {
+        let space = crate::space::svm_space();
+        Tuner::new(
+            space,
+            TunerConfig {
+                optimizer,
+                num_iterations: iters,
+                batch_size: batch,
+                backend: SurrogateBackend::Native,
+                seed: 11,
+                mode: ExecutionMode::Async,
                 ..Default::default()
             },
         )
@@ -323,6 +715,30 @@ mod tests {
             .unwrap();
         assert_eq!(calls, 10);
         assert_eq!(r.evaluations, 20, "half of 40 proposals returned");
+    }
+
+    #[test]
+    fn iteration_records_count_partial_returns() {
+        // The per-iteration `returned` field must match each iteration's
+        // arrivals (regression test for the O(n²) recomputation).
+        let mut t = tuner(OptimizerKind::Random, 8, 3);
+        let r = t
+            .maximize_batch(|batch| {
+                let mut out = BatchResult::default();
+                for (i, cfg) in batch.iter().enumerate() {
+                    if i != 0 {
+                        out.push(cfg.clone(), 1.0);
+                    }
+                }
+                out
+            })
+            .unwrap();
+        assert_eq!(r.iterations.len(), 8);
+        for rec in &r.iterations {
+            assert_eq!(rec.proposed, 3);
+            assert_eq!(rec.returned, 2, "iter {}: lost exactly one", rec.iteration);
+        }
+        assert_eq!(r.evaluations, 16);
     }
 
     #[test]
@@ -414,5 +830,140 @@ mod tests {
         assert_eq!(tc.scheduler, SchedulerKind::Threaded);
         assert_eq!(tc.workers, 8);
         let _ = Config::new(vec![("x".into(), ParamValue::F64(0.0))]); // silence import
+    }
+
+    #[test]
+    fn from_run_config_plumbs_early_stop_and_surrogate_cap() {
+        let rc = RunConfig {
+            early_stop: 7,
+            max_surrogate_obs: 128,
+            mode: "async".into(),
+            async_window: 12,
+            max_retries: 5,
+            ..Default::default()
+        };
+        let tc = TunerConfig::from_run_config(&rc).unwrap();
+        assert_eq!(tc.early_stop, Some(7));
+        assert_eq!(tc.max_surrogate_obs, 128);
+        assert_eq!(tc.mode, ExecutionMode::Async);
+        assert_eq!(tc.async_window, 12);
+        assert_eq!(tc.max_retries, 5);
+        // early_stop = 0 means disabled
+        let tc0 = TunerConfig::from_run_config(&RunConfig::default()).unwrap();
+        assert_eq!(tc0.early_stop, None);
+        assert_eq!(tc0.mode, ExecutionMode::Sync);
+    }
+
+    // ---------------- async event-loop tests ----------------
+
+    #[test]
+    fn async_serial_runs_full_budget_with_telemetry() {
+        let mut t = async_tuner(OptimizerKind::Hallucination, 10, 2);
+        let r = t.maximize(quad).unwrap();
+        assert_eq!(r.evaluations, 20, "reliable serial async runs the full budget");
+        assert_eq!(r.best_series.len(), 20, "one series point per completion");
+        for w in r.best_series.windows(2) {
+            assert!(w[1] >= w[0], "maximize series must not decrease");
+        }
+        assert_eq!(r.completions.len(), 20);
+        for c in &r.completions {
+            assert_eq!(c.outcome, crate::coordinator::CompletionOutcome::Done);
+            assert!(c.queue_wait_ms >= 0.0 && c.eval_ms >= 0.0);
+        }
+        let stats = r.scheduler_stats.as_ref().unwrap();
+        assert_eq!(stats.submitted, 20);
+        assert_eq!(stats.completed, 20);
+        assert!(stats.max_in_flight >= 2, "window must actually fill");
+    }
+
+    #[test]
+    fn async_event_loop_deterministic_given_seed() {
+        let run = || {
+            let mut t = async_tuner(OptimizerKind::Hallucination, 8, 2);
+            let r = t.maximize(quad).unwrap();
+            (r.best_objective, r.best_series.clone())
+        };
+        let (a_best, a_series) = run();
+        let (b_best, b_series) = run();
+        assert_eq!(a_best, b_best, "same seed, same optimum");
+        assert_eq!(a_series, b_series, "same seed, same trajectory");
+    }
+
+    #[test]
+    fn async_minimize_flips_sense() {
+        let mut t = async_tuner(OptimizerKind::Hallucination, 8, 2);
+        let r = t
+            .minimize(|cfg| {
+                let c = cfg.get_f64("c")?;
+                Some((c - 60.0) * (c - 60.0))
+            })
+            .unwrap();
+        assert!(r.best_objective < 400.0);
+        for w in r.best_series.windows(2) {
+            assert!(w[1] <= w[0], "minimize series must not increase");
+        }
+    }
+
+    #[test]
+    fn async_all_failures_is_an_error_and_terminates() {
+        let mut t = async_tuner(OptimizerKind::Random, 3, 2);
+        let err = t.maximize(|_| None).unwrap_err();
+        assert!(err.to_string().contains("no evaluation"));
+    }
+
+    #[test]
+    fn async_early_stop_cancels_queue() {
+        let space = crate::space::svm_space();
+        let mut t = Tuner::new(
+            space,
+            TunerConfig {
+                optimizer: OptimizerKind::Random,
+                num_iterations: 50,
+                batch_size: 1,
+                early_stop: Some(3),
+                backend: SurrogateBackend::Native,
+                mode: ExecutionMode::Async,
+                async_window: 4,
+                seed: 1,
+                ..Default::default()
+            },
+        );
+        let r = t.maximize(|_| Some(1.0)).unwrap();
+        // 1 improvement + 3 stagnant completions + <= window stragglers.
+        assert!(
+            r.best_series.len() <= 4 + 4,
+            "ran {} completions",
+            r.best_series.len()
+        );
+    }
+
+    #[test]
+    fn async_threaded_overlaps_evaluations() {
+        let space = crate::space::svm_space();
+        let mut t = Tuner::new(
+            space,
+            TunerConfig {
+                optimizer: OptimizerKind::Random,
+                num_iterations: 8,
+                batch_size: 1,
+                scheduler: SchedulerKind::Threaded,
+                workers: 8,
+                async_window: 8,
+                backend: SurrogateBackend::Native,
+                mode: ExecutionMode::Async,
+                seed: 2,
+                ..Default::default()
+            },
+        );
+        let start = std::time::Instant::now();
+        let r = t
+            .maximize(|cfg| {
+                std::thread::sleep(Duration::from_millis(30));
+                quad(cfg)
+            })
+            .unwrap();
+        let ms = start.elapsed().as_millis();
+        assert_eq!(r.evaluations, 8);
+        assert!(ms < 240, "8x30ms on 8 workers took {ms}ms — window not full");
     }
 }

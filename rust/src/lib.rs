@@ -53,9 +53,13 @@ pub mod cli;
 
 /// Convenience re-exports covering the common tuning workflow.
 pub mod prelude {
-    pub use crate::coordinator::{ObjectiveFn, Tuner, TunerConfig, TuningResult};
+    pub use crate::coordinator::{
+        ExecutionMode, ObjectiveFn, Tuner, TunerConfig, TuningResult,
+    };
     pub use crate::optimizer::{OptimizerKind, SurrogateBackend};
-    pub use crate::scheduler::{BatchResult, Scheduler, SchedulerKind};
+    pub use crate::scheduler::{
+        AsyncScheduler, BatchResult, Completion, CompletionStatus, Scheduler, SchedulerKind,
+    };
     pub use crate::space::{Config, ParamValue, SearchSpace};
     pub use crate::util::rng::Pcg64;
 }

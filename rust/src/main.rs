@@ -5,7 +5,7 @@ use anyhow::{anyhow, Result};
 use mango::cli::{Args, USAGE};
 use mango::config::json::parse as parse_json;
 use mango::config::settings::ExperimentConfig;
-use mango::coordinator::{Tuner, TunerConfig};
+use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
 use mango::exp::{harness, workloads};
 use mango::optimizer::{OptimizerKind, SurrogateBackend};
 use mango::scheduler::SchedulerKind;
@@ -57,7 +57,12 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
             0 => None,
             n => Some(n),
         },
-        max_surrogate_obs: 512,
+        max_surrogate_obs: args.get_usize("max-surrogate-obs", 512)?,
+        mode: ExecutionMode::from_str(args.get_or("mode", "sync"))
+            .ok_or_else(|| anyhow!("bad --mode (sync | async)"))?,
+        async_window: args.get_usize("async-window", 0)?,
+        max_retries: args.get_usize("max-retries", 2)?,
+        celery: None,
     })
 }
 
@@ -65,6 +70,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
+        "max-surrogate-obs", "mode", "async-window", "max-retries",
     ])?;
     let name = args
         .get("workload")

@@ -117,4 +117,27 @@ mod tests {
         let batch = opt.propose(&History::new(), 3, &mut rng).unwrap();
         assert_eq!(batch.len(), 3);
     }
+
+    #[test]
+    fn pending_configs_suppress_their_neighborhood() {
+        // propose_pending (constant-liar default) must steer the GP away
+        // from an in-flight config: hallucinating an observation at the
+        // acquisition's favorite point collapses its variance, so the next
+        // proposal lands elsewhere.
+        use crate::optimizer::BatchOptimizer;
+        let space = svm_space();
+        let core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let mut opt = HallucinationOptimizer::new(core);
+        let mut rng = Pcg64::new(19);
+        let mut h = History::new();
+        for cfg in space.sample_n(&mut rng, 10) {
+            let c = cfg.get_f64("c").unwrap();
+            h.push(cfg, -(c - 42.0).abs());
+        }
+        let favorite = opt.propose(&h, 1, &mut rng).unwrap().remove(0);
+        let pending = vec![favorite.clone()];
+        let next = opt.propose_pending(&h, &pending, 1, &mut rng).unwrap();
+        assert!(!next.is_empty(), "one pending point can't exhaust the space");
+        assert_ne!(next[0], favorite, "must not re-propose the in-flight config");
+    }
 }

@@ -73,6 +73,16 @@ impl History {
             self.values.drain(..cut);
         }
     }
+
+    /// A copy of the most recent `cap` observations — the surrogate view,
+    /// without cloning the (unbounded) full history first.
+    pub fn recent(&self, cap: usize) -> History {
+        let start = self.len().saturating_sub(cap);
+        History {
+            configs: self.configs[start..].to_vec(),
+            values: self.values[start..].to_vec(),
+        }
+    }
 }
 
 /// A batch-proposing optimizer.
@@ -84,6 +94,38 @@ pub trait BatchOptimizer {
         batch_size: usize,
         rng: &mut Pcg64,
     ) -> Result<Vec<Config>>;
+
+    /// Propose conditioned on configs still *in flight* (the async event
+    /// loop's refill path): the default wires the hallucinated-observation
+    /// idea behind [`hallucinate`] into every optimizer as a constant-liar
+    /// scheme (Ginsbourger et al. 2010) — each pending config is appended
+    /// to the history with a hallucinated value (the mean observed value),
+    /// so surrogate-based optimizers see collapsed variance there and steer
+    /// proposals elsewhere. Exact duplicates of pending configs are
+    /// filtered, so the result may be shorter than `batch_size` (callers
+    /// top up from the space if needed).
+    fn propose_pending(
+        &mut self,
+        history: &History,
+        pending: &[Config],
+        batch_size: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Config>> {
+        if pending.is_empty() {
+            return self.propose(history, batch_size, rng);
+        }
+        let liar = if history.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::mean(history.values())
+        };
+        let mut augmented = history.clone();
+        for cfg in pending {
+            augmented.push(cfg.clone(), liar);
+        }
+        let batch = self.propose(&augmented, batch_size, rng)?;
+        Ok(batch.into_iter().filter(|c| !pending.contains(c)).collect())
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -212,6 +254,11 @@ mod tests {
         h.truncate_to_recent(2);
         assert_eq!(h.len(), 2);
         assert_eq!(h.configs()[0].get_i64("i"), Some(1));
+        // recent() is the non-mutating window view
+        let r = h.recent(1);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.configs()[0].get_i64("i"), Some(2));
+        assert_eq!(h.len(), 2, "recent() must not mutate");
     }
 
     #[test]
@@ -236,5 +283,54 @@ mod tests {
             let opt = build(kind, &space, &GpOptions::default()).unwrap();
             assert!(!opt.name().is_empty());
         }
+    }
+
+    #[test]
+    fn propose_pending_never_duplicates_in_flight() {
+        // A 4-point discrete space with 3 configs pending: any optimizer's
+        // propose_pending must avoid the in-flight points entirely.
+        let space = crate::space::SearchSpace::builder()
+            .choice("arm", &["a", "b", "c", "d"])
+            .build();
+        let mut rng = Pcg64::new(71);
+        let mut history = History::new();
+        for (i, cfg) in space.sample_n(&mut rng, 8).into_iter().enumerate() {
+            history.push(cfg, (i as f64 * 0.9).sin());
+        }
+        let pending: Vec<Config> = ["a", "b", "c"]
+            .iter()
+            .map(|v| Config::new(vec![("arm".into(), ParamValue::Str(v.to_string()))]))
+            .collect();
+        for kind in [
+            OptimizerKind::Random,
+            OptimizerKind::Tpe,
+            OptimizerKind::Hallucination,
+            OptimizerKind::Clustering,
+            OptimizerKind::Thompson,
+        ] {
+            let opts = GpOptions { mc_samples: 64, ..Default::default() };
+            let mut opt = build(kind, &space, &opts).unwrap();
+            for round in 0..5 {
+                let batch = opt
+                    .propose_pending(&history, &pending, 2, &mut rng)
+                    .unwrap();
+                for cfg in &batch {
+                    assert!(
+                        !pending.contains(cfg),
+                        "{kind:?} round {round}: re-proposed in-flight {cfg}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn propose_pending_empty_pending_is_plain_propose() {
+        let space = crate::space::svm_space();
+        let mut opt = build(OptimizerKind::Random, &space, &GpOptions::default()).unwrap();
+        let h = History::new();
+        let a = opt.propose_pending(&h, &[], 3, &mut Pcg64::new(9)).unwrap();
+        let b = opt.propose(&h, 3, &mut Pcg64::new(9)).unwrap();
+        assert_eq!(a, b, "no pending: identical to propose with the same rng");
     }
 }

@@ -121,6 +121,26 @@ mod tests {
     }
 
     #[test]
+    fn propose_pending_avoids_in_flight_draws() {
+        // The constant-liar default also covers the stochastic optimizer:
+        // pending points enter the surrogate as observations, and exact
+        // duplicates are filtered from the returned batch.
+        use crate::optimizer::BatchOptimizer;
+        let space = svm_space();
+        let core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let mut opt = ThompsonOptimizer::new(core);
+        let mut rng = Pcg64::new(53);
+        let h = seeded_history(12);
+        let pending = opt.propose(&h, 3, &mut rng).unwrap();
+        for _ in 0..4 {
+            let batch = opt.propose_pending(&h, &pending, 2, &mut rng).unwrap();
+            for cfg in &batch {
+                assert!(!pending.contains(cfg), "re-proposed in-flight {cfg}");
+            }
+        }
+    }
+
+    #[test]
     fn draws_differ_across_slots() {
         // Stochastic acquisition: two consecutive batch-1 proposals on the
         // same history should usually differ (unlike greedy UCB argmax).

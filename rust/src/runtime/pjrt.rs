@@ -1,272 +1,382 @@
 //! The production surrogate backend: AOT artifacts executed via PJRT.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`. Each
-//! static-shape variant is compiled once **per thread, process-wide** (the
-//! PJRT wrappers are not `Send`, so the executable cache is thread-local;
-//! the experiment harness runs hundreds of tuner instances on one thread
-//! and pays compilation exactly once per variant — §Perf: this was a
-//! ~400 ms/tuner win). Fits and acquires pad inputs to the variant's slots
-//! and mask the padding (the L2 programs give padded rows identity kernel
-//! rows, so they contribute nothing — see `python/compile/model.py`).
+//! Two compilations of this module exist:
+//!
+//! * `--features pjrt-xla` — the real thing: wraps the `xla` crate (PJRT C
+//!   API): `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `compile` → `execute`. The `xla` crate is not vendored in the offline
+//!   registry, so this path additionally requires adding the dependency.
+//! * default — a native-delegating fallback: the same [`PjrtSurrogate`] API
+//!   backed by [`crate::gp::NativeGp`], which mirrors the L2 JAX programs
+//!   numerically (`python/compile/model.py`). Chunking accounting
+//!   (`acquire_calls`) and the artifact-capacity contract are preserved so
+//!   coordinator/optimizer behavior is identical either way.
 
-use super::artifact::ArtifactManifest;
-use crate::gp::{AcquireOut, FitOut, GpParams, Surrogate};
-use crate::linalg::Matrix;
-use anyhow::{Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+#[cfg(feature = "pjrt-xla")]
+mod xla_impl {
+    //! Each static-shape variant is compiled once **per thread,
+    //! process-wide** (the PJRT wrappers are not `Send`, so the executable
+    //! cache is thread-local; the experiment harness runs hundreds of tuner
+    //! instances on one thread and pays compilation exactly once per
+    //! variant — §Perf: this was a ~400 ms/tuner win). Fits and acquires pad
+    //! inputs to the variant's slots and mask the padding (the L2 programs
+    //! give padded rows identity kernel rows, so they contribute nothing —
+    //! see `python/compile/model.py`).
 
-thread_local! {
-    /// One PJRT CPU client per thread (executables are tied to a client).
-    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
-    /// Compiled-executable cache keyed by artifact path.
-    static EXE_CACHE: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>> =
-        RefCell::new(HashMap::new());
-}
+    use crate::gp::{AcquireOut, FitOut, GpParams, Surrogate};
+    use crate::linalg::Matrix;
+    use crate::runtime::artifact::ArtifactManifest;
+    use anyhow::{Context, Result};
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
 
-fn thread_client() -> Result<Rc<xla::PjRtClient>> {
-    CLIENT.with(|c| {
-        let mut c = c.borrow_mut();
-        if c.is_none() {
-            *c = Some(Rc::new(
-                xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            ));
-        }
-        Ok(c.as_ref().unwrap().clone())
-    })
-}
-
-fn compile_cached(
-    client: &xla::PjRtClient,
-    path: &Path,
-) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-    EXE_CACHE.with(|cache| {
-        if let Some(exe) = cache.borrow().get(path) {
-            return Ok(exe.clone());
-        }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("loading {path:?}"))?;
-        let exe = Rc::new(
-            client
-                .compile(&xla::XlaComputation::from_proto(&proto))
-                .with_context(|| format!("compiling {path:?}"))?,
-        );
-        crate::log_debug!("compiled PJRT executable {path:?}");
-        cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
-        Ok(exe)
-    })
-}
-
-/// Compiled (fit, acquire) executables for one variant.
-struct CompiledVariant {
-    n: usize,
-    fit: Rc<xla::PjRtLoadedExecutable>,
-    acquire: Rc<xla::PjRtLoadedExecutable>,
-}
-
-/// PJRT-backed [`Surrogate`].
-pub struct PjrtSurrogate {
-    #[allow(dead_code)] // keeps the client alive alongside its executables
-    client: Rc<xla::PjRtClient>,
-    manifest: ArtifactManifest,
-    compiled: HashMap<usize, CompiledVariant>,
-    /// Counters for the perf pass (EXPERIMENTS.md §Perf).
-    pub fit_calls: u64,
-    pub acquire_calls: u64,
-}
-
-impl PjrtSurrogate {
-    /// Create from the default artifacts directory (see
-    /// [`crate::runtime::default_artifacts_dir`]).
-    pub fn from_default_artifacts() -> Result<Self> {
-        Self::new(&crate::runtime::default_artifacts_dir())
+    thread_local! {
+        /// One PJRT CPU client per thread (executables are tied to a client).
+        static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+        /// Compiled-executable cache keyed by artifact path.
+        static EXE_CACHE: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>> =
+            RefCell::new(HashMap::new());
     }
 
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = ArtifactManifest::load(artifacts_dir)?;
-        let client = thread_client()?;
-        Ok(Self { client, manifest, compiled: HashMap::new(), fit_calls: 0, acquire_calls: 0 })
-    }
-
-    pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
-    }
-
-    /// Largest observation count the artifacts support.
-    pub fn max_obs(&self) -> usize {
-        self.manifest.max_obs()
-    }
-
-    fn compiled_for(&mut self, n_obs: usize) -> Result<&CompiledVariant> {
-        let variant = self.manifest.variant_for(n_obs)?.clone();
-        if !self.compiled.contains_key(&variant.n) {
-            let fit = compile_cached(&self.client, &variant.fit_path)?;
-            let acquire = compile_cached(&self.client, &variant.acquire_path)?;
-            self.compiled.insert(variant.n, CompiledVariant { n: variant.n, fit, acquire });
-        }
-        Ok(&self.compiled[&variant.n])
-    }
-
-    /// Pad an encoded (rows x cols) matrix into `slots x max_dim` f32.
-    fn pad_rows(&self, x: &Matrix, slots: usize) -> Vec<f32> {
-        let d = self.manifest.max_dim;
-        let mut out = vec![0f32; slots * d];
-        for i in 0..x.rows() {
-            for j in 0..x.cols() {
-                out[i * d + j] = x[(i, j)] as f32;
+    fn thread_client() -> Result<Rc<xla::PjRtClient>> {
+        CLIENT.with(|c| {
+            let mut c = c.borrow_mut();
+            if c.is_none() {
+                *c = Some(Rc::new(
+                    xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+                ));
             }
-        }
-        out
+            Ok(c.as_ref().unwrap().clone())
+        })
     }
 
-    fn inv_ls_literal(&self, params: &GpParams) -> xla::Literal {
-        let d = self.manifest.max_dim;
-        let mut v = vec![0f32; d];
-        for (i, &il) in params.inv_lengthscale.iter().take(d).enumerate() {
-            v[i] = il as f32;
-        }
-        xla::Literal::vec1(&v)
-    }
-
-    fn params_literal(params: &GpParams) -> xla::Literal {
-        xla::Literal::vec1(&[params.amp as f32, params.noise as f32, params.beta as f32])
-    }
-}
-
-fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-}
-
-impl Surrogate for PjrtSurrogate {
-    fn fit(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut> {
-        let n = x.rows();
-        anyhow::ensure!(y.len() == n, "y length mismatch");
-        anyhow::ensure!(
-            x.cols() <= self.manifest.max_dim,
-            "encoded dim {} exceeds artifact max_dim {}",
-            x.cols(),
-            self.manifest.max_dim
-        );
-        let d = self.manifest.max_dim;
-        let inv_ls = self.inv_ls_literal(params);
-        let x_pad = {
-            let cv_n = self.manifest.variant_for(n)?.n;
-            self.pad_rows(x, cv_n)
-        };
-        let cv = self.compiled_for(n)?;
-        let slots = cv.n;
-
-        let mut y_pad = vec![0f32; slots];
-        let mut mask = vec![0f32; slots];
-        for i in 0..n {
-            y_pad[i] = y[i] as f32;
-            mask[i] = 1.0;
-        }
-
-        let args = [
-            lit_2d(&x_pad, slots, d)?,
-            xla::Literal::vec1(&y_pad),
-            xla::Literal::vec1(&mask),
-            inv_ls,
-            Self::params_literal(params),
-        ];
-        let result = cv.fit.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (alpha_l, kinv_l, logdet_l) = result.to_tuple3()?;
-        let alpha_f32 = alpha_l.to_vec::<f32>()?;
-        let kinv_f32 = kinv_l.to_vec::<f32>()?;
-        let logdet = logdet_l.to_vec::<f32>()?[0] as f64;
-
-        self.fit_calls += 1;
-        let alpha = alpha_f32[..n].iter().map(|&v| v as f64).collect();
-        let kinv = Matrix::from_fn(n, n, |i, j| kinv_f32[i * slots + j] as f64);
-        Ok(FitOut { alpha, kinv, logdet })
-    }
-
-    fn acquire(
-        &mut self,
-        x: &Matrix,
-        fit: &FitOut,
-        xc: &Matrix,
-        params: &GpParams,
-    ) -> Result<AcquireOut> {
-        let n = x.rows();
-        let m = xc.rows();
-        anyhow::ensure!(fit.alpha.len() == n, "fit/x size mismatch");
-        let d = self.manifest.max_dim;
-        let m_cand = self.manifest.m_cand;
-        let inv_ls_lit = self.inv_ls_literal(params);
-        let params_lit = Self::params_literal(params);
-        let x_pad = {
-            let cv_n = self.manifest.variant_for(n)?.n;
-            self.pad_rows(x, cv_n)
-        };
-        let cv = self.compiled_for(n)?;
-        let slots = cv.n;
-
-        // Observation-side literals are invariant across candidate chunks:
-        // build them once (§Perf: kinv alone is slots² floats).
-        let x_lit = lit_2d(&x_pad, slots, d)?;
-        let mut mask = vec![0f32; slots];
-        let mut alpha_pad = vec![0f32; slots];
-        for i in 0..n {
-            mask[i] = 1.0;
-            alpha_pad[i] = fit.alpha[i] as f32;
-        }
-        let mask_lit = xla::Literal::vec1(&mask);
-        let alpha_lit = xla::Literal::vec1(&alpha_pad);
-        let mut kinv_pad = vec![0f32; slots * slots];
-        for i in 0..n {
-            for j in 0..n {
-                kinv_pad[i * slots + j] = fit.kinv[(i, j)] as f32;
+    fn compile_cached(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        EXE_CACHE.with(|cache| {
+            if let Some(exe) = cache.borrow().get(path) {
+                return Ok(exe.clone());
             }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("loading {path:?}"))?;
+            let exe = Rc::new(
+                client
+                    .compile(&xla::XlaComputation::from_proto(&proto))
+                    .with_context(|| format!("compiling {path:?}"))?,
+            );
+            crate::log_debug!("compiled PJRT executable {path:?}");
+            cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+            Ok(exe)
+        })
+    }
+
+    /// Compiled (fit, acquire) executables for one variant.
+    struct CompiledVariant {
+        n: usize,
+        fit: Rc<xla::PjRtLoadedExecutable>,
+        acquire: Rc<xla::PjRtLoadedExecutable>,
+    }
+
+    /// PJRT-backed [`Surrogate`].
+    pub struct PjrtSurrogate {
+        #[allow(dead_code)] // keeps the client alive alongside its executables
+        client: Rc<xla::PjRtClient>,
+        manifest: ArtifactManifest,
+        compiled: HashMap<usize, CompiledVariant>,
+        /// Counters for the perf pass (EXPERIMENTS.md §Perf).
+        pub fit_calls: u64,
+        pub acquire_calls: u64,
+    }
+
+    impl PjrtSurrogate {
+        /// Create from the default artifacts directory (see
+        /// [`crate::runtime::default_artifacts_dir`]).
+        pub fn from_default_artifacts() -> Result<Self> {
+            Self::new(&crate::runtime::default_artifacts_dir())
         }
-        let kinv_lit = lit_2d(&kinv_pad, slots, slots)?;
 
-        let mut ucb = Vec::with_capacity(m);
-        let mut mean = Vec::with_capacity(m);
-        let mut var = Vec::with_capacity(m);
-        let mut w = Matrix::zeros(n, m);
-        let mut calls = 0u64;
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(artifacts_dir)?;
+            let client = thread_client()?;
+            Ok(Self { client, manifest, compiled: HashMap::new(), fit_calls: 0, acquire_calls: 0 })
+        }
 
-        // Chunk the candidate set into m_cand-sized acquire calls.
-        let mut xc_pad = vec![0f32; m_cand * d];
-        let mut start = 0;
-        while start < m {
-            let count = (m - start).min(m_cand);
-            xc_pad.fill(0.0);
-            for c in 0..count {
-                for j in 0..xc.cols() {
-                    xc_pad[c * d + j] = xc[(start + c, j)] as f32;
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
+
+        /// Largest observation count the artifacts support.
+        pub fn max_obs(&self) -> usize {
+            self.manifest.max_obs()
+        }
+
+        fn compiled_for(&mut self, n_obs: usize) -> Result<&CompiledVariant> {
+            let variant = self.manifest.variant_for(n_obs)?.clone();
+            if !self.compiled.contains_key(&variant.n) {
+                let fit = compile_cached(&self.client, &variant.fit_path)?;
+                let acquire = compile_cached(&self.client, &variant.acquire_path)?;
+                self.compiled.insert(variant.n, CompiledVariant { n: variant.n, fit, acquire });
+            }
+            Ok(&self.compiled[&variant.n])
+        }
+
+        /// Pad an encoded (rows x cols) matrix into `slots x max_dim` f32.
+        fn pad_rows(&self, x: &Matrix, slots: usize) -> Vec<f32> {
+            let d = self.manifest.max_dim;
+            let mut out = vec![0f32; slots * d];
+            for i in 0..x.rows() {
+                for j in 0..x.cols() {
+                    out[i * d + j] = x[(i, j)] as f32;
                 }
             }
-            let xc_lit = lit_2d(&xc_pad, m_cand, d)?;
-            let args: [&xla::Literal; 7] =
-                [&x_lit, &mask_lit, &xc_lit, &alpha_lit, &kinv_lit, &inv_ls_lit, &params_lit];
-            let result = cv.acquire.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-            let (ucb_l, mean_l, var_l, w_l) = result.to_tuple4()?;
-            let ucb_c = ucb_l.to_vec::<f32>()?;
-            let mean_c = mean_l.to_vec::<f32>()?;
-            let var_c = var_l.to_vec::<f32>()?;
-            let w_c = w_l.to_vec::<f32>()?;
-            for c in 0..count {
-                ucb.push(ucb_c[c] as f64);
-                mean.push(mean_c[c] as f64);
-                var.push(var_c[c] as f64);
-                for i in 0..n {
-                    w[(i, start + c)] = w_c[i * m_cand + c] as f64;
-                }
-            }
-            calls += 1;
-            start += count;
+            out
         }
-        self.acquire_calls += calls;
-        Ok(AcquireOut { ucb, mean, var, w })
+
+        fn inv_ls_literal(&self, params: &GpParams) -> xla::Literal {
+            let d = self.manifest.max_dim;
+            let mut v = vec![0f32; d];
+            for (i, &il) in params.inv_lengthscale.iter().take(d).enumerate() {
+                v[i] = il as f32;
+            }
+            xla::Literal::vec1(&v)
+        }
+
+        fn params_literal(params: &GpParams) -> xla::Literal {
+            xla::Literal::vec1(&[params.amp as f32, params.noise as f32, params.beta as f32])
+        }
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    impl Surrogate for PjrtSurrogate {
+        fn fit(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut> {
+            let n = x.rows();
+            anyhow::ensure!(y.len() == n, "y length mismatch");
+            anyhow::ensure!(
+                x.cols() <= self.manifest.max_dim,
+                "encoded dim {} exceeds artifact max_dim {}",
+                x.cols(),
+                self.manifest.max_dim
+            );
+            let d = self.manifest.max_dim;
+            let inv_ls = self.inv_ls_literal(params);
+            let x_pad = {
+                let cv_n = self.manifest.variant_for(n)?.n;
+                self.pad_rows(x, cv_n)
+            };
+            let cv = self.compiled_for(n)?;
+            let slots = cv.n;
+
+            let mut y_pad = vec![0f32; slots];
+            let mut mask = vec![0f32; slots];
+            for i in 0..n {
+                y_pad[i] = y[i] as f32;
+                mask[i] = 1.0;
+            }
+
+            let args = [
+                lit_2d(&x_pad, slots, d)?,
+                xla::Literal::vec1(&y_pad),
+                xla::Literal::vec1(&mask),
+                inv_ls,
+                Self::params_literal(params),
+            ];
+            let result = cv.fit.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let (alpha_l, kinv_l, logdet_l) = result.to_tuple3()?;
+            let alpha_f32 = alpha_l.to_vec::<f32>()?;
+            let kinv_f32 = kinv_l.to_vec::<f32>()?;
+            let logdet = logdet_l.to_vec::<f32>()?[0] as f64;
+
+            self.fit_calls += 1;
+            let alpha = alpha_f32[..n].iter().map(|&v| v as f64).collect();
+            let kinv = Matrix::from_fn(n, n, |i, j| kinv_f32[i * slots + j] as f64);
+            Ok(FitOut { alpha, kinv, logdet })
+        }
+
+        fn acquire(
+            &mut self,
+            x: &Matrix,
+            fit: &FitOut,
+            xc: &Matrix,
+            params: &GpParams,
+        ) -> Result<AcquireOut> {
+            let n = x.rows();
+            let m = xc.rows();
+            anyhow::ensure!(fit.alpha.len() == n, "fit/x size mismatch");
+            let d = self.manifest.max_dim;
+            let m_cand = self.manifest.m_cand;
+            let inv_ls_lit = self.inv_ls_literal(params);
+            let params_lit = Self::params_literal(params);
+            let x_pad = {
+                let cv_n = self.manifest.variant_for(n)?.n;
+                self.pad_rows(x, cv_n)
+            };
+            let cv = self.compiled_for(n)?;
+            let slots = cv.n;
+
+            // Observation-side literals are invariant across candidate chunks:
+            // build them once (§Perf: kinv alone is slots² floats).
+            let x_lit = lit_2d(&x_pad, slots, d)?;
+            let mut mask = vec![0f32; slots];
+            let mut alpha_pad = vec![0f32; slots];
+            for i in 0..n {
+                mask[i] = 1.0;
+                alpha_pad[i] = fit.alpha[i] as f32;
+            }
+            let mask_lit = xla::Literal::vec1(&mask);
+            let alpha_lit = xla::Literal::vec1(&alpha_pad);
+            let mut kinv_pad = vec![0f32; slots * slots];
+            for i in 0..n {
+                for j in 0..n {
+                    kinv_pad[i * slots + j] = fit.kinv[(i, j)] as f32;
+                }
+            }
+            let kinv_lit = lit_2d(&kinv_pad, slots, slots)?;
+
+            let mut ucb = Vec::with_capacity(m);
+            let mut mean = Vec::with_capacity(m);
+            let mut var = Vec::with_capacity(m);
+            let mut w = Matrix::zeros(n, m);
+            let mut calls = 0u64;
+
+            // Chunk the candidate set into m_cand-sized acquire calls.
+            let mut xc_pad = vec![0f32; m_cand * d];
+            let mut start = 0;
+            while start < m {
+                let count = (m - start).min(m_cand);
+                xc_pad.fill(0.0);
+                for c in 0..count {
+                    for j in 0..xc.cols() {
+                        xc_pad[c * d + j] = xc[(start + c, j)] as f32;
+                    }
+                }
+                let xc_lit = lit_2d(&xc_pad, m_cand, d)?;
+                let args: [&xla::Literal; 7] =
+                    [&x_lit, &mask_lit, &xc_lit, &alpha_lit, &kinv_lit, &inv_ls_lit, &params_lit];
+                let result = cv.acquire.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                let (ucb_l, mean_l, var_l, w_l) = result.to_tuple4()?;
+                let ucb_c = ucb_l.to_vec::<f32>()?;
+                let mean_c = mean_l.to_vec::<f32>()?;
+                let var_c = var_l.to_vec::<f32>()?;
+                let w_c = w_l.to_vec::<f32>()?;
+                for c in 0..count {
+                    ucb.push(ucb_c[c] as f64);
+                    mean.push(mean_c[c] as f64);
+                    var.push(var_c[c] as f64);
+                    for i in 0..n {
+                        w[(i, start + c)] = w_c[i * m_cand + c] as f64;
+                    }
+                }
+                calls += 1;
+                start += count;
+            }
+            self.acquire_calls += calls;
+            Ok(AcquireOut { ucb, mean, var, w })
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
+
+#[cfg(feature = "pjrt-xla")]
+pub use xla_impl::PjrtSurrogate;
+
+#[cfg(not(feature = "pjrt-xla"))]
+mod fallback {
+    //! Native-delegating stand-in compiled when the `xla` crate is absent.
+    //! Honors the artifact contract where it can: the manifest (if present)
+    //! bounds observation counts and sets the candidate chunk size, and
+    //! `acquire_calls` counts chunks exactly as the real backend would.
+
+    use crate::gp::{AcquireOut, FitOut, GpParams, NativeGp, Surrogate};
+    use crate::linalg::Matrix;
+    use crate::runtime::artifact::ArtifactManifest;
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// Capacity assumed when no artifact manifest is on disk (matches the
+    /// largest generated variant, `gp_fit_n512`).
+    const DEFAULT_MAX_OBS: usize = 512;
+    /// Candidate-chunk size assumed without a manifest.
+    const DEFAULT_M_CAND: usize = 512;
+
+    pub struct PjrtSurrogate {
+        manifest: Option<ArtifactManifest>,
+        native: NativeGp,
+        m_cand: usize,
+        max_obs: usize,
+        pub fit_calls: u64,
+        pub acquire_calls: u64,
+    }
+
+    impl PjrtSurrogate {
+        pub fn from_default_artifacts() -> Result<Self> {
+            Self::new(&crate::runtime::default_artifacts_dir())
+        }
+
+        /// Unlike the real backend, a missing manifest is not an error: the
+        /// fallback still serves `SurrogateBackend::Pjrt` requests via the
+        /// native oracle (the two agree numerically by construction).
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(artifacts_dir).ok();
+            let m_cand = manifest.as_ref().map(|m| m.m_cand).unwrap_or(DEFAULT_M_CAND);
+            let max_obs = manifest.as_ref().map(|m| m.max_obs()).unwrap_or(DEFAULT_MAX_OBS);
+            Ok(Self {
+                manifest,
+                native: NativeGp,
+                m_cand,
+                max_obs,
+                fit_calls: 0,
+                acquire_calls: 0,
+            })
+        }
+
+        pub fn manifest(&self) -> Option<&ArtifactManifest> {
+            self.manifest.as_ref()
+        }
+
+        /// Largest observation count the (real or assumed) artifacts support.
+        pub fn max_obs(&self) -> usize {
+            self.max_obs
+        }
+    }
+
+    impl Surrogate for PjrtSurrogate {
+        fn fit(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut> {
+            anyhow::ensure!(
+                x.rows() <= self.max_obs,
+                "{} observations exceed artifact capacity {}",
+                x.rows(),
+                self.max_obs
+            );
+            self.fit_calls += 1;
+            self.native.fit(x, y, params)
+        }
+
+        fn acquire(
+            &mut self,
+            x: &Matrix,
+            fit: &FitOut,
+            xc: &Matrix,
+            params: &GpParams,
+        ) -> Result<AcquireOut> {
+            // One simulated execute per m_cand-sized candidate chunk.
+            self.acquire_calls += (xc.rows().max(1) as u64).div_ceil(self.m_cand as u64);
+            self.native.acquire(x, fit, xc, params)
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-fallback"
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt-xla"))]
+pub use fallback::PjrtSurrogate;

@@ -8,15 +8,24 @@
 //! * a **collector** (`process.get()`) that gathers results until all
 //!   surviving tasks report or the result timeout expires.
 //!
-//! Crashed and timed-out tasks never report — the scheduler returns the
-//! partial `(evals, params)` the paper's fault-tolerance contract expects.
+//! Two frontends share the fault model:
+//! * [`CelerySimScheduler`] — the batch-synchronous form: crashed and
+//!   timed-out tasks never report, the scheduler returns the partial
+//!   `(evals, params)` the paper's fault-tolerance contract expects.
+//! * [`CeleryAsyncScheduler`] — the submit/poll form over the persistent
+//!   pool ([`super::pool`]): the same pre-rolled fates, but losses surface
+//!   as explicit [`super::CompletionStatus::Lost`] events (crash vs
+//!   timeout), so the coordinator's event loop can retry them.
 
-use super::{BatchResult, Objective, Scheduler};
+use super::pool::{Fate, Task as PoolTask, WorkerPool};
+use super::{
+    AsyncScheduler, AsyncStats, BatchResult, Completion, Objective, Scheduler, TaskId,
+};
 use crate::space::Config;
 use crate::util::rng::Pcg64;
 use std::collections::VecDeque;
 use std::sync::{mpsc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Fault/latency model for the simulated cluster.
 #[derive(Clone, Debug)]
@@ -154,6 +163,107 @@ impl Scheduler for CelerySimScheduler {
     }
 }
 
+/// Submit/poll frontend over the simulated cluster: a persistent worker
+/// pool with per-task fates pre-rolled at submit time (determinism: fates
+/// are drawn from the scheduler RNG in submission order, like task
+/// routing). Crashes report `Lost(Crashed)` after their latency; tasks
+/// whose latency exceeds the result timeout report `Lost(TimedOut)` at the
+/// timeout — nothing is silently dropped.
+pub struct CeleryAsyncScheduler {
+    pool: WorkerPool,
+    config: CelerySimConfig,
+    rng: Pcg64,
+    next_id: TaskId,
+    /// Celery-specific fault counters (submit-side: fates are pre-rolled).
+    pub sim_stats: CeleryStats,
+}
+
+impl CeleryAsyncScheduler {
+    pub fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        objective: Objective<'env>,
+        config: CelerySimConfig,
+        seed: u64,
+    ) -> Self {
+        let workers = config.workers.max(1);
+        Self {
+            pool: WorkerPool::spawn(scope, objective, workers),
+            config,
+            rng: Pcg64::new(seed ^ 0xCE1E_27),
+            next_id: 0,
+            sim_stats: CeleryStats::default(),
+        }
+    }
+
+    /// Roll one task's fate — same draw order as the sync collector
+    /// (crash, straggle, latency) so a given seed yields the same fault
+    /// sequence in both modes.
+    fn roll_fate(&mut self) -> Fate {
+        let cfg = &self.config;
+        let crash = self.rng.next_f64() < cfg.crash_prob;
+        let straggle = self.rng.next_f64() < cfg.straggler_prob;
+        let mult = if straggle { cfg.straggler_factor } else { 1.0 };
+        let lat_ms = -self.rng.next_f64().max(1e-12).ln() * cfg.base_latency_ms * mult;
+        let latency = Duration::from_secs_f64(lat_ms / 1e3);
+        self.sim_stats.submitted += 1;
+        if straggle {
+            self.sim_stats.straggled += 1;
+        }
+        if crash {
+            self.sim_stats.crashed += 1;
+            // A crash is noticed at the collector's timeout at the latest.
+            return Fate::Crash { delay: latency.min(cfg.result_timeout) };
+        }
+        if latency > cfg.result_timeout {
+            self.sim_stats.timed_out += 1;
+            return Fate::TimeOut { delay: cfg.result_timeout };
+        }
+        Fate::Deliver { delay: latency }
+    }
+}
+
+impl AsyncScheduler for CeleryAsyncScheduler {
+    fn submit(&mut self, configs: &[Config]) -> Vec<TaskId> {
+        configs
+            .iter()
+            .map(|cfg| {
+                let fate = self.roll_fate();
+                let id = self.next_id;
+                self.next_id += 1;
+                self.pool.submit_task(PoolTask {
+                    id,
+                    config: cfg.clone(),
+                    submitted_at: Instant::now(),
+                    fate,
+                });
+                id
+            })
+            .collect()
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Vec<Completion> {
+        let out = self.pool.poll(timeout);
+        self.sim_stats.completed = self.pool.stats().completed;
+        out
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pool.in_flight()
+    }
+
+    fn cancel_pending(&mut self) -> Vec<TaskId> {
+        self.pool.cancel_pending()
+    }
+
+    fn stats(&self) -> AsyncStats {
+        self.pool.stats()
+    }
+
+    fn name(&self) -> &'static str {
+        "celery-async"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +338,81 @@ mod tests {
                 r.params.iter().map(|c| c.get_i64("i").unwrap()).collect();
             ids.sort_unstable();
             ids
+        };
+        assert_eq!(run(5), run(5), "same seed, same surviving set");
+    }
+
+    #[test]
+    fn async_losses_are_explicit_events() {
+        use crate::scheduler::{CompletionStatus, LossReason};
+        let mut cfg = reliable_config(4);
+        cfg.crash_prob = 0.5;
+        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        std::thread::scope(|scope| {
+            let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg, 7);
+            s.submit(&batch_of(40));
+            let comps = s.drain(Duration::from_secs(30));
+            // Every submission reports — losses as events, not silence.
+            assert_eq!(comps.len(), 40);
+            let lost = comps
+                .iter()
+                .filter(|c| matches!(c.status, CompletionStatus::Lost(LossReason::Crashed)))
+                .count();
+            assert!(lost > 0, "fault injection must fire");
+            assert!(lost < 40, "but not everything");
+            assert_eq!(s.sim_stats.crashed, lost as u64);
+            assert_eq!(s.stats().lost, lost as u64);
+            assert_eq!(s.stats().completed, 40 - lost as u64);
+        });
+    }
+
+    #[test]
+    fn async_stragglers_time_out_without_blocking() {
+        use crate::scheduler::{CompletionStatus, LossReason};
+        let cfg = CelerySimConfig {
+            workers: 4,
+            base_latency_ms: 1.0,
+            straggler_prob: 0.5,
+            straggler_factor: 400.0,
+            crash_prob: 0.0,
+            result_timeout: Duration::from_millis(50),
+        };
+        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        std::thread::scope(|scope| {
+            let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg, 3);
+            let t = Instant::now();
+            s.submit(&batch_of(12));
+            let comps = s.drain(Duration::from_secs(30));
+            assert_eq!(comps.len(), 12);
+            let timed_out = comps
+                .iter()
+                .filter(|c| matches!(c.status, CompletionStatus::Lost(LossReason::TimedOut)))
+                .count();
+            assert!(timed_out > 0, "with p=0.5 over 12 tasks some must straggle");
+            assert_eq!(s.sim_stats.timed_out, timed_out as u64);
+            // Timed-out tasks report at the timeout, not at their 400x latency.
+            assert!(t.elapsed() < Duration::from_secs(5), "took {:?}", t.elapsed());
+        });
+    }
+
+    #[test]
+    fn async_fates_deterministic_per_seed() {
+        let mut cfg = reliable_config(3);
+        cfg.crash_prob = 0.3;
+        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        let run = |seed: u64| {
+            std::thread::scope(|scope| {
+                let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg.clone(), seed);
+                s.submit(&batch_of(30));
+                let comps = s.drain(Duration::from_secs(30));
+                let mut done: Vec<i64> = comps
+                    .iter()
+                    .filter(|c| matches!(c.status, crate::scheduler::CompletionStatus::Done(_)))
+                    .map(|c| c.config.get_i64("i").unwrap())
+                    .collect();
+                done.sort_unstable();
+                done
+            })
         };
         assert_eq!(run(5), run(5), "same seed, same surviving set");
     }

@@ -1,27 +1,46 @@
-//! Schedulers (paper §2.4): evaluation of configuration batches, decoupled
-//! from the optimizer.
+//! Schedulers (paper §2.4): evaluation of configurations, decoupled from
+//! the optimizer. Two execution contracts live here:
 //!
-//! The paper's contract: the objective consumes a *batch* and returns
-//! `(evals, params)` — out-of-order and **possibly partial** (stragglers and
-//! crashed workers simply don't report). [`BatchResult`] encodes exactly
-//! that; every scheduler and the coordinator honour it.
+//! **Batch-synchronous** ([`Scheduler`]) — the paper's original contract:
+//! the objective consumes a *batch* and returns `(evals, params)` —
+//! out-of-order and **possibly partial** (stragglers and crashed workers
+//! simply don't report). [`BatchResult`] encodes exactly that. This is the
+//! `mode = "sync"` path and preserves the Fig. 2/3 barrier semantics.
 //!
-//! * [`serial::SerialScheduler`] — Listing 3: sequential evaluation.
-//! * [`threaded::ThreadedScheduler`] — local parallelism ("to use all cores
-//!   in local machine, threading can be used").
-//! * [`celery::CelerySimScheduler`] — Listing 4's Celery-on-Kubernetes
-//!   deployment as an in-repo distributed task-queue simulator: broker
-//!   queue, worker pool, latency distributions, stragglers, crashes and
-//!   result timeouts (DESIGN.md §2).
+//! **Asynchronous submit/poll** ([`AsyncScheduler`]) — the event-loop
+//! contract (Tune/Sherpa-style): `submit` enqueues configurations without
+//! blocking, `poll` drains whatever completed, and lost work surfaces as
+//! explicit [`CompletionStatus::Lost`] events instead of silent drops. The
+//! coordinator keeps a bounded in-flight window full so stragglers never
+//! idle the rest of the cluster (`mode = "async"`).
+//!
+//! Implementations, matching the paper's deployment options:
+//!
+//! * [`serial::SerialScheduler`] / [`serial::SerialAsyncScheduler`] —
+//!   Listing 3: sequential evaluation (the async form is a trivial adapter
+//!   that evaluates one queued task per poll).
+//! * [`threaded::ThreadedScheduler`] / [`threaded::ThreadedAsyncScheduler`]
+//!   — local parallelism ("to use all cores in local machine, threading can
+//!   be used"); a persistent worker pool fed through a broker queue +
+//!   channels (the sync form is now a submit-then-drain special case).
+//! * [`celery::CelerySimScheduler`] / [`celery::CeleryAsyncScheduler`] —
+//!   Listing 4's Celery-on-Kubernetes deployment as an in-repo distributed
+//!   task-queue simulator: broker queue, worker pool, latency
+//!   distributions, stragglers, crashes and result timeouts (DESIGN.md §2).
 
 pub mod celery;
+pub mod pool;
 pub mod serial;
 pub mod threaded;
 
 use crate::space::Config;
+use std::time::Duration;
 
 /// Per-config objective: `None` = evaluation failed (worker crash, NaN, …).
 pub type Objective<'a> = &'a (dyn Fn(&Config) -> Option<f64> + Sync);
+
+/// Identifier the scheduler assigns to each submitted evaluation.
+pub type TaskId = u64;
 
 /// What a batch evaluation returned — the paper's `(evals, params)` pair.
 /// `params[i]` produced `evals[i]`; configs missing from `params` were lost
@@ -47,12 +66,106 @@ impl BatchResult {
     }
 }
 
-/// A batch evaluation engine.
+/// A batch evaluation engine (the synchronous, barrier-per-batch contract).
 pub trait Scheduler {
     /// Evaluate a batch; may return fewer results than configs.
     fn evaluate(&mut self, objective: Objective<'_>, batch: &[Config]) -> BatchResult;
 
     fn name(&self) -> &'static str;
+}
+
+/// Why an evaluation vanished without producing a value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossReason {
+    /// The worker died with the task (OOM-kill, crash).
+    Crashed,
+    /// The result never arrived before the collector's timeout.
+    TimedOut,
+}
+
+/// Terminal state of one submitted evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompletionStatus {
+    /// The objective returned a value.
+    Done(f64),
+    /// The objective ran and declined (`None`) — deterministic, not retried.
+    Failed,
+    /// The evaluation was lost in flight — the retriable fault class.
+    Lost(LossReason),
+}
+
+/// One completed (or lost) evaluation, as drained by [`AsyncScheduler::poll`].
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: TaskId,
+    pub config: Config,
+    pub status: CompletionStatus,
+    /// Submit → evaluation start (broker queue + simulated network latency).
+    pub queue_wait_ms: f64,
+    /// Time spent inside the objective itself.
+    pub eval_ms: f64,
+}
+
+/// Counters every async scheduler keeps (telemetry + tests).
+#[derive(Clone, Debug, Default)]
+pub struct AsyncStats {
+    pub submitted: u64,
+    /// Completions that delivered a value.
+    pub completed: u64,
+    /// Objective-level failures (`None`).
+    pub failed: u64,
+    /// Crash/timeout losses surfaced as [`CompletionStatus::Lost`].
+    pub lost: u64,
+    /// Queued tasks removed by [`AsyncScheduler::cancel_pending`].
+    pub cancelled: u64,
+    /// High-water mark of concurrently in-flight tasks.
+    pub max_in_flight: usize,
+}
+
+/// The asynchronous submit/poll evaluation engine.
+///
+/// Contract:
+/// * [`submit`](Self::submit) never blocks on evaluation; it assigns one
+///   [`TaskId`] per config (monotonically increasing in submission order).
+/// * [`poll`](Self::poll) blocks up to `timeout` for at least one
+///   completion, then drains everything ready. Completions are sorted by
+///   id; an empty vec means the timeout elapsed (or nothing is in flight).
+///   Every submitted task eventually yields exactly one completion —
+///   losses arrive as [`CompletionStatus::Lost`], never as silence.
+/// * [`in_flight`](Self::in_flight) counts submitted-but-not-yet-polled
+///   tasks; [`cancel_pending`](Self::cancel_pending) withdraws work still
+///   queued on the broker (already-running tasks are not interrupted).
+pub trait AsyncScheduler {
+    /// Enqueue configs for evaluation; returns their ids (submission order).
+    fn submit(&mut self, configs: &[Config]) -> Vec<TaskId>;
+
+    /// Wait up to `timeout` for completions; drain and return all ready.
+    fn poll(&mut self, timeout: Duration) -> Vec<Completion>;
+
+    /// Tasks submitted but not yet returned by `poll`.
+    fn in_flight(&self) -> usize;
+
+    /// Withdraw queued (not yet started) tasks; returns the cancelled ids.
+    fn cancel_pending(&mut self) -> Vec<TaskId>;
+
+    /// Scheduler-side counters.
+    fn stats(&self) -> AsyncStats;
+
+    fn name(&self) -> &'static str;
+
+    /// Block until everything in flight completes (bounded by `timeout`).
+    fn drain(&mut self, timeout: Duration) -> Vec<Completion> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut out = Vec::new();
+        while self.in_flight() > 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            out.extend(self.poll(deadline - now));
+        }
+        out
+    }
 }
 
 /// Scheduler selection (CLI / config string form).
@@ -74,15 +187,51 @@ impl SchedulerKind {
     }
 }
 
-/// Build a scheduler by kind with `workers` parallelism.
+/// Build a synchronous scheduler by kind with `workers` parallelism.
 pub fn build(kind: SchedulerKind, workers: usize, seed: u64) -> Box<dyn Scheduler> {
+    build_custom(kind, workers, seed, None)
+}
+
+/// [`build`] with an optional Celery fault-model override.
+pub fn build_custom(
+    kind: SchedulerKind,
+    workers: usize,
+    seed: u64,
+    celery_config: Option<celery::CelerySimConfig>,
+) -> Box<dyn Scheduler> {
     match kind {
         SchedulerKind::Serial => Box::new(serial::SerialScheduler),
         SchedulerKind::Threaded => Box::new(threaded::ThreadedScheduler::new(workers)),
         SchedulerKind::Celery => Box::new(celery::CelerySimScheduler::new(
-            celery::CelerySimConfig { workers, ..Default::default() },
+            celery_config
+                .unwrap_or(celery::CelerySimConfig { workers, ..Default::default() }),
             seed,
         )),
+    }
+}
+
+/// Build an asynchronous scheduler by kind. Pool-backed schedulers spawn
+/// their workers on `scope`, borrowing `objective` for the scope's
+/// lifetime — the coordinator wraps its event loop in
+/// [`std::thread::scope`] so the pool lives exactly as long as the run.
+pub fn build_async<'scope, 'env>(
+    kind: SchedulerKind,
+    workers: usize,
+    seed: u64,
+    celery_config: Option<celery::CelerySimConfig>,
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    objective: Objective<'env>,
+) -> Box<dyn AsyncScheduler + 'scope> {
+    match kind {
+        SchedulerKind::Serial => Box::new(serial::SerialAsyncScheduler::new(objective)),
+        SchedulerKind::Threaded => {
+            Box::new(threaded::ThreadedAsyncScheduler::spawn(scope, objective, workers))
+        }
+        SchedulerKind::Celery => {
+            let cfg = celery_config
+                .unwrap_or(celery::CelerySimConfig { workers, ..Default::default() });
+            Box::new(celery::CeleryAsyncScheduler::spawn(scope, objective, cfg, seed))
+        }
     }
 }
 
@@ -105,5 +254,44 @@ mod tests {
         r.push(Config::default(), 1.5);
         assert_eq!(r.len(), 1);
         assert_eq!(r.evals[0], 1.5);
+    }
+
+    #[test]
+    fn build_async_all_kinds_submit_poll() {
+        let objective = |c: &Config| c.get_f64("x");
+        let batch = vec![
+            Config::new(vec![("x".into(), crate::space::ParamValue::F64(2.0))]),
+            Config::new(vec![("x".into(), crate::space::ParamValue::F64(3.0))]),
+        ];
+        // A fault-free cluster so the Celery run is loss-free by construction.
+        let reliable = celery::CelerySimConfig {
+            workers: 2,
+            base_latency_ms: 0.5,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            crash_prob: 0.0,
+            result_timeout: Duration::from_secs(10),
+        };
+        for kind in [SchedulerKind::Serial, SchedulerKind::Threaded, SchedulerKind::Celery] {
+            std::thread::scope(|scope| {
+                let mut s = build_async(kind, 2, 1, Some(reliable.clone()), scope, &objective);
+                let ids = s.submit(&batch);
+                assert_eq!(ids, vec![0, 1], "{kind:?} ids");
+                assert_eq!(s.in_flight(), 2);
+                let comps = s.drain(Duration::from_secs(30));
+                assert_eq!(comps.len(), 2, "{kind:?} must complete everything");
+                assert_eq!(s.in_flight(), 0);
+                let mut values: Vec<f64> = comps
+                    .iter()
+                    .filter_map(|c| match c.status {
+                        CompletionStatus::Done(v) => Some(v),
+                        _ => None,
+                    })
+                    .collect();
+                values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                assert_eq!(values, vec![2.0, 3.0], "{kind:?} values");
+                assert_eq!(s.stats().submitted, 2);
+            });
+        }
     }
 }

@@ -1,0 +1,323 @@
+//! Persistent worker pool: the shared broker/worker/collector machinery
+//! behind [`super::threaded::ThreadedAsyncScheduler`] and
+//! [`super::celery::CeleryAsyncScheduler`].
+//!
+//! Architecture (mirrors a Celery deployment, DESIGN.md §2):
+//! * a **broker** — a mutex-guarded task queue workers block on via a
+//!   condvar (supports mid-run cancellation, which an mpsc queue can't),
+//! * N **worker** threads pulling tasks for the lifetime of the pool
+//!   (spawned once on a [`std::thread::Scope`], *not* per batch),
+//! * a **collector** — an mpsc channel the pool drains in
+//!   [`WorkerPool::poll`].
+//!
+//! Each task carries a pre-rolled [`Fate`]: real evaluation (optionally
+//! after a simulated latency) or an explicit loss. Lost tasks still report
+//! — as [`CompletionStatus::Lost`] — so the coordinator can retry them
+//! instead of inferring losses from silence.
+
+use super::{AsyncStats, Completion, CompletionStatus, LossReason, Objective, TaskId};
+use crate::space::Config;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What will happen to a task once a worker picks it up.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Fate {
+    /// Wait out `delay` (simulated queue/network latency), then evaluate.
+    Deliver { delay: Duration },
+    /// The worker dies with the task after `delay`: reports `Lost(Crashed)`.
+    Crash { delay: Duration },
+    /// Straggles past the collector's patience: `Lost(TimedOut)` after
+    /// `delay` (the result-timeout, not the full straggler latency).
+    TimeOut { delay: Duration },
+}
+
+/// A unit of work on the broker queue.
+pub(crate) struct Task {
+    pub id: TaskId,
+    pub config: Config,
+    pub submitted_at: Instant,
+    pub fate: Fate,
+}
+
+struct BrokerState {
+    queue: VecDeque<Task>,
+    shutdown: bool,
+}
+
+type Broker = Arc<(Mutex<BrokerState>, Condvar)>;
+
+/// The pool: broker + workers + collector. Workers are spawned on a
+/// caller-provided scope and exit when the pool drops (shutdown flag) or
+/// the collector disappears.
+pub(crate) struct WorkerPool {
+    broker: Broker,
+    results: mpsc::Receiver<Completion>,
+    in_flight: usize,
+    stats: AsyncStats,
+}
+
+impl WorkerPool {
+    pub(crate) fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        objective: Objective<'env>,
+        workers: usize,
+    ) -> Self {
+        let broker: Broker = Arc::new((
+            Mutex::new(BrokerState { queue: VecDeque::new(), shutdown: false }),
+            Condvar::new(),
+        ));
+        let (tx, rx) = mpsc::channel::<Completion>();
+        for _ in 0..workers.max(1) {
+            let broker = broker.clone();
+            let tx = tx.clone();
+            scope.spawn(move || worker_loop(&broker, objective, &tx));
+        }
+        Self { broker, results: rx, in_flight: 0, stats: AsyncStats::default() }
+    }
+
+    pub(crate) fn submit_task(&mut self, task: Task) {
+        let (lock, cv) = &*self.broker;
+        lock.lock().unwrap().queue.push_back(task);
+        cv.notify_one();
+        self.in_flight += 1;
+        self.stats.submitted += 1;
+        self.stats.max_in_flight = self.stats.max_in_flight.max(self.in_flight);
+    }
+
+    pub(crate) fn poll(&mut self, timeout: Duration) -> Vec<Completion> {
+        let mut out = Vec::new();
+        if self.in_flight == 0 {
+            return out;
+        }
+        match self.results.recv_timeout(timeout) {
+            Ok(c) => out.push(c),
+            Err(mpsc::RecvTimeoutError::Timeout) => return out,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Every worker is gone (the objective panicked): nothing
+                // will ever arrive. Zero the in-flight count so callers
+                // stop waiting — the scope join propagates the panic.
+                self.in_flight = 0;
+                return out;
+            }
+        }
+        // Drain everything else that's already ready.
+        while let Ok(c) = self.results.try_recv() {
+            out.push(c);
+        }
+        self.in_flight -= out.len();
+        for c in &out {
+            match c.status {
+                CompletionStatus::Done(_) => self.stats.completed += 1,
+                CompletionStatus::Failed => self.stats.failed += 1,
+                CompletionStatus::Lost(_) => self.stats.lost += 1,
+            }
+        }
+        out.sort_by_key(|c| c.id);
+        out
+    }
+
+    pub(crate) fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    pub(crate) fn cancel_pending(&mut self) -> Vec<TaskId> {
+        let (lock, _) = &*self.broker;
+        let cancelled: Vec<TaskId> =
+            lock.lock().unwrap().queue.drain(..).map(|t| t.id).collect();
+        self.in_flight -= cancelled.len();
+        self.stats.cancelled += cancelled.len() as u64;
+        cancelled
+    }
+
+    pub(crate) fn stats(&self) -> AsyncStats {
+        self.stats.clone()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.broker;
+        let mut st = lock.lock().unwrap();
+        st.shutdown = true;
+        // Nobody will collect queued work now — don't make the scope join
+        // wait for evaluations whose results would be thrown away.
+        st.queue.clear();
+        cv.notify_all();
+    }
+}
+
+fn worker_loop(broker: &Broker, objective: Objective<'_>, tx: &mpsc::Sender<Completion>) {
+    loop {
+        let task = {
+            let (lock, cv) = &**broker;
+            let mut st = lock.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    break Some(t);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = cv.wait(st).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        let completion = match task.fate {
+            Fate::Deliver { delay } => {
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                let queue_wait_ms = task.submitted_at.elapsed().as_secs_f64() * 1e3;
+                let t0 = Instant::now();
+                let value = objective(&task.config);
+                let eval_ms = t0.elapsed().as_secs_f64() * 1e3;
+                Completion {
+                    id: task.id,
+                    config: task.config,
+                    status: match value {
+                        Some(v) => CompletionStatus::Done(v),
+                        None => CompletionStatus::Failed,
+                    },
+                    queue_wait_ms,
+                    eval_ms,
+                }
+            }
+            Fate::Crash { delay } => {
+                std::thread::sleep(delay);
+                Completion {
+                    id: task.id,
+                    config: task.config,
+                    status: CompletionStatus::Lost(LossReason::Crashed),
+                    queue_wait_ms: task.submitted_at.elapsed().as_secs_f64() * 1e3,
+                    eval_ms: 0.0,
+                }
+            }
+            Fate::TimeOut { delay } => {
+                std::thread::sleep(delay);
+                Completion {
+                    id: task.id,
+                    config: task.config,
+                    status: CompletionStatus::Lost(LossReason::TimedOut),
+                    queue_wait_ms: task.submitted_at.elapsed().as_secs_f64() * 1e3,
+                    eval_ms: 0.0,
+                }
+            }
+        };
+        if tx.send(completion).is_err() {
+            return; // collector gone: the run is over
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+
+    fn cfg_i(i: i64) -> Config {
+        Config::new(vec![("i".into(), ParamValue::Int(i))])
+    }
+
+    fn deliver(id: TaskId, i: i64) -> Task {
+        Task {
+            id,
+            config: cfg_i(i),
+            submitted_at: Instant::now(),
+            fate: Fate::Deliver { delay: Duration::ZERO },
+        }
+    }
+
+    #[test]
+    fn pool_runs_tasks_and_counts() {
+        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64 * 2.0);
+        std::thread::scope(|scope| {
+            let mut pool = WorkerPool::spawn(scope, &objective, 3);
+            for i in 0..10 {
+                pool.submit_task(deliver(i, i as i64));
+            }
+            assert_eq!(pool.in_flight(), 10);
+            let mut got = Vec::new();
+            while pool.in_flight() > 0 {
+                got.extend(pool.poll(Duration::from_secs(10)));
+            }
+            assert_eq!(got.len(), 10);
+            // poll sorts each drain by id; a full drain is checkable per batch
+            for c in &got {
+                match c.status {
+                    CompletionStatus::Done(v) => {
+                        assert_eq!(v, c.config.get_i64("i").unwrap() as f64 * 2.0)
+                    }
+                    other => panic!("unexpected status {other:?}"),
+                }
+            }
+            let stats = pool.stats();
+            assert_eq!(stats.submitted, 10);
+            assert_eq!(stats.completed, 10);
+            assert_eq!(stats.max_in_flight, 10);
+        });
+    }
+
+    #[test]
+    fn lost_fates_report_explicitly() {
+        let objective = |_: &Config| Some(1.0);
+        std::thread::scope(|scope| {
+            let mut pool = WorkerPool::spawn(scope, &objective, 2);
+            pool.submit_task(Task {
+                id: 0,
+                config: cfg_i(0),
+                submitted_at: Instant::now(),
+                fate: Fate::Crash { delay: Duration::from_millis(1) },
+            });
+            pool.submit_task(Task {
+                id: 1,
+                config: cfg_i(1),
+                submitted_at: Instant::now(),
+                fate: Fate::TimeOut { delay: Duration::from_millis(1) },
+            });
+            let mut got = Vec::new();
+            while pool.in_flight() > 0 {
+                got.extend(pool.poll(Duration::from_secs(10)));
+            }
+            got.sort_by_key(|c| c.id);
+            assert_eq!(got[0].status, CompletionStatus::Lost(LossReason::Crashed));
+            assert_eq!(got[1].status, CompletionStatus::Lost(LossReason::TimedOut));
+            assert_eq!(pool.stats().lost, 2);
+        });
+    }
+
+    #[test]
+    fn cancel_pending_withdraws_queued_work() {
+        // A single worker stuck on a slow task leaves the rest queued.
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let started = AtomicBool::new(false);
+        let objective = |c: &Config| {
+            if c.get_i64("i").unwrap() == 0 {
+                started.store(true, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(80));
+            }
+            Some(1.0)
+        };
+        std::thread::scope(|scope| {
+            let mut pool = WorkerPool::spawn(scope, &objective, 1);
+            for i in 0..5 {
+                pool.submit_task(deliver(i, i as i64));
+            }
+            // Wait until the worker has claimed task 0, then cancel the rest.
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while !started.load(Ordering::SeqCst) && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let cancelled = pool.cancel_pending();
+            assert!(!cancelled.is_empty(), "queued tasks must be cancellable");
+            assert!(!cancelled.contains(&0), "running task is not cancellable");
+            let mut got = Vec::new();
+            while pool.in_flight() > 0 {
+                got.extend(pool.poll(Duration::from_secs(10)));
+            }
+            assert_eq!(got.len() + cancelled.len(), 5);
+            assert_eq!(pool.stats().cancelled, cancelled.len() as u64);
+        });
+    }
+}

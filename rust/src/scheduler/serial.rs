@@ -1,7 +1,15 @@
-//! Serial scheduler — the paper's Listing 3 skeleton.
+//! Serial scheduler — the paper's Listing 3 skeleton, in both contracts:
+//! the batch-synchronous [`SerialScheduler`] and the submit/poll adapter
+//! [`SerialAsyncScheduler`] (one queued evaluation per poll, fully
+//! deterministic — the reference implementation for event-loop tests).
 
-use super::{BatchResult, Objective, Scheduler};
+use super::{
+    AsyncScheduler, AsyncStats, BatchResult, Completion, CompletionStatus, Objective, Scheduler,
+    TaskId,
+};
 use crate::space::Config;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 pub struct SerialScheduler;
 
@@ -19,6 +27,77 @@ impl Scheduler for SerialScheduler {
 
     fn name(&self) -> &'static str {
         "serial"
+    }
+}
+
+/// Submit/poll adapter over in-line evaluation: `submit` only queues;
+/// each `poll` runs exactly one task to completion. Nothing is ever lost,
+/// so every completion is `Done`/`Failed` and runs are deterministic.
+pub struct SerialAsyncScheduler<'a> {
+    objective: Objective<'a>,
+    queue: VecDeque<(TaskId, Config, Instant)>,
+    next_id: TaskId,
+    stats: AsyncStats,
+}
+
+impl<'a> SerialAsyncScheduler<'a> {
+    pub fn new(objective: Objective<'a>) -> Self {
+        Self { objective, queue: VecDeque::new(), next_id: 0, stats: AsyncStats::default() }
+    }
+}
+
+impl AsyncScheduler for SerialAsyncScheduler<'_> {
+    fn submit(&mut self, configs: &[Config]) -> Vec<TaskId> {
+        configs
+            .iter()
+            .map(|cfg| {
+                let id = self.next_id;
+                self.next_id += 1;
+                self.queue.push_back((id, cfg.clone(), Instant::now()));
+                self.stats.submitted += 1;
+                self.stats.max_in_flight = self.stats.max_in_flight.max(self.queue.len());
+                id
+            })
+            .collect()
+    }
+
+    fn poll(&mut self, _timeout: Duration) -> Vec<Completion> {
+        let Some((id, config, submitted_at)) = self.queue.pop_front() else {
+            return Vec::new();
+        };
+        let queue_wait_ms = submitted_at.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let value = (self.objective)(&config);
+        let eval_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let status = match value {
+            Some(v) => {
+                self.stats.completed += 1;
+                CompletionStatus::Done(v)
+            }
+            None => {
+                self.stats.failed += 1;
+                CompletionStatus::Failed
+            }
+        };
+        vec![Completion { id, config, status, queue_wait_ms, eval_ms }]
+    }
+
+    fn in_flight(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn cancel_pending(&mut self) -> Vec<TaskId> {
+        let cancelled: Vec<TaskId> = self.queue.drain(..).map(|(id, _, _)| id).collect();
+        self.stats.cancelled += cancelled.len() as u64;
+        cancelled
+    }
+
+    fn stats(&self) -> AsyncStats {
+        self.stats.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "serial-async"
     }
 }
 
@@ -60,5 +139,37 @@ mod tests {
         );
         assert_eq!(res.len(), 2);
         assert_eq!(res.evals, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn async_adapter_polls_one_at_a_time_in_order() {
+        let objective = |cfg: &Config| cfg.get_f64("x");
+        let batch: Vec<Config> = (0..3)
+            .map(|i| Config::new(vec![("x".into(), ParamValue::F64(i as f64))]))
+            .collect();
+        let mut s = SerialAsyncScheduler::new(&objective);
+        let ids = s.submit(&batch);
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(s.in_flight(), 3);
+        for want in 0..3 {
+            let comps = s.poll(Duration::ZERO);
+            assert_eq!(comps.len(), 1);
+            assert_eq!(comps[0].id, want as TaskId);
+            assert_eq!(comps[0].status, CompletionStatus::Done(want as f64));
+        }
+        assert_eq!(s.in_flight(), 0);
+        assert!(s.poll(Duration::ZERO).is_empty());
+        assert_eq!(s.stats().completed, 3);
+    }
+
+    #[test]
+    fn async_adapter_cancels_queue() {
+        let objective = |_: &Config| Some(1.0);
+        let mut s = SerialAsyncScheduler::new(&objective);
+        s.submit(&[Config::default(), Config::default()]);
+        let cancelled = s.cancel_pending();
+        assert_eq!(cancelled, vec![0, 1]);
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.stats().cancelled, 2);
     }
 }

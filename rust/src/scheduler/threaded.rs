@@ -1,10 +1,19 @@
 //! Local thread-pool scheduler ("to use all cores in local machine,
 //! threading can be used to evaluate a set of values" — paper §2.2).
+//!
+//! The engine is [`ThreadedAsyncScheduler`]: a persistent worker pool fed
+//! through a broker queue and drained over a channel ([`super::pool`]) —
+//! workers are spawned once per run, not per batch. The batch-synchronous
+//! [`ThreadedScheduler`] is now a thin special case: spawn the pool,
+//! submit the whole batch, drain to completion.
 
-use super::{BatchResult, Objective, Scheduler};
+use super::pool::{Fate, Task, WorkerPool};
+use super::{
+    AsyncScheduler, AsyncStats, BatchResult, Completion, CompletionStatus, Objective, Scheduler,
+    TaskId,
+};
 use crate::space::Config;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 pub struct ThreadedScheduler {
     workers: usize,
@@ -21,38 +30,83 @@ impl Scheduler for ThreadedScheduler {
         // The paper: "maximum level of parallelism per job is decided by the
         // size of the batch".
         let workers = self.workers.min(batch.len()).max(1);
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, Option<f64>)>();
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                let next = &next;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= batch.len() {
-                        break;
-                    }
-                    let v = objective(&batch[i]);
-                    if tx.send((i, v)).is_err() {
-                        break;
-                    }
-                });
+            let mut engine = ThreadedAsyncScheduler::spawn(scope, objective, workers);
+            engine.submit(batch);
+            let completions = engine.drain(Duration::from_secs(24 * 3600));
+            // Results arrive out of order; keep arrival order (the optimizer
+            // matches on params, not position — the paper's contract).
+            let mut out = BatchResult::default();
+            for c in completions {
+                if let CompletionStatus::Done(v) = c.status {
+                    out.push(c.config, v);
+                }
             }
-        });
-        drop(tx);
-        // Results arrive out of order; keep arrival order (the optimizer
-        // matches on params, not position — the paper's contract).
-        let mut out = BatchResult::default();
-        for (i, v) in rx {
-            if let Some(v) = v {
-                out.push(batch[i].clone(), v);
-            }
-        }
-        out
+            out
+        })
     }
 
     fn name(&self) -> &'static str {
         "threaded"
+    }
+}
+
+/// Submit/poll engine over a persistent local worker pool. Tasks are never
+/// lost here (no fault injection): every submission completes as
+/// `Done`/`Failed`.
+pub struct ThreadedAsyncScheduler {
+    pool: WorkerPool,
+    next_id: TaskId,
+}
+
+impl ThreadedAsyncScheduler {
+    /// Spawn `workers` pool threads on `scope`; they borrow `objective`
+    /// until the scope ends.
+    pub fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        objective: Objective<'env>,
+        workers: usize,
+    ) -> Self {
+        Self { pool: WorkerPool::spawn(scope, objective, workers), next_id: 0 }
+    }
+}
+
+impl AsyncScheduler for ThreadedAsyncScheduler {
+    fn submit(&mut self, configs: &[Config]) -> Vec<TaskId> {
+        configs
+            .iter()
+            .map(|cfg| {
+                let id = self.next_id;
+                self.next_id += 1;
+                self.pool.submit_task(Task {
+                    id,
+                    config: cfg.clone(),
+                    submitted_at: Instant::now(),
+                    fate: Fate::Deliver { delay: Duration::ZERO },
+                });
+                id
+            })
+            .collect()
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Vec<Completion> {
+        self.pool.poll(timeout)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pool.in_flight()
+    }
+
+    fn cancel_pending(&mut self) -> Vec<TaskId> {
+        self.pool.cancel_pending()
+    }
+
+    fn stats(&self) -> AsyncStats {
+        self.pool.stats()
+    }
+
+    fn name(&self) -> &'static str {
+        "threaded-async"
     }
 }
 
@@ -119,5 +173,48 @@ mod tests {
         let mut s = ThreadedScheduler::new(1);
         let res = s.evaluate(&|cfg| Some(cfg.get_i64("i").unwrap() as f64), &batch);
         assert_eq!(res.len(), 5);
+    }
+
+    #[test]
+    fn async_engine_overlaps_submissions() {
+        // Submit in two waves without waiting for the first: 8 sleepy tasks
+        // across 8 workers still finish in ~1 task's wall time.
+        let objective = |_: &Config| {
+            std::thread::sleep(Duration::from_millis(30));
+            Some(1.0)
+        };
+        std::thread::scope(|scope| {
+            let mut s = ThreadedAsyncScheduler::spawn(scope, &objective, 8);
+            let t = Instant::now();
+            s.submit(&batch_of(4));
+            s.submit(&batch_of(4));
+            assert_eq!(s.in_flight(), 8);
+            let comps = s.drain(Duration::from_secs(10));
+            let ms = t.elapsed().as_millis();
+            assert_eq!(comps.len(), 8);
+            assert!(ms < 160, "took {ms}ms — waves must overlap");
+            assert_eq!(s.stats().completed, 8);
+            assert_eq!(s.stats().max_in_flight, 8);
+        });
+    }
+
+    #[test]
+    fn poll_reports_queue_wait_and_eval_time() {
+        let objective = |_: &Config| {
+            std::thread::sleep(Duration::from_millis(10));
+            Some(1.0)
+        };
+        std::thread::scope(|scope| {
+            let mut s = ThreadedAsyncScheduler::spawn(scope, &objective, 1);
+            s.submit(&batch_of(2));
+            let comps = s.drain(Duration::from_secs(10));
+            assert_eq!(comps.len(), 2);
+            for c in &comps {
+                assert!(c.eval_ms >= 5.0, "eval took {}ms", c.eval_ms);
+            }
+            // The second task waited behind the first on the single worker.
+            let waited = comps.iter().map(|c| c.queue_wait_ms).fold(0f64, f64::max);
+            assert!(waited >= 5.0, "max queue wait {waited}ms");
+        });
     }
 }

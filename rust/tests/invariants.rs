@@ -1,8 +1,10 @@
 //! Cross-module property tests: invariants that must hold across the
-//! optimizer/scheduler/space boundaries for *any* search space.
+//! optimizer/scheduler/space boundaries for *any* search space — in both
+//! the batch-synchronous and async submit/poll contracts.
 
-use mango::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind};
-use mango::scheduler::{self, SchedulerKind};
+use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
+use mango::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
+use mango::scheduler::{self, CompletionStatus, SchedulerKind};
 use mango::space::{Config, Domain, ParamValue, SearchSpace};
 use mango::util::proptest::{check, Gen};
 use mango::util::rng::Pcg64;
@@ -123,6 +125,142 @@ fn schedulers_return_aligned_subsets() {
             match f(cfg) {
                 Some(want) if (want - v).abs() < 1e-12 => {}
                 other => return Err(format!("value mismatch: {v} vs {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Async schedulers must conclude every submission exactly once: ids are
+/// assigned in submission order, and the drained completions carry the
+/// submitted configs with correct values (or explicit loss events) — the
+/// fault-tolerance contract without silent drops.
+#[test]
+fn async_schedulers_conclude_every_submission() {
+    check("async scheduler conclude-once", 20, |g| {
+        let space = random_space(g);
+        let mut rng = Pcg64::new(g.rng().next_u64());
+        let batch = space.sample_n(&mut rng, g.usize_range(1, 12));
+        let kind = *g.choose(&[
+            SchedulerKind::Serial,
+            SchedulerKind::Threaded,
+            SchedulerKind::Celery,
+        ]);
+        // Keep the Celery sim lossy-but-fast: losses are fine (they must
+        // still *report*), eternal stragglers are not.
+        let celery = scheduler::celery::CelerySimConfig {
+            workers: 4,
+            base_latency_ms: 0.5,
+            straggler_prob: 0.1,
+            straggler_factor: 3.0,
+            crash_prob: 0.2,
+            result_timeout: std::time::Duration::from_secs(2),
+        };
+        let f = |cfg: &Config| {
+            let h = format!("{cfg}").len() as f64;
+            if (h as u64) % 7 == 0 {
+                None
+            } else {
+                Some(h * 0.1)
+            }
+        };
+        let seed = g.rng().next_u64();
+        std::thread::scope(|scope| {
+            let mut sched = scheduler::build_async(kind, 4, seed, Some(celery), scope, &f);
+            let ids = sched.submit(&batch);
+            if ids != (0..batch.len() as u64).collect::<Vec<_>>() {
+                return Err(format!("ids not sequential: {ids:?}"));
+            }
+            let comps = sched.drain(std::time::Duration::from_secs(30));
+            if comps.len() != batch.len() {
+                return Err(format!(
+                    "{} submissions, {} completions (silent drop?)",
+                    batch.len(),
+                    comps.len()
+                ));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for c in &comps {
+                if !seen.insert(c.id) {
+                    return Err(format!("task {} concluded twice", c.id));
+                }
+                if c.config != batch[c.id as usize] {
+                    return Err(format!("task {} returned a foreign config", c.id));
+                }
+                match c.status {
+                    CompletionStatus::Done(v) => match f(&c.config) {
+                        Some(want) if (want - v).abs() < 1e-12 => {}
+                        other => return Err(format!("value mismatch: {v} vs {other:?}")),
+                    },
+                    CompletionStatus::Failed => {
+                        if f(&c.config).is_some() {
+                            return Err("spurious failure".into());
+                        }
+                    }
+                    CompletionStatus::Lost(_) => {
+                        if kind != SchedulerKind::Celery {
+                            return Err(format!("{kind:?} must never lose work"));
+                        }
+                    }
+                }
+            }
+            if sched.in_flight() != 0 {
+                return Err("drain left work in flight".into());
+            }
+            Ok(())
+        })
+    });
+}
+
+/// The async event loop must uphold the coordinator invariants on *any*
+/// space: full budget on a reliable scheduler, one best-series point per
+/// concluded proposal (monotone in the user sense), and every evaluated
+/// config a valid member of the space.
+#[test]
+fn async_event_loop_invariants_hold_on_random_spaces() {
+    check("async event loop invariants", 12, |g| {
+        let space = random_space(g);
+        let iters = g.usize_range(2, 6);
+        let batch = g.usize_range(1, 4);
+        let budget = iters * batch;
+        let kind = *g.choose(&[OptimizerKind::Random, OptimizerKind::Tpe]);
+        let mut t = Tuner::new(
+            space.clone(),
+            TunerConfig {
+                optimizer: kind,
+                num_iterations: iters,
+                batch_size: batch,
+                backend: SurrogateBackend::Native,
+                mode: ExecutionMode::Async,
+                scheduler: *g.choose(&[SchedulerKind::Serial, SchedulerKind::Threaded]),
+                workers: 3,
+                seed: g.rng().next_u64(),
+                ..Default::default()
+            },
+        );
+        // Deterministic objective over the encoded config text.
+        let r = t
+            .maximize(|cfg: &Config| Some((format!("{cfg}").len() as f64 * 0.37).sin()))
+            .map_err(|e| e.to_string())?;
+        if r.evaluations != budget {
+            return Err(format!("reliable run: {} of {budget} evals", r.evaluations));
+        }
+        if r.best_series.len() != budget {
+            return Err(format!("series {} != budget {budget}", r.best_series.len()));
+        }
+        for w in r.best_series.windows(2) {
+            if w[1] < w[0] {
+                return Err("maximize best-series decreased".into());
+            }
+        }
+        for (cfg, _) in &r.history {
+            for p in space.params() {
+                let v = cfg
+                    .get(&p.name)
+                    .ok_or_else(|| format!("missing {}", p.name))?;
+                if !in_domain(&p.domain, v) {
+                    return Err(format!("{} = {v} outside {:?}", p.name, p.domain));
+                }
             }
         }
         Ok(())

@@ -1,7 +1,8 @@
 //! End-to-end coordinator tests over the real PJRT artifacts: full tuning
-//! runs exercising optimizer + scheduler + runtime together.
+//! runs exercising optimizer + scheduler + runtime together, in both the
+//! batch-synchronous and the async event-loop coordination modes.
 
-use mango::coordinator::{Tuner, TunerConfig};
+use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
 use mango::exp::workloads;
 use mango::optimizer::{OptimizerKind, SurrogateBackend};
 use mango::scheduler::celery::{CelerySimConfig, CelerySimScheduler};
@@ -128,4 +129,124 @@ fn tpe_full_run_on_wine_knn() {
     let obj = workload.objective.clone();
     let result = tuner.maximize(move |c| obj(c)).unwrap();
     assert!(result.best_objective > 0.90, "kNN tunable to >0.9, got {}", result.best_objective);
+}
+
+// ---------------- async event-loop mode ----------------
+
+/// A lossy cluster in async mode: crashes surface as `Lost` events and get
+/// retried, so the run recovers evaluations sync mode silently drops —
+/// while still converging (the `faulty_celery_cluster_still_converges`
+/// invariants ported to the event loop).
+#[test]
+fn async_faulty_celery_cluster_retries_and_converges() {
+    let workload = workloads::by_name("branin").unwrap();
+    let mut cfg = base(OptimizerKind::Hallucination, 20, 5, 13);
+    cfg.mode = ExecutionMode::Async;
+    cfg.scheduler = SchedulerKind::Celery;
+    cfg.workers = 4;
+    cfg.max_retries = 3;
+    cfg.celery = Some(CelerySimConfig {
+        workers: 4,
+        base_latency_ms: 0.5,
+        straggler_prob: 0.1,
+        straggler_factor: 5.0,
+        crash_prob: 0.25,
+        result_timeout: std::time::Duration::from_millis(400),
+    });
+    let mut tuner = Tuner::new(workload.space.clone(), cfg);
+    let obj = workload.objective.clone();
+    let result = tuner.minimize(move |c| obj(c)).unwrap();
+    let stats = result.scheduler_stats.as_ref().unwrap();
+    assert!(stats.lost > 0, "fault injection must fire");
+    assert!(result.retried > 0, "lost tasks must be resubmitted");
+    // Retries recover most of the budget sync mode would silently drop.
+    assert!(
+        result.evaluations > 80 && result.evaluations <= 100,
+        "retried async run should land close to the 100-eval budget, got {}",
+        result.evaluations
+    );
+    assert!(result.best_objective < 3.0, "still converges despite loss");
+}
+
+/// Retry exhaustion: a cluster that loses *everything* must terminate (no
+/// spin on eternally-lost work) and report the no-data error.
+#[test]
+fn async_retry_exhaustion_terminates_with_error() {
+    let workload = workloads::by_name("branin").unwrap();
+    let mut cfg = base(OptimizerKind::Random, 4, 2, 3);
+    cfg.backend = SurrogateBackend::Native;
+    cfg.mode = ExecutionMode::Async;
+    cfg.scheduler = SchedulerKind::Celery;
+    cfg.workers = 2;
+    cfg.max_retries = 1;
+    cfg.celery = Some(CelerySimConfig {
+        workers: 2,
+        base_latency_ms: 0.5,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        crash_prob: 1.0, // every task is lost, every retry too
+        result_timeout: std::time::Duration::from_secs(5),
+    });
+    let mut tuner = Tuner::new(workload.space.clone(), cfg);
+    let obj = workload.objective.clone();
+    let err = tuner.minimize(move |c| obj(c)).unwrap_err();
+    assert!(err.to_string().contains("no evaluation"), "got: {err}");
+}
+
+/// Partial-results invariant in async mode with retries disabled: losses
+/// reduce the evaluation count, but everything that did arrive is usable
+/// (the port of `batch_mode_with_partial_results`).
+#[test]
+fn async_partial_results_without_retries() {
+    let workload = workloads::by_name("branin").unwrap();
+    let mut cfg = base(OptimizerKind::Random, 10, 4, 7);
+    cfg.backend = SurrogateBackend::Native;
+    cfg.mode = ExecutionMode::Async;
+    cfg.scheduler = SchedulerKind::Celery;
+    cfg.workers = 4;
+    cfg.max_retries = 0;
+    cfg.celery = Some(CelerySimConfig {
+        workers: 4,
+        base_latency_ms: 0.5,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        crash_prob: 0.5,
+        result_timeout: std::time::Duration::from_secs(5),
+    });
+    let mut tuner = Tuner::new(workload.space.clone(), cfg);
+    let obj = workload.objective.clone();
+    let result = tuner.minimize(move |c| obj(c)).unwrap();
+    assert!(result.evaluations < 40, "some of the 40 proposals must be lost");
+    assert!(result.evaluations > 0, "but not all");
+    assert_eq!(
+        result.lost as usize + result.evaluations,
+        40,
+        "every proposal concludes exactly once: done or lost"
+    );
+    assert_eq!(result.retried, 0, "retries disabled");
+    // best_series has one point per concluded proposal, monotone for
+    // minimization in user sense.
+    assert_eq!(result.best_series.len(), 40);
+    for w in result.best_series.windows(2) {
+        assert!(w[1] <= w[0] || w[0].is_infinite());
+    }
+}
+
+/// The event loop is deterministic given a fixed seed (same optimum, same
+/// trajectory) — over the PJRT surrogate path like its sync counterpart.
+#[test]
+fn async_seeded_runs_reproduce_exactly() {
+    let workload = workloads::by_name("mixed_branin").unwrap();
+    let run = || {
+        let mut cfg = base(OptimizerKind::Hallucination, 10, 2, 77);
+        cfg.mode = ExecutionMode::Async;
+        let mut tuner = Tuner::new(workload.space.clone(), cfg);
+        let obj = workload.objective.clone();
+        tuner.minimize(move |c| obj(c)).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.best_objective, b.best_objective);
+    assert_eq!(a.best_series, b.best_series);
+    assert_eq!(a.best_params, b.best_params);
 }
