@@ -47,6 +47,9 @@ def lower_all(out_dir: str) -> dict:
     manifest = {
         "max_dim": model.MAX_DIM,
         "m_cand": model.M_CAND,
+        # Schema tag checked by the Rust loader: the f32[n,n] fit output /
+        # acquire input is the Cholesky factor, not K^{-1}.
+        "posterior": "chol",
         "n_variants": list(model.N_VARIANTS),
         "programs": {},
     }

@@ -29,7 +29,10 @@ def cholesky_lower_unblocked(a: jax.Array) -> jax.Array:
     not-yet-written columns (they already are zero).
 
     Diagonal entries are clamped at 1e-12 before the sqrt so padded /
-    near-singular inputs degrade gracefully instead of producing NaNs.
+    near-singular inputs degrade gracefully instead of producing NaNs; a
+    clamped pivot additionally zeroes its sub-diagonal column (the residual
+    there is rounding noise — dividing it by ~1e-6 would inject huge
+    off-diagonal entries), matching rust/src/linalg cholesky exactly.
     """
     n = a.shape[0]
     assert a.shape == (n, n)
@@ -39,37 +42,47 @@ def cholesky_lower_unblocked(a: jax.Array) -> jax.Array:
         lj = l[j, :]                       # row j: cols < j are final, >= j are 0
         v = a[:, j] - l @ lj               # (n,)
         d = jnp.sqrt(jnp.maximum(v[j], 1e-12))
-        col = jnp.where(idx > j, v / d, 0.0)
+        col = jnp.where((idx > j) & (v[j] >= 1e-12), v / d, 0.0)
         col = col.at[j].set(d)
         return l.at[:, j].set(col)
 
     return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
 
 
-def _chol_block(a: jax.Array) -> jax.Array:
+def _chol_block(a: jax.Array):
     """Unrolled Cholesky of one (BLOCK x BLOCK) diagonal panel.
 
     Indices are Python ints, so this traces to straight-line HLO with static
     slices — no while loop, XLA fuses it aggressively.
+
+    Returns (l, clamped) where clamped[j] marks a pivot that hit the 1e-12
+    clamp, so the caller's panel solve can zero the below-panel part of the
+    column exactly like the unblocked form zeroes its sub-diagonal.
     """
     b = a.shape[0]
     idx = jnp.arange(b)
     l = jnp.zeros_like(a)
+    clamped = []
     for j in range(b):
         lj = l[j, :]
         v = a[:, j] - l @ lj
+        ok = v[j] >= 1e-12
         d = jnp.sqrt(jnp.maximum(v[j], 1e-12))
-        col = jnp.where(idx > j, v / d, 0.0)
+        col = jnp.where((idx > j) & ok, v / d, 0.0)
         col = col.at[j].set(d)
         l = l.at[:, j].set(col)
-    return l
+        clamped.append(~ok)
+    return l, jnp.stack(clamped)
 
 
-def _solve_right_lower_t(ark: jax.Array, lkk: jax.Array) -> jax.Array:
+def _solve_right_lower_t(ark: jax.Array, lkk: jax.Array,
+                         clamped: jax.Array) -> jax.Array:
     """Solve X @ Lkk^T = Ark for X (Ark: (r, b), Lkk lower-tri (b, b)).
 
     Unrolled forward substitution over the b panel columns; each step is a
-    dense (r x j) @ (j,) matvec — MXU-shaped work, not gathers.
+    dense (r x j) @ (j,) matvec — MXU-shaped work, not gathers. Columns
+    whose panel pivot clamped are zeroed instead of divided by ~1e-6
+    (mirrors the unblocked form's rank-deficient handling).
     """
     b = lkk.shape[0]
     cols = []
@@ -78,7 +91,7 @@ def _solve_right_lower_t(ark: jax.Array, lkk: jax.Array) -> jax.Array:
         if j > 0:
             x_prev = jnp.stack(cols, axis=1)       # (r, j)
             acc = acc - x_prev @ lkk[j, :j]
-        cols.append(acc / lkk[j, j])
+        cols.append(jnp.where(clamped[j], jnp.zeros_like(acc), acc / lkk[j, j]))
     return jnp.stack(cols, axis=1)
 
 
@@ -107,12 +120,12 @@ def cholesky_lower_blocked(a: jax.Array, jitter: float = 0.0) -> jax.Array:
     work = a
     for k in range(0, n, BLOCK):
         akk = jax.lax.dynamic_slice(work, (k, k), (BLOCK, BLOCK))
-        lkk = _chol_block(akk)
+        lkk, clamped = _chol_block(akk)
         l = jax.lax.dynamic_update_slice(l, lkk, (k, k))
         rest = n - k - BLOCK
         if rest > 0:
             ark = jax.lax.dynamic_slice(work, (k + BLOCK, k), (rest, BLOCK))
-            x = _solve_right_lower_t(ark, lkk)      # (rest, BLOCK)
+            x = _solve_right_lower_t(ark, lkk, clamped)  # (rest, BLOCK)
             l = jax.lax.dynamic_update_slice(l, x, (k + BLOCK, k))
             att = jax.lax.dynamic_slice(work, (k + BLOCK, k + BLOCK), (rest, rest))
             att = att - x @ x.T
@@ -210,7 +223,11 @@ def solve_lower_t_blocked(l: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def spd_inverse_from_cholesky(l: jax.Array) -> jax.Array:
-    """K^{-1} = L^{-T} L^{-1} given the Cholesky factor L of K."""
+    """K^{-1} = L^{-T} L^{-1} given the Cholesky factor L of K.
+
+    Test oracle only: the L2 programs (compile/model.py) solve against L
+    directly and never materialize an inverse.
+    """
     n = l.shape[0]
     eye = jnp.eye(n, dtype=l.dtype)
     linv = solve_lower(l, eye)

@@ -6,8 +6,8 @@ set with the UCB acquisition.  We split these into two programs so the cubic
 fit runs once per posterior update while the matmul-only acquire runs per
 candidate chunk (MXU-friendly, no sequential loops):
 
-  gp_fit(x, y, mask, inv_ls, params)      -> (alpha, kinv, logdet)
-  gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+  gp_fit(x, y, mask, inv_ls, params)      -> (alpha, l, logdet)
+  gp_acquire(x, mask, xc, alpha, l, inv_ls, params)
                                           -> (ucb, mean, var, w)
 
 Static shapes (HLO is shape-monomorphic): N in N_VARIANTS observation slots,
@@ -20,9 +20,15 @@ candidate sets.  Masking contract:
     is exactly 0 there and they contribute nothing to the posterior;
   * unused feature dims carry inv_ls = 0 so they never affect distances.
 
+The posterior is inverse-free: gp_fit returns the lower Cholesky factor
+``l`` and gp_acquire computes ``w = K^{-1} k_c`` by two triangular solves
+against it — no explicit K^{-1} is ever materialized (mirrors
+rust/src/gp/fit_posterior; linalg.spd_inverse_from_cholesky survives only
+as a test oracle).
+
 ``params`` packs [amp, noise, beta] to keep the artifact arity small.
 The within-batch hallucination (GP-BUCB constant-liar) is a rank-1 update
-performed by the Rust coordinator on (kinv, w) — see rust/src/gp/.
+performed by the Rust coordinator on ``w`` — see rust/src/gp/.
 """
 
 import jax
@@ -38,13 +44,17 @@ N_VARIANTS = (64, 128, 256, 384, 512)
 
 
 def gp_fit(x, y, mask, inv_ls, params):
-    """Fit the GP posterior: returns (alpha, kinv, logdet).
+    """Fit the GP posterior: returns (alpha, l, logdet).
 
     x: (n, MAX_DIM) encoded configs (unit-cube scaled), padded with zeros.
     y: (n,) normalized objective values (zero-mean/unit-var on valid rows).
     mask: (n,) 1.0 valid / 0.0 padding.
     inv_ls: (MAX_DIM,) per-dim inverse lengthscales (0 for unused dims).
     params: (3,) [amp, noise, _unused].
+
+    ``l`` is the lower Cholesky factor of the regularized kernel; padded
+    rows are identity rows of K, hence identity rows of l, so the
+    triangular solves pass them through and alpha is exactly 0 there.
     """
     amp = params[0]
     noise = params[1]
@@ -54,17 +64,18 @@ def gp_fit(x, y, mask, inv_ls, params):
     m2 = mask[:, None] * mask[None, :]
     k = amp * corr * m2 + jnp.diag(noise * mask + (1.0 - mask))
     l = linalg.cholesky_lower(k)
-    kinv = linalg.spd_inverse_from_cholesky(l)
-    alpha = kinv @ (y * mask)
+    alpha = linalg.solve_lower_t(l, linalg.solve_lower(l, (y * mask)[:, None]))[:, 0]
     logdet = linalg.logdet_from_cholesky(l, mask)
-    return alpha, kinv, logdet
+    return alpha, l, logdet
 
 
-def gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params):
+def gp_acquire(x, mask, xc, alpha, l, inv_ls, params):
     """Score M_CAND candidates with posterior mean/var and UCB.
 
     Returns (ucb, mean, var, w) where w = K^{-1} k_c (needed by the Rust
-    coordinator for GP-BUCB rank-1 hallucination updates).
+    coordinator for GP-BUCB rank-1 hallucination updates), computed by two
+    triangular solves against the Cholesky factor ``l`` — never from a
+    materialized inverse.
     Maximization convention: the Rust side negates y for minimization.
     """
     amp = params[0]
@@ -73,7 +84,7 @@ def gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params):
     xcs = xc * inv_ls[None, :]
     kc = amp * rbf.rbf_matrix(xs, xcs) * mask[:, None]    # (n, m)
     mean = kc.T @ alpha                                    # (m,)
-    w = kinv @ kc                                          # (n, m)
+    w = linalg.solve_lower_t(l, linalg.solve_lower(l, kc))  # (n, m)
     var = jnp.maximum(amp - jnp.sum(kc * w, axis=0), 1e-10)
     ucb = mean + beta * jnp.sqrt(var)
     return ucb, mean, var, w
@@ -99,7 +110,7 @@ def acquire_spec(n: int, m: int = M_CAND):
         jax.ShapeDtypeStruct((n,), f),           # mask
         jax.ShapeDtypeStruct((m, MAX_DIM), f),   # xc
         jax.ShapeDtypeStruct((n,), f),           # alpha
-        jax.ShapeDtypeStruct((n, n), f),         # kinv
+        jax.ShapeDtypeStruct((n, n), f),         # l (lower Cholesky factor)
         jax.ShapeDtypeStruct((MAX_DIM,), f),     # inv_ls
         jax.ShapeDtypeStruct((3,), f),           # params
     )

@@ -37,7 +37,7 @@ def test_hlo_entry_is_tuple(lowered_small):
 def test_fit_shapes_in_text(lowered_small):
     fit_text, _ = lowered_small
     assert re.search(r"f32\[64,16\]", fit_text), "x param shape missing"
-    assert re.search(r"f32\[64,64\]", fit_text), "kinv output shape missing"
+    assert re.search(r"f32\[64,64\]", fit_text), "chol output shape missing"
 
 
 def test_check_no_custom_calls_raises():

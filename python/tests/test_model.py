@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from compile import model
+from compile import linalg, model
 from compile.kernels import ref
 
 jax.config.update("jax_platform_name", "cpu")
@@ -35,9 +35,9 @@ def _problem(seed, n_valid, n_slots, d_valid, m=64):
 
 
 def _run_pair(x, y, mask, xc, inv_ls, params):
-    alpha, kinv, logdet = model.gp_fit(x, y, mask, inv_ls, params)
-    ucb, mean, var, w = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
-    return ucb, mean, var, w, alpha, kinv, logdet
+    alpha, l, logdet = model.gp_fit(x, y, mask, inv_ls, params)
+    ucb, mean, var, w = model.gp_acquire(x, mask, xc, alpha, l, inv_ls, params)
+    return ucb, mean, var, w, alpha, l, logdet
 
 
 @pytest.mark.parametrize("n_valid,n_slots,d_valid", [
@@ -67,7 +67,7 @@ def test_padding_invariance():
 
 def test_padding_rows_have_zero_alpha():
     x, y, mask, xc, inv_ls, params = _problem(3, 10, 64, 3)
-    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    alpha, l, _ = model.gp_fit(x, y, mask, inv_ls, params)
     np.testing.assert_allclose(np.asarray(alpha)[10:], 0.0, atol=1e-6)
 
 
@@ -75,8 +75,8 @@ def test_posterior_interpolates_training_points():
     """With tiny noise, the posterior mean at training inputs ~= y."""
     x, y, mask, _, inv_ls, params = _problem(11, 25, 64, 4)
     xc = jnp.zeros((64, model.MAX_DIM), dtype=jnp.float32).at[:25].set(x[:25])
-    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
-    _, mean, var, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    alpha, l, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    _, mean, var, _ = model.gp_acquire(x, mask, xc, alpha, l, inv_ls, params)
     np.testing.assert_allclose(np.asarray(mean)[:25], np.asarray(y)[:25],
                                rtol=5e-2, atol=5e-2)
     assert float(jnp.max(var[:25])) < 0.05, "variance must collapse at data"
@@ -85,8 +85,8 @@ def test_posterior_interpolates_training_points():
 def test_variance_far_from_data_approaches_prior():
     x, y, mask, _, inv_ls, params = _problem(13, 20, 64, 3)
     xc = jnp.full((64, model.MAX_DIM), 50.0, dtype=jnp.float32)  # far away
-    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
-    _, mean, var, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    alpha, l, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    _, mean, var, _ = model.gp_acquire(x, mask, xc, alpha, l, inv_ls, params)
     np.testing.assert_allclose(np.asarray(var), AMP, rtol=1e-3)
     np.testing.assert_allclose(np.asarray(mean), 0.0, atol=1e-3)
 
@@ -99,20 +99,25 @@ def test_ucb_monotone_in_beta_hypothesis(seed, n_valid, d):
     x, y, mask, xc, inv_ls, _ = _problem(seed, n_valid, 64, d)
     p1 = jnp.array([AMP, NOISE, 1.0], dtype=jnp.float32)
     p2 = jnp.array([AMP, NOISE, 3.0], dtype=jnp.float32)
-    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, p1)
-    u1, _, _, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, p1)
-    u2, _, _, _ = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, p2)
+    alpha, l, _ = model.gp_fit(x, y, mask, inv_ls, p1)
+    u1, _, _, _ = model.gp_acquire(x, mask, xc, alpha, l, inv_ls, p1)
+    u2, _, _, _ = model.gp_acquire(x, mask, xc, alpha, l, inv_ls, p2)
     assert np.all(np.asarray(u2) >= np.asarray(u1) - 1e-6)
 
 
-def test_w_output_consistent_with_kinv():
-    """w = K^{-1} k_c — the contract the Rust hallucinator relies on."""
+def test_w_output_consistent_with_kinv_oracle():
+    """w = K^{-1} k_c — the contract the Rust hallucinator relies on.
+
+    gp_acquire computes w by triangular solves against l; the retained
+    spd_inverse_from_cholesky test oracle must agree.
+    """
     x, y, mask, xc, inv_ls, params = _problem(17, 40, 64, 6)
-    alpha, kinv, _ = model.gp_fit(x, y, mask, inv_ls, params)
-    _, _, _, w = model.gp_acquire(x, mask, xc, alpha, kinv, inv_ls, params)
+    alpha, l, _ = model.gp_fit(x, y, mask, inv_ls, params)
+    _, _, _, w = model.gp_acquire(x, mask, xc, alpha, l, inv_ls, params)
     xs = x * inv_ls[None, :]
     xcs = xc * inv_ls[None, :]
     kc = AMP * ref.rbf_matrix_ref(xs, xcs) * mask[:, None]
+    kinv = linalg.spd_inverse_from_cholesky(l)
     np.testing.assert_allclose(np.asarray(w), np.asarray(kinv @ kc),
                                rtol=1e-4, atol=1e-4)
 

@@ -1,0 +1,104 @@
+//! gp_refit: incremental (rank-1 Cholesky append) vs from-scratch posterior
+//! refits — the tentpole claim: at n=256 history with one new observation
+//! arriving per scheduling round, the incremental path must be >= 5x
+//! faster than refitting from scratch.
+//!
+//! Also times a k=4 append round (async event loops fold several
+//! completions per poll) and cross-checks that the incremental factor
+//! agrees with the scratch factor before trusting any timing.
+//!
+//! Run: `cargo bench --bench gp_refit`. Writes `BENCH_gp_refit.json` at the
+//! repo root (overwriting the committed placeholder).
+
+use mango::exp::benchkit::bench;
+use mango::gp::{normalize_y, GpParams, NativeGp, Surrogate};
+use mango::linalg::Matrix;
+use mango::util::rng::Pcg64;
+
+const N: usize = 256;
+const D: usize = 7;
+
+fn main() {
+    let mut rng = Pcg64::new(7);
+    let x = Matrix::from_fn(N, D, |_, _| rng.next_f64());
+    let y_raw: Vec<f64> = (0..N)
+        .map(|i| (9.0 * x.row(i)[0]).sin() + 0.2 * x.row(i)[1])
+        .collect();
+    let (y, _, _) = normalize_y(&y_raw);
+    let params = GpParams::new(D);
+    let mut gp = NativeGp;
+
+    // Warm states over the first N-1 / N-4 observations: each timed
+    // incremental round appends the remaining observations, which is the
+    // per-round surrogate cost at event-loop steady state.
+    let x_prev1 = Matrix::from_fn(N - 1, D, |i, j| x[(i, j)]);
+    let (_, warm1) = gp
+        .fit_incremental(&x_prev1, &y[..N - 1], &params, None)
+        .expect("warm fit (k=1)");
+    let x_prev4 = Matrix::from_fn(N - 4, D, |i, j| x[(i, j)]);
+    let (_, warm4) = gp
+        .fit_incremental(&x_prev4, &y[..N - 4], &params, None)
+        .expect("warm fit (k=4)");
+
+    // Correctness cross-check before trusting the timing.
+    let scratch_fit = gp.fit(&x, &y, &params).unwrap();
+    let (inc_fit, _) = gp
+        .fit_incremental(&x, &y, &params, Some(warm1.clone()))
+        .unwrap();
+    let max_dev = scratch_fit
+        .alpha
+        .iter()
+        .zip(&inc_fit.alpha)
+        .map(|(p, q)| (p - q).abs())
+        .fold(0.0f64, f64::max)
+        .max(scratch_fit.chol.max_abs_diff(&inc_fit.chol));
+    assert!(max_dev < 1e-8, "incremental deviates from scratch: {max_dev}");
+
+    let scratch = bench(&format!("scratch fit n={N}"), 2, 25, || {
+        std::hint::black_box(gp.fit(&x, &y, &params).unwrap());
+    });
+    // The state is moved in production; the per-iteration clone here is
+    // charged to the incremental side (conservative).
+    let inc1 = bench(&format!("incremental fit {}->{N} (1 append)", N - 1), 2, 25, || {
+        let st = warm1.clone();
+        std::hint::black_box(gp.fit_incremental(&x, &y, &params, Some(st)).unwrap());
+    });
+    let inc4 = bench(&format!("incremental fit {}->{N} (4 appends)", N - 4), 2, 25, || {
+        let st = warm4.clone();
+        std::hint::black_box(gp.fit_incremental(&x, &y, &params, Some(st)).unwrap());
+    });
+
+    let speedup1 = scratch.mean_us / inc1.mean_us.max(1e-9);
+    let speedup4 = scratch.mean_us / inc4.mean_us.max(1e-9);
+    println!("{}", scratch.row());
+    println!("{}", inc1.row());
+    println!("{}", inc4.row());
+    println!("speedup (1 new obs/round): {speedup1:.1}x (target >= 5x at n={N})");
+    println!("speedup (4 new obs/round): {speedup4:.1}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"gp_refit\",\n  \"n_history\": {N},\n  \"dims\": {D},\n  \
+         \"scratch_fit_mean_us\": {:.1},\n  \"scratch_fit_p50_us\": {:.1},\n  \
+         \"incremental_fit_1_append_mean_us\": {:.1},\n  \
+         \"incremental_fit_1_append_p50_us\": {:.1},\n  \
+         \"incremental_fit_4_appends_mean_us\": {:.1},\n  \
+         \"speedup_1_append\": {:.2},\n  \"speedup_4_appends\": {:.2},\n  \
+         \"target_speedup\": 5.0,\n  \"pass\": {},\n  \"max_abs_deviation\": {:e}\n}}\n",
+        scratch.mean_us,
+        scratch.p50_us,
+        inc1.mean_us,
+        inc1.p50_us,
+        inc4.mean_us,
+        speedup1,
+        speedup4,
+        speedup1 >= 5.0,
+        max_dev,
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gp_refit.json");
+    std::fs::write(out, &json).expect("write BENCH_gp_refit.json");
+    println!("wrote {out}");
+    assert!(
+        speedup1 >= 5.0,
+        "incremental refit speedup {speedup1:.1}x below the 5x target"
+    );
+}

@@ -3,6 +3,7 @@
 
 use crate::space::{Config, SearchSpace};
 use crate::util::rng::Pcg64;
+use crate::util::stats::nan_as_worst;
 
 /// Adaptive exploration weight (paper: "adaptive exploitation vs exploration
 /// trade-off as a function of search space size, number of evaluations, and
@@ -93,7 +94,11 @@ pub fn rank_gauss(y: &[f64]) -> Vec<f64> {
         return Vec::new();
     }
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| y[a].partial_cmp(&y[b]).unwrap());
+    // NaNs (possible via hand-edited history dumps that bypass the tuner's
+    // is_finite guard) sort as the worst rank instead of panicking — and
+    // instead of total_cmp's NaN-after-+inf order, which would hand the
+    // corrupt observation the best rank.
+    order.sort_by(|&a, &b| nan_as_worst(y[a]).total_cmp(&nan_as_worst(y[b])));
     let mut out = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -194,5 +199,20 @@ mod tests {
         assert_eq!(zt[0], zt[1]);
         assert!(zt[2] > zt[0]);
         assert!(rank_gauss(&[]).is_empty());
+    }
+
+    #[test]
+    fn rank_gauss_tolerates_nan_values() {
+        // Regression: the rank sort used partial_cmp().unwrap() and
+        // panicked on NaN (reachable via hand-edited history dumps that
+        // bypass the tuner's is_finite guard). A NaN must take the WORST
+        // rank (maximization), never the best; finite values keep their
+        // ordering and every output stays finite (it's a rank transform).
+        let y = [0.5, f64::NAN, -1.0, 2.0];
+        let z = rank_gauss(&y);
+        assert_eq!(z.len(), 4);
+        assert!(z[2] < z[0] && z[0] < z[3], "finite ordering preserved");
+        assert!(z[1] < z[2], "NaN must rank below every finite value");
+        assert!(z.iter().all(|v| v.is_finite()));
     }
 }

@@ -273,9 +273,14 @@ impl Tuner {
 
         for iteration in 0..cfg.num_iterations {
             let it_timer = Stopwatch::start();
-            // Surrogate history is capped to the artifact capacity: keep the
-            // most recent window (the GP forgets the oldest points).
-            let opt_view = history.recent(cfg.max_surrogate_obs);
+            // Surrogate history is capped to the smaller of the configured
+            // window and the backend's actual capacity (the PJRT artifact
+            // manifest, via Surrogate::max_obs): keep the most recent
+            // window (the GP forgets the oldest points). Note the GP's
+            // Cholesky cache stays incremental while this window grows
+            // append-only; once it starts sliding, each round refits.
+            let cap = cfg.max_surrogate_obs.min(optimizer.surrogate_capacity());
+            let opt_view = history.recent(cap);
             let batch = optimizer.propose(&opt_view, cfg.batch_size, &mut rng)?;
             anyhow::ensure!(!batch.is_empty(), "optimizer proposed an empty batch");
 
@@ -400,8 +405,13 @@ impl Tuner {
         proposal_idx: u64,
     ) -> Result<Option<Config>> {
         let pending_cfgs: Vec<Config> = pending.values().map(|p| p.config.clone()).collect();
-        // Leave surrogate room for the hallucinated pending observations.
-        let cap = cfg.max_surrogate_obs.saturating_sub(pending_cfgs.len()).max(1);
+        // Leave surrogate room for the hallucinated pending observations,
+        // inside the backend's actual capacity (Surrogate::max_obs).
+        let cap = cfg
+            .max_surrogate_obs
+            .min(optimizer.surrogate_capacity())
+            .saturating_sub(pending_cfgs.len())
+            .max(1);
         let opt_view = history.recent(cap);
         let mut rng = Pcg64::new(
             cfg.seed

@@ -11,7 +11,8 @@
 //! makes each batch step O(m·n + m·j) instead of a full O(n^3) refit:
 //! cov_j(c, b_j) = cov_0(c, b_j) - Σ_{i<j} r_c[i]·r_{b_j}[i], and
 //! cov_0(c, b_j) = k(c, b_j) - k_bᵀ(K^{-1} k_c) — where K^{-1} k_c is
-//! exactly the `w` matrix the acquire program already returns.
+//! exactly the `w` matrix acquire already returns (computed by triangular
+//! solves against the Cholesky factor; no explicit K^{-1} is ever formed).
 
 use super::kernel;
 use super::{AcquireOut, GpParams};

@@ -28,7 +28,7 @@ impl BinnedFeatures {
         let mut edges = Vec::with_capacity(d);
         for j in 0..d {
             let mut vals: Vec<f64> = train_idx.iter().map(|&i| data.x[(i, j)]).collect();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(|a, b| a.total_cmp(b));
             let mut e = Vec::with_capacity(n_bins);
             for b in 1..n_bins {
                 let pos = (b * n) / n_bins;

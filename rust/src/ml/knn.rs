@@ -82,7 +82,7 @@ impl Classifier for KnnClassifier {
         let mut dists: Vec<(f64, usize)> =
             self.train.iter().map(|(x, y)| (self.dist(&q, x), *y)).collect();
         let k = self.k.min(dists.len());
-        dists.select_nth_unstable_by(k.saturating_sub(1), |a, b| a.0.partial_cmp(&b.0).unwrap());
+        dists.select_nth_unstable_by(k.saturating_sub(1), |a, b| a.0.total_cmp(&b.0));
         let mut votes = vec![0.0; self.n_classes];
         for &(d, y) in dists.iter().take(k) {
             let w = match self.weighting {

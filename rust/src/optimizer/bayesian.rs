@@ -1,16 +1,29 @@
 //! Shared GP-UCB machinery for the two batch Bayesian algorithms:
-//! history encoding, y-normalization, surrogate fitting (with optional
-//! lengthscale selection by marginal likelihood), adaptive beta, and
-//! Monte-Carlo acquisition scoring.
+//! history encoding, y-normalization, incremental surrogate fitting (with
+//! optional lengthscale selection by marginal likelihood), adaptive beta,
+//! and Monte-Carlo acquisition scoring.
+//!
+//! Fits are *incremental*: [`BayesianCore`] keeps a persistent
+//! [`CholeskyState`] per kernel-hyperparameter key, so each scheduling
+//! round only pays O(n²) per new observation instead of an O(n³) refit
+//! (the tuner's surrogate step stays cheap relative to trial evaluation —
+//! the property Tune and Sherpa both call out as essential for parallel
+//! tuning to scale). A state is reused only while the history window grows
+//! append-only; `truncate_to_recent` windowing or a lengthscale retune
+//! transparently fall back to one from-scratch factorization.
 
 use super::{GpOptions, History, SurrogateBackend, YTransform};
 use crate::acq;
-use crate::gp::{normalize_y, AcquireOut, GpParams, NativeGp, Surrogate};
+use crate::gp::{normalize_y, AcquireOut, CholeskyState, FitOut, GpParams, NativeGp, Surrogate};
 use crate::linalg::Matrix;
 use crate::runtime::PjrtSurrogate;
 use crate::space::{Config, Encoder, SearchSpace};
 use crate::util::rng::Pcg64;
 use anyhow::Result;
+
+/// Upper bound on cached Cholesky states: the LML grid search probes 5
+/// fixed lengthscales; +1 covers the fixed-default parameters.
+const CHOL_CACHE_MAX: usize = 6;
 
 /// One fit-and-score round over the history: everything a batch-selection
 /// strategy needs.
@@ -30,6 +43,10 @@ pub struct BayesianCore {
     pub encoder: Encoder,
     pub opts: GpOptions,
     surrogate: Box<dyn Surrogate>,
+    /// Persistent Cholesky states, one per kernel-hyperparameter key seen
+    /// recently; each grows by rank-1 appends across rounds and is dropped
+    /// when its prefix breaks (windowing) or the cache overflows.
+    chol_cache: Vec<CholeskyState>,
     /// Iterations seen (drives the adaptive beta schedule).
     pub rounds: usize,
 }
@@ -41,17 +58,15 @@ impl BayesianCore {
             SurrogateBackend::Pjrt => Box::new(PjrtSurrogate::from_default_artifacts()?),
         };
         let encoder = Encoder::new(&space);
-        Ok(Self { space, encoder, opts, surrogate, rounds: 0 })
+        Ok(Self { space, encoder, opts, surrogate, chol_cache: Vec::new(), rounds: 0 })
     }
 
-    /// Max observations the surrogate can hold (PJRT artifacts are bounded).
+    /// Max observations the surrogate can hold, answered by the backend
+    /// itself ([`Surrogate::max_obs`]) — the PJRT backend reads its loaded
+    /// artifact manifest, so this can never drift from the actual artifact
+    /// capacity the way a hardcoded mirror could.
     pub fn max_obs(&self) -> usize {
-        // Mirror of PjrtSurrogate::max_obs without downcasting: the largest
-        // artifact variant. Native has no limit.
-        match self.opts.backend {
-            SurrogateBackend::Native => usize::MAX,
-            SurrogateBackend::Pjrt => 512,
-        }
+        self.surrogate.max_obs()
     }
 
     /// Encode history into a padded-free (n x d) matrix.
@@ -59,6 +74,22 @@ impl BayesianCore {
         let d = self.encoder.dims();
         let flat = self.encoder.encode_batch(history.configs());
         Matrix::from_vec(history.len(), d, flat)
+    }
+
+    /// Fit through the Cholesky cache: pop the state matching `params`,
+    /// extend it (or rebuild on a stale prefix), and store it back.
+    fn fit_cached(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut> {
+        let state = self
+            .chol_cache
+            .iter()
+            .position(|s| s.matches_params(params))
+            .map(|i| self.chol_cache.swap_remove(i));
+        let (fit, state) = self.surrogate.fit_incremental(x, y, params, state)?;
+        if self.chol_cache.len() >= CHOL_CACHE_MAX {
+            self.chol_cache.remove(0); // oldest key (grid keys re-insert every round)
+        }
+        self.chol_cache.push(state);
+        Ok(fit)
     }
 
     /// Fit the surrogate and score an MC candidate set.
@@ -85,14 +116,16 @@ impl BayesianCore {
         self.rounds += 1;
 
         // Lengthscale: fixed default or LML grid search (paper: Mango
-        // internally selects GP hyperparameters).
+        // internally selects GP hyperparameters). Each grid point keeps its
+        // own cached Cholesky state, so the whole grid stays incremental.
         let mut params = GpParams::new(d).with_beta(beta);
         params.noise = self.opts.noise;
         let fit = if self.opts.tune_lengthscale {
-            let mut best: Option<(f64, GpParams, crate::gp::FitOut)> = None;
+            let mut best: Option<(f64, GpParams, FitOut)> = None;
             for ls in [0.1, 0.2, 0.3, 0.5, 0.8] {
-                let p = GpParams::new(d).with_beta(beta).with_lengthscale(ls);
-                let f = self.surrogate.fit(&x_obs, &yn, &p)?;
+                let mut p = GpParams::new(d).with_beta(beta).with_lengthscale(ls);
+                p.noise = self.opts.noise;
+                let f = self.fit_cached(&x_obs, &yn, &p)?;
                 let lml = f.log_marginal_likelihood(&yn);
                 if best.as_ref().map_or(true, |(b, _, _)| lml > *b) {
                     best = Some((lml, p, f));
@@ -102,7 +135,7 @@ impl BayesianCore {
             params = p;
             f
         } else {
-            self.surrogate.fit(&x_obs, &yn, &params)?
+            self.fit_cached(&x_obs, &yn, &params)?
         };
 
         let candidates = acq::mc_candidates(&self.space, self.opts.mc_samples, rng);
@@ -178,5 +211,82 @@ mod tests {
         let s = core.fit_and_score(&h, 1, &mut rng).unwrap();
         let ls = 1.0 / s.params.inv_lengthscale[0];
         assert!([0.1, 0.2, 0.3, 0.5, 0.8].iter().any(|&v| (ls - v).abs() < 1e-9));
+    }
+
+    #[test]
+    fn max_obs_answers_from_the_backend() {
+        let space = svm_space();
+        let native = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        assert_eq!(native.max_obs(), usize::MAX, "native GP is unbounded");
+        let opts = GpOptions { backend: SurrogateBackend::Pjrt, ..Default::default() };
+        let pjrt = BayesianCore::new(space, opts).unwrap();
+        // Must equal whatever the surrogate reports (manifest capacity, or
+        // the fallback default when no artifacts are on disk) — not a
+        // hardcoded optimizer-side constant.
+        assert!(pjrt.max_obs() < usize::MAX, "pjrt artifacts are bounded");
+        assert!(pjrt.max_obs() >= 128);
+    }
+
+    /// The Cholesky cache must be a pure optimization: a core that reuses
+    /// its state across growing-history rounds produces *exactly* the same
+    /// scores as a fresh core fitting from scratch (the append path is
+    /// bit-identical arithmetic).
+    #[test]
+    fn chol_cache_matches_fresh_fits_exactly() {
+        let space = svm_space();
+        let opts = GpOptions { fixed_beta: Some(2.0), ..Default::default() };
+        let h1 = history_from(&space, 10, 21);
+        let mut h2 = h1.clone();
+        for cfg in space.sample_n(&mut Pcg64::new(22), 3) {
+            let v = -(cfg.get_f64("c").unwrap() - 50.0).abs();
+            h2.push(cfg, v);
+        }
+
+        let mut warm = BayesianCore::new(space.clone(), opts.clone()).unwrap();
+        warm.fit_and_score(&h1, 1, &mut Pcg64::new(30)).unwrap(); // primes the cache
+        let s_warm = warm.fit_and_score(&h2, 1, &mut Pcg64::new(31)).unwrap();
+
+        let mut fresh = BayesianCore::new(space, opts).unwrap();
+        let s_fresh = fresh.fit_and_score(&h2, 1, &mut Pcg64::new(31)).unwrap();
+
+        assert_eq!(s_warm.acq.mean, s_fresh.acq.mean);
+        assert_eq!(s_warm.acq.var, s_fresh.acq.var);
+        assert_eq!(s_warm.acq.ucb, s_fresh.acq.ucb);
+    }
+
+    /// Windowing (`truncate_to_recent` / `recent`) breaks the cached
+    /// prefix; the refit must be transparent and exact.
+    #[test]
+    fn window_shrink_invalidates_cache_transparently() {
+        let space = svm_space();
+        let opts = GpOptions { fixed_beta: Some(2.0), ..Default::default() };
+        let h = history_from(&space, 14, 23);
+        let shrunk = h.recent(9); // drops the 5 oldest observations
+
+        let mut warm = BayesianCore::new(space.clone(), opts.clone()).unwrap();
+        warm.fit_and_score(&h, 1, &mut Pcg64::new(40)).unwrap();
+        let s_warm = warm.fit_and_score(&shrunk, 1, &mut Pcg64::new(41)).unwrap();
+
+        let mut fresh = BayesianCore::new(space, opts).unwrap();
+        let s_fresh = fresh.fit_and_score(&shrunk, 1, &mut Pcg64::new(41)).unwrap();
+
+        assert_eq!(s_warm.acq.mean, s_fresh.acq.mean);
+        assert_eq!(s_warm.acq.var, s_fresh.acq.var);
+        assert_eq!(s_warm.acq.ucb, s_fresh.acq.ucb);
+    }
+
+    #[test]
+    fn grid_search_keeps_one_state_per_lengthscale() {
+        let space = svm_space();
+        let opts =
+            GpOptions { tune_lengthscale: true, fixed_beta: Some(2.0), ..Default::default() };
+        let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+        let h = history_from(&space, 10, 25);
+        core.fit_and_score(&h, 1, &mut Pcg64::new(50)).unwrap();
+        assert_eq!(core.chol_cache.len(), 5, "one cached state per grid point");
+        // A second round reuses all five without growing the cache.
+        core.fit_and_score(&h, 1, &mut Pcg64::new(51)).unwrap();
+        assert_eq!(core.chol_cache.len(), 5);
+        assert!(core.chol_cache.iter().all(|s| s.rows() == 10));
     }
 }

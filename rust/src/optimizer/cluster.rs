@@ -9,6 +9,7 @@ use super::{BatchOptimizer, History};
 use crate::linalg::Matrix;
 use crate::space::Config;
 use crate::util::rng::Pcg64;
+use crate::util::stats::nan_as_worst;
 use anyhow::Result;
 
 pub struct ClusteringOptimizer {
@@ -39,7 +40,11 @@ impl BatchOptimizer for ClusteringOptimizer {
 
         // Rank candidates by UCB, keep the top slice (>= 4 per cluster).
         let mut order: Vec<usize> = (0..m).collect();
-        order.sort_by(|&a, &b| scored.acq.ucb[b].partial_cmp(&scored.acq.ucb[a]).unwrap());
+        // A NaN UCB (e.g. from a hand-edited history dump) must sort as
+        // the worst candidate, not panic the run or outrank +inf.
+        order.sort_by(|&a, &b| {
+            nan_as_worst(scored.acq.ucb[b]).total_cmp(&nan_as_worst(scored.acq.ucb[a]))
+        });
         let keep = ((m as f64 * self.top_fraction) as usize)
             .max(batch_size * 4)
             .min(m);
@@ -78,6 +83,10 @@ impl BatchOptimizer for ClusteringOptimizer {
             batch.push(self.core.space.sample(rng));
         }
         Ok(batch)
+    }
+
+    fn surrogate_capacity(&self) -> usize {
+        self.core.max_obs()
     }
 
     fn name(&self) -> &'static str {
@@ -132,6 +141,21 @@ mod tests {
         let batch = opt.propose(&h, 1, &mut rng).unwrap();
         let c = batch[0].get_f64("c").unwrap();
         assert!((c - 30.0).abs() < 25.0, "proposal c = {c} too far from optimum 30");
+    }
+
+    #[test]
+    fn nan_history_value_does_not_panic() {
+        // A NaN objective can only reach the optimizer through a
+        // hand-edited history dump (the tuner rejects non-finite results);
+        // the UCB ranking sort must survive it.
+        let space = svm_space();
+        let core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let mut opt = ClusteringOptimizer::new(core);
+        let mut rng = Pcg64::new(29);
+        let mut h = seeded_history(9);
+        h.push(space.sample(&mut rng), f64::NAN);
+        let batch = opt.propose(&h, 3, &mut rng).unwrap();
+        assert_eq!(batch.len(), 3);
     }
 
     #[test]

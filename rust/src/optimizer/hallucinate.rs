@@ -49,6 +49,10 @@ impl BatchOptimizer for HallucinationOptimizer {
         Ok(batch)
     }
 
+    fn surrogate_capacity(&self) -> usize {
+        self.core.max_obs()
+    }
+
     fn name(&self) -> &'static str {
         "hallucination"
     }

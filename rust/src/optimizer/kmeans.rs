@@ -80,7 +80,7 @@ pub fn kmeans(rows: &Matrix, k: usize, rng: &mut Pcg64, max_iter: usize) -> KMea
                     .max_by(|&a, &b| {
                         let da = sq_dist(rows.row(a), centroids.row(assignment[a]));
                         let db = sq_dist(rows.row(b), centroids.row(assignment[b]));
-                        da.partial_cmp(&db).unwrap()
+                        da.total_cmp(&db)
                     })
                     .unwrap();
                 centroids.row_mut(c).copy_from_slice(rows.row(far));

@@ -123,8 +123,20 @@ pub trait BatchOptimizer {
         for cfg in pending {
             augmented.push(cfg.clone(), liar);
         }
+        // The hallucinated rows must still fit the surrogate: drop the
+        // oldest real observations rather than overflowing a bounded
+        // artifact backend (which would abort the whole run).
+        augmented.truncate_to_recent(self.surrogate_capacity());
         let batch = self.propose(&augmented, batch_size, rng)?;
         Ok(batch.into_iter().filter(|c| !pending.contains(c)).collect())
+    }
+
+    /// Largest history window the optimizer's surrogate can absorb in one
+    /// fit — the coordinator clamps its surrogate view to this, so a
+    /// configured window can never overflow a smaller artifact manifest.
+    /// `usize::MAX` for optimizers without a bounded surrogate.
+    fn surrogate_capacity(&self) -> usize {
+        usize::MAX
     }
 
     fn name(&self) -> &'static str;
@@ -322,6 +334,43 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn propose_pending_respects_surrogate_capacity() {
+        // The hallucinated view (history + liar rows) must be clamped to
+        // the surrogate's capacity, dropping the oldest real observations
+        // instead of overflowing a bounded artifact backend.
+        struct Probe {
+            seen: usize,
+        }
+        impl BatchOptimizer for Probe {
+            fn propose(
+                &mut self,
+                history: &History,
+                _batch_size: usize,
+                _rng: &mut Pcg64,
+            ) -> Result<Vec<Config>> {
+                self.seen = history.len();
+                Ok(Vec::new())
+            }
+            fn surrogate_capacity(&self) -> usize {
+                8
+            }
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+        }
+        let space = crate::space::svm_space();
+        let mut rng = Pcg64::new(5);
+        let mut h = History::new();
+        for cfg in space.sample_n(&mut rng, 10) {
+            h.push(cfg, 0.0);
+        }
+        let pending = space.sample_n(&mut rng, 4);
+        let mut probe = Probe { seen: 0 };
+        probe.propose_pending(&h, &pending, 1, &mut rng).unwrap();
+        assert_eq!(probe.seen, 8, "10 history + 4 liars clamped to capacity 8");
     }
 
     #[test]

@@ -66,6 +66,10 @@ impl BatchOptimizer for ThompsonOptimizer {
         Ok(batch)
     }
 
+    fn surrogate_capacity(&self) -> usize {
+        self.core.max_obs()
+    }
+
     fn name(&self) -> &'static str {
         "thompson"
     }

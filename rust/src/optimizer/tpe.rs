@@ -13,6 +13,7 @@
 use super::{BatchOptimizer, History};
 use crate::space::{Config, Domain, ParamValue, SearchSpace};
 use crate::util::rng::Pcg64;
+use crate::util::stats::nan_as_worst;
 use anyhow::Result;
 
 /// Fraction of observations considered "good".
@@ -94,7 +95,7 @@ impl Parzen {
                     .filter_map(|v| v.as_f64())
                     .map(|v| if log { v.max(1e-300).ln() } else { v })
                     .collect();
-                centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                centers.sort_by(|a, b| a.total_cmp(b));
                 // Adaptive widths (hyperopt's adaptive_parzen_normal): max
                 // distance to the sorted neighbours, bounds acting as
                 // virtual neighbours for the extremes, clipped to
@@ -184,8 +185,12 @@ impl BatchOptimizer for TpeOptimizer {
         // Split at the gamma quantile (maximization: good = highest values).
         let n_good = ((GAMMA * n as f64).ceil() as usize).clamp(2, 25);
         let mut order: Vec<usize> = (0..n).collect();
+        // NaN values (hand-edited history dumps bypass the tuner's
+        // is_finite guard) sort as the worst observations — into the "bad"
+        // Parzen set — instead of panicking or (total_cmp's raw order)
+        // landing above +inf in the "good" set.
         order.sort_by(|&a, &b| {
-            history.values()[b].partial_cmp(&history.values()[a]).unwrap()
+            nan_as_worst(history.values()[b]).total_cmp(&nan_as_worst(history.values()[a]))
         });
         let good: Vec<usize> = order[..n_good].to_vec();
         let bad: Vec<usize> = order[n_good..].to_vec();
@@ -227,7 +232,7 @@ impl BatchOptimizer for TpeOptimizer {
         for _ in 0..n_prior {
             push_scored(self.space.sample(rng), &dims);
         }
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.sort_by(|a, b| nan_as_worst(b.0).total_cmp(&nan_as_worst(a.0)));
 
         let mut batch: Vec<Config> = Vec::with_capacity(batch_size);
         for (_, cfg) in scored {
@@ -354,5 +359,20 @@ mod tests {
         let mut rng = Pcg64::new(6);
         let batch = opt.propose(&History::new(), 3, &mut rng).unwrap();
         assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn nan_history_value_does_not_panic() {
+        // Regression: the good/bad quantile split sorted with
+        // partial_cmp().unwrap() and panicked on NaN (reachable via
+        // hand-edited history dumps that bypass the tuner's is_finite
+        // guard). total_cmp sorts NaN deterministically instead.
+        let space = svm_space();
+        let mut opt = TpeOptimizer::new(space.clone());
+        let mut rng = Pcg64::new(77);
+        let mut h = quadratic_history(&space, 25, 3); // past N_STARTUP
+        h.push(space.sample(&mut rng), f64::NAN);
+        let batch = opt.propose(&h, 4, &mut rng).unwrap();
+        assert_eq!(batch.len(), 4);
     }
 }

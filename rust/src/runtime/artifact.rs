@@ -43,6 +43,18 @@ impl ArtifactManifest {
             .get("m_cand")
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow!("manifest missing m_cand"))?;
+        // Schema guard: the inverse-free posterior changed the meaning of
+        // the f32[n,n] fit output / acquire input (K^{-1} -> Cholesky L)
+        // without changing its shape, so stale artifacts would execute
+        // silently with wrong numerics. Refuse anything but the current
+        // schema tag.
+        let posterior = j.get("posterior").and_then(Json::as_str);
+        anyhow::ensure!(
+            posterior == Some("chol"),
+            "artifact manifest schema mismatch: expected posterior=\"chol\" \
+             (gp_fit emits / gp_acquire consumes the Cholesky factor), found \
+             {posterior:?} — regenerate with `make artifacts`"
+        );
         let programs = j
             .get("programs")
             .and_then(Json::as_obj)
@@ -115,7 +127,7 @@ mod tests {
         }
         write_manifest(
             &tmp,
-            r#"{"max_dim":16,"m_cand":512,"n_variants":[64,128],"programs":{
+            r#"{"max_dim":16,"m_cand":512,"posterior":"chol","n_variants":[64,128],"programs":{
                 "64":{"fit":"gp_fit_n64.hlo.txt","acquire":"gp_acquire_n64.hlo.txt"},
                 "128":{"fit":"gp_fit_n128.hlo.txt","acquire":"gp_acquire_n128.hlo.txt"}}}"#,
         );
@@ -136,10 +148,29 @@ mod tests {
         std::fs::create_dir_all(&tmp).unwrap();
         write_manifest(
             &tmp,
-            r#"{"max_dim":16,"m_cand":512,"programs":{
+            r#"{"max_dim":16,"m_cand":512,"posterior":"chol","programs":{
                 "64":{"fit":"nope.hlo.txt","acquire":"nope2.hlo.txt"}}}"#,
         );
         assert!(ArtifactManifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn legacy_kinv_manifest_is_rejected() {
+        // Pre-inverse-free artifacts emitted K^{-1} in the same f32[n,n]
+        // slot now holding the Cholesky factor; loading them must fail
+        // loudly, not execute with silently wrong posteriors.
+        let tmp = std::env::temp_dir().join(format!("mango_manifest_old_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        touch(&tmp, "gp_fit_n64.hlo.txt");
+        touch(&tmp, "gp_acquire_n64.hlo.txt");
+        write_manifest(
+            &tmp,
+            r#"{"max_dim":16,"m_cand":512,"programs":{
+                "64":{"fit":"gp_fit_n64.hlo.txt","acquire":"gp_acquire_n64.hlo.txt"}}}"#,
+        );
+        let err = ArtifactManifest::load(&tmp).unwrap_err();
+        assert!(err.to_string().contains("posterior"), "got: {err}");
         std::fs::remove_dir_all(&tmp).ok();
     }
 

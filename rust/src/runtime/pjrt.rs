@@ -23,7 +23,7 @@ mod xla_impl {
     //! give padded rows identity kernel rows, so they contribute nothing —
     //! see `python/compile/model.py`).
 
-    use crate::gp::{AcquireOut, FitOut, GpParams, Surrogate};
+    use crate::gp::{AcquireOut, CholeskyState, FitOut, GpParams, Surrogate};
     use crate::linalg::Matrix;
     use crate::runtime::artifact::ArtifactManifest;
     use anyhow::{Context, Result};
@@ -187,15 +187,34 @@ mod xla_impl {
                 Self::params_literal(params),
             ];
             let result = cv.fit.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-            let (alpha_l, kinv_l, logdet_l) = result.to_tuple3()?;
+            let (alpha_l, chol_l, logdet_l) = result.to_tuple3()?;
             let alpha_f32 = alpha_l.to_vec::<f32>()?;
-            let kinv_f32 = kinv_l.to_vec::<f32>()?;
+            let chol_f32 = chol_l.to_vec::<f32>()?;
             let logdet = logdet_l.to_vec::<f32>()?[0] as f64;
 
             self.fit_calls += 1;
             let alpha = alpha_f32[..n].iter().map(|&v| v as f64).collect();
-            let kinv = Matrix::from_fn(n, n, |i, j| kinv_f32[i * slots + j] as f64);
-            Ok(FitOut { alpha, kinv, logdet })
+            let chol = Matrix::from_fn(n, n, |i, j| chol_f32[i * slots + j] as f64);
+            Ok(FitOut { alpha, chol, logdet })
+        }
+
+        /// The factorization lives inside the AOT program — there is no
+        /// host-side append path, so incremental requests pay a full
+        /// artifact fit and just rebuild the state for the caller's cache.
+        fn fit_incremental(
+            &mut self,
+            x: &Matrix,
+            y: &[f64],
+            params: &GpParams,
+            _state: Option<CholeskyState>,
+        ) -> Result<(FitOut, CholeskyState)> {
+            let fit = Surrogate::fit(self, x, y, params)?;
+            let state = CholeskyState::from_fit(x, &fit, params);
+            Ok((fit, state))
+        }
+
+        fn max_obs(&self) -> usize {
+            self.manifest.max_obs()
         }
 
         fn acquire(
@@ -220,7 +239,7 @@ mod xla_impl {
             let slots = cv.n;
 
             // Observation-side literals are invariant across candidate chunks:
-            // build them once (§Perf: kinv alone is slots² floats).
+            // build them once (§Perf: the factor alone is slots² floats).
             let x_lit = lit_2d(&x_pad, slots, d)?;
             let mut mask = vec![0f32; slots];
             let mut alpha_pad = vec![0f32; slots];
@@ -230,13 +249,18 @@ mod xla_impl {
             }
             let mask_lit = xla::Literal::vec1(&mask);
             let alpha_lit = xla::Literal::vec1(&alpha_pad);
-            let mut kinv_pad = vec![0f32; slots * slots];
+            // Padded rows carry an identity factor row (diag 1) so the
+            // in-program triangular solves pass them through untouched.
+            let mut chol_pad = vec![0f32; slots * slots];
+            for i in n..slots {
+                chol_pad[i * slots + i] = 1.0;
+            }
             for i in 0..n {
                 for j in 0..n {
-                    kinv_pad[i * slots + j] = fit.kinv[(i, j)] as f32;
+                    chol_pad[i * slots + j] = fit.chol[(i, j)] as f32;
                 }
             }
-            let kinv_lit = lit_2d(&kinv_pad, slots, slots)?;
+            let chol_lit = lit_2d(&chol_pad, slots, slots)?;
 
             let mut ucb = Vec::with_capacity(m);
             let mut mean = Vec::with_capacity(m);
@@ -257,7 +281,7 @@ mod xla_impl {
                 }
                 let xc_lit = lit_2d(&xc_pad, m_cand, d)?;
                 let args: [&xla::Literal; 7] =
-                    [&x_lit, &mask_lit, &xc_lit, &alpha_lit, &kinv_lit, &inv_ls_lit, &params_lit];
+                    [&x_lit, &mask_lit, &xc_lit, &alpha_lit, &chol_lit, &inv_ls_lit, &params_lit];
                 let result = cv.acquire.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
                 let (ucb_l, mean_l, var_l, w_l) = result.to_tuple4()?;
                 let ucb_c = ucb_l.to_vec::<f32>()?;
@@ -295,7 +319,7 @@ mod fallback {
     //! bounds observation counts and sets the candidate chunk size, and
     //! `acquire_calls` counts chunks exactly as the real backend would.
 
-    use crate::gp::{AcquireOut, FitOut, GpParams, NativeGp, Surrogate};
+    use crate::gp::{AcquireOut, CholeskyState, FitOut, GpParams, NativeGp, Surrogate};
     use crate::linalg::Matrix;
     use crate::runtime::artifact::ArtifactManifest;
     use anyhow::Result;
@@ -321,11 +345,20 @@ mod fallback {
             Self::new(&crate::runtime::default_artifacts_dir())
         }
 
-        /// Unlike the real backend, a missing manifest is not an error: the
-        /// fallback still serves `SurrogateBackend::Pjrt` requests via the
-        /// native oracle (the two agree numerically by construction).
+        /// Unlike the real backend, a *missing* manifest is not an error:
+        /// the fallback still serves `SurrogateBackend::Pjrt` requests via
+        /// the native oracle (the two agree numerically by construction).
+        /// A manifest that is present but invalid — including the stale
+        /// kinv-era schema the `posterior` tag guards against — still
+        /// fails loudly, exactly like the real backend would, instead of
+        /// silently substituting assumed defaults for the artifact set's
+        /// real capacity.
         pub fn new(artifacts_dir: &Path) -> Result<Self> {
-            let manifest = ArtifactManifest::load(artifacts_dir).ok();
+            let manifest = if artifacts_dir.join("manifest.json").exists() {
+                Some(ArtifactManifest::load(artifacts_dir)?)
+            } else {
+                None
+            };
             let m_cand = manifest.as_ref().map(|m| m.m_cand).unwrap_or(DEFAULT_M_CAND);
             let max_obs = manifest.as_ref().map(|m| m.max_obs()).unwrap_or(DEFAULT_MAX_OBS);
             Ok(Self {
@@ -358,6 +391,29 @@ mod fallback {
             );
             self.fit_calls += 1;
             self.native.fit(x, y, params)
+        }
+
+        /// Incremental fits delegate to the native engine (the fallback
+        /// shares its numerics), under the same artifact-capacity contract.
+        fn fit_incremental(
+            &mut self,
+            x: &Matrix,
+            y: &[f64],
+            params: &GpParams,
+            state: Option<CholeskyState>,
+        ) -> Result<(FitOut, CholeskyState)> {
+            anyhow::ensure!(
+                x.rows() <= self.max_obs,
+                "{} observations exceed artifact capacity {}",
+                x.rows(),
+                self.max_obs
+            );
+            self.fit_calls += 1;
+            self.native.fit_incremental(x, y, params, state)
+        }
+
+        fn max_obs(&self) -> usize {
+            self.max_obs
         }
 
         fn acquire(

@@ -288,7 +288,7 @@ mod tests {
                         _ => None,
                     })
                     .collect();
-                values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                values.sort_by(|a, b| a.total_cmp(b));
                 assert_eq!(values, vec![2.0, 3.0], "{kind:?} values");
                 assert_eq!(s.stats().submitted, 2);
             });

@@ -28,11 +28,12 @@ pub fn std_dev_pop(xs: &[f64]) -> f64 {
     v.sqrt()
 }
 
-/// Quantile with linear interpolation, q in [0, 1]. NaNs not supported.
+/// Quantile with linear interpolation, q in [0, 1]. NaNs sort last
+/// (total order) instead of panicking.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "quantile of empty slice");
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -46,6 +47,18 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
 /// Median (q = 0.5).
 pub fn median(xs: &[f64]) -> f64 {
     quantile(xs, 0.5)
+}
+
+/// Sort key that treats NaN as the *worst* value (maximization convention):
+/// a corrupt objective (hand-edited history dumps bypass the tuner's
+/// is_finite guard) must never rank above real observations — `total_cmp`
+/// alone would order NaN after +inf and launder it into the best slot.
+pub fn nan_as_worst(v: f64) -> f64 {
+    if v.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        v
+    }
 }
 
 /// Index of the maximum (first on ties); None for empty input.

@@ -108,6 +108,46 @@ fn parity_large_chunked_candidates() {
 }
 
 #[test]
+fn incremental_fit_parity_and_capacity_contract() {
+    // The PJRT backend must serve the incremental-fit contract: a fit that
+    // reuses a CholeskyState over a prefix of the history must score
+    // candidates identically (within backend tolerance) to a native
+    // from-scratch fit, and max_obs must answer from the backend (manifest
+    // capacity or the fallback default), not a hardcoded mirror.
+    let (x, y, xc) = toy(40, 4, 11);
+    let (yn, _, _) = normalize_y(&y);
+    let params = GpParams::new(4);
+
+    let mut pjrt = PjrtSurrogate::from_default_artifacts().unwrap();
+    assert!(Surrogate::max_obs(&pjrt) >= 128, "artifact capacity too small");
+
+    let x0 = Matrix::from_fn(30, 4, |i, j| x[(i, j)]);
+    let (_, state) = pjrt.fit_incremental(&x0, &yn[..30], &params, None).unwrap();
+    let (fit_inc, state) = pjrt.fit_incremental(&x, &yn, &params, Some(state)).unwrap();
+    assert_eq!(state.rows(), 40);
+    let acq_inc = pjrt.acquire(&x, &fit_inc, &xc, &params).unwrap();
+
+    let mut native = NativeGp;
+    let fit_n = native.fit(&x, &yn, &params).unwrap();
+    let acq_n = native.acquire(&x, &fit_n, &xc, &params).unwrap();
+
+    for c in 0..xc.rows() {
+        assert!(
+            (acq_inc.mean[c] - acq_n.mean[c]).abs() < 2e-3,
+            "mean[{c}]: {} vs {}",
+            acq_inc.mean[c],
+            acq_n.mean[c]
+        );
+        assert!(
+            (acq_inc.var[c] - acq_n.var[c]).abs() < 2e-3,
+            "var[{c}]: {} vs {}",
+            acq_inc.var[c],
+            acq_n.var[c]
+        );
+    }
+}
+
+#[test]
 fn w_matrix_parity_supports_hallucination() {
     // The w output feeds BatchHallucinator; verify cross-backend agreement
     // and that hallucination on PJRT outputs matches native hallucination.
