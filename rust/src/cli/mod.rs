@@ -6,7 +6,7 @@ use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// Flags that take no value.
-const SWITCHES: [&str; 4] = ["json", "verbose", "tune-lengthscale", "help"];
+const SWITCHES: [&str; 5] = ["json", "verbose", "tune-lengthscale", "help", "resume"];
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
@@ -107,6 +107,12 @@ TUNE OPTIONS:
   --early-stop <n>         stop after n iterations without improvement
   --max-surrogate-obs <n>  history window the GP sees        [512]
   --tune-lengthscale       GP lengthscale by marginal likelihood
+  --journal <file.jsonl>   record a crash-safe run journal (starting a run
+                           truncates an existing file at this path)
+  --resume                 resume the run recorded in --journal (the journal
+                           header supplies the config; other tune flags are
+                           ignored); with a fixed seed the resumed run
+                           reproduces the uninterrupted result
   --json                   machine-readable output
 ";
 

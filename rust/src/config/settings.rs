@@ -38,6 +38,13 @@ pub struct RunConfig {
     pub async_window: usize,
     /// Async mode: resubmissions allowed per lost evaluation.
     pub max_retries: usize,
+    /// Crash-safe run journal path ("" = no persistence). The run appends
+    /// one JSONL event per proposal/submission/completion so it can be
+    /// resumed after a coordinator crash.
+    pub journal: String,
+    /// Resume from `journal` instead of starting fresh (requires an
+    /// existing journal written by a crashed or finished run).
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -58,6 +65,8 @@ impl Default for RunConfig {
             mode: "sync".into(),
             async_window: 0,
             max_retries: 2,
+            journal: String::new(),
+            resume: false,
         }
     }
 }
@@ -83,9 +92,11 @@ impl RunConfig {
                 "scheduler" => c.scheduler = str_(v, k)?,
                 "backend" => c.backend = str_(v, k)?,
                 "mode" => c.mode = str_(v, k)?,
+                "journal" => c.journal = str_(v, k)?,
                 "tune_lengthscale" => {
                     c.tune_lengthscale = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
                 }
+                "resume" => c.resume = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?,
                 _ => return Err(anyhow!("unknown run config key '{k}'")),
             }
         }
@@ -119,6 +130,9 @@ impl RunConfig {
         if self.max_surrogate_obs == 0 {
             return Err(anyhow!("max_surrogate_obs must be >= 1"));
         }
+        if self.resume && self.journal.is_empty() {
+            return Err(anyhow!("resume requires a journal path"));
+        }
         Ok(())
     }
 
@@ -139,6 +153,8 @@ impl RunConfig {
             ("mode", Json::Str(self.mode.clone())),
             ("async_window", Json::Num(self.async_window as f64)),
             ("max_retries", Json::Num(self.max_retries as f64)),
+            ("journal", Json::Str(self.journal.clone())),
+            ("resume", Json::Bool(self.resume)),
         ])
     }
 }
@@ -243,6 +259,21 @@ mod tests {
         assert!(
             RunConfig::from_json(&parse(r#"{"max_surrogate_obs": 0}"#).unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn journal_fields_parse_and_validate() {
+        let j = parse(r#"{"journal": "/tmp/run.jsonl", "resume": true}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.journal, "/tmp/run.jsonl");
+        assert!(c.resume);
+        // resume without a journal path is rejected loudly.
+        assert!(RunConfig::from_json(&parse(r#"{"resume": true}"#).unwrap()).is_err());
+        // journal alone (fresh journaled run) is fine.
+        let c = RunConfig::from_json(&parse(r#"{"journal": "j.jsonl"}"#).unwrap()).unwrap();
+        assert!(!c.resume);
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "journal fields survive the json round trip");
     }
 
     #[test]

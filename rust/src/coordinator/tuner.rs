@@ -16,10 +16,32 @@
 //!   (queue wait, eval wall, retries) lands in
 //!   [`TuningResult::completions`]. The total evaluation budget is
 //!   `num_iterations * batch_size` — identical to sync mode.
+//!
+//! **Crash safety.** [`Tuner::with_journal`] records every run event to an
+//! append-only JSONL journal ([`crate::persist`]): the header (space
+//! fingerprint, full config, seed, sense), each proposal (sync: with the
+//! shared RNG state and optimizer rounds counter after the propose), each
+//! submission, and each completion including `Lost` fates and retries.
+//! [`Tuner::resume_from`] rebuilds a tuner from the journal and continues
+//! where the process died: history, telemetry, and retry counters are
+//! replayed; in-flight-at-crash configs are re-enqueued in their original
+//! order with their surviving retry budget; the optimizer is rehydrated
+//! (adaptive-beta clock + an incrementally rebuilt GP `CholeskyState`,
+//! bit-identical to the crashed process's); and the scheduler's task-id
+//! counter continues past the journaled high-water mark. With a fixed seed
+//! and a deterministic scheduler, crash-at-any-point + resume reproduces
+//! the uninterrupted run's best config and `History` exactly
+//! (`rust/tests/recovery.rs`). Journal appends are flushed per line, so a
+//! kill loses at most the in-flight batch (sync) or nothing that had
+//! completed (async).
 
 use super::results::{CompletionOutcome, CompletionRecord, IterationRecord, TuningResult};
 use crate::config::settings::RunConfig;
 use crate::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
+use crate::persist::{
+    self, AsyncReplay, EventOutcome, JournalEvent, JournalWriter, RecoveredRun, Replay,
+    RunHeader, SenseTag, SyncReplay,
+};
 use crate::scheduler::{
     self, AsyncScheduler, BatchResult, Completion, CompletionStatus, SchedulerKind,
 };
@@ -28,6 +50,7 @@ use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// Per-config objective closure type (boxed form used by the CLI).
@@ -48,6 +71,14 @@ impl ExecutionMode {
             "sync" => Some(Self::Sync),
             "async" => Some(Self::Async),
             _ => None,
+        }
+    }
+
+    /// Inverse of [`from_str`](Self::from_str) (journal header round trip).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Sync => "sync",
+            Self::Async => "async",
         }
     }
 }
@@ -73,8 +104,11 @@ pub struct TunerConfig {
     pub seed: u64,
     pub backend: SurrogateBackend,
     pub tune_lengthscale: bool,
-    /// Stop after this many iterations without improvement (None = never).
-    /// Async mode counts `early_stop * batch_size` concluded proposals.
+    /// Stop after this many iterations without improvement (None = never;
+    /// `Some(0)` is clamped to `Some(1)` — the journal header encodes
+    /// "disabled" as 0, so 0 cannot also mean "stop immediately" without
+    /// a resumed run silently losing its early stop). Async mode counts
+    /// `early_stop * batch_size` concluded proposals.
     pub early_stop: Option<usize>,
     /// Largest history the surrogate sees (PJRT artifacts cap at 512).
     pub max_surrogate_obs: usize,
@@ -141,6 +175,35 @@ impl TunerConfig {
         })
     }
 
+    /// Inverse of [`from_run_config`](Self::from_run_config): the JSON-level
+    /// form recorded in the journal header so `Tuner::resume_from` can
+    /// rebuild the tuner without the caller re-specifying anything. The
+    /// `celery` fault-model override is process-local (not serializable)
+    /// and must be re-set by the caller after a resume if one was used.
+    pub fn to_run_config(&self) -> RunConfig {
+        RunConfig {
+            batch_size: self.batch_size,
+            num_iterations: self.num_iterations,
+            initial_random: self.initial_random,
+            optimizer: self.optimizer.as_str().into(),
+            scheduler: self.scheduler.as_str().into(),
+            workers: self.workers,
+            mc_samples: self.mc_samples,
+            seed: self.seed,
+            backend: self.backend.as_str().into(),
+            tune_lengthscale: self.tune_lengthscale,
+            // 0 encodes "disabled"; Some(0) is clamped so the round trip
+            // cannot turn a configured early stop into no early stop.
+            early_stop: self.early_stop.map_or(0, |n| n.max(1)),
+            max_surrogate_obs: self.max_surrogate_obs,
+            mode: self.mode.as_str().into(),
+            async_window: self.async_window,
+            max_retries: self.max_retries,
+            journal: String::new(),
+            resume: false,
+        }
+    }
+
     /// Effective in-flight window for async mode.
     fn window(&self) -> usize {
         let auto = self.batch_size.max(self.workers);
@@ -156,10 +219,55 @@ enum Sense {
     Minimize,
 }
 
+impl Sense {
+    fn tag(self) -> SenseTag {
+        match self {
+            Sense::Maximize => SenseTag::Maximize,
+            Sense::Minimize => SenseTag::Minimize,
+        }
+    }
+}
+
 /// Coordinator-side record of one in-flight evaluation.
 struct PendingTask {
     config: Config,
     retries: usize,
+    /// Stable proposal id — survives restarts (task ids are per-submission
+    /// and change when a lost/recovered task is re-enqueued; the journal
+    /// keys a proposal's lifecycle by `pid`).
+    pid: u64,
+}
+
+/// Append to the journal if one is active.
+fn jappend(journal: &mut Option<JournalWriter>, event: &JournalEvent) -> Result<()> {
+    if let Some(w) = journal.as_mut() {
+        w.append(event)?;
+    }
+    Ok(())
+}
+
+/// Append one best-so-far point and update the no-improvement streak.
+/// Shared by the live loops AND the journal replays: all four sites must
+/// perform the identical comparison, or a resumed run's early-stop
+/// trajectory could silently diverge from the uninterrupted run it is
+/// required to reproduce.
+fn push_best_point(
+    sense: Sense,
+    best_series: &mut Vec<f64>,
+    user_best: f64,
+    since_improvement: &mut usize,
+) {
+    best_series.push(user_best);
+    let improved = best_series.len() < 2
+        || match sense {
+            Sense::Maximize => {
+                best_series[best_series.len() - 1] > best_series[best_series.len() - 2]
+            }
+            Sense::Minimize => {
+                best_series[best_series.len() - 1] < best_series[best_series.len() - 2]
+            }
+        };
+    *since_improvement = if improved { 0 } else { *since_improvement + 1 };
 }
 
 /// The paper's Fig. 1 coordinator.
@@ -167,18 +275,60 @@ pub struct Tuner {
     space: SearchSpace,
     config: TunerConfig,
     /// Optional per-iteration callback (progress bars, early inspection).
+    /// On a resumed run it fires only for newly executed iterations.
     callback: Option<Box<dyn FnMut(&IterationRecord)>>,
+    /// Journal file for crash-safe runs (None = no persistence).
+    journal_path: Option<PathBuf>,
+    /// Replayed state from `resume_from`, consumed by the next run.
+    recovered: Option<RecoveredRun>,
 }
 
 impl Tuner {
     pub fn new(space: SearchSpace, config: TunerConfig) -> Self {
-        Self { space, config, callback: None }
+        Self { space, config, callback: None, journal_path: None, recovered: None }
     }
 
     /// Register a per-iteration callback.
     pub fn with_callback(mut self, cb: impl FnMut(&IterationRecord) + 'static) -> Self {
         self.callback = Some(Box::new(cb));
         self
+    }
+
+    /// Record this run to an append-only journal at `path` so it can be
+    /// resumed after a crash ([`Tuner::resume_from`]). Starting a run
+    /// truncates any existing file at `path` — resuming, not restarting,
+    /// requires going through `resume_from`.
+    pub fn with_journal(mut self, path: impl Into<PathBuf>) -> Self {
+        self.journal_path = Some(path.into());
+        self
+    }
+
+    /// Re-apply the Celery simulator's fault/latency override — it is
+    /// process-local (not serialized into the journal header), so a
+    /// resumed run that used one must set it again.
+    pub fn with_celery(mut self, celery: Option<scheduler::celery::CelerySimConfig>) -> Self {
+        self.config.celery = celery;
+        self
+    }
+
+    /// Rebuild a tuner from a crash-truncated run journal. The journal
+    /// header supplies the full [`TunerConfig`] (the caller only re-supplies
+    /// the space, which is validated against the journaled fingerprint and
+    /// refused on mismatch). The next `maximize`/`minimize` call (it must
+    /// match the journaled sense) replays the journal and continues the
+    /// run: with a fixed seed and a deterministic scheduler the final
+    /// result is identical to an uninterrupted run's.
+    pub fn resume_from(space: SearchSpace, path: &Path) -> Result<Self> {
+        let rec = persist::recover(path)?;
+        rec.validate_space(&space)?;
+        let config = TunerConfig::from_run_config(&rec.header.run)?;
+        Ok(Self {
+            space,
+            config,
+            callback: None,
+            journal_path: Some(path.to_path_buf()),
+            recovered: Some(rec),
+        })
     }
 
     pub fn config(&self) -> &TunerConfig {
@@ -202,22 +352,68 @@ impl Tuner {
         self.run_objective(Sense::Minimize, &objective)
     }
 
+    /// Open the journal writer (fresh or resumed) and take the replay
+    /// state. Refuses a sense that contradicts the journal header.
+    fn prepare_journal(&mut self, sense: Sense) -> Result<(Option<JournalWriter>, Option<Replay>)> {
+        let recovered = self.recovered.take();
+        if let Some(rec) = &recovered {
+            anyhow::ensure!(
+                rec.header.sense == sense.tag(),
+                "journal records a {} run — call the matching method on the resumed tuner",
+                rec.header.sense.as_str()
+            );
+        }
+        let journal = match (&self.journal_path, &recovered) {
+            (Some(path), Some(rec)) => Some(JournalWriter::resume(path, rec.valid_len)?),
+            (Some(path), None) => Some(JournalWriter::create(
+                path,
+                &RunHeader {
+                    space_fp: self.space.fingerprint(),
+                    sense: sense.tag(),
+                    run: self.config.to_run_config(),
+                },
+            )?),
+            (None, Some(_)) => {
+                return Err(anyhow!("recovered state without a journal path (use resume_from)"))
+            }
+            (None, None) => None,
+        };
+        Ok((journal, recovered.map(|r| r.replay)))
+    }
+
     fn run_objective(
         &mut self,
         sense: Sense,
         objective: &(dyn Fn(&Config) -> Option<f64> + Sync),
     ) -> Result<TuningResult> {
+        let (journal, replay) = self.prepare_journal(sense)?;
         match self.config.mode {
             ExecutionMode::Sync => {
+                let rep = match replay {
+                    None => None,
+                    Some(Replay::Sync(s)) => Some(s),
+                    Some(Replay::Async(_)) => {
+                        return Err(anyhow!("async-mode journal cannot resume a sync run"))
+                    }
+                };
                 let mut sched = scheduler::build_custom(
                     self.config.scheduler,
                     self.config.workers,
                     self.config.seed,
                     self.config.celery.clone(),
                 );
-                self.run(sense, &mut |batch| sched.evaluate(objective, batch))
+                self.run_sync(sense, &mut |batch| sched.evaluate(objective, batch), journal, rep)
             }
-            ExecutionMode::Async => self.run_async(sense, objective),
+            ExecutionMode::Async => {
+                let rep = match replay {
+                    None => None,
+                    Some(Replay::Async(a)) => Some(a),
+                    Some(Replay::Sync(_)) => {
+                        return Err(anyhow!("sync-mode journal cannot resume an async run"))
+                    }
+                };
+                self.run_async(sense, objective, journal, rep)
+            }
         }
     }
 
@@ -229,7 +425,7 @@ impl Tuner {
     where
         F: FnMut(&[Config]) -> BatchResult,
     {
-        self.run(Sense::Maximize, &mut batch_objective)
+        self.run_batch_mode(Sense::Maximize, &mut batch_objective)
     }
 
     /// Minimize with a user-supplied batch objective.
@@ -237,7 +433,25 @@ impl Tuner {
     where
         F: FnMut(&[Config]) -> BatchResult,
     {
-        self.run(Sense::Minimize, &mut batch_objective)
+        self.run_batch_mode(Sense::Minimize, &mut batch_objective)
+    }
+
+    fn run_batch_mode(
+        &mut self,
+        sense: Sense,
+        evaluate: &mut dyn FnMut(&[Config]) -> BatchResult,
+    ) -> Result<TuningResult> {
+        let (journal, replay) = self.prepare_journal(sense)?;
+        let rep = match replay {
+            None => None,
+            Some(Replay::Sync(s)) => Some(s),
+            Some(Replay::Async(_)) => {
+                return Err(anyhow!(
+                    "async-mode journal cannot resume a batch-objective (sync) run"
+                ))
+            }
+        };
+        self.run_sync(sense, evaluate, journal, rep)
     }
 
     fn gp_options(&self) -> GpOptions {
@@ -250,13 +464,17 @@ impl Tuner {
         }
     }
 
-    /// The batch-synchronous coordinator (one barrier per iteration).
-    fn run(
+    /// The batch-synchronous coordinator (one barrier per iteration),
+    /// with optional journaling and journal replay.
+    fn run_sync(
         &mut self,
         sense: Sense,
         evaluate: &mut dyn FnMut(&[Config]) -> BatchResult,
+        mut journal: Option<JournalWriter>,
+        replay: Option<SyncReplay>,
     ) -> Result<TuningResult> {
-        let cfg = &self.config;
+        let cfg = self.config.clone();
+        let early_stop = cfg.early_stop.map(|n| n.max(1));
         let opts = self.gp_options();
         let mut optimizer: Box<dyn BatchOptimizer> =
             optimizer::build(cfg.optimizer, &self.space, &opts)?;
@@ -270,27 +488,12 @@ impl Tuner {
         let mut since_improvement = 0usize;
         let mut best_so_far = f64::NEG_INFINITY; // internal sense
         let mut returned_total = 0usize; // running count: O(1) per iteration
+        let mut start_iter = 0usize;
+        let mut partial: Option<persist::recover::PartialRound> = None;
 
-        for iteration in 0..cfg.num_iterations {
-            let it_timer = Stopwatch::start();
-            // Surrogate history is capped to the smaller of the configured
-            // window and the backend's actual capacity (the PJRT artifact
-            // manifest, via Surrogate::max_obs): keep the most recent
-            // window (the GP forgets the oldest points). Note the GP's
-            // Cholesky cache stays incremental while this window grows
-            // append-only; once it starts sliding, each round refits.
-            let cap = cfg.max_surrogate_obs.min(optimizer.surrogate_capacity());
-            let opt_view = history.recent(cap);
-            let batch = optimizer.propose(&opt_view, cfg.batch_size, &mut rng)?;
-            anyhow::ensure!(!batch.is_empty(), "optimizer proposed an empty batch");
-
-            let result = evaluate(&batch);
-            anyhow::ensure!(
-                result.evals.len() == result.params.len(),
-                "objective returned misaligned evals/params"
-            );
-            for (cfg_done, v) in result.params.into_iter().zip(result.evals) {
-                anyhow::ensure!(v.is_finite(), "objective returned a non-finite value");
+        // ---- journal replay: pure data reconstruction, no re-evaluation ----
+        if let Some(rep) = replay {
+            for (cfg_done, v) in rep.history {
                 let internal = match sense {
                     Sense::Maximize => v,
                     Sense::Minimize => -v,
@@ -299,45 +502,161 @@ impl Tuner {
                 history.push(cfg_done.clone(), internal);
                 user_history.push((cfg_done, v));
             }
-
-            let user_best = match sense {
-                Sense::Maximize => best_so_far,
-                Sense::Minimize => -best_so_far,
-            };
-            best_series.push(user_best);
-            let record = IterationRecord {
-                iteration,
-                proposed: batch.len(),
-                returned: history.len() - returned_total,
-                best_so_far: user_best,
-                wall_ms: it_timer.elapsed_ms(),
-            };
-            returned_total = history.len();
-            if let Some(cb) = &mut self.callback {
-                cb(&record);
+            for r in &rep.rounds_done {
+                push_best_point(sense, &mut best_series, r.best, &mut since_improvement);
+                iterations.push(IterationRecord {
+                    iteration: r.iter,
+                    proposed: r.proposed,
+                    returned: r.returned,
+                    best_so_far: r.best,
+                    wall_ms: r.wall_ms,
+                });
             }
-            crate::log_debug!(
-                "iter {iteration}: proposed {} returned {} best {:.6}",
-                record.proposed,
-                record.returned,
-                user_best
+            returned_total = history.len();
+            start_iter = rep.rounds_done.len();
+            if let Some(state) = rep.rng_state {
+                rng = Pcg64::from_state(state);
+            }
+            partial = rep.partial;
+            let cap = cfg.max_surrogate_obs.min(optimizer.surrogate_capacity());
+            optimizer.rehydrate(&history.recent(cap), rep.rounds)?;
+            crate::log_info!(
+                "resumed sync run: {start_iter} iterations / {} evaluations replayed{}",
+                history.len(),
+                if partial.is_some() { ", completing a partial batch" } else { "" }
             );
-            // Early stopping on no improvement.
-            let improved = best_series.len() < 2
-                || match sense {
-                    Sense::Maximize => {
-                        best_series[best_series.len() - 1] > best_series[best_series.len() - 2]
-                    }
-                    Sense::Minimize => {
-                        best_series[best_series.len() - 1] < best_series[best_series.len() - 2]
+        }
+
+        // A run that had already met its early-stop condition resumes into
+        // an immediate stop (unless a partial batch still needs finishing).
+        let already_stopped = partial.is_none()
+            && early_stop.map_or(false, |stop| !best_series.is_empty() && since_improvement >= stop);
+
+        if !already_stopped {
+            for iteration in start_iter..cfg.num_iterations {
+                let it_timer = Stopwatch::start();
+                // A partial iteration (crash mid-batch) re-uses its
+                // journaled batch and skips the propose; otherwise propose
+                // and journal the post-propose RNG/rounds state.
+                let (batch, pre_evals) = match partial.take() {
+                    Some(p) => (p.batch, p.evals),
+                    None => {
+                        let cap = cfg.max_surrogate_obs.min(optimizer.surrogate_capacity());
+                        let opt_view = history.recent(cap);
+                        let batch = optimizer.propose(&opt_view, cfg.batch_size, &mut rng)?;
+                        anyhow::ensure!(!batch.is_empty(), "optimizer proposed an empty batch");
+                        jappend(
+                            &mut journal,
+                            &JournalEvent::SyncPropose {
+                                iter: iteration,
+                                rounds: optimizer.rounds(),
+                                rng: rng.state(),
+                                configs: batch.clone(),
+                            },
+                        )?;
+                        (batch, Vec::new())
                     }
                 };
-            since_improvement = if improved { 0 } else { since_improvement + 1 };
-            iterations.push(record);
-            if let Some(stop) = cfg.early_stop {
-                if since_improvement >= stop {
-                    crate::log_info!("early stop after {iteration} iterations");
-                    break;
+
+                // Only the batch members without a journaled result are
+                // (re-)evaluated; on a fresh iteration that is all of them.
+                let mut matched = vec![false; batch.len()];
+                for (cfg_done, _) in &pre_evals {
+                    let Some(i) = (0..batch.len()).find(|&i| !matched[i] && batch[i] == *cfg_done)
+                    else {
+                        return Err(anyhow!(
+                            "journaled evaluation does not match the proposed batch \
+                             (journal corrupted?)"
+                        ));
+                    };
+                    matched[i] = true;
+                }
+                let remaining: Vec<Config> = batch
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !matched[*i])
+                    .map(|(_, c)| c.clone())
+                    .collect();
+                let result =
+                    if remaining.is_empty() { BatchResult::default() } else { evaluate(&remaining) };
+                anyhow::ensure!(
+                    result.evals.len() == result.params.len(),
+                    "objective returned misaligned evals/params"
+                );
+
+                // Absorb replayed results first (their journal lines already
+                // exist), then the fresh ones (journaled now) — for the
+                // serial scheduler this reproduces the uninterrupted
+                // arrival order exactly.
+                for (cfg_done, v) in pre_evals {
+                    let Some(v) = v else { continue };
+                    let internal = match sense {
+                        Sense::Maximize => v,
+                        Sense::Minimize => -v,
+                    };
+                    best_so_far = best_so_far.max(internal);
+                    history.push(cfg_done.clone(), internal);
+                    user_history.push((cfg_done, v));
+                }
+                for (cfg_done, v) in result.params.into_iter().zip(result.evals) {
+                    anyhow::ensure!(v.is_finite(), "objective returned a non-finite value");
+                    jappend(
+                        &mut journal,
+                        &JournalEvent::SyncEval {
+                            iter: iteration,
+                            config: cfg_done.clone(),
+                            value: Some(v),
+                        },
+                    )?;
+                    let internal = match sense {
+                        Sense::Maximize => v,
+                        Sense::Minimize => -v,
+                    };
+                    best_so_far = best_so_far.max(internal);
+                    history.push(cfg_done.clone(), internal);
+                    user_history.push((cfg_done, v));
+                }
+
+                let user_best = match sense {
+                    Sense::Maximize => best_so_far,
+                    Sense::Minimize => -best_so_far,
+                };
+                push_best_point(sense, &mut best_series, user_best, &mut since_improvement);
+                let record = IterationRecord {
+                    iteration,
+                    proposed: batch.len(),
+                    returned: history.len() - returned_total,
+                    best_so_far: user_best,
+                    wall_ms: it_timer.elapsed_ms(),
+                };
+                returned_total = history.len();
+                jappend(
+                    &mut journal,
+                    &JournalEvent::SyncRound {
+                        iter: iteration,
+                        proposed: record.proposed,
+                        returned: record.returned,
+                        best: user_best,
+                        wall_ms: record.wall_ms,
+                    },
+                )?;
+                if let Some(cb) = &mut self.callback {
+                    cb(&record);
+                }
+                crate::log_debug!(
+                    "iter {iteration}: proposed {} returned {} best {:.6}",
+                    record.proposed,
+                    record.returned,
+                    user_best
+                );
+                iterations.push(record);
+                // Early stopping on no improvement (streak maintained by
+                // push_best_point above).
+                if let Some(stop) = early_stop {
+                    if since_improvement >= stop {
+                        crate::log_info!("early stop after {iteration} iterations");
+                        break;
+                    }
                 }
             }
         }
@@ -371,21 +690,26 @@ impl Tuner {
         &mut self,
         sense: Sense,
         objective: &(dyn Fn(&Config) -> Option<f64> + Sync),
+        journal: Option<JournalWriter>,
+        replay: Option<AsyncReplay>,
     ) -> Result<TuningResult> {
         let cfg = self.config.clone();
         let opts = self.gp_options();
         let mut optimizer = optimizer::build(cfg.optimizer, &self.space, &opts)?;
         let space = self.space.clone();
+        // Task ids continue past the crashed run's high-water mark.
+        let first_id = replay.as_ref().map_or(0, |r| r.next_task_id);
         std::thread::scope(|scope| {
-            let mut sched = scheduler::build_async(
+            let mut sched = scheduler::build_async_from(
                 cfg.scheduler,
                 cfg.workers,
                 cfg.seed,
                 cfg.celery.clone(),
                 scope,
                 objective,
+                first_id,
             );
-            self.event_loop(sense, &cfg, &space, optimizer.as_mut(), sched.as_mut())
+            self.event_loop(sense, &cfg, &space, optimizer.as_mut(), sched.as_mut(), journal, replay)
         })
     }
 
@@ -438,6 +762,7 @@ impl Tuner {
 
     /// The event loop: keep `window` evaluations in flight; fold each
     /// completion into the history the moment it arrives; retry lost work.
+    #[allow(clippy::too_many_arguments)]
     fn event_loop(
         &mut self,
         sense: Sense,
@@ -445,10 +770,12 @@ impl Tuner {
         space: &SearchSpace,
         optimizer: &mut dyn BatchOptimizer,
         sched: &mut dyn AsyncScheduler,
+        mut journal: Option<JournalWriter>,
+        replay: Option<AsyncReplay>,
     ) -> Result<TuningResult> {
         let budget = cfg.num_iterations * cfg.batch_size;
         let window = cfg.window().min(budget.max(1));
-        let early_stop_events = cfg.early_stop.map(|n| (n * cfg.batch_size).max(1));
+        let early_stop_events = cfg.early_stop.map(|n| (n.max(1) * cfg.batch_size).max(1));
 
         let total = Stopwatch::start();
         let mut history = History::new(); // maximization convention
@@ -466,25 +793,112 @@ impl Tuner {
         let mut lost = 0u64;
         let mut last_progress = std::time::Instant::now();
 
+        // ---- journal replay: pure data reconstruction, no re-evaluation ----
+        if let Some(rep) = replay {
+            let mut done_values = rep.history.into_iter();
+            for t in &rep.terminals {
+                let returned = matches!(t.outcome, EventOutcome::Done(_));
+                if returned {
+                    let Some((cfg_done, v)) = done_values.next() else {
+                        return Err(anyhow!("journal replay: missing value for a Done event"));
+                    };
+                    let internal = match sense {
+                        Sense::Maximize => v,
+                        Sense::Minimize => -v,
+                    };
+                    best_so_far = best_so_far.max(internal);
+                    history.push(cfg_done.clone(), internal);
+                    user_history.push((cfg_done, v));
+                }
+                let user_best = match sense {
+                    Sense::Maximize => best_so_far,
+                    Sense::Minimize => -best_so_far,
+                };
+                push_best_point(sense, &mut best_series, user_best, &mut since_improvement);
+                iterations.push(IterationRecord {
+                    iteration: iterations.len(),
+                    proposed: t.proposed_before,
+                    returned: usize::from(returned),
+                    best_so_far: user_best,
+                    wall_ms: t.wall_ms,
+                });
+                // Latch early stop exactly like the live loop: once the
+                // streak hits the threshold the run stops proposing for
+                // good, even though later drained in-flight completions may
+                // reset the streak (a crash after such a completion must
+                // not un-stop the resumed run).
+                if let Some(stop) = early_stop_events {
+                    if since_improvement >= stop {
+                        stopped_early = true;
+                    }
+                }
+            }
+            for e in rep.completion_log {
+                completion_log.push(CompletionRecord {
+                    task_id: e.task,
+                    queue_wait_ms: e.queue_ms,
+                    eval_ms: e.eval_ms,
+                    retries: e.retries,
+                    outcome: match e.outcome {
+                        EventOutcome::Done(_) => CompletionOutcome::Done,
+                        EventOutcome::Failed => CompletionOutcome::Failed,
+                        EventOutcome::Lost(_) => CompletionOutcome::Lost,
+                        EventOutcome::Resubmitted(_) => CompletionOutcome::Resubmitted,
+                    },
+                });
+            }
+            retried = rep.retried;
+            lost = rep.lost;
+            proposals_made = rep.proposals_made as usize;
+            proposed_since_record = rep.trailing_proposed;
+            let cap = cfg.max_surrogate_obs.min(optimizer.surrogate_capacity());
+            optimizer.rehydrate(&history.recent(cap), rep.rounds)?;
+            // Re-enqueue in-flight-at-crash work in its original submit
+            // order, with the retry budget it had already consumed.
+            let re_enqueued = rep.pending.len();
+            for p in rep.pending {
+                let ids = sched.submit(std::slice::from_ref(&p.config));
+                anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
+                jappend(
+                    &mut journal,
+                    &JournalEvent::AsyncSubmit { pid: p.pid, task: ids[0], retries: p.retries },
+                )?;
+                pending.insert(ids[0], PendingTask { config: p.config, retries: p.retries, pid: p.pid });
+            }
+            crate::log_info!(
+                "resumed async run: {} conclusions / {} evaluations replayed, \
+                 {re_enqueued} in-flight configs re-enqueued",
+                iterations.len(),
+                history.len()
+            );
+        }
+
         loop {
             // ---- refill: keep the in-flight window full ----
             while !stopped_early && pending.len() < window && proposals_made < budget {
-                let Some(proposal) = Self::propose_one(
-                    cfg,
-                    space,
-                    optimizer,
-                    &history,
-                    &pending,
-                    proposals_made as u64,
-                )?
+                let pid = proposals_made as u64;
+                let Some(proposal) =
+                    Self::propose_one(cfg, space, optimizer, &history, &pending, pid)?
                 else {
                     // Every distinct config is in flight: wait for a
                     // completion to free a point before proposing again.
                     break;
                 };
+                jappend(
+                    &mut journal,
+                    &JournalEvent::AsyncPropose {
+                        pid,
+                        rounds: optimizer.rounds(),
+                        config: proposal.clone(),
+                    },
+                )?;
                 let ids = sched.submit(std::slice::from_ref(&proposal));
                 anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
-                pending.insert(ids[0], PendingTask { config: proposal, retries: 0 });
+                jappend(
+                    &mut journal,
+                    &JournalEvent::AsyncSubmit { pid, task: ids[0], retries: 0 },
+                )?;
+                pending.insert(ids[0], PendingTask { config: proposal, retries: 0, pid });
                 proposals_made += 1;
                 proposed_since_record += 1;
             }
@@ -497,7 +911,10 @@ impl Tuner {
             let completions: Vec<Completion> = sched.poll(POLL_TIMEOUT);
             if completions.is_empty() {
                 if sched.in_flight() == 0 {
-                    // Scheduler lost track of outstanding work.
+                    // Scheduler lost track of outstanding work (worker
+                    // panic). Not journaled as Lost: on a later resume
+                    // these re-enqueue as still-pending work, which is the
+                    // better recovery.
                     lost += pending.len() as u64;
                     pending.clear();
                     break;
@@ -521,6 +938,17 @@ impl Tuner {
                             v.is_finite(),
                             "objective returned a non-finite value"
                         );
+                        jappend(
+                            &mut journal,
+                            &JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: comp.id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Done(v),
+                                queue_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                            },
+                        )?;
                         let internal = match sense {
                             Sense::Maximize => v,
                             Sense::Minimize => -v,
@@ -530,7 +958,20 @@ impl Tuner {
                         user_history.push((task.config.clone(), v));
                         CompletionOutcome::Done
                     }
-                    CompletionStatus::Failed => CompletionOutcome::Failed,
+                    CompletionStatus::Failed => {
+                        jappend(
+                            &mut journal,
+                            &JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: comp.id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Failed,
+                                queue_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                            },
+                        )?;
+                        CompletionOutcome::Failed
+                    }
                     CompletionStatus::Lost(reason) => {
                         // After early stop, a retried result could no longer
                         // change anything — let the proposal die instead.
@@ -543,6 +984,17 @@ impl Tuner {
                                 task.retries,
                                 cfg.max_retries
                             );
+                            jappend(
+                                &mut journal,
+                                &JournalEvent::AsyncComplete {
+                                    pid: task.pid,
+                                    task: comp.id,
+                                    retries: task.retries,
+                                    outcome: EventOutcome::Resubmitted(reason),
+                                    queue_ms: comp.queue_wait_ms,
+                                    eval_ms: comp.eval_ms,
+                                },
+                            )?;
                             completion_log.push(CompletionRecord {
                                 task_id: comp.id,
                                 queue_wait_ms: comp.queue_wait_ms,
@@ -552,9 +1004,28 @@ impl Tuner {
                             });
                             let ids = sched.submit(std::slice::from_ref(&task.config));
                             anyhow::ensure!(ids.len() == 1, "resubmit must assign one id");
+                            jappend(
+                                &mut journal,
+                                &JournalEvent::AsyncSubmit {
+                                    pid: task.pid,
+                                    task: ids[0],
+                                    retries: task.retries,
+                                },
+                            )?;
                             pending.insert(ids[0], task);
                             continue; // not concluded: no iteration record
                         }
+                        jappend(
+                            &mut journal,
+                            &JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: comp.id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Lost(reason),
+                                queue_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                            },
+                        )?;
                         lost += 1;
                         CompletionOutcome::Lost
                     }
@@ -572,19 +1043,7 @@ impl Tuner {
                     Sense::Maximize => best_so_far,
                     Sense::Minimize => -best_so_far,
                 };
-                best_series.push(user_best);
-                let improved = best_series.len() < 2
-                    || match sense {
-                        Sense::Maximize => {
-                            best_series[best_series.len() - 1]
-                                > best_series[best_series.len() - 2]
-                        }
-                        Sense::Minimize => {
-                            best_series[best_series.len() - 1]
-                                < best_series[best_series.len() - 2]
-                        }
-                    };
-                since_improvement = if improved { 0 } else { since_improvement + 1 };
+                push_best_point(sense, &mut best_series, user_best, &mut since_improvement);
                 let record = IterationRecord {
                     iteration: iterations.len(),
                     proposed: proposed_since_record,
@@ -603,7 +1062,16 @@ impl Tuner {
                         stopped_early = true;
                         let cancelled = sched.cancel_pending();
                         for id in &cancelled {
-                            pending.remove(id);
+                            // Journal each withdrawal as a terminal event:
+                            // without it a resume would classify these
+                            // proposals as in-flight and re-run work the
+                            // original run cancelled.
+                            if let Some(t) = pending.remove(id) {
+                                jappend(
+                                    &mut journal,
+                                    &JournalEvent::AsyncCancel { pid: t.pid, task: *id },
+                                )?;
+                            }
                         }
                         crate::log_info!(
                             "async early stop after {} completions ({} queued cancelled)",
@@ -864,6 +1332,46 @@ mod tests {
         assert_eq!(tc0.mode, ExecutionMode::Sync);
     }
 
+    #[test]
+    fn to_run_config_roundtrips_through_from_run_config() {
+        let tc = TunerConfig {
+            batch_size: 3,
+            num_iterations: 17,
+            initial_random: 4,
+            optimizer: OptimizerKind::Thompson,
+            scheduler: SchedulerKind::Celery,
+            workers: 6,
+            mc_samples: 512,
+            seed: 99,
+            backend: SurrogateBackend::Native,
+            tune_lengthscale: true,
+            early_stop: Some(5),
+            max_surrogate_obs: 64,
+            mode: ExecutionMode::Async,
+            async_window: 9,
+            max_retries: 1,
+            celery: None,
+        };
+        let rc = tc.to_run_config();
+        rc.validate().unwrap();
+        let back = TunerConfig::from_run_config(&rc).unwrap();
+        assert_eq!(back.batch_size, tc.batch_size);
+        assert_eq!(back.num_iterations, tc.num_iterations);
+        assert_eq!(back.initial_random, tc.initial_random);
+        assert_eq!(back.optimizer, tc.optimizer);
+        assert_eq!(back.scheduler, tc.scheduler);
+        assert_eq!(back.workers, tc.workers);
+        assert_eq!(back.mc_samples, tc.mc_samples);
+        assert_eq!(back.seed, tc.seed);
+        assert_eq!(back.backend, tc.backend);
+        assert_eq!(back.tune_lengthscale, tc.tune_lengthscale);
+        assert_eq!(back.early_stop, tc.early_stop);
+        assert_eq!(back.max_surrogate_obs, tc.max_surrogate_obs);
+        assert_eq!(back.mode, tc.mode);
+        assert_eq!(back.async_window, tc.async_window);
+        assert_eq!(back.max_retries, tc.max_retries);
+    }
+
     // ---------------- async event-loop tests ----------------
 
     #[test]
@@ -975,5 +1483,69 @@ mod tests {
         let ms = start.elapsed().as_millis();
         assert_eq!(r.evaluations, 8);
         assert!(ms < 240, "8x30ms on 8 workers took {ms}ms — window not full");
+    }
+
+    // ---------------- journal smoke tests ----------------
+    // (full crash-injection coverage lives in rust/tests/recovery.rs)
+
+    fn tmp_journal(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mango_tuner_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn journaled_run_resumes_to_identical_result_after_completion() {
+        let path = tmp_journal("finished");
+        let run_cfg = || TunerConfig {
+            optimizer: OptimizerKind::Hallucination,
+            num_iterations: 6,
+            batch_size: 2,
+            backend: SurrogateBackend::Native,
+            seed: 7,
+            ..Default::default()
+        };
+        let space = crate::space::svm_space();
+        let baseline = Tuner::new(space.clone(), run_cfg()).maximize(quad).unwrap();
+        let journaled = Tuner::new(space.clone(), run_cfg())
+            .with_journal(&path)
+            .maximize(quad)
+            .unwrap();
+        assert_eq!(journaled.best_params, baseline.best_params, "journaling is transparent");
+        assert_eq!(journaled.best_objective, baseline.best_objective);
+        assert_eq!(journaled.history, baseline.history);
+        // Resuming a *finished* journal replays everything and runs nothing.
+        let resumed = Tuner::resume_from(space, &path).unwrap().maximize(quad).unwrap();
+        assert_eq!(resumed.best_params, baseline.best_params);
+        assert_eq!(resumed.best_objective, baseline.best_objective);
+        assert_eq!(resumed.history, baseline.history);
+        assert_eq!(resumed.best_series, baseline.best_series);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_with_wrong_space_or_sense_fails_loudly() {
+        let path = tmp_journal("guards");
+        let space = crate::space::svm_space();
+        Tuner::new(
+            space.clone(),
+            TunerConfig {
+                optimizer: OptimizerKind::Random,
+                num_iterations: 2,
+                backend: SurrogateBackend::Native,
+                ..Default::default()
+            },
+        )
+        .with_journal(&path)
+        .maximize(|_| Some(1.0))
+        .unwrap();
+        // Wrong space: fingerprint mismatch.
+        let err = Tuner::resume_from(crate::space::xgboost_space(), &path).unwrap_err();
+        assert!(err.to_string().contains("different search space"), "got: {err:#}");
+        // Wrong sense: header records maximize.
+        let err = Tuner::resume_from(space, &path)
+            .unwrap()
+            .minimize(|_| Some(1.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("maximize"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -141,6 +141,13 @@ impl CholeskyState {
         self.x.rows()
     }
 
+    /// The cached lower Cholesky factor itself — exposed so recovery tests
+    /// can assert a resume-rebuilt state is bit-identical to the factor the
+    /// uninterrupted run carried at the same history prefix.
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+
     /// Kernel-hyperparameter key match (exact: the LML grid search probes a
     /// fixed set of lengthscales, so each grid point keeps its own state).
     pub fn matches_params(&self, p: &GpParams) -> bool {

@@ -45,6 +45,7 @@ pub mod acq;
 pub mod runtime;
 pub mod optimizer;
 pub mod scheduler;
+pub mod persist;
 pub mod coordinator;
 pub mod ml;
 pub mod benchfn;

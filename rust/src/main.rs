@@ -70,24 +70,43 @@ fn cmd_tune(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
-        "max-surrogate-obs", "mode", "async-window", "max-retries",
+        "max-surrogate-obs", "mode", "async-window", "max-retries", "journal",
     ])?;
     let name = args
         .get("workload")
         .ok_or_else(|| anyhow!("--workload is required (see `mango list`)"))?;
     let workload = workloads::by_name(name)
         .ok_or_else(|| anyhow!("unknown workload '{name}' (see `mango list`)"))?;
-    let config = tuner_config_from_args(args, 1)?;
-    let sense = if workload.minimize { "minimize" } else { "maximize" };
-    mango::log_info!(
-        "tuning {} ({} dims, {sense}) with {:?}/{:?} backend {:?}",
-        workload.name,
-        workload.space.len(),
-        config.optimizer,
-        config.scheduler,
-        config.backend
-    );
-    let mut tuner = Tuner::new(workload.space.clone(), config);
+    let mut tuner = if args.has("resume") {
+        // The journal header carries the full run config; only the
+        // workload (and thus the space, validated by fingerprint) is
+        // re-supplied.
+        let journal = args
+            .get("journal")
+            .ok_or_else(|| anyhow!("--resume requires --journal <file.jsonl>"))?;
+        let tuner = Tuner::resume_from(workload.space.clone(), std::path::Path::new(journal))?;
+        mango::log_info!(
+            "resuming {} from journal {journal} (config restored from its header)",
+            workload.name
+        );
+        tuner
+    } else {
+        let config = tuner_config_from_args(args, 1)?;
+        let sense = if workload.minimize { "minimize" } else { "maximize" };
+        mango::log_info!(
+            "tuning {} ({} dims, {sense}) with {:?}/{:?} backend {:?}",
+            workload.name,
+            workload.space.len(),
+            config.optimizer,
+            config.scheduler,
+            config.backend
+        );
+        let mut tuner = Tuner::new(workload.space.clone(), config);
+        if let Some(journal) = args.get("journal") {
+            tuner = tuner.with_journal(journal);
+        }
+        tuner
+    };
     let obj = workload.objective.clone();
     let result = if workload.minimize {
         tuner.minimize(move |c| obj(c))?
@@ -128,6 +147,17 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     for e in experiments {
         let workload = workloads::by_name(&e.workload)
             .ok_or_else(|| anyhow!("unknown workload '{}'", e.workload))?;
+        // Journaling is a per-run concern the repeated-trial harness does
+        // not wire up; accepting the fields here would silently run with
+        // zero crash persistence.
+        if !e.run.journal.is_empty() || e.run.resume {
+            return Err(anyhow!(
+                "experiment '{}': journal/resume are not supported in experiment \
+                 configs (repeated trials would share one journal) — use \
+                 `mango tune --journal ... [--resume]` for a journaled run",
+                e.name
+            ));
+        }
         let config = TunerConfig::from_run_config(&e.run)?;
         let repeats = args.get_usize("repeats", e.repeats)?;
         mango::log_info!("experiment {}: {repeats} trials of {}", e.name, e.workload);

@@ -21,9 +21,14 @@ use crate::space::{Config, Encoder, SearchSpace};
 use crate::util::rng::Pcg64;
 use anyhow::Result;
 
-/// Upper bound on cached Cholesky states: the LML grid search probes 5
-/// fixed lengthscales; +1 covers the fixed-default parameters.
-const CHOL_CACHE_MAX: usize = 6;
+/// The LML lengthscale grid (unit-cube lengthscales probed per fit when
+/// `tune_lengthscale` is on). Shared by `fit_and_score` and `rehydrate` so
+/// recovery warms exactly the cache entries the grid search will hit.
+pub const LML_LENGTHSCALE_GRID: [f64; 5] = [0.1, 0.2, 0.3, 0.5, 0.8];
+
+/// Upper bound on cached Cholesky states: the LML grid search probes the
+/// grid's 5 fixed lengthscales; +1 covers the fixed-default parameters.
+const CHOL_CACHE_MAX: usize = LML_LENGTHSCALE_GRID.len() + 1;
 
 /// One fit-and-score round over the history: everything a batch-selection
 /// strategy needs.
@@ -122,7 +127,7 @@ impl BayesianCore {
         params.noise = self.opts.noise;
         let fit = if self.opts.tune_lengthscale {
             let mut best: Option<(f64, GpParams, FitOut)> = None;
-            for ls in [0.1, 0.2, 0.3, 0.5, 0.8] {
+            for ls in LML_LENGTHSCALE_GRID {
                 let mut p = GpParams::new(d).with_beta(beta).with_lengthscale(ls);
                 p.noise = self.opts.noise;
                 let f = self.fit_cached(&x_obs, &yn, &p)?;
@@ -147,6 +152,48 @@ impl BayesianCore {
 
     pub fn backend_name(&self) -> &'static str {
         self.surrogate.name()
+    }
+
+    /// The cached [`CholeskyState`] matching `params`' kernel key, if any —
+    /// introspection for the recovery tests (resume-rebuilt factor must be
+    /// bit-identical to the uninterrupted run's).
+    pub fn cached_state(&self, params: &GpParams) -> Option<&CholeskyState> {
+        self.chol_cache.iter().find(|s| s.matches_params(params))
+    }
+
+    /// Restore state after a journal replay: set the adaptive-beta clock to
+    /// the journaled `rounds` and warm the incremental Cholesky cache over
+    /// the replayed history window, so the first post-resume fit pays the
+    /// O(kn²) append path instead of an O(n³) from-scratch refactorization
+    /// per kernel key. The warm-up itself is one factorization pass (O(n²)
+    /// per replayed row — the same per-observation cost the uninterrupted
+    /// run paid), and by the append/scratch equivalence property the
+    /// resulting factor is bit-identical to the state the crashed process
+    /// held over the same rows. With lengthscale tuning enabled every grid
+    /// point is warmed, mirroring `fit_and_score`'s per-grid-point caches.
+    pub fn rehydrate(&mut self, history: &History, rounds: usize) -> Result<()> {
+        self.rounds = rounds;
+        if history.is_empty() {
+            return Ok(());
+        }
+        let x_obs = self.encode_history(history);
+        let yn = match self.opts.y_transform {
+            YTransform::Normalize => normalize_y(history.values()).0,
+            YTransform::RankGauss => acq::rank_gauss(history.values()),
+        };
+        let d = self.encoder.dims();
+        if self.opts.tune_lengthscale {
+            for ls in LML_LENGTHSCALE_GRID {
+                let mut p = GpParams::new(d).with_lengthscale(ls);
+                p.noise = self.opts.noise;
+                self.fit_cached(&x_obs, &yn, &p)?;
+            }
+        } else {
+            let mut p = GpParams::new(d);
+            p.noise = self.opts.noise;
+            self.fit_cached(&x_obs, &yn, &p)?;
+        }
+        Ok(())
     }
 }
 
@@ -210,7 +257,7 @@ mod tests {
         let mut rng = Pcg64::new(9);
         let s = core.fit_and_score(&h, 1, &mut rng).unwrap();
         let ls = 1.0 / s.params.inv_lengthscale[0];
-        assert!([0.1, 0.2, 0.3, 0.5, 0.8].iter().any(|&v| (ls - v).abs() < 1e-9));
+        assert!(LML_LENGTHSCALE_GRID.iter().any(|&v| (ls - v).abs() < 1e-9));
     }
 
     #[test]
@@ -283,10 +330,14 @@ mod tests {
         let mut core = BayesianCore::new(space.clone(), opts).unwrap();
         let h = history_from(&space, 10, 25);
         core.fit_and_score(&h, 1, &mut Pcg64::new(50)).unwrap();
-        assert_eq!(core.chol_cache.len(), 5, "one cached state per grid point");
+        assert_eq!(
+            core.chol_cache.len(),
+            LML_LENGTHSCALE_GRID.len(),
+            "one cached state per grid point"
+        );
         // A second round reuses all five without growing the cache.
         core.fit_and_score(&h, 1, &mut Pcg64::new(51)).unwrap();
-        assert_eq!(core.chol_cache.len(), 5);
+        assert_eq!(core.chol_cache.len(), LML_LENGTHSCALE_GRID.len());
         assert!(core.chol_cache.iter().all(|s| s.rows() == 10));
     }
 }

@@ -139,6 +139,28 @@ pub trait BatchOptimizer {
         usize::MAX
     }
 
+    /// Behavior-affecting internal rounds counter (GP optimizers: the
+    /// adaptive-beta schedule's clock). The coordinator journals it after
+    /// every propose so a resumed run can restore the exact schedule
+    /// position; optimizers without such state report 0.
+    fn rounds(&self) -> usize {
+        0
+    }
+
+    /// Restore internal state from a replayed journal: `history` is the
+    /// reconstructed surrogate view (already clamped to the window the
+    /// coordinator will fit next) and `rounds` the journaled counter.
+    /// GP optimizers set their adaptive-beta clock and warm their
+    /// incremental `CholeskyState` from the replayed rows — O(n²) per
+    /// replayed observation via the append path (one factorization pass
+    /// total), never an O(n³) refit per replayed event. The rebuilt factor
+    /// is bit-identical to the one the uninterrupted run carried (the
+    /// append/scratch equivalence property), so recovery cannot perturb
+    /// post-resume proposals. Stateless optimizers ignore this.
+    fn rehydrate(&mut self, _history: &History, _rounds: usize) -> Result<()> {
+        Ok(())
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -164,6 +186,17 @@ impl OptimizerKind {
             _ => None,
         }
     }
+
+    /// Inverse of [`from_str`](Self::from_str) (journal header round trip).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Hallucination => "hallucination",
+            Self::Clustering => "clustering",
+            Self::Random => "random",
+            Self::Tpe => "tpe",
+            Self::Thompson => "thompson",
+        }
+    }
 }
 
 /// Which surrogate backend the GP optimizers use.
@@ -181,6 +214,14 @@ impl SurrogateBackend {
             "pjrt" => Some(Self::Pjrt),
             "native" => Some(Self::Native),
             _ => None,
+        }
+    }
+
+    /// Inverse of [`from_str`](Self::from_str) (journal header round trip).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Pjrt => "pjrt",
+            Self::Native => "native",
         }
     }
 }

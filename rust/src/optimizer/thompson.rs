@@ -70,6 +70,14 @@ impl BatchOptimizer for ThompsonOptimizer {
         self.core.max_obs()
     }
 
+    fn rounds(&self) -> usize {
+        self.core.rounds
+    }
+
+    fn rehydrate(&mut self, history: &History, rounds: usize) -> Result<()> {
+        self.core.rehydrate(history, rounds)
+    }
+
     fn name(&self) -> &'static str {
         "thompson"
     }

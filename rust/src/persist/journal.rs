@@ -1,0 +1,829 @@
+//! The append-only run journal: one JSONL line per run event.
+//!
+//! The journal is the run's *only* persistent state. Line 1 is the header
+//! (schema magic + version, search-space fingerprint, sense, and the full
+//! `RunConfig` including the seed); every following line is one event:
+//!
+//! * sync mode — `sync_propose` (batch configs + the shared RNG state and
+//!   optimizer rounds counter *after* the propose), one `sync_eval` per
+//!   result absorbed at the barrier, and a `sync_round` commit marker per
+//!   iteration;
+//! * async mode — `async_propose` (stable proposal id + config + rounds),
+//!   `async_submit` (proposal → scheduler task id, including resubmissions
+//!   after a loss), and `async_complete` (terminal `done`/`failed`/`lost`
+//!   outcomes plus `resubmitted` intermediates, with retry counters and
+//!   queue/eval telemetry).
+//!
+//! Every `append` writes one complete `\n`-terminated line in a single
+//! `write_all` and flushes, so a process kill leaves at worst one
+//! *unterminated* trailing fragment. [`read_journal`] drops exactly that
+//! torn tail (and reports the byte length of the valid prefix so a resume
+//! truncates it before appending); any `\n`-terminated line that fails to
+//! parse — final or not — was fully committed and is treated as
+//! corruption, failing loudly, as does a header whose magic or version
+//! doesn't match — mirroring the artifact manifest's `posterior: "chol"`
+//! schema guard.
+//!
+//! All `Config`s and objective values are encoded with the canonical
+//! journal codec ([`crate::space::f64_to_json`] /
+//! [`Config::to_journal_json`]), which round-trips every f64 bit pattern —
+//! NaN payloads, `±inf`, `-0.0` — exactly, so a replayed history is
+//! bit-identical to the one the crashed process held.
+
+use crate::config::json::{parse, Json};
+use crate::config::settings::RunConfig;
+use crate::scheduler::{LossReason, TaskId};
+use crate::space::{f64_from_json, f64_to_json, Config};
+use anyhow::{anyhow, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Schema magic: refuses to replay files that merely look like JSONL.
+pub const JOURNAL_MAGIC: &str = "mango-run-journal";
+/// Bump on any incompatible event-schema change; the reader fails loudly
+/// on mismatch instead of mis-replaying a stale journal.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// Objective sense recorded in the header; `Tuner::maximize`/`minimize`
+/// on a resumed run must match it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SenseTag {
+    Maximize,
+    Minimize,
+}
+
+impl SenseTag {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SenseTag::Maximize => "maximize",
+            SenseTag::Minimize => "minimize",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "maximize" => Some(Self::Maximize),
+            "minimize" => Some(Self::Minimize),
+            _ => None,
+        }
+    }
+}
+
+/// The journal's first line.
+#[derive(Clone, Debug)]
+pub struct RunHeader {
+    /// [`crate::space::SearchSpace::fingerprint`] of the run's space.
+    pub space_fp: u64,
+    pub sense: SenseTag,
+    /// The full run configuration (seed included), so `Tuner::resume_from`
+    /// can rebuild the tuner without the caller re-specifying it.
+    pub run: RunConfig,
+}
+
+impl RunHeader {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("e", Json::Str("header".into())),
+            ("journal", Json::Str(JOURNAL_MAGIC.into())),
+            ("version", Json::Num(JOURNAL_VERSION as f64)),
+            ("space_fp", Json::Str(format!("{:016x}", self.space_fp))),
+            ("sense", Json::Str(self.sense.as_str().into())),
+            ("config", self.run.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let magic = j.get("journal").and_then(Json::as_str);
+        anyhow::ensure!(
+            magic == Some(JOURNAL_MAGIC),
+            "not a mango run journal (magic {magic:?})"
+        );
+        let version = j.get("version").and_then(Json::as_f64).map(|v| v as u64);
+        anyhow::ensure!(
+            version == Some(JOURNAL_VERSION),
+            "journal schema version mismatch: this build reads v{JOURNAL_VERSION}, \
+             found {version:?} — re-run from scratch or use a matching build"
+        );
+        let fp_hex = j
+            .get("space_fp")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("journal header missing space_fp"))?;
+        let space_fp = u64::from_str_radix(fp_hex, 16)
+            .map_err(|e| anyhow!("bad space_fp '{fp_hex}': {e}"))?;
+        let sense = j
+            .get("sense")
+            .and_then(Json::as_str)
+            .and_then(SenseTag::from_str)
+            .ok_or_else(|| anyhow!("journal header missing/bad sense"))?;
+        let run = RunConfig::from_json(
+            j.get("config").ok_or_else(|| anyhow!("journal header missing config"))?,
+        )
+        .context("journal header config")?;
+        Ok(Self { space_fp, sense, run })
+    }
+}
+
+/// Terminal or intermediate outcome of one async completion event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventOutcome {
+    /// Delivered a value (user objective sense).
+    Done(f64),
+    /// The objective declined (`None`); terminal, never retried.
+    Failed,
+    /// Lost with retries exhausted; terminal.
+    Lost(LossReason),
+    /// Lost but re-enqueued; a later event concludes the same proposal.
+    Resubmitted(LossReason),
+}
+
+fn reason_str(r: LossReason) -> &'static str {
+    match r {
+        LossReason::Crashed => "crashed",
+        LossReason::TimedOut => "timed_out",
+    }
+}
+
+fn reason_from(s: &str) -> Result<LossReason> {
+    match s {
+        "crashed" => Ok(LossReason::Crashed),
+        "timed_out" => Ok(LossReason::TimedOut),
+        other => Err(anyhow!("unknown loss reason '{other}'")),
+    }
+}
+
+/// One journal line after the header.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalEvent {
+    /// Sync mode: one proposed batch. `rng` and `rounds` are the shared
+    /// coordinator RNG state and the optimizer's rounds counter *after*
+    /// the propose call — exactly what the next iteration needs.
+    SyncPropose { iter: usize, rounds: usize, rng: u128, configs: Vec<Config> },
+    /// Sync mode: one evaluation result absorbed at the barrier
+    /// (`value: None` = the objective declined).
+    SyncEval { iter: usize, config: Config, value: Option<f64> },
+    /// Sync mode: iteration commit marker — every eval of `iter` is in.
+    SyncRound { iter: usize, proposed: usize, returned: usize, best: f64, wall_ms: f64 },
+    /// Async mode: one proposal, with its stable proposal id.
+    AsyncPropose { pid: u64, rounds: usize, config: Config },
+    /// Async mode: proposal handed to the scheduler as task `task`
+    /// (`retries > 0` = a resubmission after a loss, including the
+    /// re-enqueue of in-flight-at-crash work on resume).
+    AsyncSubmit { pid: u64, task: TaskId, retries: usize },
+    /// Async mode: a queued (never started) task withdrawn by the early
+    /// stop. Terminal for its proposal — without this event a resume would
+    /// re-enqueue and evaluate work the original run cancelled.
+    AsyncCancel { pid: u64, task: TaskId },
+    /// Async mode: one completion event for proposal `pid`.
+    AsyncComplete {
+        pid: u64,
+        task: TaskId,
+        retries: usize,
+        outcome: EventOutcome,
+        queue_ms: f64,
+        eval_ms: f64,
+    },
+}
+
+impl JournalEvent {
+    pub fn to_json(&self) -> Json {
+        match self {
+            JournalEvent::SyncPropose { iter, rounds, rng, configs } => Json::obj(vec![
+                ("e", Json::Str("sync_propose".into())),
+                ("iter", Json::Num(*iter as f64)),
+                ("rounds", Json::Num(*rounds as f64)),
+                ("rng", Json::Str(format!("{rng:032x}"))),
+                (
+                    "configs",
+                    Json::Arr(configs.iter().map(Config::to_journal_json).collect()),
+                ),
+            ]),
+            JournalEvent::SyncEval { iter, config, value } => {
+                let mut fields = vec![
+                    ("e", Json::Str("sync_eval".into())),
+                    ("iter", Json::Num(*iter as f64)),
+                    ("config", config.to_journal_json()),
+                ];
+                match value {
+                    Some(v) => fields.push(("v", f64_to_json(*v))),
+                    None => fields.push(("failed", Json::Bool(true))),
+                }
+                Json::obj(fields)
+            }
+            JournalEvent::SyncRound { iter, proposed, returned, best, wall_ms } => {
+                Json::obj(vec![
+                    ("e", Json::Str("sync_round".into())),
+                    ("iter", Json::Num(*iter as f64)),
+                    ("proposed", Json::Num(*proposed as f64)),
+                    ("returned", Json::Num(*returned as f64)),
+                    ("best", f64_to_json(*best)),
+                    ("wall_ms", Json::Num(*wall_ms)),
+                ])
+            }
+            JournalEvent::AsyncPropose { pid, rounds, config } => Json::obj(vec![
+                ("e", Json::Str("async_propose".into())),
+                ("pid", Json::Num(*pid as f64)),
+                ("rounds", Json::Num(*rounds as f64)),
+                ("config", config.to_journal_json()),
+            ]),
+            JournalEvent::AsyncSubmit { pid, task, retries } => Json::obj(vec![
+                ("e", Json::Str("async_submit".into())),
+                ("pid", Json::Num(*pid as f64)),
+                ("task", Json::Num(*task as f64)),
+                ("retries", Json::Num(*retries as f64)),
+            ]),
+            JournalEvent::AsyncCancel { pid, task } => Json::obj(vec![
+                ("e", Json::Str("async_cancel".into())),
+                ("pid", Json::Num(*pid as f64)),
+                ("task", Json::Num(*task as f64)),
+            ]),
+            JournalEvent::AsyncComplete { pid, task, retries, outcome, queue_ms, eval_ms } => {
+                let mut fields = vec![
+                    ("e", Json::Str("async_complete".into())),
+                    ("pid", Json::Num(*pid as f64)),
+                    ("task", Json::Num(*task as f64)),
+                    ("retries", Json::Num(*retries as f64)),
+                ];
+                match outcome {
+                    EventOutcome::Done(v) => {
+                        fields.push(("o", Json::Str("done".into())));
+                        fields.push(("v", f64_to_json(*v)));
+                    }
+                    EventOutcome::Failed => fields.push(("o", Json::Str("failed".into()))),
+                    EventOutcome::Lost(r) => {
+                        fields.push(("o", Json::Str("lost".into())));
+                        fields.push(("reason", Json::Str(reason_str(*r).into())));
+                    }
+                    EventOutcome::Resubmitted(r) => {
+                        fields.push(("o", Json::Str("resubmitted".into())));
+                        fields.push(("reason", Json::Str(reason_str(*r).into())));
+                    }
+                }
+                fields.push(("queue_ms", Json::Num(*queue_ms)));
+                fields.push(("eval_ms", Json::Num(*eval_ms)));
+                Json::obj(fields)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let tag = j
+            .get("e")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event missing 'e' tag"))?;
+        match tag {
+            "sync_propose" => {
+                let rng_hex = req_str(j, "rng")?;
+                let rng = u128::from_str_radix(rng_hex, 16)
+                    .map_err(|e| anyhow!("bad rng state '{rng_hex}': {e}"))?;
+                let configs = j
+                    .get("configs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("sync_propose missing configs"))?
+                    .iter()
+                    .map(Config::from_journal_json)
+                    .collect::<Result<Vec<_>>>()?;
+                anyhow::ensure!(!configs.is_empty(), "sync_propose with empty batch");
+                Ok(JournalEvent::SyncPropose {
+                    iter: req_usize(j, "iter")?,
+                    rounds: req_usize(j, "rounds")?,
+                    rng,
+                    configs,
+                })
+            }
+            "sync_eval" => {
+                let config = Config::from_journal_json(
+                    j.get("config").ok_or_else(|| anyhow!("sync_eval missing config"))?,
+                )?;
+                let value = match j.get("v") {
+                    Some(v) => Some(f64_from_json(v)?),
+                    None => {
+                        anyhow::ensure!(
+                            j.get("failed").and_then(Json::as_bool) == Some(true),
+                            "sync_eval needs 'v' or 'failed'"
+                        );
+                        None
+                    }
+                };
+                Ok(JournalEvent::SyncEval { iter: req_usize(j, "iter")?, config, value })
+            }
+            "sync_round" => Ok(JournalEvent::SyncRound {
+                iter: req_usize(j, "iter")?,
+                proposed: req_usize(j, "proposed")?,
+                returned: req_usize(j, "returned")?,
+                best: f64_from_json(
+                    j.get("best").ok_or_else(|| anyhow!("sync_round missing best"))?,
+                )?,
+                wall_ms: req_f64(j, "wall_ms")?,
+            }),
+            "async_propose" => Ok(JournalEvent::AsyncPropose {
+                pid: req_u64(j, "pid")?,
+                rounds: req_usize(j, "rounds")?,
+                config: Config::from_journal_json(
+                    j.get("config").ok_or_else(|| anyhow!("async_propose missing config"))?,
+                )?,
+            }),
+            "async_submit" => Ok(JournalEvent::AsyncSubmit {
+                pid: req_u64(j, "pid")?,
+                task: req_u64(j, "task")?,
+                retries: req_usize(j, "retries")?,
+            }),
+            "async_cancel" => Ok(JournalEvent::AsyncCancel {
+                pid: req_u64(j, "pid")?,
+                task: req_u64(j, "task")?,
+            }),
+            "async_complete" => {
+                let outcome = match req_str(j, "o")? {
+                    "done" => EventOutcome::Done(f64_from_json(
+                        j.get("v").ok_or_else(|| anyhow!("done completion missing v"))?,
+                    )?),
+                    "failed" => EventOutcome::Failed,
+                    "lost" => EventOutcome::Lost(reason_from(req_str(j, "reason")?)?),
+                    "resubmitted" => {
+                        EventOutcome::Resubmitted(reason_from(req_str(j, "reason")?)?)
+                    }
+                    other => return Err(anyhow!("unknown completion outcome '{other}'")),
+                };
+                Ok(JournalEvent::AsyncComplete {
+                    pid: req_u64(j, "pid")?,
+                    task: req_u64(j, "task")?,
+                    retries: req_usize(j, "retries")?,
+                    outcome,
+                    queue_ms: req_f64(j, "queue_ms")?,
+                    eval_ms: req_f64(j, "eval_ms")?,
+                })
+            }
+            "header" => Err(anyhow!("duplicate header mid-journal")),
+            other => Err(anyhow!("unknown journal event '{other}'")),
+        }
+    }
+}
+
+fn req_f64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("event missing number '{k}'"))
+}
+
+/// Counter fields must be exact non-negative integers: a saturating `as`
+/// cast would let a corrupted-but-parseable value (negative, huge, or
+/// fractional) replay as silently wrong state — e.g. `retries: -1`
+/// saturating to 0 resets a retry budget, `1e300` saturating to
+/// `usize::MAX` exhausts it — instead of failing loudly.
+fn req_u64(j: &Json, k: &str) -> Result<u64> {
+    let n = req_f64(j, k)?;
+    anyhow::ensure!(
+        n.fract() == 0.0 && (0.0..=9_007_199_254_740_992.0).contains(&n),
+        "event field '{k}' is not a valid non-negative integer: {n}"
+    );
+    Ok(n as u64)
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize> {
+    Ok(req_u64(j, k)? as usize)
+}
+
+fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+    j.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("event missing string '{k}'"))
+}
+
+/// Append-only writer. Each [`append`](Self::append) writes exactly one
+/// `\n`-terminated line and flushes it to the OS, so a killed process
+/// loses at most the event it was mid-write on (the torn tail the reader
+/// drops) — never a previously appended one.
+pub struct JournalWriter {
+    file: File,
+    path: PathBuf,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal at `path` (truncating any previous file) and
+    /// write the header line.
+    pub fn create(path: &Path, header: &RunHeader) -> Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating run journal {}", path.display()))?;
+        let mut w = Self { file, path: path.to_path_buf() };
+        w.write_line(&header.to_json())?;
+        Ok(w)
+    }
+
+    /// Reopen an existing journal for a resumed run: truncate to
+    /// `valid_len` (dropping a torn trailing line, if any) and position at
+    /// the end so new events append after the replayed ones.
+    pub fn resume(path: &Path, valid_len: u64) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening run journal {}", path.display()))?;
+        file.set_len(valid_len)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        let mut w = Self { file, path: path.to_path_buf() };
+        w.file.seek(SeekFrom::End(0))?;
+        Ok(w)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn append(&mut self, event: &JournalEvent) -> Result<()> {
+        self.write_line(&event.to_json())
+    }
+
+    fn write_line(&mut self, j: &Json) -> Result<()> {
+        let mut line = j.to_string();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .with_context(|| format!("appending to run journal {}", self.path.display()))?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// A fully parsed journal.
+#[derive(Debug)]
+pub struct JournalContents {
+    pub header: RunHeader,
+    pub events: Vec<JournalEvent>,
+    /// Byte length of the valid prefix — everything after this (at most
+    /// one torn trailing line) is dropped, and
+    /// [`JournalWriter::resume`] truncates to it before appending.
+    pub valid_len: u64,
+}
+
+/// Read and validate a journal. An *unterminated* final line is a torn
+/// write from the crash and is safely dropped (its bytes are excluded
+/// from `valid_len`); a malformed `\n`-terminated line anywhere, a bad
+/// header, or a magic/version mismatch is corruption and fails loudly.
+pub fn read_journal(path: &Path) -> Result<JournalContents> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading run journal {}", path.display()))?;
+    // Split into (offset, line, newline-terminated) triples, keeping byte
+    // offsets for valid_len.
+    let mut lines: Vec<(usize, &[u8], bool)> = Vec::new();
+    let mut start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            lines.push((start, &bytes[start..i], true));
+            start = i + 1;
+        }
+    }
+    if start < bytes.len() {
+        lines.push((start, &bytes[start..], false)); // unterminated tail
+    }
+    anyhow::ensure!(!lines.is_empty(), "journal {} is empty", path.display());
+
+    let parse_line = |raw: &[u8]| -> Result<Json> {
+        let text = std::str::from_utf8(raw).map_err(|e| anyhow!("non-utf8 line: {e}"))?;
+        Ok(parse(text)?)
+    };
+
+    // A line is committed only once its newline landed: an unterminated
+    // tail is a torn write even if the bytes happen to parse — counting it
+    // into valid_len would make a resume append the next event onto the
+    // same line, merging two events into one corrupt record.
+    anyhow::ensure!(
+        lines[0].2,
+        "journal {} ends mid-header (torn first write) — nothing to resume",
+        path.display()
+    );
+    let header = RunHeader::from_json(
+        &parse_line(lines[0].1).with_context(|| "journal line 1 (header)".to_string())?,
+    )?;
+    let mut valid_len = (lines[0].0 + lines[0].1.len() + 1) as u64;
+
+    let mut events = Vec::with_capacity(lines.len().saturating_sub(1));
+    for (idx, (offset, raw, terminated)) in lines.iter().enumerate().skip(1) {
+        if !terminated {
+            crate::log_debug!(
+                "journal {}: dropping unterminated trailing line (torn write)",
+                path.display()
+            );
+            break; // the unterminated tail is always the last line
+        }
+        if raw.is_empty() {
+            // Blank line (e.g. double newline): zero information, but its
+            // newline is committed — keep valid_len moving past it.
+            valid_len = (*offset + 1) as u64;
+            continue;
+        }
+        // A '\n'-terminated line was fully committed (append() writes the
+        // line and its newline in one write_all, so a kill can only ever
+        // produce an unterminated prefix) — if it doesn't parse, that is
+        // real corruption, even on the final line, and replaying around it
+        // would silently re-execute a committed event.
+        match parse_line(raw).and_then(|j| JournalEvent::from_json(&j)) {
+            Ok(ev) => {
+                events.push(ev);
+                valid_len = (*offset + raw.len() + 1) as u64;
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "journal {} corrupted at line {} (newline-terminated, so not a torn \
+                     write — refusing to replay)",
+                    path.display(),
+                    idx + 1
+                )));
+            }
+        }
+    }
+    Ok(JournalContents { header, events, valid_len })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamValue;
+    use crate::util::proptest::check;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mango_journal_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn header() -> RunHeader {
+        RunHeader {
+            space_fp: 0xDEAD_BEEF_0123_4567,
+            sense: SenseTag::Maximize,
+            run: RunConfig { seed: 9, batch_size: 2, ..Default::default() },
+        }
+    }
+
+    fn cfg(bits: u64) -> Config {
+        Config::new(vec![
+            ("x".into(), ParamValue::F64(f64::from_bits(bits))),
+            ("k".into(), ParamValue::Str("a".into())),
+        ])
+    }
+
+    fn sample_events() -> Vec<JournalEvent> {
+        vec![
+            // NB: fixture configs stay NaN-free — these tests compare
+            // events with derived PartialEq (NaN != NaN); NaN/±inf/-0.0
+            // bit-exactness is property-tested at the codec level in
+            // `space::value`.
+            JournalEvent::SyncPropose {
+                iter: 0,
+                rounds: 1,
+                rng: 0xABCD_EF01_2345_6789_ABCD_EF01_2345_6789,
+                configs: vec![cfg(0x3FF0_0000_0000_0000), cfg(0xC008_0000_0000_0000)],
+            },
+            JournalEvent::SyncEval { iter: 0, config: cfg(1), value: Some(-2.5) },
+            JournalEvent::SyncEval { iter: 0, config: cfg(2), value: None },
+            JournalEvent::SyncRound {
+                iter: 0,
+                proposed: 2,
+                returned: 1,
+                best: -2.5,
+                wall_ms: 1.25,
+            },
+            JournalEvent::AsyncPropose { pid: 3, rounds: 2, config: cfg(4) },
+            JournalEvent::AsyncSubmit { pid: 3, task: 7, retries: 1 },
+            JournalEvent::AsyncCancel { pid: 6, task: 12 },
+            JournalEvent::AsyncComplete {
+                pid: 3,
+                task: 7,
+                retries: 1,
+                outcome: EventOutcome::Resubmitted(LossReason::Crashed),
+                queue_ms: 0.5,
+                eval_ms: 0.0,
+            },
+            JournalEvent::AsyncComplete {
+                pid: 3,
+                task: 9,
+                retries: 2,
+                outcome: EventOutcome::Lost(LossReason::TimedOut),
+                queue_ms: 0.5,
+                eval_ms: 0.0,
+            },
+            JournalEvent::AsyncComplete {
+                pid: 4,
+                task: 10,
+                retries: 0,
+                outcome: EventOutcome::Done(3.75),
+                queue_ms: 0.1,
+                eval_ms: 0.2,
+            },
+            JournalEvent::AsyncComplete {
+                pid: 5,
+                task: 11,
+                retries: 0,
+                outcome: EventOutcome::Failed,
+                queue_ms: 0.1,
+                eval_ms: 0.2,
+            },
+        ]
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        for ev in sample_events() {
+            let text = ev.to_json().to_string();
+            let back = JournalEvent::from_json(&parse(&text).unwrap()).unwrap();
+            assert_eq!(back, ev, "via {text}");
+            assert_eq!(back.to_json().to_string(), text, "re-serialization differs");
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip_and_resume_append() {
+        let path = tmp("roundtrip");
+        let events = sample_events();
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            for ev in &events[..6] {
+                w.append(ev).unwrap();
+            }
+        }
+        let c = read_journal(&path).unwrap();
+        assert_eq!(c.header.space_fp, 0xDEAD_BEEF_0123_4567);
+        assert_eq!(c.header.sense, SenseTag::Maximize);
+        assert_eq!(c.header.run.seed, 9);
+        assert_eq!(c.events, &events[..6]);
+        assert_eq!(c.valid_len, std::fs::metadata(&path).unwrap().len());
+        // Resume: append the rest, read everything back.
+        {
+            let mut w = JournalWriter::resume(&path, c.valid_len).unwrap();
+            for ev in &events[6..] {
+                w.append(ev).unwrap();
+            }
+        }
+        let c2 = read_journal(&path).unwrap();
+        assert_eq!(c2.events, events);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_trailing_line_is_dropped_and_truncated_on_resume() {
+        let path = tmp("torn");
+        let events = sample_events();
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            for ev in &events[..3] {
+                w.append(ev).unwrap();
+            }
+        }
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        // Simulate a kill mid-write: a partial JSON line with no newline.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(br#"{"e":"sync_round","iter":1,"propo"#).unwrap();
+        }
+        let c = read_journal(&path).unwrap();
+        assert_eq!(c.events, &events[..3], "torn tail must not become an event");
+        assert_eq!(c.valid_len, clean_len, "valid prefix excludes the torn bytes");
+        // Resume truncates the torn tail before appending.
+        {
+            let mut w = JournalWriter::resume(&path, c.valid_len).unwrap();
+            w.append(&events[3]).unwrap();
+        }
+        let c2 = read_journal(&path).unwrap();
+        assert_eq!(c2.events, &events[..4]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn terminated_malformed_final_line_is_corruption_not_torn() {
+        // append() writes line+'\n' in one write_all, so a kill can never
+        // produce a newline-terminated fragment: a terminated final line
+        // that doesn't parse is bit rot / a hand edit and must fail
+        // loudly, not be silently dropped and re-executed on resume.
+        let path = tmp("terminated_corrupt");
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            w.append(&sample_events()[0]).unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"e\":\"sync_round\",\"iter\":}\n").unwrap();
+        }
+        let err = read_journal(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupted"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mid_file_corruption_fails_loudly() {
+        let path = tmp("midfile");
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            w.append(&sample_events()[0]).unwrap();
+        }
+        // Corrupt the *event* line, then append a valid line after it.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let corrupted = text.replace("sync_propose", "sync_prXpose");
+        std::fs::write(&path, corrupted).unwrap();
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            let mut line = sample_events()[1].to_json().to_string();
+            line.push('\n');
+            f.write_all(line.as_bytes()).unwrap();
+        }
+        let err = read_journal(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupted"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_counter_fields_fail_loudly() {
+        // Saturating casts would turn these into silently wrong replay
+        // state (retries reset / budget exhausted); they must be rejected.
+        for bad in [
+            r#"{"e":"async_submit","pid":-1,"task":0,"retries":0}"#,
+            r#"{"e":"async_submit","pid":0,"task":0,"retries":-1}"#,
+            r#"{"e":"async_submit","pid":0,"task":1e300,"retries":0}"#,
+            r#"{"e":"async_submit","pid":0.5,"task":0,"retries":0}"#,
+        ] {
+            let j = parse(bad).unwrap();
+            let err = JournalEvent::from_json(&j).unwrap_err();
+            assert!(
+                err.to_string().contains("not a valid non-negative integer"),
+                "accepted {bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn unterminated_tail_is_torn_even_if_it_parses() {
+        // A final line whose bytes parse but whose newline never landed is
+        // a torn write: counting it into valid_len would make a resume
+        // append the next event onto the same line.
+        let path = tmp("unterminated");
+        let events = sample_events();
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            w.append(&events[0]).unwrap();
+        }
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            // Complete JSON, missing only the newline.
+            f.write_all(events[1].to_json().to_string().as_bytes()).unwrap();
+        }
+        let c = read_journal(&path).unwrap();
+        assert_eq!(c.events, &events[..1], "parseable-but-unterminated tail must drop");
+        assert_eq!(c.valid_len, clean_len);
+        // Resume truncates it; the re-appended event lands on its own line.
+        {
+            let mut w = JournalWriter::resume(&path, c.valid_len).unwrap();
+            w.append(&events[1]).unwrap();
+        }
+        assert_eq!(read_journal(&path).unwrap().events, &events[..2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_and_version_fail_loudly() {
+        let path = tmp("magic");
+        std::fs::write(&path, "{\"e\":\"header\",\"journal\":\"other\",\"version\":1}\n")
+            .unwrap();
+        let err = read_journal(&path).unwrap_err();
+        assert!(err.to_string().contains("magic"), "got: {err:#}");
+        let mut h = header().to_json().to_string();
+        h = h.replace("\"version\":1", "\"version\":999");
+        std::fs::write(&path, format!("{h}\n")).unwrap();
+        let err = read_journal(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn property_truncated_journals_always_replay_a_prefix() {
+        // Crash-at-any-byte: for every possible truncation length, reading
+        // either fails loudly (too short for a header) or yields an exact
+        // event-sequence prefix — never a wrong or reordered event.
+        let path = tmp("prefix_prop");
+        let events = sample_events();
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        let full = std::fs::read(&path).unwrap();
+        check("truncated journal replays a prefix", 200, |g| {
+            let cut = g.usize_range(0, full.len() + 1);
+            let p = tmp("prefix_case");
+            std::fs::write(&p, &full[..cut]).map_err(|e| e.to_string())?;
+            match read_journal(&p) {
+                Ok(c) => {
+                    if c.events.as_slice() != &events[..c.events.len()] {
+                        return Err(format!("cut {cut}: not a prefix"));
+                    }
+                    if c.valid_len > cut as u64 {
+                        return Err(format!("cut {cut}: valid_len past the data"));
+                    }
+                }
+                Err(_) => {
+                    // Only acceptable while the header line is incomplete.
+                    let header_end = full.iter().position(|&b| b == b'\n').unwrap() + 1;
+                    if cut >= header_end {
+                        return Err(format!("cut {cut}: complete header but read failed"));
+                    }
+                }
+            }
+            std::fs::remove_file(&p).ok();
+            Ok(())
+        });
+        std::fs::remove_file(&path).ok();
+    }
+}

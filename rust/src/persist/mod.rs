@@ -1,0 +1,35 @@
+//! Crash-safe run persistence: the append-only JSONL run journal and the
+//! resume path that replays it.
+//!
+//! The Mango paper names fault tolerance as a gap blocking practical
+//! large-scale tuning; production tuning services (Tune, Auptimizer) treat
+//! experiment checkpointing/resume as a core primitive. This subsystem
+//! makes a run survive coordinator death:
+//!
+//! * [`journal`] — the event log: a header (schema version, search-space
+//!   fingerprint, full `RunConfig` + seed, objective sense) and one line
+//!   per proposal, submission, completion (including `Lost` fates), and
+//!   optimizer round. Writes are line-atomic-on-kill: at most one torn
+//!   trailing line, which the reader detects and drops.
+//! * [`recover`] — pure replay: reconstructs the history, pending set
+//!   (with retry counters), telemetry, and RNG/rounds state without
+//!   calling the objective or fitting anything.
+//!
+//! `Tuner::with_journal` turns journaling on; `Tuner::resume_from` builds
+//! a tuner from a journal and continues the run where it died. With a
+//! fixed seed and a deterministic scheduler, crash-at-any-point + resume
+//! reproduces the uninterrupted run's best config and `History` exactly —
+//! the property `rust/tests/recovery.rs` enforces for every event-boundary
+//! crash point in both execution modes.
+
+pub mod journal;
+pub mod recover;
+
+pub use journal::{
+    read_journal, EventOutcome, JournalEvent, JournalWriter, RunHeader, SenseTag,
+    JOURNAL_MAGIC, JOURNAL_VERSION,
+};
+pub use recover::{
+    recover, AsyncReplay, CompletionLogEntry, PartialRound, PendingReplay, RecoveredRun,
+    Replay, RoundRecord, SyncReplay, TerminalReplay,
+};

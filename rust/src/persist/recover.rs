@@ -1,0 +1,506 @@
+//! Journal replay: turn a (possibly crash-truncated) run journal back
+//! into coordinator state.
+//!
+//! Replay is *pure data reconstruction* — no objective is called, no GP is
+//! fit, no RNG is advanced. The coordinator then:
+//!
+//! * restores `History` (arrival order, bit-exact values via the canonical
+//!   codec), the per-completion telemetry log, retry/lost counters, and —
+//!   in sync mode — the shared RNG stream state journaled after the last
+//!   propose;
+//! * re-enqueues configurations that were in flight at the crash (async) or
+//!   re-evaluates the un-absorbed remainder of a partially completed batch
+//!   (sync);
+//! * rehydrates the optimizer ([`crate::optimizer::BatchOptimizer::
+//!   rehydrate`]): the adaptive-beta rounds clock is restored from the
+//!   journal and the GP's `CholeskyState` is rebuilt from the replayed
+//!   rows through the incremental append path — O(n²) per replayed
+//!   observation (one factorization pass in total), never an O(n³) refit
+//!   per replayed event — and bit-identical to the factor the crashed
+//!   process held.
+//!
+//! With a fixed seed and a deterministic scheduler, the resumed run's
+//! proposals, history, and best config are exactly those of an
+//! uninterrupted run: everything behavior-affecting is either journaled
+//! (RNG state, rounds, in-flight set and order) or recomputed from
+//! journaled data by the same arithmetic.
+
+use super::journal::{read_journal, EventOutcome, JournalEvent, RunHeader};
+use crate::space::{Config, SearchSpace};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One completed sync iteration, as journaled.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub iter: usize,
+    pub proposed: usize,
+    pub returned: usize,
+    pub best: f64,
+    pub wall_ms: f64,
+}
+
+/// The partially evaluated batch at crash time (sync mode): the proposed
+/// configs plus whichever evaluations were journaled before the kill.
+#[derive(Clone, Debug)]
+pub struct PartialRound {
+    pub iter: usize,
+    pub batch: Vec<Config>,
+    /// Journaled evaluations, in arrival order (`None` = objective failed).
+    pub evals: Vec<(Config, Option<f64>)>,
+}
+
+/// Replay state for a sync-mode journal.
+#[derive(Clone, Debug, Default)]
+pub struct SyncReplay {
+    /// Completed iterations, in order.
+    pub rounds_done: Vec<RoundRecord>,
+    /// Successful evaluations of completed iterations, arrival order,
+    /// user objective sense.
+    pub history: Vec<(Config, f64)>,
+    /// The iteration interrupted mid-batch, if the crash split one.
+    pub partial: Option<PartialRound>,
+    /// Shared coordinator RNG state after the last journaled propose
+    /// (`None`: nothing was proposed before the crash).
+    pub rng_state: Option<u128>,
+    /// Optimizer rounds counter after the last journaled propose.
+    pub rounds: usize,
+}
+
+/// One completion event, replayed for the telemetry log.
+#[derive(Clone, Debug)]
+pub struct CompletionLogEntry {
+    pub task: u64,
+    pub retries: usize,
+    pub outcome: EventOutcome,
+    pub queue_ms: f64,
+    pub eval_ms: f64,
+}
+
+/// One concluded proposal (terminal completion), in conclusion order.
+#[derive(Clone, Debug)]
+pub struct TerminalReplay {
+    pub task: u64,
+    pub retries: usize,
+    pub outcome: EventOutcome,
+    /// queue + eval wall of the concluding completion (IterationRecord).
+    pub wall_ms: f64,
+    /// Proposals journaled since the previous terminal conclusion — the
+    /// event loop's `proposed_since_record` bookkeeping.
+    pub proposed_before: usize,
+}
+
+/// A proposal in flight at the crash, to be re-enqueued on resume.
+#[derive(Clone, Debug)]
+pub struct PendingReplay {
+    pub pid: u64,
+    pub config: Config,
+    /// Retries already consumed — the retry budget is honored *across*
+    /// restarts, not per process lifetime.
+    pub retries: usize,
+}
+
+/// Replay state for an async-mode journal.
+#[derive(Clone, Debug, Default)]
+pub struct AsyncReplay {
+    /// Done completions in arrival order, user objective sense.
+    pub history: Vec<(Config, f64)>,
+    /// Terminal conclusions in order (drives best-series/records rebuild).
+    pub terminals: Vec<TerminalReplay>,
+    /// Every completion event (incl. `resubmitted` intermediates).
+    pub completion_log: Vec<CompletionLogEntry>,
+    /// In-flight at crash, ordered by their last submission — the same
+    /// order the crashed coordinator's pending map iterated in, so
+    /// constant-liar fits see identical pending rows after resume.
+    pub pending: Vec<PendingReplay>,
+    /// Stable proposal ids handed out so far (resume continues from here).
+    pub proposals_made: u64,
+    /// Optimizer rounds counter after the last journaled propose.
+    pub rounds: usize,
+    /// Task-id high-water mark + 1 (scheduler ids stay unique across
+    /// restarts).
+    pub next_task_id: u64,
+    /// Losses that were resubmitted / proposals abandoned, replayed.
+    pub retried: u64,
+    pub lost: u64,
+    /// Proposals journaled after the last terminal conclusion (carried
+    /// into the resumed loop's `proposed_since_record`).
+    pub trailing_proposed: usize,
+}
+
+/// Mode-specific replay payload.
+#[derive(Clone, Debug)]
+pub enum Replay {
+    Sync(SyncReplay),
+    Async(AsyncReplay),
+}
+
+/// A parsed + replayed journal, ready to hand to `Tuner::resume_from`.
+#[derive(Debug)]
+pub struct RecoveredRun {
+    pub header: RunHeader,
+    /// Valid byte prefix (a torn trailing line is excluded; the resumed
+    /// writer truncates to this before appending).
+    pub valid_len: u64,
+    pub replay: Replay,
+}
+
+impl RecoveredRun {
+    /// Refuse to replay against a space that doesn't match the journal's
+    /// fingerprint — a changed space would silently re-encode replayed
+    /// configs into different GP features.
+    pub fn validate_space(&self, space: &SearchSpace) -> Result<()> {
+        let fp = space.fingerprint();
+        anyhow::ensure!(
+            fp == self.header.space_fp,
+            "journal was recorded for a different search space \
+             (journal fingerprint {:016x}, this space {:016x})",
+            self.header.space_fp,
+            fp
+        );
+        Ok(())
+    }
+}
+
+/// Read, validate, and replay the journal at `path`.
+pub fn recover(path: &Path) -> Result<RecoveredRun> {
+    let contents = read_journal(path)?;
+    let replay = match contents.header.run.mode.as_str() {
+        "sync" => Replay::Sync(replay_sync(&contents.events)?),
+        "async" => Replay::Async(replay_async(&contents.events)?),
+        other => return Err(anyhow!("journal header has unknown mode '{other}'")),
+    };
+    Ok(RecoveredRun { header: contents.header, valid_len: contents.valid_len, replay })
+}
+
+fn replay_sync(events: &[JournalEvent]) -> Result<SyncReplay> {
+    let mut r = SyncReplay::default();
+    let mut current: Option<PartialRound> = None;
+    for ev in events {
+        match ev {
+            JournalEvent::SyncPropose { iter, rounds, rng, configs } => {
+                anyhow::ensure!(
+                    current.is_none(),
+                    "sync_propose for iter {iter} before iter {} closed",
+                    current.as_ref().map(|p| p.iter).unwrap_or(0)
+                );
+                anyhow::ensure!(
+                    *iter == r.rounds_done.len(),
+                    "sync_propose iter {iter} out of order (expected {})",
+                    r.rounds_done.len()
+                );
+                r.rng_state = Some(*rng);
+                r.rounds = *rounds;
+                current =
+                    Some(PartialRound { iter: *iter, batch: configs.clone(), evals: Vec::new() });
+            }
+            JournalEvent::SyncEval { iter, config, value } => {
+                let cur = current
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("sync_eval for iter {iter} without a propose"))?;
+                anyhow::ensure!(cur.iter == *iter, "sync_eval iter {iter} != open {}", cur.iter);
+                anyhow::ensure!(
+                    cur.evals.len() < cur.batch.len(),
+                    "iter {iter}: more evals than proposed configs"
+                );
+                cur.evals.push((config.clone(), *value));
+            }
+            JournalEvent::SyncRound { iter, proposed, returned, best, wall_ms } => {
+                let cur = current
+                    .take()
+                    .ok_or_else(|| anyhow!("sync_round for iter {iter} without a propose"))?;
+                anyhow::ensure!(cur.iter == *iter, "sync_round iter {iter} != open {}", cur.iter);
+                for (cfg, v) in cur.evals {
+                    if let Some(v) = v {
+                        r.history.push((cfg, v));
+                    }
+                }
+                r.rounds_done.push(RoundRecord {
+                    iter: *iter,
+                    proposed: *proposed,
+                    returned: *returned,
+                    best: *best,
+                    wall_ms: *wall_ms,
+                });
+            }
+            other => {
+                return Err(anyhow!("async event {other:?} in a sync-mode journal"));
+            }
+        }
+    }
+    r.partial = current;
+    Ok(r)
+}
+
+/// Per-proposal bookkeeping while scanning an async journal.
+struct PidState {
+    config: Config,
+    retries: usize,
+    /// Sequence number of the proposal's latest submit (or its propose,
+    /// if the crash landed between propose and submit).
+    order: u64,
+    concluded: bool,
+}
+
+fn replay_async(events: &[JournalEvent]) -> Result<AsyncReplay> {
+    let mut r = AsyncReplay::default();
+    let mut pids: BTreeMap<u64, PidState> = BTreeMap::new();
+    let mut seq = 0u64; // global event order for pending-order reconstruction
+    let mut proposed_counter = 0usize;
+    for ev in events {
+        seq += 1;
+        match ev {
+            JournalEvent::AsyncPropose { pid, rounds, config } => {
+                anyhow::ensure!(
+                    !pids.contains_key(pid),
+                    "duplicate async_propose for proposal {pid}"
+                );
+                pids.insert(
+                    *pid,
+                    PidState { config: config.clone(), retries: 0, order: seq, concluded: false },
+                );
+                r.proposals_made = r.proposals_made.max(pid + 1);
+                r.rounds = *rounds;
+                proposed_counter += 1;
+            }
+            JournalEvent::AsyncSubmit { pid, task, retries } => {
+                let st = pids
+                    .get_mut(pid)
+                    .ok_or_else(|| anyhow!("async_submit for unknown proposal {pid}"))?;
+                anyhow::ensure!(!st.concluded, "async_submit for concluded proposal {pid}");
+                st.retries = *retries;
+                st.order = seq;
+                r.next_task_id = r.next_task_id.max(task + 1);
+            }
+            JournalEvent::AsyncCancel { pid, .. } => {
+                let st = pids
+                    .get_mut(pid)
+                    .ok_or_else(|| anyhow!("async_cancel for unknown proposal {pid}"))?;
+                anyhow::ensure!(!st.concluded, "async_cancel for concluded proposal {pid}");
+                // Terminal, but recordless: the live loop produces no
+                // iteration record, history entry, or counter for work the
+                // early stop withdrew — replay must not re-enqueue it.
+                st.concluded = true;
+            }
+            JournalEvent::AsyncComplete { pid, task, retries, outcome, queue_ms, eval_ms } => {
+                let st = pids
+                    .get_mut(pid)
+                    .ok_or_else(|| anyhow!("async_complete for unknown proposal {pid}"))?;
+                anyhow::ensure!(!st.concluded, "async_complete for concluded proposal {pid}");
+                r.completion_log.push(CompletionLogEntry {
+                    task: *task,
+                    retries: *retries,
+                    outcome: *outcome,
+                    queue_ms: *queue_ms,
+                    eval_ms: *eval_ms,
+                });
+                match outcome {
+                    EventOutcome::Resubmitted(_) => {
+                        st.retries = *retries;
+                        st.order = seq;
+                        r.retried += 1;
+                        // Not terminal: the proposal stays pending. `order`
+                        // moves to this event (and again at the follow-up
+                        // async_submit, if it was journaled before the
+                        // crash): the resubmission would have received a
+                        // fresh, highest task id, so the proposal belongs
+                        // at the back of the pending order either way.
+                    }
+                    terminal => {
+                        st.concluded = true;
+                        if let EventOutcome::Done(v) = terminal {
+                            r.history.push((st.config.clone(), *v));
+                        }
+                        if matches!(terminal, EventOutcome::Lost(_)) {
+                            r.lost += 1;
+                        }
+                        r.terminals.push(TerminalReplay {
+                            task: *task,
+                            retries: *retries,
+                            outcome: *outcome,
+                            wall_ms: *queue_ms + *eval_ms,
+                            proposed_before: std::mem::take(&mut proposed_counter),
+                        });
+                    }
+                }
+            }
+            other => {
+                return Err(anyhow!("sync event {other:?} in an async-mode journal"));
+            }
+        }
+    }
+    let mut pending: Vec<(u64, PendingReplay)> = pids
+        .into_iter()
+        .filter(|(_, st)| !st.concluded)
+        .map(|(pid, st)| {
+            (st.order, PendingReplay { pid, config: st.config, retries: st.retries })
+        })
+        .collect();
+    pending.sort_by_key(|(order, _)| *order);
+    r.pending = pending.into_iter().map(|(_, p)| p).collect();
+    r.trailing_proposed = proposed_counter;
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::RunConfig;
+    use crate::persist::journal::{JournalWriter, SenseTag};
+    use crate::scheduler::LossReason;
+    use crate::space::ParamValue;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mango_recover_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn cfg(i: i64) -> Config {
+        Config::new(vec![("i".into(), ParamValue::Int(i))])
+    }
+
+    fn write_journal(path: &Path, mode: &str, events: &[JournalEvent]) {
+        let header = RunHeader {
+            space_fp: 42,
+            sense: SenseTag::Maximize,
+            run: RunConfig { mode: mode.into(), ..Default::default() },
+        };
+        let mut w = JournalWriter::create(path, &header).unwrap();
+        for ev in events {
+            w.append(ev).unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_replay_reconstructs_rounds_and_partial() {
+        let path = tmp("sync");
+        write_journal(
+            &path,
+            "sync",
+            &[
+                JournalEvent::SyncPropose {
+                    iter: 0,
+                    rounds: 0,
+                    rng: 11,
+                    configs: vec![cfg(0), cfg(1)],
+                },
+                JournalEvent::SyncEval { iter: 0, config: cfg(0), value: Some(1.0) },
+                JournalEvent::SyncEval { iter: 0, config: cfg(1), value: None },
+                JournalEvent::SyncRound {
+                    iter: 0,
+                    proposed: 2,
+                    returned: 1,
+                    best: 1.0,
+                    wall_ms: 3.0,
+                },
+                JournalEvent::SyncPropose {
+                    iter: 1,
+                    rounds: 1,
+                    rng: 22,
+                    configs: vec![cfg(2), cfg(3)],
+                },
+                JournalEvent::SyncEval { iter: 1, config: cfg(2), value: Some(2.0) },
+                // crash: no eval for cfg(3), no round marker
+            ],
+        );
+        let rec = recover(&path).unwrap();
+        let Replay::Sync(s) = rec.replay else { panic!("expected sync replay") };
+        assert_eq!(s.rounds_done.len(), 1);
+        assert_eq!(s.rounds_done[0].returned, 1);
+        assert_eq!(s.history, vec![(cfg(0), 1.0)], "failed evals stay out of history");
+        assert_eq!(s.rng_state, Some(22), "rng from the LAST propose");
+        assert_eq!(s.rounds, 1);
+        let p = s.partial.unwrap();
+        assert_eq!(p.iter, 1);
+        assert_eq!(p.batch, vec![cfg(2), cfg(3)]);
+        assert_eq!(p.evals, vec![(cfg(2), Some(2.0))]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sync_replay_rejects_out_of_order_events() {
+        let path = tmp("sync_bad");
+        write_journal(
+            &path,
+            "sync",
+            &[JournalEvent::SyncEval { iter: 0, config: cfg(0), value: Some(1.0) }],
+        );
+        assert!(recover(&path).unwrap_err().to_string().contains("without a propose"));
+        write_journal(
+            &path,
+            "sync",
+            &[JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) }],
+        );
+        assert!(recover(&path).unwrap_err().to_string().contains("sync-mode journal"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn async_replay_reconstructs_pending_in_submit_order_with_retries() {
+        let path = tmp("async");
+        write_journal(
+            &path,
+            "async",
+            &[
+                JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) },
+                JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0 },
+                JournalEvent::AsyncPropose { pid: 1, rounds: 0, config: cfg(1) },
+                JournalEvent::AsyncSubmit { pid: 1, task: 1, retries: 0 },
+                JournalEvent::AsyncPropose { pid: 2, rounds: 0, config: cfg(2) },
+                JournalEvent::AsyncSubmit { pid: 2, task: 2, retries: 0 },
+                // pid 0 is lost once and resubmitted as task 3 → goes to
+                // the back of the pending order.
+                JournalEvent::AsyncComplete {
+                    pid: 0,
+                    task: 0,
+                    retries: 1,
+                    outcome: EventOutcome::Resubmitted(LossReason::Crashed),
+                    queue_ms: 0.0,
+                    eval_ms: 0.0,
+                },
+                JournalEvent::AsyncSubmit { pid: 0, task: 3, retries: 1 },
+                // pid 1 completes.
+                JournalEvent::AsyncComplete {
+                    pid: 1,
+                    task: 1,
+                    retries: 0,
+                    outcome: EventOutcome::Done(5.0),
+                    queue_ms: 1.0,
+                    eval_ms: 2.0,
+                },
+                // refill proposal after the completion; crash before submit.
+                JournalEvent::AsyncPropose { pid: 3, rounds: 2, config: cfg(3) },
+            ],
+        );
+        let rec = recover(&path).unwrap();
+        let Replay::Async(a) = rec.replay else { panic!("expected async replay") };
+        assert_eq!(a.history, vec![(cfg(1), 5.0)]);
+        assert_eq!(a.proposals_made, 4);
+        assert_eq!(a.rounds, 2);
+        assert_eq!(a.next_task_id, 4);
+        assert_eq!(a.retried, 1);
+        assert_eq!(a.lost, 0);
+        assert_eq!(a.terminals.len(), 1);
+        assert_eq!(a.terminals[0].proposed_before, 3, "3 proposes before the terminal");
+        assert_eq!(a.trailing_proposed, 1, "pid 3 proposed after the last terminal");
+        assert_eq!(a.completion_log.len(), 2);
+        // Pending order: pid 2 (submit seq 6) < pid 0 (resubmit seq 8) <
+        // pid 3 (propose only, seq 10).
+        let pids: Vec<u64> = a.pending.iter().map(|p| p.pid).collect();
+        assert_eq!(pids, vec![2, 0, 3]);
+        assert_eq!(a.pending[1].retries, 1, "retry count survives the crash");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn space_fingerprint_mismatch_is_loud() {
+        let path = tmp("fp");
+        write_journal(&path, "sync", &[]);
+        let rec = recover(&path).unwrap();
+        let space = crate::space::svm_space(); // fingerprint != 42
+        let err = rec.validate_space(&space).unwrap_err();
+        assert!(err.to_string().contains("different search space"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+}

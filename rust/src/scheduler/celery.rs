@@ -185,12 +185,27 @@ impl CeleryAsyncScheduler {
         config: CelerySimConfig,
         seed: u64,
     ) -> Self {
+        Self::spawn_from(scope, objective, config, seed, 0)
+    }
+
+    /// [`spawn`](Self::spawn) with the task-id counter starting at
+    /// `first_id` (resumed runs continue the crashed run's id sequence).
+    /// Fates are still re-rolled from `seed` in submission order — the
+    /// simulator models a fresh cluster after the coordinator restart, not
+    /// a replay of the old cluster's fault schedule.
+    pub fn spawn_from<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        objective: Objective<'env>,
+        config: CelerySimConfig,
+        seed: u64,
+        first_id: TaskId,
+    ) -> Self {
         let workers = config.workers.max(1);
         Self {
             pool: WorkerPool::spawn(scope, objective, workers),
             config,
             rng: Pcg64::new(seed ^ 0xCE1E_27),
-            next_id: 0,
+            next_id: first_id,
             sim_stats: CeleryStats::default(),
         }
     }

@@ -185,6 +185,15 @@ impl SchedulerKind {
             _ => None,
         }
     }
+
+    /// Inverse of [`from_str`](Self::from_str) (journal header round trip).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Serial => "serial",
+            Self::Threaded => "threaded",
+            Self::Celery => "celery",
+        }
+    }
 }
 
 /// Build a synchronous scheduler by kind with `workers` parallelism.
@@ -222,15 +231,35 @@ pub fn build_async<'scope, 'env>(
     scope: &'scope std::thread::Scope<'scope, 'env>,
     objective: Objective<'env>,
 ) -> Box<dyn AsyncScheduler + 'scope> {
+    build_async_from(kind, workers, seed, celery_config, scope, objective, 0)
+}
+
+/// [`build_async`] with the scheduler's task-id counter starting at
+/// `first_id`: a resumed run passes the crashed run's high-water mark + 1,
+/// so task ids stay unique across restarts and journaled telemetry never
+/// aliases two distinct evaluations under one id.
+pub fn build_async_from<'scope, 'env>(
+    kind: SchedulerKind,
+    workers: usize,
+    seed: u64,
+    celery_config: Option<celery::CelerySimConfig>,
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    objective: Objective<'env>,
+    first_id: TaskId,
+) -> Box<dyn AsyncScheduler + 'scope> {
     match kind {
-        SchedulerKind::Serial => Box::new(serial::SerialAsyncScheduler::new(objective)),
-        SchedulerKind::Threaded => {
-            Box::new(threaded::ThreadedAsyncScheduler::spawn(scope, objective, workers))
+        SchedulerKind::Serial => {
+            Box::new(serial::SerialAsyncScheduler::new(objective).with_first_id(first_id))
         }
+        SchedulerKind::Threaded => Box::new(threaded::ThreadedAsyncScheduler::spawn_from(
+            scope, objective, workers, first_id,
+        )),
         SchedulerKind::Celery => {
             let cfg = celery_config
                 .unwrap_or(celery::CelerySimConfig { workers, ..Default::default() });
-            Box::new(celery::CeleryAsyncScheduler::spawn(scope, objective, cfg, seed))
+            Box::new(celery::CeleryAsyncScheduler::spawn_from(
+                scope, objective, cfg, seed, first_id,
+            ))
         }
     }
 }

@@ -44,6 +44,14 @@ impl<'a> SerialAsyncScheduler<'a> {
     pub fn new(objective: Objective<'a>) -> Self {
         Self { objective, queue: VecDeque::new(), next_id: 0, stats: AsyncStats::default() }
     }
+
+    /// Start the task-id counter at `first_id` — a resumed run continues
+    /// the crashed run's id sequence so journaled telemetry stays unique
+    /// across restarts.
+    pub fn with_first_id(mut self, first_id: TaskId) -> Self {
+        self.next_id = first_id;
+        self
+    }
 }
 
 impl AsyncScheduler for SerialAsyncScheduler<'_> {

@@ -67,7 +67,18 @@ impl ThreadedAsyncScheduler {
         objective: Objective<'env>,
         workers: usize,
     ) -> Self {
-        Self { pool: WorkerPool::spawn(scope, objective, workers), next_id: 0 }
+        Self::spawn_from(scope, objective, workers, 0)
+    }
+
+    /// [`spawn`](Self::spawn) with the task-id counter starting at
+    /// `first_id` (resumed runs continue the crashed run's id sequence).
+    pub fn spawn_from<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        objective: Objective<'env>,
+        workers: usize,
+        first_id: TaskId,
+    ) -> Self {
+        Self { pool: WorkerPool::spawn(scope, objective, workers), next_id: first_id }
     }
 }
 

@@ -26,7 +26,7 @@ pub mod encode;
 mod value;
 
 pub use encode::Encoder;
-pub use value::{Config, ParamValue};
+pub use value::{f64_from_json, f64_to_json, Config, ParamValue};
 
 use crate::util::rng::Pcg64;
 use dist::Distribution;
@@ -173,6 +173,90 @@ impl SearchSpace {
     /// Product of per-parameter cardinalities (paper §1: ~1e6 for Listing 1).
     pub fn cardinality_estimate(&self) -> f64 {
         self.params.iter().map(|p| p.domain.cardinality()).product()
+    }
+
+    /// Stable 64-bit fingerprint of the space's structure (names, domain
+    /// kinds, and exact bounds/values — floats hashed by IEEE-754 bits).
+    /// The run journal records it in its header and `Tuner::resume_from`
+    /// refuses to replay a journal against a space with a different
+    /// fingerprint: resuming under a changed space would silently re-encode
+    /// old configs into different GP features. `Custom` domains hash by
+    /// their [`dist::Distribution::name`] — two custom distributions with
+    /// the same name are treated as the same domain.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a (no hashing crates in the offline registry; std's
+        // DefaultHasher is explicitly not stable across releases).
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        fn eat_f64(h: &mut u64, v: f64) {
+            eat(h, &v.to_bits().to_le_bytes());
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for p in &self.params {
+            eat(&mut h, p.name.as_bytes());
+            eat(&mut h, &[0xFF]); // name/domain separator
+            match &p.domain {
+                Domain::Uniform { lo, hi } => {
+                    eat(&mut h, b"uniform");
+                    eat_f64(&mut h, *lo);
+                    eat_f64(&mut h, *hi);
+                }
+                Domain::LogUniform { lo, hi } => {
+                    eat(&mut h, b"loguniform");
+                    eat_f64(&mut h, *lo);
+                    eat_f64(&mut h, *hi);
+                }
+                Domain::QUniform { lo, hi, q } => {
+                    eat(&mut h, b"quniform");
+                    eat_f64(&mut h, *lo);
+                    eat_f64(&mut h, *hi);
+                    eat_f64(&mut h, *q);
+                }
+                Domain::Normal { mean, std } => {
+                    eat(&mut h, b"normal");
+                    eat_f64(&mut h, *mean);
+                    eat_f64(&mut h, *std);
+                }
+                Domain::Range { lo, hi } => {
+                    eat(&mut h, b"range");
+                    eat(&mut h, &lo.to_le_bytes());
+                    eat(&mut h, &hi.to_le_bytes());
+                }
+                Domain::Choice(vals) => {
+                    eat(&mut h, b"choice");
+                    for v in vals {
+                        // Variant tag first: Int(n) and F64(from_bits(n))
+                        // share a byte encoding, so untagged values would
+                        // let differently-typed choices collide.
+                        match v {
+                            ParamValue::F64(x) => {
+                                eat(&mut h, b"f");
+                                eat_f64(&mut h, *x);
+                            }
+                            ParamValue::Int(i) => {
+                                eat(&mut h, b"i");
+                                eat(&mut h, &i.to_le_bytes());
+                            }
+                            ParamValue::Str(s) => {
+                                eat(&mut h, b"s");
+                                eat(&mut h, s.as_bytes());
+                            }
+                        }
+                        eat(&mut h, &[0xFE]); // value separator
+                    }
+                }
+                Domain::Custom(d) => {
+                    eat(&mut h, b"custom");
+                    eat(&mut h, d.name().as_bytes());
+                }
+            }
+            eat(&mut h, &[0xFD]); // param separator
+        }
+        h
     }
 
     /// The paper's heuristic for the Monte-Carlo acquisition sample count:
@@ -356,6 +440,36 @@ mod tests {
     #[should_panic(expected = "duplicate parameter")]
     fn duplicate_names_rejected() {
         let _ = SearchSpace::builder().uniform("x", 0.0, 1.0).uniform("x", 0.0, 2.0);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        // Stable across independent constructions of the same space…
+        assert_eq!(xgboost_space().fingerprint(), xgboost_space().fingerprint());
+        assert_eq!(svm_space().fingerprint(), svm_space().fingerprint());
+        // …and different for different structure, bounds, names, or order.
+        assert_ne!(xgboost_space().fingerprint(), svm_space().fingerprint());
+        let a = SearchSpace::builder().uniform("x", 0.0, 1.0).build();
+        let bounds = SearchSpace::builder().uniform("x", 0.0, 2.0).build();
+        let name = SearchSpace::builder().uniform("y", 0.0, 1.0).build();
+        let kind = SearchSpace::builder().quniform("x", 0.0, 1.0, 0.1).build();
+        assert_ne!(a.fingerprint(), bounds.fingerprint());
+        assert_ne!(a.fingerprint(), name.fingerprint());
+        assert_ne!(a.fingerprint(), kind.fingerprint());
+        let ab = SearchSpace::builder().uniform("a", 0.0, 1.0).uniform("b", 0.0, 1.0).build();
+        let ba = SearchSpace::builder().uniform("b", 0.0, 1.0).uniform("a", 0.0, 1.0).build();
+        assert_ne!(ab.fingerprint(), ba.fingerprint(), "parameter order matters");
+        let c1 = SearchSpace::builder().choice("m", &["a", "b"]).build();
+        let c2 = SearchSpace::builder().choice("m", &["a", "c"]).build();
+        assert_ne!(c1.fingerprint(), c2.fingerprint(), "choice values matter");
+        // Same bytes, different variant: Int(1) vs F64 with bit pattern 1.
+        let ci = SearchSpace::builder()
+            .choice_values("m", vec![ParamValue::Int(1)])
+            .build();
+        let cf = SearchSpace::builder()
+            .choice_values("m", vec![ParamValue::F64(f64::from_bits(1))])
+            .build();
+        assert_ne!(ci.fingerprint(), cf.fingerprint(), "choice value types matter");
     }
 
     #[test]

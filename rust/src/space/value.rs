@@ -1,8 +1,41 @@
 //! Parameter values and configurations (the `params` dicts of the paper).
 
 use crate::config::json::Json;
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Canonical, round-trip-stable JSON encoding of one `f64` (the run
+/// journal's number codec). Finite values other than `-0.0` serialize as
+/// plain JSON numbers — Rust's shortest-round-trip `Display` plus a
+/// correctly-rounded `parse` make the decimal form bit-exact. Values a
+/// JSON number cannot carry faithfully (`NaN` with any payload, `±inf`,
+/// `-0.0` — which [`Json::Num`]'s integer-style printing would collapse to
+/// `0`) serialize as the IEEE-754 bit pattern, so every one of the 2^64
+/// possible values survives serialize → parse → re-serialize bit-identically.
+pub fn f64_to_json(v: f64) -> Json {
+    if v.is_finite() && !(v == 0.0 && v.is_sign_negative()) {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("f64:{:016x}", v.to_bits()))
+    }
+}
+
+/// Decode [`f64_to_json`]'s encoding.
+pub fn f64_from_json(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => {
+            let hex = s
+                .strip_prefix("f64:")
+                .ok_or_else(|| anyhow!("bad f64 encoding '{s}'"))?;
+            let bits = u64::from_str_radix(hex, 16)
+                .map_err(|e| anyhow!("bad f64 bits '{s}': {e}"))?;
+            Ok(f64::from_bits(bits))
+        }
+        other => Err(anyhow!("expected f64 encoding, found {other}")),
+    }
+}
 
 /// One hyperparameter value.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,6 +73,61 @@ impl ParamValue {
             ParamValue::F64(v) => Json::Num(*v),
             ParamValue::Int(v) => Json::Num(*v as f64),
             ParamValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+
+    /// Canonical journal encoding: a single-key object tagging the variant
+    /// (`{"f":…}` / `{"i":…}` / `{"s":…}`), with floats via [`f64_to_json`]
+    /// (bit-exact incl. NaN payloads, `±inf`, `-0.0`) and integers as
+    /// numbers only while exactly representable in a JSON double.
+    pub fn to_journal_json(&self) -> Json {
+        match self {
+            ParamValue::F64(v) => Json::obj(vec![("f", f64_to_json(*v))]),
+            ParamValue::Int(i) => {
+                let enc = if i.unsigned_abs() <= (1u64 << 53) {
+                    Json::Num(*i as f64)
+                } else {
+                    Json::Str(format!("i64:{i}"))
+                };
+                Json::obj(vec![("i", enc)])
+            }
+            ParamValue::Str(s) => Json::obj(vec![("s", Json::Str(s.clone()))]),
+        }
+    }
+
+    /// Decode [`to_journal_json`](Self::to_journal_json)'s encoding.
+    pub fn from_journal_json(j: &Json) -> Result<Self> {
+        let obj = j
+            .as_obj()
+            .filter(|m| m.len() == 1)
+            .ok_or_else(|| anyhow!("param value must be a single-key object, found {j}"))?;
+        let (tag, val) = obj.iter().next().unwrap();
+        match tag.as_str() {
+            "f" => Ok(ParamValue::F64(f64_from_json(val)?)),
+            "i" => match val {
+                Json::Num(n) => {
+                    // Mirror the encoder's 2^53 cutoff: a fractional or
+                    // out-of-range number here is journal corruption and
+                    // must fail loudly, not truncate/saturate into a
+                    // silently different config.
+                    anyhow::ensure!(
+                        n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0,
+                        "i64 encoding not an exactly-representable integer: {n}"
+                    );
+                    Ok(ParamValue::Int(*n as i64))
+                }
+                Json::Str(s) => {
+                    let digits = s
+                        .strip_prefix("i64:")
+                        .ok_or_else(|| anyhow!("bad i64 encoding '{s}'"))?;
+                    Ok(ParamValue::Int(digits.parse()?))
+                }
+                other => Err(anyhow!("bad i64 encoding {other}")),
+            },
+            "s" => Ok(ParamValue::Str(
+                val.as_str().ok_or_else(|| anyhow!("bad str encoding {val}"))?.to_string(),
+            )),
+            other => Err(anyhow!("unknown param value tag '{other}'")),
         }
     }
 }
@@ -109,6 +197,36 @@ impl Config {
             self.entries.iter().map(|(n, v)| (n.clone(), v.to_json())).collect();
         Json::Obj(map)
     }
+
+    /// Canonical journal encoding: an array of `[name, value]` pairs.
+    /// Unlike [`to_json`](Self::to_json) (a `BTreeMap`-backed object that
+    /// re-sorts keys), the array preserves entry order, so the encoding of
+    /// a given `Config` is unique and replay reconstructs it exactly.
+    pub fn to_journal_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|(n, v)| Json::Arr(vec![Json::Str(n.clone()), v.to_journal_json()]))
+                .collect(),
+        )
+    }
+
+    /// Decode [`to_journal_json`](Self::to_journal_json)'s encoding.
+    pub fn from_journal_json(j: &Json) -> Result<Self> {
+        let pairs = j.as_arr().ok_or_else(|| anyhow!("config must be an array, found {j}"))?;
+        let mut entries = Vec::with_capacity(pairs.len());
+        for p in pairs {
+            let pair = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("config entry must be a [name, value] pair"))?;
+            let name = pair[0]
+                .as_str()
+                .ok_or_else(|| anyhow!("config entry name must be a string"))?;
+            entries.push((name.to_string(), ParamValue::from_journal_json(&pair[1])?));
+        }
+        Ok(Self { entries })
+    }
 }
 
 impl fmt::Display for Config {
@@ -159,5 +277,139 @@ mod tests {
         ]);
         assert_eq!(c.to_json().to_string(), r#"{"kind":"rbf","x":1.5}"#);
         assert_eq!(c.to_string(), "{x: 1.500000, kind: rbf}");
+    }
+
+    // ---------------- canonical journal codec ----------------
+
+    /// serialize → parse → re-serialize must be bit-identical (value bits
+    /// AND serialized text) for the full f64 range.
+    fn roundtrip_f64(v: f64) {
+        let text = f64_to_json(v).to_string();
+        let parsed = f64_from_json(&crate::config::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            parsed.to_bits(),
+            v.to_bits(),
+            "f64 bits changed: {v:?} ({:016x}) -> {parsed:?} via {text}",
+            v.to_bits()
+        );
+        assert_eq!(f64_to_json(parsed).to_string(), text, "re-serialization differs");
+    }
+
+    #[test]
+    fn f64_codec_exact_on_special_values() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            -3.25,
+            1e-300,
+            f64::MIN_POSITIVE / 8.0, // subnormal
+            1e300,
+            1e15,
+            2.5e15,
+            (1u64 << 53) as f64,
+            f64::MAX,
+            f64::MIN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            -f64::NAN,
+            f64::from_bits(0x7ff8_0000_0000_0001), // NaN with a payload
+            f64::from_bits(0xfff0_dead_beef_0001), // negative signaling-ish NaN
+        ] {
+            roundtrip_f64(v);
+        }
+    }
+
+    #[test]
+    fn f64_codec_exact_on_arbitrary_bit_patterns() {
+        crate::util::proptest::check("f64 journal codec is bit-exact", 512, |g| {
+            let v = f64::from_bits(g.rng().next_u64());
+            let text = f64_to_json(v).to_string();
+            let parsed =
+                f64_from_json(&crate::config::json::parse(&text).map_err(|e| e.to_string())?)
+                    .map_err(|e| e.to_string())?;
+            if parsed.to_bits() != v.to_bits() {
+                return Err(format!("{:016x} -> {:016x} via {text}", v.to_bits(), parsed.to_bits()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn param_value_journal_roundtrip() {
+        crate::util::proptest::check("param value journal codec", 256, |g| {
+            let v = match g.usize_range(0, 4) {
+                0 => ParamValue::F64(f64::from_bits(g.rng().next_u64())),
+                1 => ParamValue::F64(g.f64_range(-1e6, 1e6)),
+                2 => ParamValue::Int(g.rng().next_u64() as i64),
+                _ => ParamValue::Str(format!("choice_{}", g.usize_range(0, 1000))),
+            };
+            let text = v.to_journal_json().to_string();
+            let parsed = ParamValue::from_journal_json(
+                &crate::config::json::parse(&text).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            // Bit-level equality (PartialEq would treat NaN != NaN).
+            let same = match (&v, &parsed) {
+                (ParamValue::F64(a), ParamValue::F64(b)) => a.to_bits() == b.to_bits(),
+                (a, b) => a == b,
+            };
+            if !same {
+                return Err(format!("{v:?} -> {parsed:?} via {text}"));
+            }
+            if parsed.to_journal_json().to_string() != text {
+                return Err(format!("re-serialization of {text} differs"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn config_journal_roundtrip_preserves_order_and_bits() {
+        // Entry order is load-bearing (encoding, GP features): the codec
+        // must preserve it even where to_json()'s BTreeMap re-sorts.
+        let c = Config::new(vec![
+            ("z_last".into(), ParamValue::F64(f64::NAN)),
+            ("a_first".into(), ParamValue::F64(-0.0)),
+            ("big".into(), ParamValue::Int(i64::MAX)),
+            ("booster".into(), ParamValue::Str("dart".into())),
+            ("q".into(), ParamValue::F64(0.75)),
+        ]);
+        let text = c.to_journal_json().to_string();
+        let parsed =
+            Config::from_journal_json(&crate::config::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.entries().len(), 5);
+        for ((n1, v1), (n2, v2)) in c.entries().iter().zip(parsed.entries()) {
+            assert_eq!(n1, n2, "entry order must survive");
+            match (v1, v2) {
+                (ParamValue::F64(a), ParamValue::F64(b)) => assert_eq!(a.to_bits(), b.to_bits()),
+                (a, b) => assert_eq!(a, b),
+            }
+        }
+        assert_eq!(parsed.to_journal_json().to_string(), text);
+        assert_eq!(parsed.get_i64("big"), Some(i64::MAX), "i64::MAX survives exactly");
+    }
+
+    #[test]
+    fn journal_codec_rejects_malformed_input() {
+        for bad in [
+            r#"{"f":1.0,"i":2}"#, // two tags
+            r#"{"x":1.0}"#,       // unknown tag
+            r#"{"f":"g64:0000000000000000"}"#,
+            r#"{"f":"f64:xyz"}"#,
+            r#"{"i":"i64:notanumber"}"#,
+            r#"{"i":2.5}"#,
+            r#"{"i":1e300}"#,
+            r#"{"s":3}"#,
+            r#"[1,2]"#,
+        ] {
+            let j = crate::config::json::parse(bad).unwrap();
+            assert!(ParamValue::from_journal_json(&j).is_err(), "accepted {bad}");
+        }
+        for bad in [r#"{"a":1}"#, r#"[["x"]]"#, r#"[[1,{"f":0}]]"#] {
+            let j = crate::config::json::parse(bad).unwrap();
+            assert!(Config::from_journal_json(&j).is_err(), "accepted {bad}");
+        }
     }
 }
