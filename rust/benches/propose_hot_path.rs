@@ -1,0 +1,144 @@
+//! propose_hot_path: per-round propose-step latency — the tentpole claim
+//! of the GEMM-ified surrogate hot path. Two measurements:
+//!
+//! 1. **Kernel build**: the GEMM-based `rbf_kernel` (squared-distance
+//!    expansion + blocked `matmul_transb` + one elementwise `exp` pass)
+//!    against the scalar per-pair baseline it replaced (kept here as the
+//!    reference impl, out of the library hot path), with a correctness
+//!    cross-check before any timing and a speedup assertion.
+//! 2. **Full propose rounds**: `BayesianCore::fit_and_score` at cache
+//!    steady state (the per-round cost the event loop pays) over
+//!    n ∈ {64, 256} history rows, m ∈ {1k, 10k} MC candidates, and
+//!    `proposal_threads` ∈ {1, 4}.
+//!
+//! Run: `cargo bench --bench propose_hot_path`. Writes `BENCH_propose.json`
+//! at the repo root (overwriting the committed placeholder), mirroring the
+//! `BENCH_gp_refit.json` format.
+
+use mango::exp::benchkit::bench;
+use mango::gp::kernel::{rbf_kernel, rbf_pair};
+use mango::linalg::Matrix;
+use mango::optimizer::bayesian::BayesianCore;
+use mango::optimizer::{GpOptions, History};
+use mango::space::SearchSpace;
+use mango::util::rng::Pcg64;
+
+const D: usize = 8;
+/// Honest floor for the GEMM-vs-scalar kernel build: the elementwise exp
+/// pass is common to both paths and bounds the attainable ratio; the madd
+/// pipeline itself is several times faster.
+const KERNEL_SPEEDUP_TARGET: f64 = 1.3;
+
+/// Scalar reference: the element-wise closure the library used before the
+/// GEMM path (one bounds-checked `rbf_pair` per entry). Kept in the bench
+/// only — the `#[cfg(test)]`-style baseline the speedup is asserted against.
+fn rbf_kernel_scalar(x: &Matrix, z: &Matrix, inv_ls: &[f64]) -> Matrix {
+    Matrix::from_fn(x.rows(), z.rows(), |i, j| rbf_pair(x.row(i), z.row(j), inv_ls))
+}
+
+fn bench_space() -> SearchSpace {
+    let mut b = SearchSpace::builder();
+    for i in 0..D {
+        b = b.uniform(&format!("x{i}"), 0.0, 1.0);
+    }
+    b.build()
+}
+
+fn bench_history(space: &SearchSpace, n: usize, seed: u64) -> History {
+    let mut rng = Pcg64::new(seed);
+    let mut h = History::new();
+    for cfg in space.sample_n(&mut rng, n) {
+        let v = (5.0 * cfg.get_f64("x0").unwrap()).sin() + 0.3 * cfg.get_f64("x1").unwrap();
+        h.push(cfg, v);
+    }
+    h
+}
+
+fn main() {
+    // ---- 1. kernel build: GEMM vs the scalar baseline ----
+    let (kn, km) = (256usize, 10_000usize);
+    let mut rng = Pcg64::new(11);
+    let x = Matrix::from_fn(kn, D, |_, _| rng.next_f64());
+    let xc = Matrix::from_fn(km, D, |_, _| rng.next_f64());
+    let inv_ls = vec![1.0 / 0.3; D];
+
+    // Correctness before timing: the GEMM path must match the oracle.
+    let gemm = rbf_kernel(&x, &xc, &inv_ls);
+    let scalar = rbf_kernel_scalar(&x, &xc, &inv_ls);
+    let max_dev = gemm.max_abs_diff(&scalar);
+    assert!(max_dev < 1e-12, "GEMM kernel deviates from the scalar oracle: {max_dev:e}");
+
+    let t_scalar = bench(&format!("scalar rbf_kernel {kn}x{km}"), 1, 10, || {
+        std::hint::black_box(rbf_kernel_scalar(&x, &xc, &inv_ls));
+    });
+    let t_gemm = bench(&format!("gemm   rbf_kernel {kn}x{km}"), 1, 10, || {
+        std::hint::black_box(rbf_kernel(&x, &xc, &inv_ls));
+    });
+    let kernel_speedup = t_scalar.mean_us / t_gemm.mean_us.max(1e-9);
+    println!("{}", t_scalar.row());
+    println!("{}", t_gemm.row());
+    println!("kernel speedup: {kernel_speedup:.2}x (target >= {KERNEL_SPEEDUP_TARGET}x)");
+
+    // ---- 2. full propose rounds at cache steady state ----
+    let space = bench_space();
+    let mut round_rows = String::new();
+    for n in [64usize, 256] {
+        let history = bench_history(&space, n, n as u64);
+        for m in [1_000usize, 10_000] {
+            for threads in [1usize, 4] {
+                let opts = GpOptions {
+                    mc_samples: m,
+                    proposal_threads: threads,
+                    fixed_beta: Some(2.0),
+                    ..Default::default()
+                };
+                let mut core =
+                    BayesianCore::new(space.clone(), opts).expect("native core");
+                let mut call_seed = 1000 + n as u64;
+                let iters = if m >= 10_000 { 6 } else { 15 };
+                let stats = bench(
+                    &format!("fit_and_score n={n} m={m} threads={threads}"),
+                    2,
+                    iters,
+                    || {
+                        call_seed += 1;
+                        let mut rng = Pcg64::new(call_seed);
+                        std::hint::black_box(
+                            core.fit_and_score(&history, 1, &mut rng).expect("fit_and_score"),
+                        );
+                    },
+                );
+                println!("{}", stats.row());
+                if !round_rows.is_empty() {
+                    round_rows.push_str(",\n");
+                }
+                round_rows.push_str(&format!(
+                    "    {{\"n\": {n}, \"m\": {m}, \"threads\": {threads}, \
+                     \"mean_us\": {:.1}, \"p50_us\": {:.1}}}",
+                    stats.mean_us, stats.p50_us
+                ));
+            }
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"propose_hot_path\",\n  \"dims\": {D},\n  \
+         \"kernel\": {{\"n\": {kn}, \"m\": {km}, \"scalar_mean_us\": {:.1}, \
+         \"gemm_mean_us\": {:.1}, \"speedup\": {:.2}, \
+         \"target_speedup\": {KERNEL_SPEEDUP_TARGET}, \"pass\": {}, \
+         \"max_abs_deviation\": {:e}}},\n  \"rounds\": [\n{}\n  ]\n}}\n",
+        t_scalar.mean_us,
+        t_gemm.mean_us,
+        kernel_speedup,
+        kernel_speedup >= KERNEL_SPEEDUP_TARGET,
+        max_dev,
+        round_rows,
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_propose.json");
+    std::fs::write(out, &json).expect("write BENCH_propose.json");
+    println!("wrote {out}");
+    assert!(
+        kernel_speedup >= KERNEL_SPEEDUP_TARGET,
+        "GEMM kernel speedup {kernel_speedup:.2}x below the {KERNEL_SPEEDUP_TARGET}x target"
+    );
+}

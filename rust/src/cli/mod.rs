@@ -103,12 +103,17 @@ TUNE OPTIONS:
   --async-window <n>       async in-flight window (0 = max(batch, workers))
   --max-retries <n>        async retries per lost evaluation [2]
   --mc-samples <n>         MC acquisition samples (0 = heuristic)
+  --proposal-threads <n>   candidate-scoring threads, native backend
+                           (0 = one per core; output is byte-identical
+                           for every setting)                [1]
   --seed <s>               RNG seed                          [0]
   --early-stop <n>         stop after n iterations without improvement
   --max-surrogate-obs <n>  history window the GP sees        [512]
   --tune-lengthscale       GP lengthscale by marginal likelihood
   --journal <file.jsonl>   record a crash-safe run journal (starting a run
                            truncates an existing file at this path)
+  --fsync-every <n>        fsync the journal every n appends for machine-
+                           crash durability (0 = flush-only) [0]
   --resume                 resume the run recorded in --journal (the journal
                            header supplies the config; other tune flags are
                            ignored); with a fixed seed the resumed run

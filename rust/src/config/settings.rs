@@ -38,6 +38,13 @@ pub struct RunConfig {
     pub async_window: usize,
     /// Async mode: resubmissions allowed per lost evaluation.
     pub max_retries: usize,
+    /// Worker threads for Monte-Carlo candidate scoring (native backend;
+    /// 0 = one per core). The chunked scoring pipeline is deterministic:
+    /// output is byte-identical for every setting.
+    pub proposal_threads: usize,
+    /// Journal durability: fsync after every n appends (0 = flush-only —
+    /// survives a process kill; a machine crash can lose recent events).
+    pub fsync_every_n: usize,
     /// Crash-safe run journal path ("" = no persistence). The run appends
     /// one JSONL event per proposal/submission/completion so it can be
     /// resumed after a coordinator crash.
@@ -65,6 +72,8 @@ impl Default for RunConfig {
             mode: "sync".into(),
             async_window: 0,
             max_retries: 2,
+            proposal_threads: 1,
+            fsync_every_n: 0,
             journal: String::new(),
             resume: false,
         }
@@ -88,6 +97,8 @@ impl RunConfig {
                 "max_surrogate_obs" => c.max_surrogate_obs = num(v, k)? as usize,
                 "async_window" => c.async_window = num(v, k)? as usize,
                 "max_retries" => c.max_retries = num(v, k)? as usize,
+                "proposal_threads" => c.proposal_threads = num(v, k)? as usize,
+                "fsync_every_n" => c.fsync_every_n = num(v, k)? as usize,
                 "optimizer" => c.optimizer = str_(v, k)?,
                 "scheduler" => c.scheduler = str_(v, k)?,
                 "backend" => c.backend = str_(v, k)?,
@@ -153,6 +164,8 @@ impl RunConfig {
             ("mode", Json::Str(self.mode.clone())),
             ("async_window", Json::Num(self.async_window as f64)),
             ("max_retries", Json::Num(self.max_retries as f64)),
+            ("proposal_threads", Json::Num(self.proposal_threads as f64)),
+            ("fsync_every_n", Json::Num(self.fsync_every_n as f64)),
             ("journal", Json::Str(self.journal.clone())),
             ("resume", Json::Bool(self.resume)),
         ])
@@ -259,6 +272,21 @@ mod tests {
         assert!(
             RunConfig::from_json(&parse(r#"{"max_surrogate_obs": 0}"#).unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn perf_knobs_parse_default_and_roundtrip() {
+        // Absent keys keep the defaults: single-threaded scoring,
+        // flush-only journal durability.
+        let c = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.proposal_threads, 1);
+        assert_eq!(c.fsync_every_n, 0);
+        let j = parse(r#"{"proposal_threads": 8, "fsync_every_n": 32}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.proposal_threads, 8);
+        assert_eq!(c.fsync_every_n, 32);
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "perf knobs survive the json round trip");
     }
 
     #[test]

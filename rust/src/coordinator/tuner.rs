@@ -118,6 +118,14 @@ pub struct TunerConfig {
     pub async_window: usize,
     /// Async mode: resubmissions allowed per lost evaluation.
     pub max_retries: usize,
+    /// Worker threads for Monte-Carlo candidate scoring (native backend;
+    /// 0 = one per core). Byte-identical output for every setting — a
+    /// wall-clock knob, never a numerics knob.
+    pub proposal_threads: usize,
+    /// Journal durability: fsync after every n appends (0 = flush-only,
+    /// the default — survives a process kill but a machine crash can lose
+    /// recent events).
+    pub fsync_every_n: usize,
     /// Override the Celery simulator's fault/latency model.
     pub celery: Option<scheduler::celery::CelerySimConfig>,
 }
@@ -140,6 +148,8 @@ impl Default for TunerConfig {
             mode: ExecutionMode::Sync,
             async_window: 0,
             max_retries: 2,
+            proposal_threads: 1,
+            fsync_every_n: 0,
             celery: None,
         }
     }
@@ -171,6 +181,8 @@ impl TunerConfig {
                 .ok_or_else(|| anyhow!("bad mode {}", rc.mode))?,
             async_window: rc.async_window,
             max_retries: rc.max_retries,
+            proposal_threads: rc.proposal_threads,
+            fsync_every_n: rc.fsync_every_n,
             celery: None,
         })
     }
@@ -199,6 +211,8 @@ impl TunerConfig {
             mode: self.mode.as_str().into(),
             async_window: self.async_window,
             max_retries: self.max_retries,
+            proposal_threads: self.proposal_threads,
+            fsync_every_n: self.fsync_every_n,
             journal: String::new(),
             resume: false,
         }
@@ -364,15 +378,21 @@ impl Tuner {
             );
         }
         let journal = match (&self.journal_path, &recovered) {
-            (Some(path), Some(rec)) => Some(JournalWriter::resume(path, rec.valid_len)?),
-            (Some(path), None) => Some(JournalWriter::create(
-                path,
-                &RunHeader {
-                    space_fp: self.space.fingerprint(),
-                    sense: sense.tag(),
-                    run: self.config.to_run_config(),
-                },
-            )?),
+            (Some(path), Some(rec)) => Some(
+                JournalWriter::resume(path, rec.valid_len)?
+                    .with_fsync_every(self.config.fsync_every_n),
+            ),
+            (Some(path), None) => Some(
+                JournalWriter::create(
+                    path,
+                    &RunHeader {
+                        space_fp: self.space.fingerprint(),
+                        sense: sense.tag(),
+                        run: self.config.to_run_config(),
+                    },
+                )?
+                .with_fsync_every(self.config.fsync_every_n),
+            ),
             (None, Some(_)) => {
                 return Err(anyhow!("recovered state without a journal path (use resume_from)"))
             }
@@ -460,6 +480,7 @@ impl Tuner {
             mc_samples: self.config.mc_samples,
             initial_random: self.config.initial_random,
             tune_lengthscale: self.config.tune_lengthscale,
+            proposal_threads: self.config.proposal_threads,
             ..Default::default()
         }
     }
@@ -851,8 +872,20 @@ impl Tuner {
             lost = rep.lost;
             proposals_made = rep.proposals_made as usize;
             proposed_since_record = rep.trailing_proposed;
-            let cap = cfg.max_surrogate_obs.min(optimizer.surrogate_capacity());
-            optimizer.rehydrate(&history.recent(cap), rep.rounds)?;
+            // Warm the optimizer over the view its *first post-resume fit*
+            // will actually cover: with work still in flight that is the
+            // constant-liar `[history + pending]` matrix over the
+            // pending-clamped window (mirroring `propose_one`), so the
+            // first liar fit pays the append path instead of a scratch
+            // refactorization.
+            let pending_cfgs: Vec<Config> =
+                rep.pending.iter().map(|p| p.config.clone()).collect();
+            let cap = cfg
+                .max_surrogate_obs
+                .min(optimizer.surrogate_capacity())
+                .saturating_sub(pending_cfgs.len())
+                .max(1);
+            optimizer.rehydrate_pending(&history.recent(cap), &pending_cfgs, rep.rounds)?;
             // Re-enqueue in-flight-at-crash work in its original submit
             // order, with the retry budget it had already consumed.
             let re_enqueued = rep.pending.len();
@@ -1350,6 +1383,8 @@ mod tests {
             mode: ExecutionMode::Async,
             async_window: 9,
             max_retries: 1,
+            proposal_threads: 4,
+            fsync_every_n: 16,
             celery: None,
         };
         let rc = tc.to_run_config();
@@ -1370,6 +1405,8 @@ mod tests {
         assert_eq!(back.mode, tc.mode);
         assert_eq!(back.async_window, tc.async_window);
         assert_eq!(back.max_retries, tc.max_retries);
+        assert_eq!(back.proposal_threads, tc.proposal_threads);
+        assert_eq!(back.fsync_every_n, tc.fsync_every_n);
     }
 
     // ---------------- async event-loop tests ----------------

@@ -1,10 +1,32 @@
 //! Native ARD-RBF kernel — the Rust twin of the L1 Pallas kernel
 //! (`python/compile/kernels/rbf.py`), same math, used by the native backend
 //! and by the Rust-side GP-BUCB updates.
+//!
+//! The hot path is **GEMM-based**: instead of one bounds-checked scalar
+//! closure per matrix entry, [`rbf_kernel`] expands the squared distance
+//! ‖a − b‖² = ‖a‖² + ‖b‖² − 2·a·b, computes the cross-product term with the
+//! blocked [`Matrix::matmul_transb`], and finishes with one elementwise
+//! `exp` pass. [`rbf_pair`] survives as the scalar test oracle (the
+//! property tests pin the GEMM path to it within 1e-12).
+//!
+//! **Bit-exactness contract.** For *isotropic* inverse lengthscales (the
+//! only shape `BayesianCore` ever produces), every call site derives a
+//! Gram entry through the same two steps: an unscaled pairwise squared
+//! distance ([`sq_dists`] for full matrices, [`sq_dist_from_parts`] +
+//! [`linalg::dot`] for single rows — `matmul_transb` guarantees the two
+//! agree bitwise) and then [`rbf_from_sq_dist`]. A squared-distance matrix
+//! computed once is therefore a pure *precomputation*: feeding a cached D²
+//! into a fit yields factors bit-identical to a fit that rebuilds it —
+//! which is what lets the LML lengthscale grid share one D² across all
+//! grid points without perturbing the incremental-Cholesky and recovery
+//! bit-identity contracts.
 
-use crate::linalg::Matrix;
+use crate::linalg::{dot, Matrix};
 
 /// k(a, b) = exp(-0.5 * sum_d ((a_d - b_d) * inv_ls_d)^2) for one pair.
+///
+/// Scalar reference implementation — the oracle the GEMM path is
+/// property-tested against; no longer called on the hot path.
 #[inline]
 pub fn rbf_pair(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -17,15 +39,116 @@ pub fn rbf_pair(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
     (-0.5 * sq).exp()
 }
 
-/// Full (n x m) correlation matrix between row sets.
-pub fn rbf_kernel(x: &Matrix, z: &Matrix, inv_ls: &[f64]) -> Matrix {
-    assert_eq!(x.cols(), z.cols(), "feature dims differ");
-    Matrix::from_fn(x.rows(), z.rows(), |i, j| rbf_pair(x.row(i), z.row(j), inv_ls))
+/// `Some(il)` iff one inverse lengthscale `il` covers all `dims` feature
+/// dimensions (what `GpParams::new` / `with_lengthscale` always produce).
+/// Anisotropic or padded (shorter-than-`dims`) vectors return `None` and
+/// take the scaled-rows GEMM path instead.
+pub fn iso_inv_ls(inv_ls: &[f64], dims: usize) -> Option<f64> {
+    if dims == 0 {
+        return Some(1.0);
+    }
+    if inv_ls.len() < dims {
+        return None;
+    }
+    let il = inv_ls[0];
+    inv_ls[..dims].iter().all(|&v| v == il).then_some(il)
 }
 
-/// Kernel vector k(X, z) for one probe point z.
+/// Row squared norms, each computed with the sequential [`dot`] reduction
+/// (the same order `matmul_transb` uses per element).
+pub fn row_sq_norms(x: &Matrix) -> Vec<f64> {
+    (0..x.rows()).map(|i| dot(x.row(i), x.row(i))).collect()
+}
+
+/// One squared distance from precomputed parts: `(‖a‖² + ‖b‖² − 2·a·b)`,
+/// clamped at 0 (the expansion can go a few ulps negative). Single-row
+/// call sites (the incremental Cholesky append) use this with [`dot`] and
+/// get values bit-identical to the full [`sq_dists`] matrix.
+#[inline]
+pub fn sq_dist_from_parts(na: f64, nb: f64, ab: f64) -> f64 {
+    (na + nb - 2.0 * ab).max(0.0)
+}
+
+/// Pairwise squared distances D²(i,j) = ‖x_i − z_j‖² (n x m), via the
+/// blocked GEMM expansion.
+pub fn sq_dists(x: &Matrix, z: &Matrix) -> Matrix {
+    assert_eq!(x.cols(), z.cols(), "feature dims differ");
+    let mut g = x.matmul_transb(z);
+    let nx = row_sq_norms(x);
+    let nz = row_sq_norms(z);
+    let m = z.rows();
+    for i in 0..x.rows() {
+        let row = &mut g.data_mut()[i * m..(i + 1) * m];
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = sq_dist_from_parts(nx[i], nz[j], *v);
+        }
+    }
+    g
+}
+
+/// Isotropic RBF value from an *unscaled* squared distance:
+/// `exp(−0.5 · il² · D²)`. The single shared expression every isotropic
+/// call site uses (bit-exactness contract, module docs).
+#[inline]
+pub fn rbf_from_sq_dist(d2: f64, il: f64) -> f64 {
+    (-0.5 * (il * il) * d2).exp()
+}
+
+/// Anisotropic RBF value from a squared distance already computed over
+/// `inv_ls`-scaled rows.
+#[inline]
+pub fn rbf_from_scaled_sq_dist(d2: f64) -> f64 {
+    (-0.5 * d2).exp()
+}
+
+/// Rows scaled per-dimension by `inv_ls`, honoring the padding contract:
+/// dimensions beyond `inv_ls.len()` scale to 0 (they contribute nothing,
+/// exactly like [`rbf_pair`]).
+pub fn scale_rows(x: &Matrix, inv_ls: &[f64]) -> Matrix {
+    Matrix::from_fn(x.rows(), x.cols(), |i, j| {
+        x[(i, j)] * inv_ls.get(j).copied().unwrap_or(0.0)
+    })
+}
+
+/// The single elementwise D² → correlation pass every isotropic call site
+/// shares (in place; see the bit-exactness contract in the module docs).
+fn map_sq_dists_iso(mut d2: Matrix, il: f64) -> Matrix {
+    for v in d2.data_mut() {
+        *v = rbf_from_sq_dist(*v, il);
+    }
+    d2
+}
+
+/// Map a precomputed unscaled squared-distance matrix to an isotropic RBF
+/// correlation matrix — the elementwise pass the shared-distance LML grid
+/// amortizes its kernel builds down to.
+pub fn rbf_kernel_from_sq_dists(d2: &Matrix, il: f64) -> Matrix {
+    map_sq_dists_iso(d2.clone(), il)
+}
+
+/// Full (n x m) correlation matrix between row sets — GEMM path.
+pub fn rbf_kernel(x: &Matrix, z: &Matrix, inv_ls: &[f64]) -> Matrix {
+    assert_eq!(x.cols(), z.cols(), "feature dims differ");
+    if let Some(il) = iso_inv_ls(inv_ls, x.cols()) {
+        map_sq_dists_iso(sq_dists(x, z), il)
+    } else {
+        let xs = scale_rows(x, inv_ls);
+        let zs = scale_rows(z, inv_ls);
+        let mut k = sq_dists(&xs, &zs);
+        for v in k.data_mut() {
+            *v = rbf_from_scaled_sq_dist(*v);
+        }
+        k
+    }
+}
+
+/// Kernel vector k(X, z) for one probe point z — the 1-column GEMM path
+/// (bit-identical to the corresponding [`rbf_kernel`] column).
 pub fn rbf_vec(x: &Matrix, z: &[f64], inv_ls: &[f64]) -> Vec<f64> {
-    (0..x.rows()).map(|i| rbf_pair(x.row(i), z, inv_ls)).collect()
+    assert_eq!(x.cols(), z.len(), "feature dims differ");
+    let zm = Matrix::from_vec(1, z.len(), z.to_vec());
+    let k = rbf_kernel(x, &zm, inv_ls);
+    k.data().to_vec()
 }
 
 #[cfg(test)]
@@ -90,5 +213,94 @@ mod tests {
         for i in 0..5 {
             assert!((v[i] - km[(i, 0)]).abs() < 1e-15);
         }
+    }
+
+    /// The tentpole contract: the GEMM path must match the scalar oracle
+    /// within 1e-12 over random shapes and lengthscale vectors — isotropic
+    /// (the fast unscaled-D² branch), anisotropic (the scaled-rows branch),
+    /// and padded (`inv_ls` shorter than the feature dim).
+    #[test]
+    fn gemm_matches_rbf_pair_oracle_property() {
+        check("gemm rbf == rbf_pair oracle", 64, |g| {
+            let n = g.usize_range(1, 14);
+            let m = g.usize_range(1, 14);
+            let d = g.usize_range(1, 8);
+            let x = Matrix::from_fn(n, d, |_, _| g.f64_range(-1.0, 2.0));
+            let z = Matrix::from_fn(m, d, |_, _| g.f64_range(-1.0, 2.0));
+            let inv_ls: Vec<f64> = match g.usize_range(0, 3) {
+                0 => vec![g.f64_range(0.2, 6.0); d], // isotropic
+                1 => (0..d).map(|_| g.f64_range(0.2, 6.0)).collect(), // anisotropic
+                _ => {
+                    // padded: shorter than d (remaining dims must be ignored)
+                    let keep = g.usize_range(0, d);
+                    (0..keep).map(|_| g.f64_range(0.2, 6.0)).collect()
+                }
+            };
+            let k = rbf_kernel(&x, &z, &inv_ls);
+            for i in 0..n {
+                for j in 0..m {
+                    let want = rbf_pair(x.row(i), z.row(j), &inv_ls);
+                    if (k[(i, j)] - want).abs() > 1e-12 {
+                        return Err(format!(
+                            "({i},{j}) inv_ls len {}: gemm {} vs oracle {}",
+                            inv_ls.len(),
+                            k[(i, j)],
+                            want
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_honors_padding_contract() {
+        // Two rows equal on the covered dim, wildly different beyond it:
+        // correlation must be exactly full.
+        let x = Matrix::from_vec(1, 2, vec![0.5, 999.0]);
+        let z = Matrix::from_vec(1, 2, vec![0.5, -999.0]);
+        let k = rbf_kernel(&x, &z, &[1.0]);
+        assert!((k[(0, 0)] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn iso_detection() {
+        assert_eq!(iso_inv_ls(&[2.0, 2.0, 2.0], 3), Some(2.0));
+        assert_eq!(iso_inv_ls(&[2.0, 2.0, 2.0, 9.9], 3), Some(2.0)); // extras ignored
+        assert_eq!(iso_inv_ls(&[2.0, 3.0], 2), None);
+        assert_eq!(iso_inv_ls(&[2.0], 2), None); // padded: not isotropic over all dims
+        assert_eq!(iso_inv_ls(&[], 0), Some(1.0));
+    }
+
+    /// The shared-distance contract: a Gram derived from a precomputed D²
+    /// is bit-identical to the one `rbf_kernel` builds itself, and single
+    /// entries re-derived via `dot` + `sq_dist_from_parts` match the
+    /// matrix bitwise (the incremental-append equivalence).
+    #[test]
+    fn shared_sq_dists_reproduce_kernel_bitwise() {
+        check("shared D² == inline D²", 32, |g| {
+            let n = g.usize_range(1, 12);
+            let d = g.usize_range(1, 6);
+            let il = g.f64_range(0.3, 5.0);
+            let x = Matrix::from_fn(n, d, |_, _| g.f64_range(0.0, 1.0));
+            let inv = vec![il; d];
+            let k_inline = rbf_kernel(&x, &x, &inv);
+            let d2 = sq_dists(&x, &x);
+            let k_shared = rbf_kernel_from_sq_dists(&d2, il);
+            if k_inline != k_shared {
+                return Err("shared-D² Gram deviates from inline".into());
+            }
+            let norms = row_sq_norms(&x);
+            for i in 0..n {
+                for j in 0..n {
+                    let e = sq_dist_from_parts(norms[i], norms[j], dot(x.row(i), x.row(j)));
+                    if e.to_bits() != d2[(i, j)].to_bits() {
+                        return Err(format!("({i},{j}): row-derived D² deviates"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -168,18 +168,68 @@ impl CholeskyState {
     }
 }
 
-/// The regularized Gram matrix `amp * K(x, x) + noise * I` the posterior
-/// factorizes.
-pub(crate) fn kernel_matrix(x: &Matrix, params: &GpParams) -> Matrix {
-    let n = x.rows();
-    let mut k = kernel::rbf_kernel(x, x, &params.inv_lengthscale);
+/// The shared `amp * K + noise * I` regularization pass — one copy, so
+/// the plain and shared-distance Gram builds can never drift apart (the
+/// bit-exactness contract between them depends on identical arithmetic).
+fn apply_amp_noise(k: &mut Matrix, params: &GpParams) {
+    let n = k.rows();
     for i in 0..n {
         for j in 0..n {
             k[(i, j)] *= params.amp;
         }
         k[(i, i)] += params.noise;
     }
+}
+
+/// The regularized Gram matrix `amp * K(x, x) + noise * I` the posterior
+/// factorizes.
+pub(crate) fn kernel_matrix(x: &Matrix, params: &GpParams) -> Matrix {
+    let mut k = kernel::rbf_kernel(x, x, &params.inv_lengthscale);
+    apply_amp_noise(&mut k, params);
     k
+}
+
+/// `kernel_matrix` from a precomputed unscaled squared-distance matrix
+/// (isotropic lengthscale `il`) — bit-identical to [`kernel_matrix`] for
+/// isotropic params because both derive every entry through
+/// [`kernel::rbf_from_sq_dist`] on the same D² values.
+fn kernel_matrix_from_sq_dists(d2: &Matrix, params: &GpParams, il: f64) -> Matrix {
+    let mut k = kernel::rbf_kernel_from_sq_dists(d2, il);
+    apply_amp_noise(&mut k, params);
+    k
+}
+
+/// How the posterior engine derives bordered Gram rows for the incremental
+/// append path — each variant performs arithmetic bit-identical to the
+/// corresponding scratch `kernel_matrix` build (the append/scratch
+/// equivalence contract).
+enum AppendRows<'a> {
+    /// Isotropic with a caller-supplied shared D² (the LML grid cache).
+    SharedDists { d2: &'a Matrix, il: f64 },
+    /// Isotropic without a cache: unscaled norms + `dot`, the same parts
+    /// `kernel::sq_dists` computes.
+    Iso { norms: Vec<f64>, il: f64 },
+    /// Anisotropic/padded: `inv_ls`-scaled rows + norms.
+    Scaled { scaled: Matrix, norms: Vec<f64> },
+}
+
+impl AppendRows<'_> {
+    fn entry(&self, x: &Matrix, r: usize, i: usize) -> f64 {
+        match self {
+            AppendRows::SharedDists { d2, il } => kernel::rbf_from_sq_dist(d2[(r, i)], *il),
+            AppendRows::Iso { norms, il } => kernel::rbf_from_sq_dist(
+                kernel::sq_dist_from_parts(norms[r], norms[i], linalg::dot(x.row(r), x.row(i))),
+                *il,
+            ),
+            AppendRows::Scaled { scaled, norms } => kernel::rbf_from_scaled_sq_dist(
+                kernel::sq_dist_from_parts(
+                    norms[r],
+                    norms[i],
+                    linalg::dot(scaled.row(r), scaled.row(i)),
+                ),
+            ),
+        }
+    }
 }
 
 /// The shared native posterior engine: fit over (`x`, `y`), reusing `state`
@@ -194,8 +244,47 @@ pub fn fit_posterior(
     params: &GpParams,
     state: Option<CholeskyState>,
 ) -> Result<(FitOut, CholeskyState)> {
+    fit_posterior_impl(x, y, params, state, None)
+}
+
+/// [`fit_posterior`] with a caller-supplied *unscaled* pairwise
+/// squared-distance matrix over `x`'s rows (see [`kernel::sq_dists`]).
+/// Requires isotropic inverse lengthscales. The shared D² is a pure
+/// precomputation: the fit is bit-identical to [`fit_posterior`] on the
+/// same inputs — `BayesianCore` uses this to amortize the LML grid's five
+/// kernel builds down to one distance build plus elementwise `exp` maps.
+pub fn fit_posterior_with_dists(
+    x: &Matrix,
+    y: &[f64],
+    params: &GpParams,
+    state: Option<CholeskyState>,
+    sq_dists: &Matrix,
+) -> Result<(FitOut, CholeskyState)> {
+    fit_posterior_impl(x, y, params, state, Some(sq_dists))
+}
+
+fn fit_posterior_impl(
+    x: &Matrix,
+    y: &[f64],
+    params: &GpParams,
+    state: Option<CholeskyState>,
+    shared_d2: Option<&Matrix>,
+) -> Result<(FitOut, CholeskyState)> {
     let n = x.rows();
     anyhow::ensure!(y.len() == n, "y length {} != x rows {}", y.len(), n);
+    let iso = kernel::iso_inv_ls(&params.inv_lengthscale, x.cols());
+    if let Some(d2) = shared_d2 {
+        anyhow::ensure!(
+            d2.rows() == n && d2.cols() == n,
+            "shared sq-dist matrix is {}x{}, expected {n}x{n}",
+            d2.rows(),
+            d2.cols()
+        );
+        anyhow::ensure!(
+            iso.is_some(),
+            "shared sq-dist fits require isotropic inverse lengthscales"
+        );
+    }
     // Reuse the cached factor over the longest shared leading-row prefix
     // q: the leading q x q block of a Cholesky factor IS the factor of the
     // leading q x q minor, so it survives truncation when the tails
@@ -211,22 +300,37 @@ pub fn fit_posterior(
             } else {
                 Matrix::from_fn(q, q, |i, j| s.l[(i, j)])
             };
+            let rows = match (shared_d2, iso) {
+                (Some(d2), Some(il)) => AppendRows::SharedDists { d2, il },
+                (None, Some(il)) => AppendRows::Iso { norms: kernel::row_sq_norms(x), il },
+                (None, None) => {
+                    let scaled = kernel::scale_rows(x, &params.inv_lengthscale);
+                    let norms = kernel::row_sq_norms(&scaled);
+                    AppendRows::Scaled { scaled, norms }
+                }
+                (Some(_), None) => unreachable!("guarded by the isotropy ensure above"),
+            };
             for r in q..n {
                 // Bordered row: amp*k(x_r, x_0..r) with the regularized
-                // diagonal last — built exactly like `kernel_matrix` builds
-                // row r, so the append is bit-identical to a scratch fit.
+                // diagonal last — each entry derived through the same
+                // parts as the scratch `kernel_matrix` build, so the
+                // append is bit-identical to a scratch fit.
                 let mut k_new = Vec::with_capacity(r + 1);
                 for i in 0..r {
-                    k_new.push(
-                        params.amp * kernel::rbf_pair(x.row(r), x.row(i), &params.inv_lengthscale),
-                    );
+                    k_new.push(params.amp * rows.entry(x, r, i));
                 }
-                k_new.push(params.amp + params.noise); // rbf_pair(x_r, x_r) == 1
+                k_new.push(params.amp + params.noise); // k(x_r, x_r) == 1
                 l = linalg::chol_append_row(&l, &k_new);
             }
             l
         }
-        _ => linalg::cholesky(&kernel_matrix(x, params)),
+        _ => {
+            let k = match (shared_d2, iso) {
+                (Some(d2), Some(il)) => kernel_matrix_from_sq_dists(d2, params, il),
+                _ => kernel_matrix(x, params),
+            };
+            linalg::cholesky(&k)
+        }
     };
     let alpha = linalg::solve_spd(&l, y);
     let logdet = linalg::logdet_from_cholesky(&l);
@@ -255,6 +359,33 @@ pub trait Surrogate {
         state: Option<CholeskyState>,
     ) -> Result<(FitOut, CholeskyState)> {
         fit_posterior(x, y, params, state)
+    }
+
+    /// [`fit_incremental`](Self::fit_incremental) with an optional
+    /// caller-precomputed unscaled squared-distance matrix over `x`'s rows
+    /// (the shared-distance LML grid cache). Backends whose kernel build
+    /// runs host-side override this to consume the cache
+    /// ([`fit_posterior_with_dists`] — bit-identical to ignoring it);
+    /// artifact backends whose kernel lives inside the compiled program
+    /// keep this default and simply ignore the hint.
+    fn fit_incremental_shared(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        params: &GpParams,
+        state: Option<CholeskyState>,
+        sq_dists: Option<&Matrix>,
+    ) -> Result<(FitOut, CholeskyState)> {
+        let _ = sq_dists;
+        self.fit_incremental(x, y, params, state)
+    }
+
+    /// Whether [`fit_incremental_shared`](Self::fit_incremental_shared)
+    /// actually consumes the squared-distance hint. Callers use this to
+    /// skip *maintaining* the O(n²) distance cache for backends whose
+    /// kernel build lives inside a compiled artifact and would discard it.
+    fn consumes_shared_dists(&self) -> bool {
+        false
     }
 
     /// Score candidates (mean/var/UCB + the `w` matrix) under a fit.
@@ -291,6 +422,24 @@ impl Surrogate for NativeGp {
         Ok(FitOut { alpha, chol: l, logdet })
     }
 
+    fn fit_incremental_shared(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        params: &GpParams,
+        state: Option<CholeskyState>,
+        sq_dists: Option<&Matrix>,
+    ) -> Result<(FitOut, CholeskyState)> {
+        match sq_dists {
+            Some(d2) => fit_posterior_with_dists(x, y, params, state, d2),
+            None => fit_posterior(x, y, params, state),
+        }
+    }
+
+    fn consumes_shared_dists(&self) -> bool {
+        true
+    }
+
     fn acquire(
         &mut self,
         x: &Matrix,
@@ -298,36 +447,108 @@ impl Surrogate for NativeGp {
         xc: &Matrix,
         params: &GpParams,
     ) -> Result<AcquireOut> {
-        let (n, m) = (x.rows(), xc.rows());
-        anyhow::ensure!(fit.alpha.len() == n, "fit/x size mismatch");
-        anyhow::ensure!(fit.chol.rows() == n, "fit/chol size mismatch");
-        // kc: (n x m) cross-kernel.
-        let mut kc = kernel::rbf_kernel(x, xc, &params.inv_lengthscale);
-        for v in kc.data_mut() {
-            *v *= params.amp;
-        }
-        let mean = kc.matvec_t(&fit.alpha);
-        // w = K^{-1} k_c via two triangular solves against L.
-        let w = linalg::solve_spd_mat(&fit.chol, &kc);
-        let mut var = vec![0.0; m];
-        for c in 0..m {
-            let mut s = 0.0;
-            for i in 0..n {
-                s += kc[(i, c)] * w[(i, c)];
-            }
-            var[c] = (params.amp - s).max(1e-10);
-        }
-        let ucb = mean
-            .iter()
-            .zip(&var)
-            .map(|(mu, v)| mu + params.beta * v.sqrt())
-            .collect();
-        Ok(AcquireOut { ucb, mean, var, w })
+        acquire_columns(x, fit, xc, params)
     }
 
     fn name(&self) -> &'static str {
         "native"
     }
+}
+
+/// The single-threaded candidate-scoring pipeline: cross-kernel (GEMM) →
+/// mean → triangular solves for `w = K^{-1} k_c` → variance → UCB. Every
+/// stage is **per-candidate-column independent** — the value of column `c`
+/// never depends on which other columns share the matrix — which is what
+/// makes [`acquire_parallel`]'s chunked scoring byte-identical to a single
+/// pass regardless of the chunk boundaries.
+pub(crate) fn acquire_columns(
+    x: &Matrix,
+    fit: &FitOut,
+    xc: &Matrix,
+    params: &GpParams,
+) -> Result<AcquireOut> {
+    let (n, m) = (x.rows(), xc.rows());
+    anyhow::ensure!(fit.alpha.len() == n, "fit/x size mismatch");
+    anyhow::ensure!(fit.chol.rows() == n, "fit/chol size mismatch");
+    // kc: (n x m) cross-kernel.
+    let mut kc = kernel::rbf_kernel(x, xc, &params.inv_lengthscale);
+    for v in kc.data_mut() {
+        *v *= params.amp;
+    }
+    let mean = kc.matvec_t(&fit.alpha);
+    // w = K^{-1} k_c via two triangular solves against L.
+    let w = linalg::solve_spd_mat(&fit.chol, &kc);
+    let mut var = vec![0.0; m];
+    for c in 0..m {
+        let mut s = 0.0;
+        for i in 0..n {
+            s += kc[(i, c)] * w[(i, c)];
+        }
+        var[c] = (params.amp - s).max(1e-10);
+    }
+    let ucb = mean
+        .iter()
+        .zip(&var)
+        .map(|(mu, v)| mu + params.beta * v.sqrt())
+        .collect();
+    Ok(AcquireOut { ucb, mean, var, w })
+}
+
+/// Deterministic parallel candidate scoring: split the m-candidate set
+/// into `threads` fixed index-ordered chunks, score each on a scoped
+/// worker through [`acquire_columns`], and fold the outputs back in chunk
+/// order. Because every pipeline stage is per-column independent (see
+/// [`acquire_columns`]), the result is **byte-identical for every thread
+/// count** — parallelism here is a pure wall-clock optimization, never a
+/// numerics knob.
+pub fn acquire_parallel(
+    x: &Matrix,
+    fit: &FitOut,
+    xc: &Matrix,
+    params: &GpParams,
+    threads: usize,
+) -> Result<AcquireOut> {
+    let (n, m) = (x.rows(), xc.rows());
+    let t = threads.clamp(1, m.max(1));
+    if t <= 1 {
+        return acquire_columns(x, fit, xc, params);
+    }
+    let chunk = m.div_ceil(t);
+    let parts: Vec<Result<AcquireOut>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(t);
+        for ti in 0..t {
+            let start = ti * chunk;
+            let end = ((ti + 1) * chunk).min(m);
+            if start >= end {
+                break;
+            }
+            let sub = Matrix::from_fn(end - start, xc.cols(), |i, j| xc[(start + i, j)]);
+            handles.push(scope.spawn(move || acquire_columns(x, fit, &sub, params)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("candidate-scoring worker panicked"))
+            .collect()
+    });
+    let mut ucb = Vec::with_capacity(m);
+    let mut mean = Vec::with_capacity(m);
+    let mut var = Vec::with_capacity(m);
+    let mut w = Matrix::zeros(n, m);
+    let mut col = 0usize;
+    for part in parts {
+        let p = part?;
+        let width = p.ucb.len();
+        ucb.extend_from_slice(&p.ucb);
+        mean.extend_from_slice(&p.mean);
+        var.extend_from_slice(&p.var);
+        for i in 0..n {
+            let src = p.w.row(i);
+            w.row_mut(i)[col..col + width].copy_from_slice(src);
+        }
+        col += width;
+    }
+    anyhow::ensure!(col == m, "parallel scoring dropped candidates ({col} of {m})");
+    Ok(AcquireOut { ucb, mean, var, w })
 }
 
 /// Normalize y to zero mean / unit variance; returns (normalized, mean, std).
@@ -533,6 +754,75 @@ mod tests {
         let (inc, _) = gp.fit_incremental(&x, &yn, &p2, Some(state)).unwrap();
         let scratch = gp.fit(&x, &yn, &p2).unwrap();
         assert_eq!(inc.chol, scratch.chol);
+    }
+
+    /// The shared-distance contract: supplying a precomputed D² must be a
+    /// pure precomputation — factors, alpha, and logdet bit-identical to
+    /// the engine computing the distances itself, across scratch fits and
+    /// incremental appends alike.
+    #[test]
+    fn shared_dists_fit_is_bit_identical_to_plain_fit() {
+        check("fit_posterior_with_dists == fit_posterior", 24, |g| {
+            let d = g.usize_range(1, 5);
+            let ls = *g.choose(&[0.1, 0.3, 0.8]);
+            let params = GpParams::new(d).with_lengthscale(ls);
+            let n0 = g.usize_range(1, 8);
+            let n1 = n0 + g.usize_range(1, 5);
+            let x = Matrix::from_fn(n1, d, |_, _| g.f64_range(0.0, 1.0));
+            let y: Vec<f64> = (0..n1).map(|i| (3.0 * x.row(i)[0]).cos()).collect();
+            // Scratch fit with and without the shared D².
+            let d2_full = kernel::sq_dists(&x, &x);
+            let (plain, _) = fit_posterior(&x, &y, &params, None).map_err(|e| e.to_string())?;
+            let (shared, _) = fit_posterior_with_dists(&x, &y, &params, None, &d2_full)
+                .map_err(|e| e.to_string())?;
+            if plain.chol != shared.chol || plain.alpha != shared.alpha {
+                return Err("scratch: shared-D² fit deviates".into());
+            }
+            // Incremental append with the shared D², against a plain scratch.
+            let x0 = Matrix::from_fn(n0, d, |i, j| x[(i, j)]);
+            let (_, state) =
+                fit_posterior(&x0, &y[..n0], &params, None).map_err(|e| e.to_string())?;
+            let (inc, _) = fit_posterior_with_dists(&x, &y, &params, Some(state), &d2_full)
+                .map_err(|e| e.to_string())?;
+            if inc.chol != plain.chol || inc.alpha != plain.alpha || inc.logdet != plain.logdet {
+                return Err(format!("append {n0}->{n1}: shared-D² path deviates"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shared_dists_reject_bad_shapes_and_anisotropy() {
+        let x = Matrix::from_fn(4, 2, |i, j| (i + j) as f64 * 0.1);
+        let y = vec![0.0; 4];
+        let params = GpParams::new(2);
+        let bad = Matrix::zeros(3, 3);
+        assert!(fit_posterior_with_dists(&x, &y, &params, None, &bad).is_err());
+        let mut aniso = GpParams::new(2);
+        aniso.inv_lengthscale = vec![1.0, 2.0];
+        let d2 = kernel::sq_dists(&x, &x);
+        assert!(fit_posterior_with_dists(&x, &y, &aniso, None, &d2).is_err());
+    }
+
+    /// The parallel-scoring contract: chunked scoring folds back to the
+    /// byte-identical result of a single pass, for any thread count.
+    #[test]
+    fn acquire_parallel_is_byte_identical_across_thread_counts() {
+        let (x, y) = toy_problem(24, 3, 21);
+        let (yn, _, _) = normalize_y(&y);
+        let params = GpParams::new(3);
+        let mut gp = NativeGp;
+        let fit = gp.fit(&x, &yn, &params).unwrap();
+        let mut rng = Pcg64::new(5);
+        let xc = Matrix::from_fn(101, 3, |_, _| rng.next_f64()); // odd m: ragged chunks
+        let base = gp.acquire(&x, &fit, &xc, &params).unwrap();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let par = acquire_parallel(&x, &fit, &xc, &params, threads).unwrap();
+            assert_eq!(par.ucb, base.ucb, "{threads} threads: ucb deviates");
+            assert_eq!(par.mean, base.mean, "{threads} threads: mean deviates");
+            assert_eq!(par.var, base.var, "{threads} threads: var deviates");
+            assert_eq!(par.w, base.w, "{threads} threads: w deviates");
+        }
     }
 
     #[test]

@@ -90,14 +90,16 @@ impl<'a> BatchHallucinator<'a> {
         for v in &mut kb {
             *v *= amp;
         }
+        // k(c, b) over the whole candidate set in one GEMM pass — the m
+        // axis dominates (m candidates per hallucination step).
+        let kcb = kernel::rbf_vec(self.xc, &xb, &self.params.inv_lengthscale);
         let mut cov = vec![0.0; m];
         for c in 0..m {
             let mut dot = 0.0;
             for i in 0..n {
                 dot += kb[i] * self.w[(i, c)];
             }
-            cov[c] = amp * kernel::rbf_pair(self.xc.row(c), &xb, &self.params.inv_lengthscale)
-                - dot;
+            cov[c] = amp * kcb[c] - dot;
         }
         // Downdate by previous hallucinations: cov_j = cov_0 - Σ r_c[i] r_b[i].
         for step in &self.steps {

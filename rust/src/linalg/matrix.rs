@@ -1,6 +1,29 @@
 //! Row-major dense matrix with the handful of ops the GP stack needs.
+//!
+//! The hot-path multiply kernel ([`Matrix::matmul_transb`]) is
+//! register-blocked for throughput, under one hard constraint: **every
+//! output element is bit-identical to [`dot`] of the two rows** (a single
+//! sequential-k accumulation). The GEMM-based RBF kernel derives Gram entries from
+//! these products, and the incremental Cholesky append re-derives single
+//! rows via `dot` — the append/scratch bit-equality contract of
+//! `gp::fit_posterior` holds only because blocking here never reorders a
+//! per-element summation (we block across output columns/rows, never
+//! across the k reduction).
 
 use std::ops::{Index, IndexMut};
+
+/// Sequential dot product — the canonical per-element reduction order for
+/// the blocked multiply kernels (see the module docs; `matmul_transb`
+/// output elements must equal this bitwise).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for k in 0..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
 
 /// Row-major `rows x cols` matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
@@ -63,7 +86,10 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// self @ other.
+    /// self @ other. (Test-oracle territory: every production GEMM in the
+    /// propose hot path goes through [`matmul_transb`](Self::matmul_transb),
+    /// which is the blocked, bit-contracted kernel — this one stays the
+    /// simple i-k-j loop.)
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
@@ -85,18 +111,42 @@ impl Matrix {
     }
 
     /// self @ other^T (both row-major — pure dot products, fastest path).
+    ///
+    /// Register-blocked 4-wide across `other`'s rows: one pass over `arow`
+    /// feeds four independent accumulators. Each accumulator still sums in
+    /// sequential k order, so every output element is bit-identical to
+    /// [`dot`] of the two rows — the contract the GEMM kernel path and the
+    /// incremental Cholesky append both rely on (module docs).
     pub fn matmul_transb(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_transb shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.rows);
+        let m = other.rows;
         for i in 0..self.rows {
             let arow = self.row(i);
-            for j in 0..other.rows {
-                let brow = other.row(j);
-                let mut s = 0.0;
+            let out_row = &mut out.data[i * m..(i + 1) * m];
+            let mut j = 0;
+            while j + 4 <= m {
+                let b0 = other.row(j);
+                let b1 = other.row(j + 1);
+                let b2 = other.row(j + 2);
+                let b3 = other.row(j + 3);
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
                 for k in 0..arow.len() {
-                    s += arow[k] * brow[k];
+                    let a = arow[k];
+                    s0 += a * b0[k];
+                    s1 += a * b1[k];
+                    s2 += a * b2[k];
+                    s3 += a * b3[k];
                 }
-                out[(i, j)] = s;
+                out_row[j] = s0;
+                out_row[j + 1] = s1;
+                out_row[j + 2] = s2;
+                out_row[j + 3] = s3;
+                j += 4;
+            }
+            while j < m {
+                out_row[j] = dot(arow, other.row(j));
+                j += 1;
             }
         }
         out
@@ -195,5 +245,31 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    /// The blocked `matmul_transb` contract: every output element is
+    /// bit-identical to `dot` of the two rows, across all block-remainder
+    /// widths (the GEMM kernel path and the incremental Cholesky append
+    /// both re-derive single entries via `dot` and rely on exact equality).
+    #[test]
+    fn matmul_transb_elements_equal_dot_bitwise() {
+        use crate::util::proptest::check;
+        check("matmul_transb == dot per element", 64, |g| {
+            let n = g.usize_range(1, 9);
+            let m = g.usize_range(1, 11); // covers 4k, 4k+1..4k+3 remainders
+            let d = g.usize_range(1, 9);
+            let a = Matrix::from_vec(n, d, g.vec_f64(n * d, -2.0, 2.0));
+            let b = Matrix::from_vec(m, d, g.vec_f64(m * d, -2.0, 2.0));
+            let out = a.matmul_transb(&b);
+            for i in 0..n {
+                for j in 0..m {
+                    let want = dot(a.row(i), b.row(j));
+                    if out[(i, j)].to_bits() != want.to_bits() {
+                        return Err(format!("({i},{j}): {} vs dot {}", out[(i, j)], want));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

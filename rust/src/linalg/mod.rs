@@ -11,7 +11,7 @@
 
 mod matrix;
 
-pub use matrix::Matrix;
+pub use matrix::{dot, Matrix};
 
 /// Pivot clamp shared by [`cholesky`] and [`chol_append_row`] (and mirrored
 /// by `python/compile/linalg.py`): a pivot below this is treated as a
@@ -135,54 +135,87 @@ pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
 
 /// Solve L X = B for a matrix right-hand side (B is n x m). Row-major
 /// friendly: each step streams whole rows, so the m candidate columns of a
-/// cross-kernel are solved in one pass.
+/// cross-kernel are solved in one pass. The elimination loop is blocked
+/// 2-wide across source rows (two axpy updates fused into one pass over
+/// the destination row), halving the destination-row traffic. Blocking
+/// changes per-element rounding vs the unblocked kernel (tolerance-tested)
+/// but each column's operation sequence depends only on `l` and the row
+/// index — never on `m` — so column results are invariant under candidate
+/// chunking (the parallel-scoring determinism contract).
 pub fn solve_lower_mat(l: &Matrix, b: &Matrix) -> Matrix {
     let n = l.rows();
     assert_eq!(b.rows(), n, "solve_lower_mat shape mismatch");
     let m = b.cols();
     let mut x = b.clone();
     for i in 0..n {
-        for j in 0..i {
-            let lij = l[(i, j)];
-            if lij == 0.0 {
-                continue;
+        let (head, tail) = x.data_mut().split_at_mut(i * m);
+        let xi = &mut tail[..m];
+        let mut j = 0;
+        while j + 2 <= i {
+            let (l0, l1) = (l[(i, j)], l[(i, j + 1)]);
+            if l0 != 0.0 || l1 != 0.0 {
+                let xj0 = &head[j * m..(j + 1) * m];
+                let xj1 = &head[(j + 1) * m..(j + 2) * m];
+                for c in 0..m {
+                    xi[c] -= l0 * xj0[c] + l1 * xj1[c];
+                }
             }
-            let (head, tail) = x.data_mut().split_at_mut(i * m);
-            let xj = &head[j * m..(j + 1) * m];
-            let xi = &mut tail[..m];
-            for c in 0..m {
-                xi[c] -= lij * xj[c];
+            j += 2;
+        }
+        if j < i {
+            let lij = l[(i, j)];
+            if lij != 0.0 {
+                let xj = &head[j * m..(j + 1) * m];
+                for c in 0..m {
+                    xi[c] -= lij * xj[c];
+                }
             }
         }
         let lii = l[(i, i)];
-        for v in &mut x.data_mut()[i * m..(i + 1) * m] {
+        for v in xi {
             *v /= lii;
         }
     }
     x
 }
 
-/// Solve L^T X = B for a matrix right-hand side (B is n x m).
+/// Solve L^T X = B for a matrix right-hand side (B is n x m). Blocked
+/// 2-wide like [`solve_lower_mat`], with the same column-chunking
+/// invariance property.
 pub fn solve_lower_t_mat(l: &Matrix, b: &Matrix) -> Matrix {
     let n = l.rows();
     assert_eq!(b.rows(), n, "solve_lower_t_mat shape mismatch");
     let m = b.cols();
     let mut x = b.clone();
     for i in (0..n).rev() {
-        for j in (i + 1)..n {
-            let lji = l[(j, i)];
-            if lji == 0.0 {
-                continue;
+        // Rows j > i are read-only sources; row i is the destination.
+        let (head, tail) = x.data_mut().split_at_mut((i + 1) * m);
+        let xi = &mut head[i * m..];
+        let mut j = i + 1;
+        while j + 2 <= n {
+            let (l0, l1) = (l[(j, i)], l[(j + 1, i)]);
+            if l0 != 0.0 || l1 != 0.0 {
+                let off = (j - i - 1) * m;
+                let xj0 = &tail[off..off + m];
+                let xj1 = &tail[off + m..off + 2 * m];
+                for c in 0..m {
+                    xi[c] -= l0 * xj0[c] + l1 * xj1[c];
+                }
             }
-            let (head, tail) = x.data_mut().split_at_mut(j * m);
-            let xi = &mut head[i * m..(i + 1) * m];
-            let xj = &tail[..m];
-            for c in 0..m {
-                xi[c] -= lji * xj[c];
+            j += 2;
+        }
+        if j < n {
+            let lji = l[(j, i)];
+            if lji != 0.0 {
+                let off = (j - i - 1) * m;
+                let xj = &tail[off..off + m];
+                for c in 0..m {
+                    xi[c] -= lji * xj[c];
+                }
             }
         }
         let lii = l[(i, i)];
-        for v in &mut x.data_mut()[i * m..(i + 1) * m] {
+        for v in xi {
             *v /= lii;
         }
     }

@@ -62,6 +62,8 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
             .ok_or_else(|| anyhow!("bad --mode (sync | async)"))?,
         async_window: args.get_usize("async-window", 0)?,
         max_retries: args.get_usize("max-retries", 2)?,
+        proposal_threads: args.get_usize("proposal-threads", 1)?,
+        fsync_every_n: args.get_usize("fsync-every", 0)?,
         celery: None,
     })
 }
@@ -70,13 +72,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
-        "max-surrogate-obs", "mode", "async-window", "max-retries", "journal",
+        "max-surrogate-obs", "mode", "async-window", "max-retries", "proposal-threads",
+        "fsync-every", "journal",
     ])?;
     let name = args
         .get("workload")
         .ok_or_else(|| anyhow!("--workload is required (see `mango list`)"))?;
     let workload = workloads::by_name(name)
         .ok_or_else(|| anyhow!("unknown workload '{name}' (see `mango list`)"))?;
+    // Fail loudly instead of running with zero durability: the fsync knob
+    // syncs the journal, so without a journal it could only be a no-op.
+    if args.get("fsync-every").is_some() && args.get("journal").is_none() {
+        return Err(anyhow!("--fsync-every requires --journal (there is no journal to sync)"));
+    }
     let mut tuner = if args.has("resume") {
         // The journal header carries the full run config; only the
         // workload (and thus the space, validated by fingerprint) is

@@ -14,7 +14,9 @@
 
 use super::{GpOptions, History, SurrogateBackend, YTransform};
 use crate::acq;
-use crate::gp::{normalize_y, AcquireOut, CholeskyState, FitOut, GpParams, NativeGp, Surrogate};
+use crate::gp::{
+    self, kernel, normalize_y, AcquireOut, CholeskyState, FitOut, GpParams, NativeGp, Surrogate,
+};
 use crate::linalg::Matrix;
 use crate::runtime::PjrtSurrogate;
 use crate::space::{Config, Encoder, SearchSpace};
@@ -43,15 +45,53 @@ pub struct Scored {
     pub params: GpParams,
 }
 
+/// Cached pairwise squared distances over the encoded observation rows —
+/// the *unscaled* D² every isotropic kernel build derives its Gram from
+/// (`exp(−0.5·il²·D²)`), so one matrix per round feeds the whole LML
+/// lengthscale grid. Maintained with the same append-only prefix-reuse
+/// discipline as the Cholesky cache: one new row per new observation, a
+/// divergent tail (async constant-liar fits) truncates to the shared
+/// prefix and regrows, and a window slide (prefix 0) rebuilds from
+/// scratch. Entries are bit-stable across all three paths
+/// ([`kernel::sq_dists`] == `dot`-derived rows, by the `matmul_transb`
+/// contract), so feeding the cache into a fit is a pure precomputation.
+struct DistCache {
+    /// Encoded rows the distances cover.
+    x: Matrix,
+    /// Row squared norms (sequential-`dot` reduction, appendable).
+    norms: Vec<f64>,
+    /// Pairwise squared distances (n x n, symmetric).
+    d2: Matrix,
+}
+
+/// Incrementally encoded history rows: re-encoding is deterministic, so a
+/// shared leading-config prefix re-uses its encoded rows bitwise and only
+/// the appended tail is encoded each round.
+#[derive(Default)]
+struct EncodeCache {
+    configs: Vec<Config>,
+    flat: Vec<f64>,
+}
+
 pub struct BayesianCore {
     pub space: SearchSpace,
     pub encoder: Encoder,
     pub opts: GpOptions,
     surrogate: Box<dyn Surrogate>,
-    /// Persistent Cholesky states, one per kernel-hyperparameter key seen
-    /// recently; each grows by rank-1 appends across rounds and is dropped
-    /// when its prefix breaks (windowing) or the cache overflows.
+    /// Persistent Cholesky states, one per kernel-hyperparameter key, in
+    /// least-recently-used order (front = coldest); each grows by rank-1
+    /// appends across rounds and is dropped when its prefix breaks
+    /// (windowing) or the cache overflows.
     chol_cache: Vec<CholeskyState>,
+    /// Shared squared-distance matrix over the current observation window.
+    dist_cache: Option<DistCache>,
+    /// Full distance-matrix builds performed (test introspection: the LML
+    /// grid must amortize to one build per window, not one per grid point).
+    dist_builds: usize,
+    /// Incremental distance appends performed (test introspection).
+    dist_appends: usize,
+    /// Incrementally encoded history rows.
+    enc_cache: EncodeCache,
     /// Iterations seen (drives the adaptive beta schedule).
     pub rounds: usize,
 }
@@ -63,7 +103,18 @@ impl BayesianCore {
             SurrogateBackend::Pjrt => Box::new(PjrtSurrogate::from_default_artifacts()?),
         };
         let encoder = Encoder::new(&space);
-        Ok(Self { space, encoder, opts, surrogate, chol_cache: Vec::new(), rounds: 0 })
+        Ok(Self {
+            space,
+            encoder,
+            opts,
+            surrogate,
+            chol_cache: Vec::new(),
+            dist_cache: None,
+            dist_builds: 0,
+            dist_appends: 0,
+            enc_cache: EncodeCache::default(),
+            rounds: 0,
+        })
     }
 
     /// Max observations the surrogate can hold, answered by the backend
@@ -74,27 +125,114 @@ impl BayesianCore {
         self.surrogate.max_obs()
     }
 
-    /// Encode history into a padded-free (n x d) matrix.
-    fn encode_history(&self, history: &History) -> Matrix {
+    /// Encode history into a padded-free (n x d) matrix, re-using the
+    /// encoded rows of the longest shared leading-config prefix (encoding
+    /// is deterministic, so reuse is bitwise-transparent) and encoding
+    /// only the appended tail.
+    fn encode_history(&mut self, history: &History) -> Matrix {
         let d = self.encoder.dims();
-        let flat = self.encoder.encode_batch(history.configs());
-        Matrix::from_vec(history.len(), d, flat)
+        let n = history.len();
+        let cfgs = history.configs();
+        let cache = &mut self.enc_cache;
+        let max = cache.configs.len().min(n);
+        let q = (0..max).take_while(|&i| cache.configs[i] == cfgs[i]).count();
+        cache.configs.truncate(q);
+        cache.flat.truncate(q * d);
+        for cfg in &cfgs[q..] {
+            let start = cache.flat.len();
+            cache.flat.resize(start + d, 0.0);
+            self.encoder.encode_into(cfg, &mut cache.flat[start..]);
+            cache.configs.push(cfg.clone());
+        }
+        Matrix::from_vec(n, d, cache.flat.clone())
     }
 
-    /// Fit through the Cholesky cache: pop the state matching `params`,
-    /// extend it (or rebuild on a stale prefix), and store it back.
+    /// Bring the shared squared-distance cache up to date with `x`
+    /// (append-only prefix reuse; truncate-and-regrow on a divergent tail;
+    /// full rebuild on a broken prefix).
+    fn update_dist_cache(&mut self, x: &Matrix) {
+        let n = x.rows();
+        let q = self.dist_cache.as_ref().map_or(0, |c| {
+            if c.x.cols() != x.cols() {
+                return 0;
+            }
+            let max = c.x.rows().min(n);
+            (0..max).take_while(|&r| c.x.row(r) == x.row(r)).count()
+        });
+        if q == 0 {
+            // Window slide / first build: one GEMM-based distance build.
+            let norms = kernel::row_sq_norms(x);
+            let d2 = kernel::sq_dists(x, x);
+            self.dist_cache = Some(DistCache { x: x.clone(), norms, d2 });
+            self.dist_builds += 1;
+            return;
+        }
+        let cache = self.dist_cache.as_mut().expect("q > 0 implies a cache");
+        if q == cache.x.rows() && q == n {
+            return; // same window, nothing to do
+        }
+        // Truncate to the shared prefix, then append rows q..n. Each new
+        // entry uses the same parts arithmetic as a fresh `sq_dists` build
+        // (norms via the sequential dot, cross terms via `dot`), so the
+        // grown matrix is bit-identical to a from-scratch one.
+        cache.norms.truncate(q);
+        for r in q..n {
+            cache.norms.push(crate::linalg::dot(x.row(r), x.row(r)));
+        }
+        let old = &cache.d2;
+        let norms = &cache.norms;
+        let d2 = Matrix::from_fn(n, n, |i, j| {
+            if i < q && j < q {
+                old[(i, j)]
+            } else {
+                kernel::sq_dist_from_parts(
+                    norms[i],
+                    norms[j],
+                    crate::linalg::dot(x.row(i), x.row(j)),
+                )
+            }
+        });
+        cache.d2 = d2;
+        cache.x = x.clone();
+        self.dist_appends += 1;
+    }
+
+    /// Fit through the Cholesky cache: pop the state matching `params`
+    /// (refreshing its recency), extend it (or rebuild on a stale prefix),
+    /// and push it back as most-recently-used; the least-recently-used
+    /// state is evicted on overflow. Isotropic fits are routed through the
+    /// shared squared-distance cache when it covers `x` — a pure
+    /// precomputation (bit-identical fits), so the LML grid pays one
+    /// distance build plus an elementwise `exp` map per grid point.
     fn fit_cached(&mut self, x: &Matrix, y: &[f64], params: &GpParams) -> Result<FitOut> {
         let state = self
             .chol_cache
             .iter()
             .position(|s| s.matches_params(params))
-            .map(|i| self.chol_cache.swap_remove(i));
-        let (fit, state) = self.surrogate.fit_incremental(x, y, params, state)?;
+            // remove(i), not swap_remove: the cache is kept in LRU order
+            // (front = coldest), which swap_remove would scramble — the
+            // old scheme could evict the fixed-default key while hot grid
+            // keys churned.
+            .map(|i| self.chol_cache.remove(i));
+        let sq_dists = if kernel::iso_inv_ls(&params.inv_lengthscale, x.cols()).is_some() {
+            self.dist_cache.as_ref().filter(|c| c.x == *x).map(|c| &c.d2)
+        } else {
+            None
+        };
+        let (fit, state) = self.surrogate.fit_incremental_shared(x, y, params, state, sq_dists)?;
         if self.chol_cache.len() >= CHOL_CACHE_MAX {
-            self.chol_cache.remove(0); // oldest key (grid keys re-insert every round)
+            self.chol_cache.remove(0); // least-recently-used key
         }
         self.chol_cache.push(state);
         Ok(fit)
+    }
+
+    /// Effective candidate-scoring thread count (0 = one per core).
+    fn scoring_threads(&self) -> usize {
+        match self.opts.proposal_threads {
+            0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+            t => t,
+        }
     }
 
     /// Fit the surrogate and score an MC candidate set.
@@ -109,6 +247,13 @@ impl BayesianCore {
         rng: &mut Pcg64,
     ) -> Result<Scored> {
         let x_obs = self.encode_history(history);
+        // One shared squared-distance build per round feeds every fit
+        // below (all five LML grid points derive their Gram from it) —
+        // skipped entirely for backends whose compiled kernel would
+        // discard the hint.
+        if self.surrogate.consumes_shared_dists() {
+            self.update_dist_cache(&x_obs);
+        }
         let yn = match self.opts.y_transform {
             YTransform::Normalize => normalize_y(history.values()).0,
             YTransform::RankGauss => acq::rank_gauss(history.values()),
@@ -146,7 +291,16 @@ impl BayesianCore {
         let candidates = acq::mc_candidates(&self.space, self.opts.mc_samples, rng);
         let flat = self.encoder.encode_batch(&candidates);
         let xc = Matrix::from_vec(candidates.len(), d, flat);
-        let acq_out = self.surrogate.acquire(&x_obs, &fit, &xc, &params)?;
+        // Candidate scoring dominates the propose step (m ≫ n): the native
+        // pipeline is chunked across `proposal_threads` scoped workers,
+        // byte-identical to a single pass (gp::acquire_parallel). Artifact
+        // backends keep their own chunked execution model.
+        let acq_out = match self.opts.backend {
+            SurrogateBackend::Native => {
+                gp::acquire_parallel(&x_obs, &fit, &xc, &params, self.scoring_threads())?
+            }
+            SurrogateBackend::Pjrt => self.surrogate.acquire(&x_obs, &fit, &xc, &params)?,
+        };
         Ok(Scored { x_obs, candidates, xc, acq: acq_out, params })
     }
 
@@ -177,6 +331,9 @@ impl BayesianCore {
             return Ok(());
         }
         let x_obs = self.encode_history(history);
+        if self.surrogate.consumes_shared_dists() {
+            self.update_dist_cache(&x_obs);
+        }
         let yn = match self.opts.y_transform {
             YTransform::Normalize => normalize_y(history.values()).0,
             YTransform::RankGauss => acq::rank_gauss(history.values()),
@@ -194,6 +351,37 @@ impl BayesianCore {
             self.fit_cached(&x_obs, &yn, &p)?;
         }
         Ok(())
+    }
+
+    /// [`rehydrate`](Self::rehydrate) for an async resume with configs
+    /// still in flight: warms the cache over the constant-liar augmented
+    /// view `[history + pending]` — the exact matrix the first post-resume
+    /// liar fit covers (built by the same [`super::liar_augmented`] the
+    /// propose path uses), so that fit pays the append path instead of a
+    /// from-scratch refactorization. With no pending work this is plain
+    /// `rehydrate`.
+    pub fn rehydrate_pending(
+        &mut self,
+        history: &History,
+        pending: &[Config],
+        rounds: usize,
+    ) -> Result<()> {
+        if pending.is_empty() {
+            return self.rehydrate(history, rounds);
+        }
+        let augmented = super::liar_augmented(history, pending, self.max_obs());
+        self.rehydrate(&augmented, rounds)
+    }
+
+    /// Full distance-matrix builds performed so far (test introspection:
+    /// the shared-distance grid amortizes to one build per window).
+    pub fn dist_matrix_builds(&self) -> usize {
+        self.dist_builds
+    }
+
+    /// Incremental distance-row appends performed so far.
+    pub fn dist_matrix_appends(&self) -> usize {
+        self.dist_appends
     }
 }
 
@@ -320,6 +508,170 @@ mod tests {
         assert_eq!(s_warm.acq.mean, s_fresh.acq.mean);
         assert_eq!(s_warm.acq.var, s_fresh.acq.var);
         assert_eq!(s_warm.acq.ucb, s_fresh.acq.ucb);
+    }
+
+    /// One shared squared-distance matrix per round feeds all five LML
+    /// grid points, and append-only growth reuses it incrementally — the
+    /// grid's kernel-build cost amortizes from 5 O(n²d) builds per round
+    /// to 1 per *window*, plus elementwise exp maps.
+    #[test]
+    fn lml_grid_shares_one_distance_matrix_across_rounds() {
+        let space = svm_space();
+        let opts =
+            GpOptions { tune_lengthscale: true, fixed_beta: Some(2.0), ..Default::default() };
+        let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+        let h = history_from(&space, 14, 31);
+        let prefix = |n: usize| {
+            let mut p = History::new();
+            for i in 0..n {
+                p.push(h.configs()[i].clone(), h.values()[i]);
+            }
+            p
+        };
+        let mut rng = Pcg64::new(60);
+
+        // Round 1 over the first 10 rows: one build despite 5 grid fits.
+        core.fit_and_score(&prefix(10), 1, &mut rng).unwrap();
+        assert_eq!(core.dist_matrix_builds(), 1, "grid must share one distance build");
+        assert_eq!(core.dist_matrix_appends(), 0);
+
+        // Round 2, append-only growth to 14 rows: no new build, one append.
+        core.fit_and_score(&h, 1, &mut rng).unwrap();
+        assert_eq!(core.dist_matrix_builds(), 1, "append-only growth must not rebuild");
+        assert_eq!(core.dist_matrix_appends(), 1);
+
+        // Same window again: cache untouched.
+        core.fit_and_score(&h, 1, &mut rng).unwrap();
+        assert_eq!(core.dist_matrix_builds(), 1);
+        assert_eq!(core.dist_matrix_appends(), 1);
+
+        // Window slide (drops the oldest rows): prefix broken, one rebuild.
+        core.fit_and_score(&h.recent(9), 1, &mut rng).unwrap();
+        assert_eq!(core.dist_matrix_builds(), 2, "window slide pays one rebuild");
+    }
+
+    /// The Cholesky cache must be *most-recently-used* ordered: reusing a
+    /// key refreshes its recency, and overflow evicts the coldest key —
+    /// never a just-touched one. (Regression: the old swap_remove +
+    /// remove(0) scheme scrambled the order and could evict the
+    /// fixed-default key while grid keys churned.)
+    #[test]
+    fn chol_cache_eviction_is_true_lru() {
+        let space = svm_space();
+        let mut core = BayesianCore::new(space.clone(), GpOptions::default()).unwrap();
+        let h = history_from(&space, 8, 41);
+        let mut rng = Pcg64::new(70);
+        let s = core.fit_and_score(&h, 1, &mut rng).unwrap(); // builds x/dist caches
+        let x = s.x_obs.clone();
+        let y = vec![0.0; x.rows()];
+        let (d, noise) = (x.cols(), core.opts.noise);
+        let key = move |ls: f64| {
+            let mut p = GpParams::new(d).with_lengthscale(ls);
+            p.noise = noise;
+            p
+        };
+        core.chol_cache.clear();
+        // Fill the cache to capacity: the "default" key first, then grid-
+        // like churn keys (all distinct lengthscales).
+        let default_ls = 0.31;
+        let churn: Vec<f64> = (0..CHOL_CACHE_MAX - 1).map(|i| 0.4 + 0.07 * i as f64).collect();
+        core.fit_cached(&x, &y, &key(default_ls)).unwrap();
+        for &ls in &churn {
+            core.fit_cached(&x, &y, &key(ls)).unwrap();
+        }
+        assert_eq!(core.chol_cache.len(), CHOL_CACHE_MAX);
+        // A full churn round re-touches every grid key, then the default:
+        // recency order must now be [churn..., default].
+        for &ls in &churn {
+            core.fit_cached(&x, &y, &key(ls)).unwrap();
+        }
+        core.fit_cached(&x, &y, &key(default_ls)).unwrap();
+        assert_eq!(core.chol_cache.len(), CHOL_CACHE_MAX, "touches must not grow the cache");
+        assert!(
+            core.cached_state(&key(default_ls)).is_some(),
+            "default key must survive a full churn round"
+        );
+        // Overflow with a brand-new key: the true LRU (churn[0]) is
+        // evicted; the just-touched default key survives.
+        core.fit_cached(&x, &y, &key(0.97)).unwrap();
+        assert_eq!(core.chol_cache.len(), CHOL_CACHE_MAX);
+        assert!(
+            core.cached_state(&key(churn[0])).is_none(),
+            "the least-recently-used key must be the one evicted"
+        );
+        assert!(
+            core.cached_state(&key(default_ls)).is_some(),
+            "a just-touched key must never be evicted by churn"
+        );
+        assert!(core.cached_state(&key(0.97)).is_some());
+    }
+
+    /// The deterministic-parallel-scoring contract at the optimizer level:
+    /// `fit_and_score` output is byte-identical for every
+    /// `proposal_threads` setting (including 0 = auto).
+    #[test]
+    fn fit_and_score_is_byte_identical_across_proposal_threads() {
+        let space = svm_space();
+        let h = history_from(&space, 12, 51);
+        let run = |threads: usize| {
+            let opts = GpOptions {
+                proposal_threads: threads,
+                fixed_beta: Some(2.0),
+                mc_samples: 257, // odd: ragged chunk boundaries
+                ..Default::default()
+            };
+            let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+            core.fit_and_score(&h, 1, &mut Pcg64::new(80)).unwrap()
+        };
+        let base = run(1);
+        for threads in [2usize, 8, 0] {
+            let s = run(threads);
+            assert_eq!(s.candidates, base.candidates, "{threads}: candidate set differs");
+            assert_eq!(s.acq.ucb, base.acq.ucb, "{threads} threads: ucb deviates");
+            assert_eq!(s.acq.mean, base.acq.mean, "{threads} threads: mean deviates");
+            assert_eq!(s.acq.var, base.acq.var, "{threads} threads: var deviates");
+            assert_eq!(s.acq.w, base.acq.w, "{threads} threads: w deviates");
+        }
+    }
+
+    /// Satellite: `rehydrate_pending` must warm the cache over the exact
+    /// constant-liar view the first post-resume fit covers — bit-identical
+    /// to the state a live (uninterrupted) core holds after fitting the
+    /// same augmented history.
+    #[test]
+    fn rehydrate_pending_warms_the_liar_fit_state() {
+        let space = svm_space();
+        let opts = GpOptions { fixed_beta: Some(2.0), ..Default::default() };
+        let h = history_from(&space, 9, 61);
+        let mut rng = Pcg64::new(90);
+        let pending = space.sample_n(&mut rng, 3);
+
+        // The live core's last pre-crash action: a constant-liar fit over
+        // [history + pending].
+        let augmented = crate::optimizer::liar_augmented(&h, &pending, usize::MAX);
+        let mut live = BayesianCore::new(space.clone(), opts.clone()).unwrap();
+        live.fit_and_score(&augmented, 1, &mut Pcg64::new(91)).unwrap();
+
+        // The resumed core warms through rehydrate_pending.
+        let mut resumed = BayesianCore::new(space.clone(), opts).unwrap();
+        resumed.rehydrate_pending(&h, &pending, 1).unwrap();
+        assert_eq!(resumed.rounds, 1);
+
+        let d = Encoder::new(&space).dims();
+        let mut params = GpParams::new(d);
+        params.noise = GpOptions::default().noise;
+        let live_state = live.cached_state(&params).expect("live liar-fit state");
+        let warm_state = resumed.cached_state(&params).expect("rehydrated liar state");
+        assert_eq!(
+            warm_state.rows(),
+            h.len() + pending.len(),
+            "warm state must cover history + pending, not history alone"
+        );
+        assert_eq!(
+            warm_state.factor(),
+            live_state.factor(),
+            "warmed factor must be bit-identical to the live liar fit's"
+        );
     }
 
     #[test]

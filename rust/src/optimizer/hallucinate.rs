@@ -61,6 +61,15 @@ impl BatchOptimizer for HallucinationOptimizer {
         self.core.rehydrate(history, rounds)
     }
 
+    fn rehydrate_pending(
+        &mut self,
+        history: &History,
+        pending: &[Config],
+        rounds: usize,
+    ) -> Result<()> {
+        self.core.rehydrate_pending(history, pending, rounds)
+    }
+
     fn name(&self) -> &'static str {
         "hallucination"
     }

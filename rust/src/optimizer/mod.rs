@@ -85,6 +85,30 @@ impl History {
     }
 }
 
+/// The constant-liar augmented surrogate view: `history` plus one
+/// hallucinated observation (the mean observed value) per pending config,
+/// clamped to `capacity` by dropping the oldest real observations. The
+/// single construction shared by [`BatchOptimizer::propose_pending`] and
+/// the GP optimizers' [`BatchOptimizer::rehydrate_pending`] — both must
+/// build the *same* matrix or the post-resume warm state would never match
+/// the first liar fit's rows.
+pub(crate) fn liar_augmented(history: &History, pending: &[Config], capacity: usize) -> History {
+    let liar = if history.is_empty() {
+        0.0
+    } else {
+        crate::util::stats::mean(history.values())
+    };
+    let mut augmented = history.clone();
+    for cfg in pending {
+        augmented.push(cfg.clone(), liar);
+    }
+    // The hallucinated rows must still fit the surrogate: drop the
+    // oldest real observations rather than overflowing a bounded
+    // artifact backend (which would abort the whole run).
+    augmented.truncate_to_recent(capacity);
+    augmented
+}
+
 /// A batch-proposing optimizer.
 pub trait BatchOptimizer {
     /// Propose `batch_size` configurations to evaluate next.
@@ -114,19 +138,7 @@ pub trait BatchOptimizer {
         if pending.is_empty() {
             return self.propose(history, batch_size, rng);
         }
-        let liar = if history.is_empty() {
-            0.0
-        } else {
-            crate::util::stats::mean(history.values())
-        };
-        let mut augmented = history.clone();
-        for cfg in pending {
-            augmented.push(cfg.clone(), liar);
-        }
-        // The hallucinated rows must still fit the surrogate: drop the
-        // oldest real observations rather than overflowing a bounded
-        // artifact backend (which would abort the whole run).
-        augmented.truncate_to_recent(self.surrogate_capacity());
+        let augmented = liar_augmented(history, pending, self.surrogate_capacity());
         let batch = self.propose(&augmented, batch_size, rng)?;
         Ok(batch.into_iter().filter(|c| !pending.contains(c)).collect())
     }
@@ -159,6 +171,26 @@ pub trait BatchOptimizer {
     /// post-resume proposals. Stateless optimizers ignore this.
     fn rehydrate(&mut self, _history: &History, _rounds: usize) -> Result<()> {
         Ok(())
+    }
+
+    /// [`rehydrate`](Self::rehydrate) for an async resume with work still
+    /// in flight: GP optimizers warm their cached `CholeskyState` over the
+    /// *constant-liar augmented* view `[history + pending]` — the exact
+    /// matrix the first post-resume [`propose_pending`](Self::propose_pending)
+    /// will fit — so that fit pays the O(n²)-per-row append path instead of
+    /// a from-scratch O(n³) refactorization (the warm state reproduces what
+    /// the crashed process's cache held after its last liar fit). The
+    /// default ignores `pending` and delegates to `rehydrate`; the warm-up
+    /// is a pure optimization either way (fits are bit-identical with or
+    /// without it), so stateless optimizers lose nothing.
+    fn rehydrate_pending(
+        &mut self,
+        history: &History,
+        pending: &[Config],
+        rounds: usize,
+    ) -> Result<()> {
+        let _ = pending;
+        self.rehydrate(history, rounds)
     }
 
     fn name(&self) -> &'static str;
@@ -250,6 +282,12 @@ pub struct GpOptions {
     /// Fixed exploration weight; None = adaptive schedule (paper default).
     pub fixed_beta: Option<f64>,
     pub y_transform: YTransform,
+    /// Worker threads for Monte-Carlo candidate scoring (native backend
+    /// only; the PJRT artifact path has its own execution model). 0 = one
+    /// per available core. Scoring is chunked deterministically, so the
+    /// acquisition output is byte-identical for every setting — this is a
+    /// wall-clock knob, never a numerics knob.
+    pub proposal_threads: usize,
 }
 
 impl Default for GpOptions {
@@ -262,6 +300,7 @@ impl Default for GpOptions {
             noise: 1e-3,
             fixed_beta: None,
             y_transform: YTransform::RankGauss,
+            proposal_threads: 1,
         }
     }
 }

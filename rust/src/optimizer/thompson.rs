@@ -78,6 +78,15 @@ impl BatchOptimizer for ThompsonOptimizer {
         self.core.rehydrate(history, rounds)
     }
 
+    fn rehydrate_pending(
+        &mut self,
+        history: &History,
+        pending: &[Config],
+        rounds: usize,
+    ) -> Result<()> {
+        self.core.rehydrate_pending(history, pending, rounds)
+    }
+
     fn name(&self) -> &'static str {
         "thompson"
     }

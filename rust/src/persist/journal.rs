@@ -389,9 +389,19 @@ fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
 /// `\n`-terminated line and flushes it to the OS, so a killed process
 /// loses at most the event it was mid-write on (the torn tail the reader
 /// drops) — never a previously appended one.
+///
+/// Flush-only durability survives a *process* kill but not a machine
+/// crash (the OS page cache holds unsynced appends). The opt-in
+/// [`with_fsync_every`](Self::with_fsync_every) knob adds an
+/// `fsync`/`fdatasync` barrier every n appends, bounding machine-crash
+/// loss to the last n events at a measured per-append latency cost.
 pub struct JournalWriter {
     file: File,
     path: PathBuf,
+    /// fsync after every n appends; 0 = never (flush-only, the default).
+    fsync_every_n: usize,
+    /// Appends since the last fsync barrier.
+    unsynced: usize,
 }
 
 impl JournalWriter {
@@ -400,7 +410,7 @@ impl JournalWriter {
     pub fn create(path: &Path, header: &RunHeader) -> Result<Self> {
         let file = File::create(path)
             .with_context(|| format!("creating run journal {}", path.display()))?;
-        let mut w = Self { file, path: path.to_path_buf() };
+        let mut w = Self { file, path: path.to_path_buf(), fsync_every_n: 0, unsynced: 0 };
         w.write_line(&header.to_json())?;
         Ok(w)
     }
@@ -416,9 +426,17 @@ impl JournalWriter {
             .with_context(|| format!("reopening run journal {}", path.display()))?;
         file.set_len(valid_len)
             .with_context(|| format!("truncating torn tail of {}", path.display()))?;
-        let mut w = Self { file, path: path.to_path_buf() };
+        let mut w = Self { file, path: path.to_path_buf(), fsync_every_n: 0, unsynced: 0 };
         w.file.seek(SeekFrom::End(0))?;
         Ok(w)
+    }
+
+    /// Opt into machine-crash durability: fsync after every `n` appends
+    /// (`0` keeps the default flush-only behavior — byte-identical output,
+    /// no sync syscalls).
+    pub fn with_fsync_every(mut self, n: usize) -> Self {
+        self.fsync_every_n = n;
+        self
     }
 
     pub fn path(&self) -> &Path {
@@ -436,6 +454,15 @@ impl JournalWriter {
             .write_all(line.as_bytes())
             .with_context(|| format!("appending to run journal {}", self.path.display()))?;
         self.file.flush()?;
+        if self.fsync_every_n > 0 {
+            self.unsynced += 1;
+            if self.unsynced >= self.fsync_every_n {
+                self.file
+                    .sync_data()
+                    .with_context(|| format!("fsync of run journal {}", self.path.display()))?;
+                self.unsynced = 0;
+            }
+        }
         Ok(())
     }
 }
@@ -649,6 +676,57 @@ mod tests {
         }
         let c2 = read_journal(&path).unwrap();
         assert_eq!(c2.events, events);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The fsync knob must not change what reaches the file: `0`/absent
+    /// preserves flush-only behavior byte-for-byte, and any `n` produces
+    /// the identical journal (fsync is a durability barrier, not a format
+    /// change) that replays identically.
+    #[test]
+    fn fsync_knob_is_byte_transparent_and_zero_means_flush_only() {
+        let events = sample_events();
+        let write_with = |name: &str, n: usize| -> Vec<u8> {
+            let path = tmp(name);
+            {
+                let mut w = JournalWriter::create(&path, &header()).unwrap().with_fsync_every(n);
+                assert_eq!(w.fsync_every_n, n);
+                for ev in &events {
+                    w.append(ev).unwrap();
+                }
+                if n == 0 {
+                    assert_eq!(w.unsynced, 0, "flush-only writer must never count appends");
+                }
+            }
+            let bytes = std::fs::read(&path).unwrap();
+            let c = read_journal(&path).unwrap();
+            assert_eq!(c.events, events, "fsync={n}: journal must replay identically");
+            std::fs::remove_file(&path).ok();
+            bytes
+        };
+        let flush_only = write_with("fsync0", 0);
+        for n in [1usize, 3, 1000] {
+            assert_eq!(
+                write_with(&format!("fsync{n}"), n),
+                flush_only,
+                "fsync_every_n={n} must not change journal bytes"
+            );
+        }
+        // The resume path accepts the knob too.
+        let path = tmp("fsync_resume");
+        {
+            let mut w = JournalWriter::create(&path, &header()).unwrap();
+            w.append(&events[0]).unwrap();
+        }
+        let c = read_journal(&path).unwrap();
+        {
+            let mut w =
+                JournalWriter::resume(&path, c.valid_len).unwrap().with_fsync_every(2);
+            w.append(&events[1]).unwrap();
+            w.append(&events[2]).unwrap();
+            assert_eq!(w.unsynced, 0, "the barrier must reset the counter");
+        }
+        assert_eq!(read_journal(&path).unwrap().events, &events[..3]);
         std::fs::remove_file(&path).ok();
     }
 

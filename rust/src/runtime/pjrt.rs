@@ -412,6 +412,32 @@ mod fallback {
             self.native.fit_incremental(x, y, params, state)
         }
 
+        /// The fallback's kernel build is host-side, so the shared
+        /// squared-distance cache applies exactly as it does natively
+        /// (the real artifact backend ignores it — its kernel lives inside
+        /// the compiled program).
+        fn fit_incremental_shared(
+            &mut self,
+            x: &Matrix,
+            y: &[f64],
+            params: &GpParams,
+            state: Option<CholeskyState>,
+            sq_dists: Option<&Matrix>,
+        ) -> Result<(FitOut, CholeskyState)> {
+            anyhow::ensure!(
+                x.rows() <= self.max_obs,
+                "{} observations exceed artifact capacity {}",
+                x.rows(),
+                self.max_obs
+            );
+            self.fit_calls += 1;
+            self.native.fit_incremental_shared(x, y, params, state, sq_dists)
+        }
+
+        fn consumes_shared_dists(&self) -> bool {
+            self.native.consumes_shared_dists()
+        }
+
         fn max_obs(&self) -> usize {
             self.max_obs
         }
