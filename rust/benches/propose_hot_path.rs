@@ -6,10 +6,18 @@
 //!    against the scalar per-pair baseline it replaced (kept here as the
 //!    reference impl, out of the library hot path), with a correctness
 //!    cross-check before any timing and a speedup assertion.
-//! 2. **Full propose rounds**: `BayesianCore::fit_and_score` at cache
+//! 2. **Columnar candidate generation**: `SearchSpace::sample_columnar`
+//!    against the legacy `sample_n` + `encode_batch` path it replaced, at
+//!    m ∈ {10⁴, 10⁵} on a mixed (continuous/range/choice) space — the
+//!    O(m·p) `String`/`Config` churn the columnar path eliminates — with a
+//!    bit-identity cross-check before any timing.
+//! 3. **Full propose rounds**: `BayesianCore::fit_and_score` at cache
 //!    steady state (the per-round cost the event loop pays) over
 //!    n ∈ {64, 256} history rows, m ∈ {1k, 10k} MC candidates, and
 //!    `proposal_threads` ∈ {1, 4}.
+//! 4. **Sharded scoring rounds**: the same propose step at m ∈ {10⁴, 10⁵}
+//!    with `proposal_shards` ∈ {0 (local), 4 (threaded pool)} — the
+//!    scheduler-sharded path the m ≥ 10⁵ regime uses.
 //!
 //! Run: `cargo bench --bench propose_hot_path`. Writes `BENCH_propose.json`
 //! at the repo root (overwriting the committed placeholder), mirroring the
@@ -17,10 +25,11 @@
 
 use mango::exp::benchkit::bench;
 use mango::gp::kernel::{rbf_kernel, rbf_pair};
+use mango::gp::ShardExec;
 use mango::linalg::Matrix;
 use mango::optimizer::bayesian::BayesianCore;
 use mango::optimizer::{GpOptions, History};
-use mango::space::SearchSpace;
+use mango::space::{Encoder, SearchSpace};
 use mango::util::rng::Pcg64;
 
 const D: usize = 8;
@@ -41,6 +50,21 @@ fn bench_space() -> SearchSpace {
     for i in 0..D {
         b = b.uniform(&format!("x{i}"), 0.0, 1.0);
     }
+    b.build()
+}
+
+/// Mixed space for the generation bench: the legacy path's per-candidate
+/// cost is dominated by `Config` allocation (one name `String` clone per
+/// param) and, for choices, `ParamValue` clones — so the space mixes all
+/// three param classes like the paper's XGBoost Listing 1.
+fn gen_space() -> SearchSpace {
+    let mut b = SearchSpace::builder();
+    for i in 0..4 {
+        b = b.uniform(&format!("u{i}"), 0.0, 1.0);
+    }
+    b = b.range("depth", 1, 32).range("estimators", 1, 300);
+    b = b.choice("booster", &["gbtree", "gblinear", "dart"]);
+    b = b.choice("growth", &["depthwise", "lossguide", "hist"]);
     b.build()
 }
 
@@ -79,7 +103,55 @@ fn main() {
     println!("{}", t_gemm.row());
     println!("kernel speedup: {kernel_speedup:.2}x (target >= {KERNEL_SPEEDUP_TARGET}x)");
 
-    // ---- 2. full propose rounds at cache steady state ----
+    // ---- 2. columnar candidate generation vs the legacy Config path ----
+    let gspace = gen_space();
+    let genc = Encoder::new(&gspace);
+    // Bit-identity cross-check before timing: same RNG stream, same
+    // values, same encoded features.
+    {
+        let legacy = gspace.sample_n(&mut Pcg64::new(21), 2048);
+        let legacy_enc = genc.encode_batch(&legacy);
+        let set = gspace.sample_columnar(&mut Pcg64::new(21), 2048);
+        assert_eq!(set.encoded(), legacy_enc.as_slice(), "columnar encoding deviates");
+        for (i, want) in legacy.iter().enumerate() {
+            assert_eq!(&set.config(i), want, "columnar candidate {i} deviates");
+        }
+    }
+    let mut gen_rows = String::new();
+    for m in [10_000usize, 100_000] {
+        let iters = if m >= 100_000 { 5 } else { 12 };
+        let mut seed = 400 + m as u64;
+        let t_legacy = bench(&format!("legacy  sample_n+encode m={m}"), 1, iters, || {
+            seed += 1;
+            let mut rng = Pcg64::new(seed);
+            let cfgs = gspace.sample_n(&mut rng, m);
+            std::hint::black_box(genc.encode_batch(&cfgs));
+        });
+        let mut seed2 = 400 + m as u64;
+        let t_columnar = bench(&format!("columnar sample_columnar m={m}"), 1, iters, || {
+            seed2 += 1;
+            let mut rng = Pcg64::new(seed2);
+            std::hint::black_box(gspace.sample_columnar(&mut rng, m));
+        });
+        println!("{}", t_legacy.row());
+        println!("{}", t_columnar.row());
+        println!(
+            "generation m={m}: {:.2}x vs legacy",
+            t_legacy.mean_us / t_columnar.mean_us.max(1e-9)
+        );
+        if !gen_rows.is_empty() {
+            gen_rows.push_str(",\n");
+        }
+        gen_rows.push_str(&format!(
+            "    {{\"m\": {m}, \"legacy_mean_us\": {:.1}, \"columnar_mean_us\": {:.1}, \
+             \"speedup\": {:.2}}}",
+            t_legacy.mean_us,
+            t_columnar.mean_us,
+            t_legacy.mean_us / t_columnar.mean_us.max(1e-9)
+        ));
+    }
+
+    // ---- 3. full propose rounds at cache steady state ----
     let space = bench_space();
     let mut round_rows = String::new();
     for n in [64usize, 256] {
@@ -121,18 +193,65 @@ fn main() {
         }
     }
 
+    // ---- 4. sharded scoring rounds at m ∈ {1e4, 1e5} ----
+    // n = 64 history rows (the kc/w buffers at m = 1e5 already run ~100 MB;
+    // the m axis, not n, is what sharding scales).
+    let mut shard_rows = String::new();
+    {
+        let history = bench_history(&space, 64, 64);
+        for m in [10_000usize, 100_000] {
+            for shards in [0usize, 4] {
+                let opts = GpOptions {
+                    mc_samples: m,
+                    proposal_threads: 4,
+                    proposal_shards: shards,
+                    shard_exec: ShardExec::Threaded,
+                    fixed_beta: Some(2.0),
+                    ..Default::default()
+                };
+                let mut core = BayesianCore::new(space.clone(), opts).expect("native core");
+                let mut call_seed = 7000 + m as u64;
+                let iters = if m >= 100_000 { 3 } else { 8 };
+                let stats = bench(
+                    &format!("fit_and_score n=64 m={m} shards={shards}"),
+                    1,
+                    iters,
+                    || {
+                        call_seed += 1;
+                        let mut rng = Pcg64::new(call_seed);
+                        std::hint::black_box(
+                            core.fit_and_score(&history, 1, &mut rng).expect("fit_and_score"),
+                        );
+                    },
+                );
+                println!("{}", stats.row());
+                if !shard_rows.is_empty() {
+                    shard_rows.push_str(",\n");
+                }
+                shard_rows.push_str(&format!(
+                    "    {{\"n\": 64, \"m\": {m}, \"shards\": {shards}, \
+                     \"mean_us\": {:.1}, \"p50_us\": {:.1}}}",
+                    stats.mean_us, stats.p50_us
+                ));
+            }
+        }
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"propose_hot_path\",\n  \"dims\": {D},\n  \
          \"kernel\": {{\"n\": {kn}, \"m\": {km}, \"scalar_mean_us\": {:.1}, \
          \"gemm_mean_us\": {:.1}, \"speedup\": {:.2}, \
          \"target_speedup\": {KERNEL_SPEEDUP_TARGET}, \"pass\": {}, \
-         \"max_abs_deviation\": {:e}}},\n  \"rounds\": [\n{}\n  ]\n}}\n",
+         \"max_abs_deviation\": {:e}}},\n  \"generation\": [\n{}\n  ],\n  \
+         \"rounds\": [\n{}\n  ],\n  \"sharded_rounds\": [\n{}\n  ]\n}}\n",
         t_scalar.mean_us,
         t_gemm.mean_us,
         kernel_speedup,
         kernel_speedup >= KERNEL_SPEEDUP_TARGET,
         max_dev,
+        gen_rows,
         round_rows,
+        shard_rows,
     );
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_propose.json");
     std::fs::write(out, &json).expect("write BENCH_propose.json");

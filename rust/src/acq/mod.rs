@@ -1,7 +1,7 @@
 //! Acquisition machinery: the adaptive UCB exploration schedule and the
 //! Monte-Carlo candidate generation the paper describes in §2.3.
 
-use crate::space::{Config, SearchSpace};
+use crate::space::{ColumnarSet, SearchSpace};
 use crate::util::rng::Pcg64;
 use crate::util::stats::nan_as_worst;
 
@@ -27,10 +27,14 @@ pub fn adaptive_beta(iteration: usize, cardinality: f64, batch_size: usize) -> f
 
 /// Monte-Carlo candidate set: valid configurations sampled from the space's
 /// own distributions (the acquisition is only evaluated at valid points —
-/// the paper's treatment of discrete/categorical variables).
-pub fn mc_candidates(space: &SearchSpace, n_override: usize, rng: &mut Pcg64) -> Vec<Config> {
+/// the paper's treatment of discrete/categorical variables). Generated in
+/// **columnar** form ([`SearchSpace::sample_columnar`]): typed SoA columns
+/// plus the encoded matrix, no per-candidate `Config` — values are
+/// bit-identical to the legacy `sample_n` stream, and only the argmax
+/// winners are ever materialized.
+pub fn mc_candidates(space: &SearchSpace, n_override: usize, rng: &mut Pcg64) -> ColumnarSet {
     let n = if n_override > 0 { n_override } else { space.mc_samples_heuristic() };
-    space.sample_n(rng, n)
+    space.sample_columnar(rng, n)
 }
 
 /// Expected improvement at a (mean, var) pair given the incumbent best
@@ -160,6 +164,19 @@ mod tests {
         assert_eq!(mc_candidates(&s, 123, &mut rng).len(), 123);
         let heuristic = mc_candidates(&s, 0, &mut rng).len();
         assert_eq!(heuristic, s.mc_samples_heuristic());
+    }
+
+    #[test]
+    fn mc_candidates_match_the_legacy_stream() {
+        // The columnar candidate set draws the exact RNG sequence the
+        // legacy sample_n path drew: same seed, same candidate values.
+        let s = xgboost_space();
+        let set = mc_candidates(&s, 57, &mut Pcg64::new(44));
+        let legacy = s.sample_n(&mut Pcg64::new(44), 57);
+        assert_eq!(set.len(), legacy.len());
+        for (i, want) in legacy.iter().enumerate() {
+            assert_eq!(&set.config(i), want, "candidate {i}");
+        }
     }
 
     #[test]

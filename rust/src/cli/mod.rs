@@ -106,6 +106,10 @@ TUNE OPTIONS:
   --proposal-threads <n>   candidate-scoring threads, native backend
                            (0 = one per core; output is byte-identical
                            for every setting)                [1]
+  --proposal-shards <n>    candidate-scoring shards shipped through the
+                           run's scheduler machinery, native backend
+                           (0 = local-only; output is byte-identical
+                           for every setting)                [0]
   --seed <s>               RNG seed                          [0]
   --early-stop <n>         stop after n iterations without improvement
   --max-surrogate-obs <n>  history window the GP sees        [512]

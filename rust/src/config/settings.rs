@@ -42,6 +42,12 @@ pub struct RunConfig {
     /// 0 = one per core). The chunked scoring pipeline is deterministic:
     /// output is byte-identical for every setting.
     pub proposal_threads: usize,
+    /// Scoring shards shipped through the scheduler's worker-pool
+    /// machinery per propose round (native backend). 0 = local-only
+    /// scoring (today's behavior byte-for-byte); n ≥ 1 executes n fixed
+    /// candidate chunks as pool jobs under the run's scheduler kind.
+    /// Byte-identical output for every setting.
+    pub proposal_shards: usize,
     /// Journal durability: fsync after every n appends (0 = flush-only —
     /// survives a process kill; a machine crash can lose recent events).
     pub fsync_every_n: usize,
@@ -73,6 +79,7 @@ impl Default for RunConfig {
             async_window: 0,
             max_retries: 2,
             proposal_threads: 1,
+            proposal_shards: 0,
             fsync_every_n: 0,
             journal: String::new(),
             resume: false,
@@ -98,6 +105,7 @@ impl RunConfig {
                 "async_window" => c.async_window = num(v, k)? as usize,
                 "max_retries" => c.max_retries = num(v, k)? as usize,
                 "proposal_threads" => c.proposal_threads = num(v, k)? as usize,
+                "proposal_shards" => c.proposal_shards = num(v, k)? as usize,
                 "fsync_every_n" => c.fsync_every_n = num(v, k)? as usize,
                 "optimizer" => c.optimizer = str_(v, k)?,
                 "scheduler" => c.scheduler = str_(v, k)?,
@@ -165,6 +173,7 @@ impl RunConfig {
             ("async_window", Json::Num(self.async_window as f64)),
             ("max_retries", Json::Num(self.max_retries as f64)),
             ("proposal_threads", Json::Num(self.proposal_threads as f64)),
+            ("proposal_shards", Json::Num(self.proposal_shards as f64)),
             ("fsync_every_n", Json::Num(self.fsync_every_n as f64)),
             ("journal", Json::Str(self.journal.clone())),
             ("resume", Json::Bool(self.resume)),
@@ -280,10 +289,13 @@ mod tests {
         // flush-only journal durability.
         let c = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
         assert_eq!(c.proposal_threads, 1);
+        assert_eq!(c.proposal_shards, 0, "local-only scoring by default");
         assert_eq!(c.fsync_every_n, 0);
-        let j = parse(r#"{"proposal_threads": 8, "fsync_every_n": 32}"#).unwrap();
+        let j = parse(r#"{"proposal_threads": 8, "proposal_shards": 4, "fsync_every_n": 32}"#)
+            .unwrap();
         let c = RunConfig::from_json(&j).unwrap();
         assert_eq!(c.proposal_threads, 8);
+        assert_eq!(c.proposal_shards, 4);
         assert_eq!(c.fsync_every_n, 32);
         let c2 = RunConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2, "perf knobs survive the json round trip");

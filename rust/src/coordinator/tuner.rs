@@ -122,6 +122,15 @@ pub struct TunerConfig {
     /// 0 = one per core). Byte-identical output for every setting — a
     /// wall-clock knob, never a numerics knob.
     pub proposal_threads: usize,
+    /// Scoring shards shipped through the scheduler's worker-pool
+    /// machinery per propose round (native backend). 0 = local-only
+    /// scoring (`proposal_threads` over scoped threads), byte-for-byte
+    /// today's behavior; n ≥ 1 splits the candidate set into n fixed
+    /// chunks executed as pool jobs under this run's scheduler kind
+    /// (serial / threaded / celery-sim incl. its fault fates). Output is
+    /// byte-identical for every `proposal_shards` × `proposal_threads` ×
+    /// scheduler setting.
+    pub proposal_shards: usize,
     /// Journal durability: fsync after every n appends (0 = flush-only,
     /// the default — survives a process kill but a machine crash can lose
     /// recent events).
@@ -149,6 +158,7 @@ impl Default for TunerConfig {
             async_window: 0,
             max_retries: 2,
             proposal_threads: 1,
+            proposal_shards: 0,
             fsync_every_n: 0,
             celery: None,
         }
@@ -182,6 +192,7 @@ impl TunerConfig {
             async_window: rc.async_window,
             max_retries: rc.max_retries,
             proposal_threads: rc.proposal_threads,
+            proposal_shards: rc.proposal_shards,
             fsync_every_n: rc.fsync_every_n,
             celery: None,
         })
@@ -190,8 +201,9 @@ impl TunerConfig {
     /// Inverse of [`from_run_config`](Self::from_run_config): the JSON-level
     /// form recorded in the journal header so `Tuner::resume_from` can
     /// rebuild the tuner without the caller re-specifying anything. The
-    /// `celery` fault-model override is process-local (not serializable)
-    /// and must be re-set by the caller after a resume if one was used.
+    /// `celery` fault-model override is not part of `RunConfig`; it rides
+    /// in its own journal-header field (`RunHeader::celery`) and
+    /// `resume_from` re-applies it from there.
     pub fn to_run_config(&self) -> RunConfig {
         RunConfig {
             batch_size: self.batch_size,
@@ -212,6 +224,7 @@ impl TunerConfig {
             async_window: self.async_window,
             max_retries: self.max_retries,
             proposal_threads: self.proposal_threads,
+            proposal_shards: self.proposal_shards,
             fsync_every_n: self.fsync_every_n,
             journal: String::new(),
             resume: false,
@@ -317,9 +330,10 @@ impl Tuner {
         self
     }
 
-    /// Re-apply the Celery simulator's fault/latency override — it is
-    /// process-local (not serialized into the journal header), so a
-    /// resumed run that used one must set it again.
+    /// Override the Celery simulator's fault/latency model. Journaled runs
+    /// record it in the header and [`Tuner::resume_from`] re-applies it
+    /// automatically; this setter is for fresh runs and for deliberately
+    /// changing the simulated cluster on resume.
     pub fn with_celery(mut self, celery: Option<scheduler::celery::CelerySimConfig>) -> Self {
         self.config.celery = celery;
         self
@@ -335,7 +349,12 @@ impl Tuner {
     pub fn resume_from(space: SearchSpace, path: &Path) -> Result<Self> {
         let rec = persist::recover(path)?;
         rec.validate_space(&space)?;
-        let config = TunerConfig::from_run_config(&rec.header.run)?;
+        let mut config = TunerConfig::from_run_config(&rec.header.run)?;
+        // The Celery fault-model override is journaled in the header
+        // (schema v2): re-apply it so a resumed run simulates the exact
+        // cluster the crashed run configured instead of reverting to
+        // defaults. `with_celery` remains available to override afresh.
+        config.celery = rec.header.celery.clone();
         Ok(Self {
             space,
             config,
@@ -389,6 +408,7 @@ impl Tuner {
                         space_fp: self.space.fingerprint(),
                         sense: sense.tag(),
                         run: self.config.to_run_config(),
+                        celery: self.config.celery.clone(),
                     },
                 )?
                 .with_fsync_every(self.config.fsync_every_n),
@@ -481,6 +501,24 @@ impl Tuner {
             initial_random: self.config.initial_random,
             tune_lengthscale: self.config.tune_lengthscale,
             proposal_threads: self.config.proposal_threads,
+            proposal_shards: self.config.proposal_shards,
+            // Scoring shards execute under the same scheduler model as the
+            // objective evaluations — including the Celery simulator's
+            // fault fates (shard losses are retried; output byte-identical
+            // for every setting).
+            shard_exec: match self.config.scheduler {
+                SchedulerKind::Serial => crate::gp::ShardExec::Serial,
+                SchedulerKind::Threaded => crate::gp::ShardExec::Threaded,
+                SchedulerKind::Celery => crate::gp::ShardExec::CelerySim {
+                    config: self.config.celery.clone().unwrap_or(
+                        scheduler::celery::CelerySimConfig {
+                            workers: self.config.workers,
+                            ..Default::default()
+                        },
+                    ),
+                    seed: self.config.seed,
+                },
+            },
             ..Default::default()
         }
     }
@@ -1384,6 +1422,7 @@ mod tests {
             async_window: 9,
             max_retries: 1,
             proposal_threads: 4,
+            proposal_shards: 3,
             fsync_every_n: 16,
             celery: None,
         };
@@ -1406,6 +1445,7 @@ mod tests {
         assert_eq!(back.async_window, tc.async_window);
         assert_eq!(back.max_retries, tc.max_retries);
         assert_eq!(back.proposal_threads, tc.proposal_threads);
+        assert_eq!(back.proposal_shards, tc.proposal_shards);
         assert_eq!(back.fsync_every_n, tc.fsync_every_n);
     }
 

@@ -494,6 +494,42 @@ pub(crate) fn acquire_columns(
     Ok(AcquireOut { ucb, mean, var, w })
 }
 
+/// Fixed index-ordered chunk ranges over `m` candidates — the one chunking
+/// arithmetic [`acquire_parallel`] and [`acquire_sharded`] share.
+fn chunk_ranges(m: usize, parts: usize) -> Vec<(usize, usize)> {
+    let p = parts.clamp(1, m.max(1));
+    let chunk = m.div_ceil(p);
+    (0..p)
+        .map(|i| (i * chunk, ((i + 1) * chunk).min(m)))
+        .filter(|(start, end)| start < end)
+        .collect()
+}
+
+/// Fold per-chunk [`acquire_columns`] outputs back into one candidate-set
+/// result, **in chunk order** — shared by the local threaded path and the
+/// scheduler-sharded path so the fold arithmetic can never drift between
+/// them.
+fn fold_parts(n: usize, m: usize, parts: Vec<AcquireOut>) -> Result<AcquireOut> {
+    let mut ucb = Vec::with_capacity(m);
+    let mut mean = Vec::with_capacity(m);
+    let mut var = Vec::with_capacity(m);
+    let mut w = Matrix::zeros(n, m);
+    let mut col = 0usize;
+    for p in parts {
+        let width = p.ucb.len();
+        ucb.extend_from_slice(&p.ucb);
+        mean.extend_from_slice(&p.mean);
+        var.extend_from_slice(&p.var);
+        for i in 0..n {
+            let src = p.w.row(i);
+            w.row_mut(i)[col..col + width].copy_from_slice(src);
+        }
+        col += width;
+    }
+    anyhow::ensure!(col == m, "chunked scoring dropped candidates ({col} of {m})");
+    Ok(AcquireOut { ucb, mean, var, w })
+}
+
 /// Deterministic parallel candidate scoring: split the m-candidate set
 /// into `threads` fixed index-ordered chunks, score each on a scoped
 /// worker through [`acquire_columns`], and fold the outputs back in chunk
@@ -513,15 +549,10 @@ pub fn acquire_parallel(
     if t <= 1 {
         return acquire_columns(x, fit, xc, params);
     }
-    let chunk = m.div_ceil(t);
+    let ranges = chunk_ranges(m, t);
     let parts: Vec<Result<AcquireOut>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(t);
-        for ti in 0..t {
-            let start = ti * chunk;
-            let end = ((ti + 1) * chunk).min(m);
-            if start >= end {
-                break;
-            }
+        let mut handles = Vec::with_capacity(ranges.len());
+        for &(start, end) in &ranges {
             let sub = Matrix::from_fn(end - start, xc.cols(), |i, j| xc[(start + i, j)]);
             handles.push(scope.spawn(move || acquire_columns(x, fit, &sub, params)));
         }
@@ -530,25 +561,170 @@ pub fn acquire_parallel(
             .map(|h| h.join().expect("candidate-scoring worker panicked"))
             .collect()
     });
-    let mut ucb = Vec::with_capacity(m);
-    let mut mean = Vec::with_capacity(m);
-    let mut var = Vec::with_capacity(m);
-    let mut w = Matrix::zeros(n, m);
-    let mut col = 0usize;
-    for part in parts {
-        let p = part?;
-        let width = p.ucb.len();
-        ucb.extend_from_slice(&p.ucb);
-        mean.extend_from_slice(&p.mean);
-        var.extend_from_slice(&p.var);
-        for i in 0..n {
-            let src = p.w.row(i);
-            w.row_mut(i)[col..col + width].copy_from_slice(src);
-        }
-        col += width;
+    fold_parts(n, m, parts.into_iter().collect::<Result<Vec<_>>>()?)
+}
+
+/// How propose-time scoring shards execute — mirrors the run's scheduler
+/// kind, so the same abstraction that distributes objective evaluations
+/// carries acquisition scoring (`TunerConfig::scheduler` maps onto this).
+#[derive(Clone, Debug)]
+pub enum ShardExec {
+    /// In-line sequential shard execution (the serial scheduler): same
+    /// fixed chunks, same fold order, no worker pool.
+    Serial,
+    /// Shards ride the persistent broker/worker/collector pool
+    /// ([`crate::scheduler::pool::JobPool`]) across the scoring threads.
+    Threaded,
+    /// Shards ride the pool under the Celery fault simulator: each
+    /// submission gets a pre-rolled fate (crash / straggler-timeout /
+    /// deliver-after-latency) drawn from `seed`, and lost shards are
+    /// resubmitted until they deliver (a shard lost too many times is
+    /// scored locally as a backstop) — faults cost wall-clock and retries,
+    /// never numerics.
+    CelerySim { config: crate::scheduler::celery::CelerySimConfig, seed: u64 },
+}
+
+/// Total submissions per shard (first try + 7 resubmissions) before the
+/// local-compute backstop kicks in — guards against pathological fault
+/// models like `crash_prob = 1.0`.
+const MAX_SHARD_ATTEMPTS: usize = 8;
+
+/// Candidate scoring sharded through the scheduler's worker-pool
+/// machinery: split the m candidates into `shards` fixed index-ordered
+/// chunks, ship each chunk (a range over the shared posterior +
+/// encoded-candidate view) as one pool job executed under `exec`'s
+/// scheduler model — `threads` workers for the threaded pool, the sim's
+/// own `workers` for the Celery cluster — and fold the outputs back in
+/// shard order. This extends [`acquire_parallel`]'s fixed-chunk,
+/// fold-in-chunk-order contract across the scheduler boundary: every
+/// pipeline stage is per-candidate-column independent and the fold is
+/// ordered by shard index, so the output is **byte-identical** for every
+/// `shards` × `threads` × scheduler-kind setting — and to the local
+/// [`acquire_parallel`]/[`acquire_columns`] paths. Celery-sim fault fates
+/// (worker crash, straggler timeout) surface as explicit losses and
+/// trigger resubmission of the same shard; they can never perturb the
+/// folded numbers.
+///
+/// `fate_salt` varies the Celery-sim fate stream per call (the caller
+/// passes its round counter): without it every propose round would
+/// replay the identical fault sequence, systematically re-losing the
+/// same shards. It only shapes faults/wall-clock — never the output.
+pub fn acquire_sharded(
+    x: &Matrix,
+    fit: &FitOut,
+    xc: &Matrix,
+    params: &GpParams,
+    shards: usize,
+    threads: usize,
+    exec: &ShardExec,
+    fate_salt: u64,
+) -> Result<AcquireOut> {
+    use crate::scheduler::pool::{Fate, Job, JobPool, JobStatus};
+    use std::time::{Duration, Instant};
+
+    let (n, m) = (x.rows(), xc.rows());
+    let ranges = chunk_ranges(m, shards);
+    let sub = |&(start, end): &(usize, usize)| {
+        Matrix::from_fn(end - start, xc.cols(), |i, j| xc[(start + i, j)])
+    };
+    if matches!(exec, ShardExec::Serial) || ranges.len() <= 1 {
+        let parts = ranges
+            .iter()
+            .map(|r| acquire_columns(x, fit, &sub(r), params))
+            .collect::<Result<Vec<_>>>()?;
+        return fold_parts(n, m, parts);
     }
-    anyhow::ensure!(col == m, "parallel scoring dropped candidates ({col} of {m})");
-    Ok(AcquireOut { ucb, mean, var, w })
+
+    // Pool sizing mirrors the evaluation schedulers: the Celery simulator
+    // models its configured cluster (`CelerySimConfig::workers`, as
+    // `scheduler::build_custom` does for evaluations); the threaded pool
+    // uses the local scoring-thread knob. Either way this shapes only
+    // wall-clock — never the folded output.
+    let workers = match exec {
+        ShardExec::CelerySim { config, .. } => config.workers.max(1).min(ranges.len()),
+        _ => threads.clamp(1, ranges.len()),
+    };
+    let mut fate_rng = match exec {
+        ShardExec::CelerySim { seed, .. } => Some(crate::util::rng::Pcg64::new(
+            (seed ^ 0x5C0_7E5).wrapping_add(fate_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        )),
+        _ => None,
+    };
+    let mut next_fate = || -> Fate {
+        match (&mut fate_rng, exec) {
+            (Some(rng), ShardExec::CelerySim { config, .. }) => config.roll_fate(rng).fate,
+            _ => Fate::Deliver { delay: Duration::ZERO },
+        }
+    };
+    // The executor a pool worker runs per shard: score the chunk's columns
+    // against the shared posterior view. Declared before the scope so the
+    // workers can borrow it for the pool's lifetime. Errors ride back as
+    // the job's Done payload (stringified) so the root cause survives the
+    // pool boundary instead of degrading to a bare "shard failed".
+    let score = |r: &(usize, usize)| -> Option<Result<AcquireOut, String>> {
+        Some(acquire_columns(x, fit, &sub(r), params).map_err(|e| format!("{e:#}")))
+    };
+    std::thread::scope(|scope| -> Result<AcquireOut> {
+        let mut pool: JobPool<(usize, usize), Result<AcquireOut, String>> =
+            JobPool::spawn(scope, &score, workers);
+        let mut done: Vec<Option<AcquireOut>> = (0..ranges.len()).map(|_| None).collect();
+        let mut attempts = vec![1usize; ranges.len()];
+        for (i, r) in ranges.iter().enumerate() {
+            let fate = next_fate();
+            pool.submit_job(Job {
+                id: i as crate::scheduler::TaskId,
+                payload: *r,
+                submitted_at: Instant::now(),
+                fate,
+            });
+        }
+        let mut remaining = ranges.len();
+        while remaining > 0 {
+            anyhow::ensure!(
+                pool.in_flight() > 0,
+                "scoring-shard pool lost its in-flight shards (worker panic)"
+            );
+            for d in pool.poll(Duration::from_millis(20)) {
+                let idx = d.id as usize;
+                match d.status {
+                    JobStatus::Done(Ok(part)) => {
+                        done[idx] = Some(part);
+                        remaining -= 1;
+                    }
+                    JobStatus::Done(Err(msg)) => {
+                        anyhow::bail!("scoring shard {idx} failed: {msg}")
+                    }
+                    JobStatus::Failed => {
+                        unreachable!("the shard executor never declines a job")
+                    }
+                    JobStatus::Lost(_) if attempts[idx] >= MAX_SHARD_ATTEMPTS => {
+                        // Fault-storm backstop: identical arithmetic run
+                        // locally, so the byte-identity contract holds
+                        // even under crash_prob = 1.
+                        done[idx] = Some(acquire_columns(x, fit, &sub(&ranges[idx]), params)?);
+                        remaining -= 1;
+                    }
+                    JobStatus::Lost(_) => {
+                        attempts[idx] += 1;
+                        let fate = next_fate();
+                        pool.submit_job(Job {
+                            id: d.id,
+                            payload: d.payload,
+                            submitted_at: Instant::now(),
+                            fate,
+                        });
+                    }
+                }
+            }
+        }
+        fold_parts(
+            n,
+            m,
+            done.into_iter()
+                .map(|p| p.expect("remaining == 0 implies every shard resolved"))
+                .collect(),
+        )
+    })
 }
 
 /// Normalize y to zero mean / unit variance; returns (normalized, mean, std).
@@ -822,6 +998,56 @@ mod tests {
             assert_eq!(par.mean, base.mean, "{threads} threads: mean deviates");
             assert_eq!(par.var, base.var, "{threads} threads: var deviates");
             assert_eq!(par.w, base.w, "{threads} threads: w deviates");
+        }
+    }
+
+    /// The sharded-scoring contract: shipping fixed chunks through the
+    /// scheduler worker-pool machinery — serial in-line, threaded pool, or
+    /// the Celery fault simulator with crash/timeout fates actually firing
+    /// and forcing resubmissions — folds back to the byte-identical result
+    /// of a single local pass, for every shard count × thread count.
+    #[test]
+    fn acquire_sharded_is_byte_identical_across_shards_threads_and_exec() {
+        let (x, y) = toy_problem(18, 3, 33);
+        let (yn, _, _) = normalize_y(&y);
+        let params = GpParams::new(3);
+        let mut gp = NativeGp;
+        let fit = gp.fit(&x, &yn, &params).unwrap();
+        let mut rng = Pcg64::new(9);
+        let xc = Matrix::from_fn(101, 3, |_, _| rng.next_f64()); // odd m: ragged chunks
+        let base = gp.acquire(&x, &fit, &xc, &params).unwrap();
+        // A hostile simulated cluster: fast, but a third of shard
+        // deliveries crash and stragglers overrun the 2 ms collector
+        // timeout — losses and resubmissions fire, numerics must not move.
+        let faulty = crate::scheduler::celery::CelerySimConfig {
+            workers: 3,
+            base_latency_ms: 0.05,
+            straggler_prob: 0.3,
+            straggler_factor: 1000.0,
+            crash_prob: 0.3,
+            result_timeout: std::time::Duration::from_millis(2),
+        };
+        let execs = [
+            ShardExec::Serial,
+            ShardExec::Threaded,
+            ShardExec::CelerySim { config: faulty, seed: 5 },
+        ];
+        for exec in &execs {
+            for shards in [1usize, 2, 3, 7] {
+                for threads in [1usize, 3] {
+                    // The fate salt varies the fault schedule per round;
+                    // the output must be independent of it too.
+                    let salt = (shards + threads) as u64;
+                    let out =
+                        acquire_sharded(&x, &fit, &xc, &params, shards, threads, exec, salt)
+                            .unwrap();
+                    let tag = format!("{exec:?} shards={shards} threads={threads}");
+                    assert_eq!(out.ucb, base.ucb, "{tag}: ucb deviates");
+                    assert_eq!(out.mean, base.mean, "{tag}: mean deviates");
+                    assert_eq!(out.var, base.var, "{tag}: var deviates");
+                    assert_eq!(out.w, base.w, "{tag}: w deviates");
+                }
+            }
         }
     }
 

@@ -63,6 +63,7 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
         async_window: args.get_usize("async-window", 0)?,
         max_retries: args.get_usize("max-retries", 2)?,
         proposal_threads: args.get_usize("proposal-threads", 1)?,
+        proposal_shards: args.get_usize("proposal-shards", 0)?,
         fsync_every_n: args.get_usize("fsync-every", 0)?,
         celery: None,
     })
@@ -73,7 +74,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
         "max-surrogate-obs", "mode", "async-window", "max-retries", "proposal-threads",
-        "fsync-every", "journal",
+        "proposal-shards", "fsync-every", "journal",
     ])?;
     let name = args
         .get("workload")

@@ -19,7 +19,7 @@ use crate::gp::{
 };
 use crate::linalg::Matrix;
 use crate::runtime::PjrtSurrogate;
-use crate::space::{Config, Encoder, SearchSpace};
+use crate::space::{ColumnarSet, Config, Encoder, SearchSpace};
 use crate::util::rng::Pcg64;
 use anyhow::Result;
 
@@ -34,11 +34,17 @@ const CHOL_CACHE_MAX: usize = LML_LENGTHSCALE_GRID.len() + 1;
 
 /// One fit-and-score round over the history: everything a batch-selection
 /// strategy needs.
+///
+/// The MC candidate set is **columnar** ([`ColumnarSet`]): typed SoA
+/// columns instead of `m` materialized `Config`s — a batch-selection
+/// strategy materializes only its ≤ batch-size winners via
+/// [`ColumnarSet::config`].
 pub struct Scored {
     /// Encoded observation matrix (n x d).
     pub x_obs: Matrix,
-    /// Candidate configurations (the MC sample).
-    pub candidates: Vec<Config>,
+    /// The MC candidate set in columnar form (its encoded matrix has been
+    /// moved out into [`Scored::xc`]).
+    pub cands: ColumnarSet,
     /// Encoded candidates (m x d).
     pub xc: Matrix,
     pub acq: AcquireOut,
@@ -288,20 +294,40 @@ impl BayesianCore {
             self.fit_cached(&x_obs, &yn, &params)?
         };
 
-        let candidates = acq::mc_candidates(&self.space, self.opts.mc_samples, rng);
-        let flat = self.encoder.encode_batch(&candidates);
-        let xc = Matrix::from_vec(candidates.len(), d, flat);
-        // Candidate scoring dominates the propose step (m ≫ n): the native
-        // pipeline is chunked across `proposal_threads` scoped workers,
-        // byte-identical to a single pass (gp::acquire_parallel). Artifact
-        // backends keep their own chunked execution model.
+        // Columnar candidate generation: values drawn in the legacy RNG
+        // sequence, written straight into typed columns + the encoded
+        // matrix — no per-candidate Config exists at any point.
+        let mut cands = acq::mc_candidates(&self.space, self.opts.mc_samples, rng);
+        let xc = cands.take_encoded_matrix();
+        debug_assert_eq!(xc.cols(), d);
+        // Candidate scoring dominates the propose step (m ≫ n). Native
+        // backend: local chunked scoring across `proposal_threads` scoped
+        // workers, or — with `proposal_shards` ≥ 1 — fixed chunks shipped
+        // as jobs through the scheduler's worker-pool machinery
+        // (gp::acquire_sharded). Both are byte-identical to a single pass
+        // for every setting. Artifact backends keep their own chunked
+        // execution model.
         let acq_out = match self.opts.backend {
+            SurrogateBackend::Native if self.opts.proposal_shards > 0 => gp::acquire_sharded(
+                &x_obs,
+                &fit,
+                &xc,
+                &params,
+                self.opts.proposal_shards,
+                self.scoring_threads(),
+                &self.opts.shard_exec,
+                // Round counter as the fate salt: the simulated cluster's
+                // fault sequence evolves per propose round instead of
+                // replaying one schedule forever (wall-clock only — the
+                // scored output is salt-independent).
+                self.rounds as u64,
+            )?,
             SurrogateBackend::Native => {
                 gp::acquire_parallel(&x_obs, &fit, &xc, &params, self.scoring_threads())?
             }
             SurrogateBackend::Pjrt => self.surrogate.acquire(&x_obs, &fit, &xc, &params)?,
         };
-        Ok(Scored { x_obs, candidates, xc, acq: acq_out, params })
+        Ok(Scored { x_obs, cands, xc, acq: acq_out, params })
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -408,9 +434,11 @@ mod tests {
         let mut rng = Pcg64::new(4);
         let s = core.fit_and_score(&h, 1, &mut rng).unwrap();
         assert_eq!(s.x_obs.rows(), 12);
-        assert_eq!(s.candidates.len(), s.xc.rows());
-        assert_eq!(s.acq.ucb.len(), s.candidates.len());
+        assert_eq!(s.cands.len(), s.xc.rows());
+        assert_eq!(s.acq.ucb.len(), s.cands.len());
         assert_eq!(s.acq.w.rows(), 12);
+        // Winner materialization works after the encoded matrix moved out.
+        assert_eq!(s.cands.config(0).len(), 2);
     }
 
     #[test]
@@ -626,11 +654,62 @@ mod tests {
         let base = run(1);
         for threads in [2usize, 8, 0] {
             let s = run(threads);
-            assert_eq!(s.candidates, base.candidates, "{threads}: candidate set differs");
+            assert_eq!(s.xc, base.xc, "{threads}: candidate set differs");
+            assert_eq!(s.cands.column(0), base.cands.column(0), "{threads}: columns differ");
             assert_eq!(s.acq.ucb, base.acq.ucb, "{threads} threads: ucb deviates");
             assert_eq!(s.acq.mean, base.acq.mean, "{threads} threads: mean deviates");
             assert_eq!(s.acq.var, base.acq.var, "{threads} threads: var deviates");
             assert_eq!(s.acq.w, base.acq.w, "{threads} threads: w deviates");
+        }
+    }
+
+    /// The sharded-scoring contract at the optimizer level: `fit_and_score`
+    /// output is byte-identical across every `proposal_shards` ∈ {0, 1, 3}
+    /// × scheduler-kind (serial / threaded / celery-sim with its fault
+    /// fates firing) × `proposal_threads` setting. `proposal_shards = 0`
+    /// is the local-only path — today's behavior byte-for-byte.
+    #[test]
+    fn fit_and_score_is_byte_identical_across_proposal_shards_and_schedulers() {
+        use crate::gp::ShardExec;
+        let space = svm_space();
+        let h = history_from(&space, 11, 52);
+        let faulty = crate::scheduler::celery::CelerySimConfig {
+            workers: 2,
+            base_latency_ms: 0.05,
+            straggler_prob: 0.3,
+            straggler_factor: 1000.0,
+            crash_prob: 0.3,
+            result_timeout: std::time::Duration::from_millis(2),
+        };
+        let run = |shards: usize, threads: usize, exec: ShardExec| {
+            let opts = GpOptions {
+                proposal_shards: shards,
+                proposal_threads: threads,
+                shard_exec: exec,
+                fixed_beta: Some(2.0),
+                mc_samples: 193, // odd: ragged shard boundaries
+                ..Default::default()
+            };
+            let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+            core.fit_and_score(&h, 1, &mut Pcg64::new(81)).unwrap()
+        };
+        let base = run(0, 1, ShardExec::Serial);
+        for shards in [0usize, 1, 3] {
+            for threads in [1usize, 2] {
+                for exec in [
+                    ShardExec::Serial,
+                    ShardExec::Threaded,
+                    ShardExec::CelerySim { config: faulty.clone(), seed: 7 },
+                ] {
+                    let tag = format!("shards={shards} threads={threads} {exec:?}");
+                    let s = run(shards, threads, exec);
+                    assert_eq!(s.xc, base.xc, "{tag}: candidate set differs");
+                    assert_eq!(s.acq.ucb, base.acq.ucb, "{tag}: ucb deviates");
+                    assert_eq!(s.acq.mean, base.acq.mean, "{tag}: mean deviates");
+                    assert_eq!(s.acq.var, base.acq.var, "{tag}: var deviates");
+                    assert_eq!(s.acq.w, base.acq.w, "{tag}: w deviates");
+                }
+            }
         }
     }
 

@@ -33,10 +33,10 @@ impl BatchOptimizer for ClusteringOptimizer {
         rng: &mut Pcg64,
     ) -> Result<Vec<Config>> {
         if history.len() < self.core.opts.initial_random.max(2) {
-            return Ok(self.core.space.sample_n(rng, batch_size));
+            return Ok(self.core.space.sample_columnar(rng, batch_size).into_configs());
         }
         let scored = self.core.fit_and_score(history, batch_size, rng)?;
-        let m = scored.candidates.len();
+        let m = scored.cands.len();
 
         // Rank candidates by UCB, keep the top slice (>= 4 per cluster).
         let mut order: Vec<usize> = (0..m).collect();
@@ -56,14 +56,15 @@ impl BatchOptimizer for ClusteringOptimizer {
         let km = kmeans(&rows, batch_size, rng, 25);
 
         // Max-UCB member per cluster (order[] is UCB-descending, so the
-        // first member seen per cluster is its maximum).
+        // first member seen per cluster is its maximum). Only the winners
+        // are materialized into Configs.
         let mut batch: Vec<Config> = Vec::with_capacity(batch_size);
         let mut cluster_done = vec![false; km.k];
         for (pos, &cand) in top.iter().enumerate() {
             let c = km.assignment[pos];
             if !cluster_done[c] {
                 cluster_done[c] = true;
-                batch.push(scored.candidates[cand].clone());
+                batch.push(scored.cands.config(cand));
                 if batch.len() == batch_size {
                     break;
                 }
@@ -74,9 +75,9 @@ impl BatchOptimizer for ClusteringOptimizer {
             if batch.len() >= batch_size {
                 break;
             }
-            let cfg = &scored.candidates[cand];
-            if !batch.contains(cfg) {
-                batch.push(cfg.clone());
+            let cfg = scored.cands.config(cand);
+            if !batch.contains(&cfg) {
+                batch.push(cfg);
             }
         }
         while batch.len() < batch_size {

@@ -26,7 +26,10 @@ impl BatchOptimizer for HallucinationOptimizer {
         rng: &mut Pcg64,
     ) -> Result<Vec<Config>> {
         if history.len() < self.core.opts.initial_random.max(2) {
-            return Ok(self.core.space.sample_n(rng, batch_size));
+            // Cold start goes through the one shared sampling path (the
+            // columnar sampler; bit-identical to the legacy sample_n
+            // stream) — every batch here materializes anyway.
+            return Ok(self.core.space.sample_columnar(rng, batch_size).into_configs());
         }
         let scored = self.core.fit_and_score(history, batch_size, rng)?;
         let mut hallucinator = BatchHallucinator::new(
@@ -38,7 +41,8 @@ impl BatchOptimizer for HallucinationOptimizer {
         let mut batch = Vec::with_capacity(batch_size);
         for _ in 0..batch_size {
             match hallucinator.select_next() {
-                Some(idx) => batch.push(scored.candidates[idx].clone()),
+                // Only the winners are ever materialized into Configs.
+                Some(idx) => batch.push(scored.cands.config(idx)),
                 None => break, // candidate set exhausted (tiny spaces)
             }
         }
@@ -137,6 +141,58 @@ mod tests {
         let mut rng = Pcg64::new(8);
         let batch = opt.propose(&History::new(), 3, &mut rng).unwrap();
         assert_eq!(batch.len(), 3);
+    }
+
+    /// The acceptance contract at the proposal level: the configs an
+    /// optimizer proposes are byte-identical across every
+    /// `proposal_shards` ∈ {0, 1, 3} × scheduler-kind (serial / threaded /
+    /// celery-sim with fault fates firing) × `proposal_threads` setting —
+    /// scoring distribution is a wall-clock knob, never a proposals knob.
+    #[test]
+    fn proposals_are_byte_identical_across_proposal_shards_and_schedulers() {
+        use crate::gp::ShardExec;
+        let space = svm_space();
+        let mut h = History::new();
+        let mut seed_rng = Pcg64::new(61);
+        for cfg in space.sample_n(&mut seed_rng, 11) {
+            let c = cfg.get_f64("c").unwrap();
+            h.push(cfg, -(c - 42.0).abs());
+        }
+        let faulty = crate::scheduler::celery::CelerySimConfig {
+            workers: 2,
+            base_latency_ms: 0.05,
+            straggler_prob: 0.3,
+            straggler_factor: 1000.0,
+            crash_prob: 0.3,
+            result_timeout: std::time::Duration::from_millis(2),
+        };
+        let run = |shards: usize, threads: usize, exec: ShardExec| {
+            let opts = crate::optimizer::GpOptions {
+                proposal_shards: shards,
+                proposal_threads: threads,
+                shard_exec: exec,
+                mc_samples: 193,
+                ..Default::default()
+            };
+            let mut opt =
+                HallucinationOptimizer::new(BayesianCore::new(space.clone(), opts).unwrap());
+            opt.propose(&h, 3, &mut Pcg64::new(90)).unwrap()
+        };
+        let base = run(0, 1, ShardExec::Serial);
+        assert_eq!(base.len(), 3);
+        for shards in [0usize, 1, 3] {
+            for exec in [
+                ShardExec::Serial,
+                ShardExec::Threaded,
+                ShardExec::CelerySim { config: faulty.clone(), seed: 4 },
+            ] {
+                let batch = run(shards, 2, exec.clone());
+                assert_eq!(
+                    batch, base,
+                    "shards={shards} {exec:?}: proposals must be byte-identical"
+                );
+            }
+        }
     }
 
     #[test]

@@ -288,6 +288,18 @@ pub struct GpOptions {
     /// acquisition output is byte-identical for every setting — this is a
     /// wall-clock knob, never a numerics knob.
     pub proposal_threads: usize,
+    /// Scoring shards shipped through the scheduler's worker-pool
+    /// machinery per propose round (native backend only). 0 = local-only
+    /// chunked scoring (`proposal_threads` over `std::thread::scope`),
+    /// byte-for-byte today's behavior; n ≥ 1 splits the candidate set into
+    /// n fixed chunks executed as pool jobs under [`GpOptions::shard_exec`].
+    /// Output is byte-identical for every setting — like
+    /// `proposal_threads`, a wall-clock/scale knob, never a numerics knob.
+    pub proposal_shards: usize,
+    /// How scoring shards execute when `proposal_shards > 0` — the tuner
+    /// mirrors its scheduler kind here (serial / threaded pool /
+    /// celery-sim with fault fates).
+    pub shard_exec: crate::gp::ShardExec,
 }
 
 impl Default for GpOptions {
@@ -301,6 +313,8 @@ impl Default for GpOptions {
             fixed_beta: None,
             y_transform: YTransform::RankGauss,
             proposal_threads: 1,
+            proposal_shards: 0,
+            shard_exec: crate::gp::ShardExec::Serial,
         }
     }
 }

@@ -32,10 +32,13 @@ impl BatchOptimizer for ThompsonOptimizer {
         rng: &mut Pcg64,
     ) -> Result<Vec<Config>> {
         if history.len() < self.core.opts.initial_random.max(2) {
-            return Ok(self.core.space.sample_n(rng, batch_size));
+            // Cold start goes through the one shared sampling path (the
+            // columnar sampler; bit-identical to the legacy sample_n
+            // stream) — every batch here materializes anyway.
+            return Ok(self.core.space.sample_columnar(rng, batch_size).into_configs());
         }
         let scored = self.core.fit_and_score(history, batch_size, rng)?;
-        let m = scored.candidates.len();
+        let m = scored.cands.len();
         let sigmas: Vec<f64> = scored.acq.var.iter().map(|v| v.sqrt()).collect();
 
         let mut batch: Vec<Config> = Vec::with_capacity(batch_size);
@@ -55,7 +58,8 @@ impl BatchOptimizer for ThompsonOptimizer {
             match best {
                 Some((_, c)) => {
                     taken[c] = true;
-                    batch.push(scored.candidates[c].clone());
+                    // Only the per-slot winners materialize into Configs.
+                    batch.push(scored.cands.config(c));
                 }
                 None => break,
             }

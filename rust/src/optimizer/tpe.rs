@@ -180,7 +180,10 @@ impl BatchOptimizer for TpeOptimizer {
     ) -> Result<Vec<Config>> {
         let n = history.len();
         if n < N_STARTUP {
-            return Ok(self.space.sample_n(rng, batch_size));
+            // Cold start goes through the one shared sampling path (the
+            // columnar sampler; bit-identical to the legacy sample_n
+            // stream) — the batch materializes anyway.
+            return Ok(self.space.sample_columnar(rng, batch_size).into_configs());
         }
         // Split at the gamma quantile (maximization: good = highest values).
         let n_good = ((GAMMA * n as f64).ceil() as usize).clamp(2, 25);
@@ -229,8 +232,12 @@ impl BatchOptimizer for TpeOptimizer {
                 .collect();
             push_scored(Config::new(entries), &dims);
         }
-        for _ in 0..n_prior {
-            push_scored(self.space.sample(rng), &dims);
+        // The prior slice is a straight space sample: drawn as one batch
+        // through the shared columnar sampling path (same RNG stream as
+        // the per-config sample loop it replaces; these configs all
+        // materialize anyway for Parzen scoring).
+        for cfg in self.space.sample_columnar(rng, n_prior).into_configs() {
+            push_scored(cfg, &dims);
         }
         scored.sort_by(|a, b| nan_as_worst(b.0).total_cmp(&nan_as_worst(a.0)));
 

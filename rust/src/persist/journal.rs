@@ -43,7 +43,12 @@ use std::path::{Path, PathBuf};
 pub const JOURNAL_MAGIC: &str = "mango-run-journal";
 /// Bump on any incompatible event-schema change; the reader fails loudly
 /// on mismatch instead of mis-replaying a stale journal.
-pub const JOURNAL_VERSION: u64 = 1;
+///
+/// v2: the header carries the Celery fault-simulator override
+/// ([`RunHeader::celery`]), so a resumed run re-applies the exact fault
+/// model instead of silently reverting to defaults. v1 journals fail
+/// loudly, as every version mismatch does.
+pub const JOURNAL_VERSION: u64 = 2;
 
 /// Objective sense recorded in the header; `Tuner::maximize`/`minimize`
 /// on a resumed run must match it.
@@ -79,6 +84,11 @@ pub struct RunHeader {
     /// The full run configuration (seed included), so `Tuner::resume_from`
     /// can rebuild the tuner without the caller re-specifying it.
     pub run: RunConfig,
+    /// The Celery fault-simulator override the run was started with
+    /// (`TunerConfig::celery`), if any — serialized so `Tuner::resume_from`
+    /// re-applies the exact fault model without the caller re-supplying it
+    /// via `with_celery`.
+    pub celery: Option<crate::scheduler::celery::CelerySimConfig>,
 }
 
 impl RunHeader {
@@ -90,6 +100,13 @@ impl RunHeader {
             ("space_fp", Json::Str(format!("{:016x}", self.space_fp))),
             ("sense", Json::Str(self.sense.as_str().into())),
             ("config", self.run.to_json()),
+            (
+                "celery",
+                match &self.celery {
+                    Some(c) => c.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -120,7 +137,14 @@ impl RunHeader {
             j.get("config").ok_or_else(|| anyhow!("journal header missing config"))?,
         )
         .context("journal header config")?;
-        Ok(Self { space_fp, sense, run })
+        let celery = match j.get("celery") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(
+                crate::scheduler::celery::CelerySimConfig::from_json(c)
+                    .context("journal header celery config")?,
+            ),
+        };
+        Ok(Self { space_fp, sense, run, celery })
     }
 }
 
@@ -572,6 +596,7 @@ mod tests {
             space_fp: 0xDEAD_BEEF_0123_4567,
             sense: SenseTag::Maximize,
             run: RunConfig { seed: 9, batch_size: 2, ..Default::default() },
+            celery: None,
         }
     }
 
@@ -857,11 +882,50 @@ mod tests {
         let err = read_journal(&path).unwrap_err();
         assert!(err.to_string().contains("magic"), "got: {err:#}");
         let mut h = header().to_json().to_string();
-        h = h.replace("\"version\":1", "\"version\":999");
+        h = h.replace(
+            &format!("\"version\":{JOURNAL_VERSION}"),
+            "\"version\":999",
+        );
+        std::fs::write(&path, format!("{h}\n")).unwrap();
+        let err = read_journal(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "got: {err:#}");
+        // Pre-celery (v1) journals fail loudly too — the schema bump is
+        // what keeps an old header from silently resuming without its
+        // fault model.
+        let mut h = header().to_json().to_string();
+        h = h.replace(&format!("\"version\":{JOURNAL_VERSION}"), "\"version\":1");
         std::fs::write(&path, format!("{h}\n")).unwrap();
         let err = read_journal(&path).unwrap_err();
         assert!(err.to_string().contains("version"), "got: {err:#}");
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The v2 header round-trips the Celery fault-model override exactly
+    /// (None stays None; a custom model survives bit-for-bit).
+    #[test]
+    fn header_roundtrips_celery_override() {
+        use crate::scheduler::celery::CelerySimConfig;
+        let none = header();
+        let back = RunHeader::from_json(
+            &parse(&none.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.celery, None);
+        let mut with = header();
+        with.celery = Some(CelerySimConfig {
+            workers: 5,
+            base_latency_ms: 0.75,
+            straggler_prob: 0.125,
+            straggler_factor: 16.0,
+            crash_prob: 0.25,
+            result_timeout: std::time::Duration::from_millis(750),
+        });
+        let back = RunHeader::from_json(
+            &parse(&with.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.celery, with.celery);
+        assert_eq!(back.space_fp, with.space_fp);
     }
 
     #[test]

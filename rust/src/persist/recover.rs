@@ -365,6 +365,7 @@ mod tests {
             space_fp: 42,
             sense: SenseTag::Maximize,
             run: RunConfig { mode: mode.into(), ..Default::default() },
+            celery: None,
         };
         let mut w = JournalWriter::create(path, &header).unwrap();
         for ev in events {

@@ -21,14 +21,16 @@ use super::pool::{Fate, Task as PoolTask, WorkerPool};
 use super::{
     AsyncScheduler, AsyncStats, BatchResult, Completion, Objective, Scheduler, TaskId,
 };
-use crate::space::Config;
+use crate::config::json::Json;
+use crate::space::{f64_from_json, f64_to_json, Config};
 use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Fault/latency model for the simulated cluster.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CelerySimConfig {
     pub workers: usize,
     /// Mean queue+network latency added to each task (ms).
@@ -53,6 +55,108 @@ impl Default for CelerySimConfig {
             crash_prob: 0.02,
             result_timeout: Duration::from_secs(5),
         }
+    }
+}
+
+/// One pre-rolled fate plus the straggle flag (the flag is a stats-only
+/// detail [`Fate`] cannot carry: a straggler that also crashes still
+/// counts as straggled).
+pub(crate) struct RolledFate {
+    pub fate: Fate,
+    pub straggled: bool,
+}
+
+/// One raw fault-model draw: the crash/straggle outcomes and the task's
+/// full simulated latency, before any mapping onto pool [`Fate`]s. The
+/// sync collector consumes the raw form — its workers sleep the full
+/// straggler latency and the *collector* enforces the timeout.
+pub(crate) struct RawDraw {
+    pub crash: bool,
+    pub straggled: bool,
+    pub latency: Duration,
+}
+
+impl CelerySimConfig {
+    /// Journal-header encoding of the fault model, so a resumed run
+    /// re-applies the exact simulator the crashed run used instead of
+    /// silently reverting to defaults. Float fields ride the canonical
+    /// bit-exact codec ([`f64_to_json`]); the timeout splits into exact
+    /// integer seconds + subsecond nanos (both exactly representable).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("base_latency_ms", f64_to_json(self.base_latency_ms)),
+            ("straggler_prob", f64_to_json(self.straggler_prob)),
+            ("straggler_factor", f64_to_json(self.straggler_factor)),
+            ("crash_prob", f64_to_json(self.crash_prob)),
+            ("result_timeout_s", Json::Num(self.result_timeout.as_secs() as f64)),
+            (
+                "result_timeout_subsec_ns",
+                Json::Num(self.result_timeout.subsec_nanos() as f64),
+            ),
+        ])
+    }
+
+    /// Decode [`to_json`](Self::to_json)'s encoding. Corrupted counter
+    /// fields fail loudly (the journal reader's posture) instead of
+    /// truncating into a silently different fault model.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let f = |k: &str| -> Result<f64> {
+            f64_from_json(j.get(k).ok_or_else(|| anyhow!("celery config missing '{k}'"))?)
+        };
+        let int = |k: &str| -> Result<u64> {
+            let n = j
+                .get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("celery config missing number '{k}'"))?;
+            anyhow::ensure!(
+                n.fract() == 0.0 && (0.0..=9_007_199_254_740_992.0).contains(&n),
+                "celery config field '{k}' is not a valid non-negative integer: {n}"
+            );
+            Ok(n as u64)
+        };
+        let subsec = int("result_timeout_subsec_ns")?;
+        anyhow::ensure!(subsec < 1_000_000_000, "subsecond nanos out of range: {subsec}");
+        Ok(Self {
+            workers: int("workers")? as usize,
+            base_latency_ms: f("base_latency_ms")?,
+            straggler_prob: f("straggler_prob")?,
+            straggler_factor: f("straggler_factor")?,
+            crash_prob: f("crash_prob")?,
+            result_timeout: Duration::new(int("result_timeout_s")?, subsec as u32),
+        })
+    }
+
+    /// The **single copy** of the fault-model draw (crash, straggle,
+    /// latency, in that order) — shared by the sync collector, the async
+    /// evaluation scheduler, and the propose-time scoring shards
+    /// ([`crate::gp::acquire_sharded`]), so one seed yields one fault
+    /// sequence per consumer stream and the model can never drift apart
+    /// between the paths.
+    pub(crate) fn roll_raw(&self, rng: &mut Pcg64) -> RawDraw {
+        let crash = rng.next_f64() < self.crash_prob;
+        let straggled = rng.next_f64() < self.straggler_prob;
+        let mult = if straggled { self.straggler_factor } else { 1.0 };
+        // exponential-ish latency: -ln(u) * mean
+        let lat_ms = -rng.next_f64().max(1e-12).ln() * self.base_latency_ms * mult;
+        RawDraw { crash, straggled, latency: Duration::from_secs_f64(lat_ms / 1e3) }
+    }
+
+    /// [`roll_raw`](Self::roll_raw) mapped onto a pool [`Fate`] — the
+    /// async and scoring-shard form: delays are clamped to the result
+    /// timeout because the pool worker itself plays the collector's
+    /// patience.
+    pub(crate) fn roll_fate(&self, rng: &mut Pcg64) -> RolledFate {
+        let raw = self.roll_raw(rng);
+        let fate = if raw.crash {
+            // A crash is noticed at the collector's timeout at the latest.
+            Fate::Crash { delay: raw.latency.min(self.result_timeout) }
+        } else if raw.latency > self.result_timeout {
+            Fate::TimeOut { delay: self.result_timeout }
+        } else {
+            Fate::Deliver { delay: raw.latency }
+        };
+        RolledFate { fate, straggled: raw.straggled }
     }
 }
 
@@ -91,22 +195,19 @@ impl Scheduler for CelerySimScheduler {
         let cfg = self.config.clone();
         let workers = cfg.workers.min(batch.len()).max(1);
 
-        // Submit: roll each task's fate, enqueue on the broker.
+        // Submit: roll each task's fate (the shared fault-model draw),
+        // enqueue on the broker.
         let mut queue = VecDeque::with_capacity(batch.len());
         for (index, _) in batch.iter().enumerate() {
-            let crash = self.rng.next_f64() < cfg.crash_prob;
-            let straggle = self.rng.next_f64() < cfg.straggler_prob;
-            let mult = if straggle { cfg.straggler_factor } else { 1.0 };
-            // exponential-ish latency: -ln(u) * mean
-            let lat_ms = -self.rng.next_f64().max(1e-12).ln() * cfg.base_latency_ms * mult;
+            let raw = cfg.roll_raw(&mut self.rng);
             self.stats.submitted += 1;
-            if crash {
+            if raw.crash {
                 self.stats.crashed += 1;
             }
-            if straggle {
+            if raw.straggled {
                 self.stats.straggled += 1;
             }
-            queue.push_back(Task { index, crash, latency: Duration::from_secs_f64(lat_ms / 1e3) });
+            queue.push_back(Task { index, crash: raw.crash, latency: raw.latency });
         }
         let expected = batch.len() - queue.iter().filter(|t| t.crash).count();
         let broker = Mutex::new(queue);
@@ -211,29 +312,21 @@ impl CeleryAsyncScheduler {
     }
 
     /// Roll one task's fate — same draw order as the sync collector
-    /// (crash, straggle, latency) so a given seed yields the same fault
-    /// sequence in both modes.
+    /// (crash, straggle, latency; the shared
+    /// [`CelerySimConfig::roll_fate`]) so a given seed yields the same
+    /// fault sequence in both modes.
     fn roll_fate(&mut self) -> Fate {
-        let cfg = &self.config;
-        let crash = self.rng.next_f64() < cfg.crash_prob;
-        let straggle = self.rng.next_f64() < cfg.straggler_prob;
-        let mult = if straggle { cfg.straggler_factor } else { 1.0 };
-        let lat_ms = -self.rng.next_f64().max(1e-12).ln() * cfg.base_latency_ms * mult;
-        let latency = Duration::from_secs_f64(lat_ms / 1e3);
+        let rolled = self.config.roll_fate(&mut self.rng);
         self.sim_stats.submitted += 1;
-        if straggle {
+        if rolled.straggled {
             self.sim_stats.straggled += 1;
         }
-        if crash {
-            self.sim_stats.crashed += 1;
-            // A crash is noticed at the collector's timeout at the latest.
-            return Fate::Crash { delay: latency.min(cfg.result_timeout) };
+        match rolled.fate {
+            Fate::Crash { .. } => self.sim_stats.crashed += 1,
+            Fate::TimeOut { .. } => self.sim_stats.timed_out += 1,
+            Fate::Deliver { .. } => {}
         }
-        if latency > cfg.result_timeout {
-            self.sim_stats.timed_out += 1;
-            return Fate::TimeOut { delay: cfg.result_timeout };
-        }
-        Fate::Deliver { delay: latency }
+        rolled.fate
     }
 }
 
@@ -298,6 +391,40 @@ mod tests {
             straggler_factor: 1.0,
             crash_prob: 0.0,
             result_timeout: Duration::from_secs(10),
+        }
+    }
+
+    #[test]
+    fn sim_config_json_roundtrip_is_exact() {
+        let cfg = CelerySimConfig {
+            workers: 7,
+            base_latency_ms: 0.125,
+            straggler_prob: 0.05,
+            straggler_factor: 8.5,
+            crash_prob: 0.02,
+            result_timeout: Duration::new(3, 250_000_001),
+        };
+        let text = cfg.to_json().to_string();
+        let back =
+            CelerySimConfig::from_json(&crate::config::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg, "via {text}");
+        assert_eq!(back.to_json().to_string(), text, "re-serialization differs");
+        // Defaults round-trip too (the header records them verbatim).
+        let d = CelerySimConfig::default();
+        let back = CelerySimConfig::from_json(
+            &crate::config::json::parse(&d.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, d);
+        // Corrupted counters fail loudly.
+        for bad in [
+            r#"{"workers":-1,"base_latency_ms":1,"straggler_prob":0,"straggler_factor":1,"crash_prob":0,"result_timeout_s":1,"result_timeout_subsec_ns":0}"#,
+            r#"{"workers":2,"base_latency_ms":1,"straggler_prob":0,"straggler_factor":1,"crash_prob":0,"result_timeout_s":1.5,"result_timeout_subsec_ns":0}"#,
+            r#"{"workers":2,"base_latency_ms":1,"straggler_prob":0,"straggler_factor":1,"crash_prob":0,"result_timeout_s":1,"result_timeout_subsec_ns":2000000000}"#,
+            r#"{"workers":2}"#,
+        ] {
+            let j = crate::config::json::parse(bad).unwrap();
+            assert!(CelerySimConfig::from_json(&j).is_err(), "accepted {bad}");
         }
     }
 

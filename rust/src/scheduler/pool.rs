@@ -1,19 +1,28 @@
 //! Persistent worker pool: the shared broker/worker/collector machinery
-//! behind [`super::threaded::ThreadedAsyncScheduler`] and
-//! [`super::celery::CeleryAsyncScheduler`].
+//! behind [`super::threaded::ThreadedAsyncScheduler`],
+//! [`super::celery::CeleryAsyncScheduler`], and the propose-time scoring
+//! shards ([`crate::gp::acquire_sharded`]).
 //!
 //! Architecture (mirrors a Celery deployment, DESIGN.md §2):
 //! * a **broker** — a mutex-guarded task queue workers block on via a
 //!   condvar (supports mid-run cancellation, which an mpsc queue can't),
-//! * N **worker** threads pulling tasks for the lifetime of the pool
+//! * N **worker** threads pulling jobs for the lifetime of the pool
 //!   (spawned once on a [`std::thread::Scope`], *not* per batch),
 //! * a **collector** — an mpsc channel the pool drains in
-//!   [`WorkerPool::poll`].
+//!   [`JobPool::poll`].
 //!
-//! Each task carries a pre-rolled [`Fate`]: real evaluation (optionally
-//! after a simulated latency) or an explicit loss. Lost tasks still report
-//! — as [`CompletionStatus::Lost`] — so the coordinator can retry them
-//! instead of inferring losses from silence.
+//! The core is **generic over the work item**: [`JobPool<P, R>`] carries
+//! any `Send` payload `P` to an executor `Fn(&P) -> Option<R>` and drains
+//! typed [`JobDone<P, R>`] results — objective evaluations
+//! (`P = Config, R = f64`, via the [`WorkerPool`] adapter the schedulers
+//! use) and candidate-scoring shards (`P = range, R = AcquireOut`) ride
+//! the identical machinery, so propose-time work scales through the same
+//! scheduler abstraction as trial evaluations.
+//!
+//! Each job carries a pre-rolled [`Fate`]: real execution (optionally
+//! after a simulated latency) or an explicit loss. Lost jobs still report
+//! — as [`JobStatus::Lost`] — so the caller can retry them instead of
+//! inferring losses from silence.
 
 use super::{AsyncStats, Completion, CompletionStatus, LossReason, Objective, TaskId};
 use crate::space::Config;
@@ -21,12 +30,12 @@ use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// What will happen to a task once a worker picks it up.
+/// What will happen to a job once a worker picks it up.
 #[derive(Clone, Copy, Debug)]
 pub(crate) enum Fate {
-    /// Wait out `delay` (simulated queue/network latency), then evaluate.
+    /// Wait out `delay` (simulated queue/network latency), then execute.
     Deliver { delay: Duration },
-    /// The worker dies with the task after `delay`: reports `Lost(Crashed)`.
+    /// The worker dies with the job after `delay`: reports `Lost(Crashed)`.
     Crash { delay: Duration },
     /// Straggles past the collector's patience: `Lost(TimedOut)` after
     /// `delay` (the result-timeout, not the full straggler latency).
@@ -34,59 +43,85 @@ pub(crate) enum Fate {
 }
 
 /// A unit of work on the broker queue.
-pub(crate) struct Task {
+pub(crate) struct Job<P> {
     pub id: TaskId,
-    pub config: Config,
+    pub payload: P,
     pub submitted_at: Instant,
     pub fate: Fate,
 }
 
-struct BrokerState {
-    queue: VecDeque<Task>,
+/// Terminal state of one executed job.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum JobStatus<R> {
+    /// The executor returned a value.
+    Done(R),
+    /// The executor ran and declined (`None`) — deterministic, not retried.
+    Failed,
+    /// The job was lost in flight — the retriable fault class.
+    Lost(LossReason),
+}
+
+/// One completed (or lost) job, as drained by [`JobPool::poll`].
+pub(crate) struct JobDone<P, R> {
+    pub id: TaskId,
+    pub payload: P,
+    pub status: JobStatus<R>,
+    /// Submit → execution start (broker queue + simulated network latency).
+    pub queue_wait_ms: f64,
+    /// Time spent inside the executor itself.
+    pub eval_ms: f64,
+}
+
+struct BrokerState<P> {
+    queue: VecDeque<Job<P>>,
     shutdown: bool,
 }
 
-type Broker = Arc<(Mutex<BrokerState>, Condvar)>;
+type Broker<P> = Arc<(Mutex<BrokerState<P>>, Condvar)>;
 
-/// The pool: broker + workers + collector. Workers are spawned on a
-/// caller-provided scope and exit when the pool drops (shutdown flag) or
+/// The generic pool: broker + workers + collector. Workers are spawned on
+/// a caller-provided scope and exit when the pool drops (shutdown flag) or
 /// the collector disappears.
-pub(crate) struct WorkerPool {
-    broker: Broker,
-    results: mpsc::Receiver<Completion>,
+pub(crate) struct JobPool<P, R> {
+    broker: Broker<P>,
+    results: mpsc::Receiver<JobDone<P, R>>,
     in_flight: usize,
     stats: AsyncStats,
 }
 
-impl WorkerPool {
+impl<P: Send, R: Send> JobPool<P, R> {
     pub(crate) fn spawn<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
-        objective: Objective<'env>,
+        exec: &'env (dyn Fn(&P) -> Option<R> + Sync),
         workers: usize,
-    ) -> Self {
-        let broker: Broker = Arc::new((
+    ) -> Self
+    where
+        P: 'env,
+        R: 'env,
+    {
+        let broker: Broker<P> = Arc::new((
             Mutex::new(BrokerState { queue: VecDeque::new(), shutdown: false }),
             Condvar::new(),
         ));
-        let (tx, rx) = mpsc::channel::<Completion>();
+        let (tx, rx) = mpsc::channel::<JobDone<P, R>>();
         for _ in 0..workers.max(1) {
             let broker = broker.clone();
             let tx = tx.clone();
-            scope.spawn(move || worker_loop(&broker, objective, &tx));
+            scope.spawn(move || worker_loop(&broker, exec, &tx));
         }
         Self { broker, results: rx, in_flight: 0, stats: AsyncStats::default() }
     }
 
-    pub(crate) fn submit_task(&mut self, task: Task) {
+    pub(crate) fn submit_job(&mut self, job: Job<P>) {
         let (lock, cv) = &*self.broker;
-        lock.lock().unwrap().queue.push_back(task);
+        lock.lock().unwrap().queue.push_back(job);
         cv.notify_one();
         self.in_flight += 1;
         self.stats.submitted += 1;
         self.stats.max_in_flight = self.stats.max_in_flight.max(self.in_flight);
     }
 
-    pub(crate) fn poll(&mut self, timeout: Duration) -> Vec<Completion> {
+    pub(crate) fn poll(&mut self, timeout: Duration) -> Vec<JobDone<P, R>> {
         let mut out = Vec::new();
         if self.in_flight == 0 {
             return out;
@@ -95,7 +130,7 @@ impl WorkerPool {
             Ok(c) => out.push(c),
             Err(mpsc::RecvTimeoutError::Timeout) => return out,
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Every worker is gone (the objective panicked): nothing
+                // Every worker is gone (the executor panicked): nothing
                 // will ever arrive. Zero the in-flight count so callers
                 // stop waiting — the scope join propagates the panic.
                 self.in_flight = 0;
@@ -109,9 +144,9 @@ impl WorkerPool {
         self.in_flight -= out.len();
         for c in &out {
             match c.status {
-                CompletionStatus::Done(_) => self.stats.completed += 1,
-                CompletionStatus::Failed => self.stats.failed += 1,
-                CompletionStatus::Lost(_) => self.stats.lost += 1,
+                JobStatus::Done(_) => self.stats.completed += 1,
+                JobStatus::Failed => self.stats.failed += 1,
+                JobStatus::Lost(_) => self.stats.lost += 1,
             }
         }
         out.sort_by_key(|c| c.id);
@@ -136,21 +171,25 @@ impl WorkerPool {
     }
 }
 
-impl Drop for WorkerPool {
+impl<P, R> Drop for JobPool<P, R> {
     fn drop(&mut self) {
         let (lock, cv) = &*self.broker;
         let mut st = lock.lock().unwrap();
         st.shutdown = true;
         // Nobody will collect queued work now — don't make the scope join
-        // wait for evaluations whose results would be thrown away.
+        // wait for executions whose results would be thrown away.
         st.queue.clear();
         cv.notify_all();
     }
 }
 
-fn worker_loop(broker: &Broker, objective: Objective<'_>, tx: &mpsc::Sender<Completion>) {
+fn worker_loop<P: Send, R: Send>(
+    broker: &Broker<P>,
+    exec: &(dyn Fn(&P) -> Option<R> + Sync),
+    tx: &mpsc::Sender<JobDone<P, R>>,
+) {
     loop {
-        let task = {
+        let job = {
             let (lock, cv) = &**broker;
             let mut st = lock.lock().unwrap();
             loop {
@@ -163,22 +202,22 @@ fn worker_loop(broker: &Broker, objective: Objective<'_>, tx: &mpsc::Sender<Comp
                 st = cv.wait(st).unwrap();
             }
         };
-        let Some(task) = task else { return };
-        let completion = match task.fate {
+        let Some(job) = job else { return };
+        let done = match job.fate {
             Fate::Deliver { delay } => {
                 if !delay.is_zero() {
                     std::thread::sleep(delay);
                 }
-                let queue_wait_ms = task.submitted_at.elapsed().as_secs_f64() * 1e3;
+                let queue_wait_ms = job.submitted_at.elapsed().as_secs_f64() * 1e3;
                 let t0 = Instant::now();
-                let value = objective(&task.config);
+                let value = exec(&job.payload);
                 let eval_ms = t0.elapsed().as_secs_f64() * 1e3;
-                Completion {
-                    id: task.id,
-                    config: task.config,
+                JobDone {
+                    id: job.id,
+                    payload: job.payload,
                     status: match value {
-                        Some(v) => CompletionStatus::Done(v),
-                        None => CompletionStatus::Failed,
+                        Some(v) => JobStatus::Done(v),
+                        None => JobStatus::Failed,
                     },
                     queue_wait_ms,
                     eval_ms,
@@ -186,28 +225,92 @@ fn worker_loop(broker: &Broker, objective: Objective<'_>, tx: &mpsc::Sender<Comp
             }
             Fate::Crash { delay } => {
                 std::thread::sleep(delay);
-                Completion {
-                    id: task.id,
-                    config: task.config,
-                    status: CompletionStatus::Lost(LossReason::Crashed),
-                    queue_wait_ms: task.submitted_at.elapsed().as_secs_f64() * 1e3,
+                JobDone {
+                    id: job.id,
+                    payload: job.payload,
+                    status: JobStatus::Lost(LossReason::Crashed),
+                    queue_wait_ms: job.submitted_at.elapsed().as_secs_f64() * 1e3,
                     eval_ms: 0.0,
                 }
             }
             Fate::TimeOut { delay } => {
                 std::thread::sleep(delay);
-                Completion {
-                    id: task.id,
-                    config: task.config,
-                    status: CompletionStatus::Lost(LossReason::TimedOut),
-                    queue_wait_ms: task.submitted_at.elapsed().as_secs_f64() * 1e3,
+                JobDone {
+                    id: job.id,
+                    payload: job.payload,
+                    status: JobStatus::Lost(LossReason::TimedOut),
+                    queue_wait_ms: job.submitted_at.elapsed().as_secs_f64() * 1e3,
                     eval_ms: 0.0,
                 }
             }
         };
-        if tx.send(completion).is_err() {
+        if tx.send(done).is_err() {
             return; // collector gone: the run is over
         }
+    }
+}
+
+/// A unit of objective-evaluation work (the [`WorkerPool`] adapter's form).
+pub(crate) struct Task {
+    pub id: TaskId,
+    pub config: Config,
+    pub submitted_at: Instant,
+    pub fate: Fate,
+}
+
+/// The objective-evaluation pool the async schedulers are built on: a thin
+/// `Config → f64` instantiation of [`JobPool`] translating results into
+/// the scheduler-level [`Completion`] vocabulary.
+pub(crate) struct WorkerPool {
+    inner: JobPool<Config, f64>,
+}
+
+impl WorkerPool {
+    pub(crate) fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        objective: Objective<'env>,
+        workers: usize,
+    ) -> Self {
+        Self { inner: JobPool::spawn(scope, objective, workers) }
+    }
+
+    pub(crate) fn submit_task(&mut self, task: Task) {
+        self.inner.submit_job(Job {
+            id: task.id,
+            payload: task.config,
+            submitted_at: task.submitted_at,
+            fate: task.fate,
+        });
+    }
+
+    pub(crate) fn poll(&mut self, timeout: Duration) -> Vec<Completion> {
+        self.inner
+            .poll(timeout)
+            .into_iter()
+            .map(|d| Completion {
+                id: d.id,
+                config: d.payload,
+                status: match d.status {
+                    JobStatus::Done(v) => CompletionStatus::Done(v),
+                    JobStatus::Failed => CompletionStatus::Failed,
+                    JobStatus::Lost(r) => CompletionStatus::Lost(r),
+                },
+                queue_wait_ms: d.queue_wait_ms,
+                eval_ms: d.eval_ms,
+            })
+            .collect()
+    }
+
+    pub(crate) fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    pub(crate) fn cancel_pending(&mut self) -> Vec<TaskId> {
+        self.inner.cancel_pending()
+    }
+
+    pub(crate) fn stats(&self) -> AsyncStats {
+        self.inner.stats()
     }
 }
 
@@ -318,6 +421,36 @@ mod tests {
             }
             assert_eq!(got.len() + cancelled.len(), 5);
             assert_eq!(pool.stats().cancelled, cancelled.len() as u64);
+        });
+    }
+
+    /// The generic core carries non-Config payloads: a range-payload job
+    /// (what scoring shards ship) executes and reports through the same
+    /// broker/worker/collector path.
+    #[test]
+    fn generic_pool_carries_arbitrary_payloads() {
+        let exec = |r: &(usize, usize)| -> Option<Vec<usize>> { Some((r.0..r.1).collect()) };
+        std::thread::scope(|scope| {
+            let mut pool: JobPool<(usize, usize), Vec<usize>> = JobPool::spawn(scope, &exec, 2);
+            for (id, range) in [(0u64, (0usize, 3usize)), (1, (3, 5)), (2, (5, 5))] {
+                pool.submit_job(Job {
+                    id,
+                    payload: range,
+                    submitted_at: Instant::now(),
+                    fate: Fate::Deliver { delay: Duration::ZERO },
+                });
+            }
+            let mut got = Vec::new();
+            while pool.in_flight() > 0 {
+                got.extend(pool.poll(Duration::from_secs(10)));
+            }
+            got.sort_by_key(|d| d.id);
+            assert_eq!(got.len(), 3);
+            for d in &got {
+                let JobStatus::Done(v) = &d.status else { panic!("job {} not done", d.id) };
+                assert_eq!(*v, (d.payload.0..d.payload.1).collect::<Vec<_>>());
+            }
+            assert_eq!(pool.stats().completed, 3);
         });
     }
 }

@@ -1,0 +1,375 @@
+//! Columnar Monte-Carlo candidate generation: batch sampling straight into
+//! typed structure-of-arrays columns plus the encoded GP feature matrix,
+//! with **zero per-candidate `Config` materialization**.
+//!
+//! The legacy path ([`SearchSpace::sample_n`] → `Encoder::encode_batch`)
+//! allocates one `Config` per candidate — a `Vec<(String, ParamValue)>`
+//! with every parameter name cloned — before re-walking each config to
+//! encode it. At the m ≥ 10⁵ candidate counts the acquisition wants
+//! (paper §2.3: candidate-set size is the batch-quality lever), that is
+//! O(m·p) `String`/heap churn dominating the propose step.
+//! [`SearchSpace::sample_columnar`] instead draws each value through the
+//! same [`super::Draw`]-typed path `Domain::sample` uses — **the exact
+//! config-major, param-order RNG sequence**, so every sampled value is
+//! bit-identical to the legacy stream — and writes it twice: once into its
+//! param's typed column (`f64`/`i64`/choice-index vectors) and once,
+//! through the shared [`super::encode::encode_numeric`] arithmetic, into
+//! the m×d encoded matrix. Only the ≤ batch-size argmax winners are ever
+//! materialized into `Config`s ([`ColumnarSet::config`]).
+
+use super::encode::encode_numeric;
+use super::{Config, Domain, Draw, ParamValue, SearchSpace};
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+
+/// One parameter's sampled values across the whole candidate set, in the
+/// parameter's native machine type.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColumnData {
+    /// Continuous domains (uniform, loguniform, quniform, normal, custom).
+    F64(Vec<f64>),
+    /// Integer `Range` domains.
+    I64(Vec<i64>),
+    /// `Choice` domains: the sampled index into the domain's value list.
+    Choice(Vec<u32>),
+}
+
+impl ColumnData {
+    fn with_capacity(domain: &Domain, m: usize) -> Self {
+        match domain {
+            Domain::Range { .. } => ColumnData::I64(Vec::with_capacity(m)),
+            Domain::Choice(_) => ColumnData::Choice(Vec::with_capacity(m)),
+            _ => ColumnData::F64(Vec::with_capacity(m)),
+        }
+    }
+
+    /// Number of sampled values in this column.
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::F64(v) => v.len(),
+            ColumnData::I64(v) => v.len(),
+            ColumnData::Choice(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A columnar candidate set: typed per-parameter SoA columns plus the
+/// encoded (m × d) feature matrix, produced by
+/// [`SearchSpace::sample_columnar`]. Candidates exist only as column
+/// entries until a caller materializes a specific row via
+/// [`config`](Self::config).
+#[derive(Clone, Debug)]
+pub struct ColumnarSet {
+    space: SearchSpace,
+    m: usize,
+    dims: usize,
+    /// One column per parameter, in space order.
+    columns: Vec<ColumnData>,
+    /// Row-major m × dims encoded features; empty after
+    /// [`take_encoded_matrix`](Self::take_encoded_matrix) moves it out.
+    encoded: Vec<f64>,
+}
+
+impl ColumnarSet {
+    /// Number of candidates.
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// Encoded feature width.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// The raw encoded buffer (row-major m × dims); empty once
+    /// [`take_encoded_matrix`](Self::take_encoded_matrix) has moved it out.
+    pub fn encoded(&self) -> &[f64] {
+        &self.encoded
+    }
+
+    /// Move the encoded buffer out as an (m × dims) matrix without
+    /// copying. The columns (and [`config`](Self::config)) stay usable;
+    /// [`encoded`](Self::encoded) is empty afterwards.
+    pub fn take_encoded_matrix(&mut self) -> Matrix {
+        Matrix::from_vec(self.m, self.dims, std::mem::take(&mut self.encoded))
+    }
+
+    /// One parameter's sampled column (space order).
+    pub fn column(&self, param: usize) -> &ColumnData {
+        &self.columns[param]
+    }
+
+    /// Materialize candidate `i` as a full [`Config`] — called only for
+    /// the argmax winners, never for the whole set. The produced config is
+    /// bit-identical to what the legacy `sample_n` path would have built
+    /// for the same draw.
+    pub fn config(&self, i: usize) -> Config {
+        assert!(i < self.m, "candidate index {i} out of range (m = {})", self.m);
+        let mut entries = Vec::with_capacity(self.space.len());
+        for (p, col) in self.space.params().iter().zip(&self.columns) {
+            let v = match col {
+                ColumnData::F64(vals) => ParamValue::F64(vals[i]),
+                ColumnData::I64(vals) => ParamValue::Int(vals[i]),
+                ColumnData::Choice(idxs) => match &p.domain {
+                    Domain::Choice(vals) => vals[idxs[i] as usize].clone(),
+                    other => unreachable!("choice column on non-choice domain {other:?}"),
+                },
+            };
+            entries.push((p.name.clone(), v));
+        }
+        Config::new(entries)
+    }
+
+    /// Materialize every candidate (cold-start helpers that need a whole
+    /// small batch of `Config`s; the hot path never calls this).
+    pub fn into_configs(self) -> Vec<Config> {
+        (0..self.m).map(|i| self.config(i)).collect()
+    }
+}
+
+impl SearchSpace {
+    /// Sample `m` candidates straight into columnar form: typed SoA
+    /// columns plus the encoded (m × d) matrix, no per-candidate `Config`.
+    ///
+    /// Draws in the exact config-major, param-order RNG sequence of the
+    /// legacy [`sample_n`](Self::sample_n), through the same
+    /// [`Domain::sample_draw`] implementation, and encodes through the
+    /// same [`encode_numeric`] arithmetic as `Encoder::encode_into` — so
+    /// sampled values, encoded features, and the post-call RNG state are
+    /// all bit-identical to the legacy path (property-tested).
+    pub fn sample_columnar(&self, rng: &mut Pcg64, m: usize) -> ColumnarSet {
+        let params = self.params();
+        // Per-param encoded offsets, plus the canonical one-hot slot per
+        // choice index: `encode_into` one-hots the *first* position whose
+        // value equals the sampled one, so duplicate choice values must
+        // collapse to the same slot here too.
+        let mut offsets = Vec::with_capacity(params.len());
+        let mut canon: Vec<Vec<usize>> = Vec::with_capacity(params.len());
+        let mut dims = 0usize;
+        for p in params {
+            offsets.push(dims);
+            dims += p.domain.encoded_width();
+            canon.push(match &p.domain {
+                Domain::Choice(vals) => vals
+                    .iter()
+                    .map(|v| vals.iter().position(|c| c == v).expect("value finds itself"))
+                    .collect(),
+                _ => Vec::new(),
+            });
+        }
+
+        let mut columns: Vec<ColumnData> =
+            params.iter().map(|p| ColumnData::with_capacity(&p.domain, m)).collect();
+        let mut encoded = vec![0.0; m * dims];
+        for i in 0..m {
+            let row = &mut encoded[i * dims..(i + 1) * dims];
+            for (j, p) in params.iter().enumerate() {
+                let off = offsets[j];
+                match (p.domain.sample_draw(rng), &mut columns[j]) {
+                    (Draw::F64(x), ColumnData::F64(col)) => {
+                        col.push(x);
+                        row[off] = encode_numeric(&p.domain, x);
+                    }
+                    (Draw::Int(v), ColumnData::I64(col)) => {
+                        col.push(v);
+                        row[off] = encode_numeric(&p.domain, v as f64);
+                    }
+                    (Draw::Choice(idx), ColumnData::Choice(col)) => {
+                        col.push(idx as u32);
+                        row[off + canon[j][idx]] = 1.0;
+                    }
+                    (draw, col) => {
+                        unreachable!("draw {draw:?} does not match column {col:?}")
+                    }
+                }
+            }
+        }
+        ColumnarSet { space: self.clone(), m, dims, columns, encoded }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::dist::{Beta, TruncExp};
+    use crate::space::{xgboost_space, Encoder, SearchSpaceBuilder};
+    use crate::util::proptest::{check, Gen};
+    use std::sync::Arc;
+
+    /// Bit-level equality for ParamValues (PartialEq collapses -0.0 == 0.0
+    /// and fails on NaN; the contract here is *bit* identity).
+    fn bits_eq(a: &ParamValue, b: &ParamValue) -> bool {
+        match (a, b) {
+            (ParamValue::F64(x), ParamValue::F64(y)) => x.to_bits() == y.to_bits(),
+            (x, y) => x == y,
+        }
+    }
+
+    /// A random space covering every domain kind, incl. `Custom` and
+    /// `Choice` (with value-type variety and possible duplicate values).
+    fn arbitrary_space(g: &mut Gen) -> SearchSpace {
+        let n_params = g.usize_range(1, 7);
+        let mut b = SearchSpaceBuilder::default();
+        for i in 0..n_params {
+            let name = format!("p{i}");
+            b = match g.usize_range(0, 8) {
+                0 => {
+                    let lo = g.f64_range(-10.0, 10.0);
+                    b.uniform(&name, lo, lo + g.f64_range(0.1, 20.0))
+                }
+                1 => {
+                    let lo = g.f64_range(1e-6, 1.0);
+                    b.loguniform(&name, lo, lo * g.f64_range(2.0, 1e6))
+                }
+                2 => {
+                    let lo = g.f64_range(-5.0, 5.0);
+                    b.quniform(&name, lo, lo + g.f64_range(0.5, 10.0), g.f64_range(0.01, 0.5))
+                }
+                3 => b.normal(&name, g.f64_range(-3.0, 3.0), g.f64_range(0.1, 2.0)),
+                4 => {
+                    let lo = g.f64_range(-50.0, 50.0) as i64;
+                    b.int(&name, lo, lo + g.usize_range(0, 30) as i64)
+                }
+                5 => {
+                    // Choice over mixed value types, duplicates possible.
+                    let k = g.usize_range(1, 6);
+                    let vals: Vec<ParamValue> = (0..k)
+                        .map(|_| match g.usize_range(0, 3) {
+                            0 => ParamValue::Str(format!("v{}", g.usize_range(0, 3))),
+                            1 => ParamValue::Int(g.usize_range(0, 4) as i64),
+                            _ => ParamValue::F64(g.f64_range(-2.0, 2.0)),
+                        })
+                        .collect();
+                    b.choice_values(&name, vals)
+                }
+                6 => b.custom(
+                    &name,
+                    Arc::new(TruncExp { rate: g.f64_range(0.5, 4.0), hi: g.f64_range(1.0, 5.0) }),
+                ),
+                _ => b.custom(
+                    &name,
+                    Arc::new(Beta { a: g.f64_range(0.5, 4.0), b: g.f64_range(0.5, 4.0) }),
+                ),
+            };
+        }
+        b.build()
+    }
+
+    /// The tentpole contract: over arbitrary spaces (every domain kind,
+    /// incl. `Custom` and `Choice`) and seeds, `sample_columnar` draws
+    /// values bit-identical to the legacy `sample_n` stream, encodes
+    /// bit-identically to `Encoder::encode_batch`, and leaves the RNG in
+    /// the identical state.
+    #[test]
+    fn property_sample_columnar_is_bit_identical_to_legacy_sample_n() {
+        check("sample_columnar == sample_n", 96, |g| {
+            let space = arbitrary_space(g);
+            let m = g.usize_range(0, 24);
+            let seed = g.rng().next_u64();
+
+            let mut legacy_rng = Pcg64::new(seed);
+            let legacy = space.sample_n(&mut legacy_rng, m);
+            let enc = Encoder::new(&space);
+            let legacy_encoded = enc.encode_batch(&legacy);
+
+            let mut col_rng = Pcg64::new(seed);
+            let set = space.sample_columnar(&mut col_rng, m);
+
+            if col_rng.state() != legacy_rng.state() {
+                return Err("RNG streams diverged".into());
+            }
+            if set.len() != m || set.dims() != enc.dims() {
+                return Err(format!("shape: m={} dims={}", set.len(), set.dims()));
+            }
+            if set.encoded().len() != legacy_encoded.len()
+                || set
+                    .encoded()
+                    .iter()
+                    .zip(&legacy_encoded)
+                    .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err("encoded features deviate from encode_batch".into());
+            }
+            for (i, want) in legacy.iter().enumerate() {
+                let got = set.config(i);
+                if got.len() != want.len()
+                    || got
+                        .entries()
+                        .iter()
+                        .zip(want.entries())
+                        .any(|((n1, v1), (n2, v2))| n1 != n2 || !bits_eq(v1, v2))
+                {
+                    return Err(format!("candidate {i}: {got} != {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn take_encoded_matrix_moves_the_buffer_out() {
+        let space = xgboost_space();
+        let mut rng = Pcg64::new(7);
+        let mut set = space.sample_columnar(&mut rng, 10);
+        let enc = Encoder::new(&space);
+        let legacy = enc.encode_batch(&space.sample_n(&mut Pcg64::new(7), 10));
+        let xc = set.take_encoded_matrix();
+        assert_eq!(xc.rows(), 10);
+        assert_eq!(xc.cols(), 7);
+        for i in 0..10 {
+            assert_eq!(xc.row(i), &legacy[i * 7..(i + 1) * 7]);
+        }
+        assert!(set.encoded().is_empty(), "the buffer must be moved, not copied");
+        // Columns stay usable for winner materialization after the take.
+        let c = set.config(3);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn into_configs_matches_sample_n() {
+        let space = xgboost_space();
+        let a = space.sample_columnar(&mut Pcg64::new(31), 8).into_configs();
+        let b = space.sample_n(&mut Pcg64::new(31), 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn duplicate_choice_values_one_hot_the_canonical_slot() {
+        // Choice ["a", "b", "a"]: sampling index 2 must one-hot slot 0 —
+        // exactly where encode_into's position() lookup lands for "a".
+        let space = SearchSpaceBuilder::default()
+            .choice("dup", &["a", "b", "a"])
+            .build();
+        let enc = Encoder::new(&space);
+        let mut rng = Pcg64::new(0);
+        // Draw until both "a" slots have been sampled at least once.
+        let set = space.sample_columnar(&mut rng, 64);
+        let ColumnData::Choice(idxs) = set.column(0) else { panic!("choice column") };
+        assert!(idxs.iter().any(|&i| i == 2), "index 2 must occur in 64 draws");
+        for (i, &idx) in idxs.iter().enumerate() {
+            let row = &set.encoded()[i * 3..(i + 1) * 3];
+            let expect = enc.encode(&set.config(i));
+            assert_eq!(row, expect.as_slice(), "candidate {i} (drew index {idx})");
+            if idx == 2 {
+                assert_eq!(row, &[1.0, 0.0, 0.0], "duplicate collapses to slot 0");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_set_is_well_formed() {
+        let space = xgboost_space();
+        let mut set = space.sample_columnar(&mut Pcg64::new(1), 0);
+        assert!(set.is_empty());
+        assert_eq!(set.take_encoded_matrix().rows(), 0);
+        assert!(set.into_configs().is_empty());
+    }
+}

@@ -9,6 +9,35 @@
 
 use super::{Config, Domain, SearchSpace};
 
+/// Encode one numeric (non-choice) domain value into its unit-cube GP
+/// feature. The **single copy** of the per-domain scaling arithmetic,
+/// shared by [`Encoder::encode_into`] and the columnar sampler
+/// ([`super::columnar`]) — both paths produce bit-identical features
+/// because they run this exact function.
+///
+/// Panics on `Choice` domains (they one-hot encode, there is no scalar).
+pub(crate) fn encode_numeric(domain: &Domain, x: f64) -> f64 {
+    match domain {
+        Domain::Uniform { lo, hi } | Domain::QUniform { lo, hi, .. } => {
+            ((x - lo) / (hi - lo)).clamp(0.0, 1.0)
+        }
+        Domain::LogUniform { lo, hi } => {
+            let x = x.max(*lo);
+            ((x.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0)
+        }
+        Domain::Normal { mean, std } => ((x - (mean - 3.0 * std)) / (6.0 * std)).clamp(0.0, 1.0),
+        Domain::Range { lo, hi } => {
+            let span = (*hi - *lo).max(1) as f64;
+            ((x - *lo as f64) / span).clamp(0.0, 1.0)
+        }
+        Domain::Custom(d) => {
+            let (lo, hi) = d.bounds();
+            ((x - lo) / (hi - lo)).clamp(0.0, 1.0)
+        }
+        Domain::Choice(_) => unreachable!("choice domains one-hot encode"),
+    }
+}
+
 /// Precomputed encoding layout for a [`SearchSpace`].
 #[derive(Clone, Debug)]
 pub struct Encoder {
@@ -43,25 +72,8 @@ impl Encoder {
             let v = cfg
                 .get(&p.name)
                 .unwrap_or_else(|| panic!("config missing parameter '{}'", p.name));
-            match (&p.domain, v) {
-                (Domain::Uniform { lo, hi }, _) | (Domain::QUniform { lo, hi, .. }, _) => {
-                    let x = v.as_f64().expect("numeric param");
-                    out[off] = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
-                }
-                (Domain::LogUniform { lo, hi }, _) => {
-                    let x = v.as_f64().expect("numeric param").max(*lo);
-                    out[off] = ((x.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0);
-                }
-                (Domain::Normal { mean, std }, _) => {
-                    let x = v.as_f64().expect("numeric param");
-                    out[off] = ((x - (mean - 3.0 * std)) / (6.0 * std)).clamp(0.0, 1.0);
-                }
-                (Domain::Range { lo, hi }, _) => {
-                    let x = v.as_f64().expect("numeric param");
-                    let span = (*hi - *lo).max(1) as f64;
-                    out[off] = ((x - *lo as f64) / span).clamp(0.0, 1.0);
-                }
-                (Domain::Choice(vals), v) => {
+            match &p.domain {
+                Domain::Choice(vals) => {
                     let idx = vals
                         .iter()
                         .position(|c| c == v)
@@ -69,10 +81,8 @@ impl Encoder {
                     out[off + idx] = 1.0;
                     let _ = width;
                 }
-                (Domain::Custom(d), _) => {
-                    let (lo, hi) = d.bounds();
-                    let x = v.as_f64().expect("numeric param");
-                    out[off] = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+                domain => {
+                    out[off] = encode_numeric(domain, v.as_f64().expect("numeric param"));
                 }
             }
         }

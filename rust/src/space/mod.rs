@@ -21,10 +21,12 @@
 //! assert!(space.cardinality_estimate() >= 1e6);
 //! ```
 
+pub mod columnar;
 pub mod dist;
 pub mod encode;
 mod value;
 
+pub use columnar::{ColumnData, ColumnarSet};
 pub use encode::Encoder;
 pub use value::{f64_from_json, f64_to_json, Config, ParamValue};
 
@@ -66,25 +68,52 @@ impl std::fmt::Debug for Domain {
     }
 }
 
+/// A freshly drawn value in its native machine type — what
+/// [`Domain::sample_draw`] produces before any `ParamValue` boxing. The
+/// columnar sampler stores these directly into typed SoA columns; the
+/// legacy [`Domain::sample`] wraps them into `ParamValue`s. Both paths
+/// share the one RNG-consuming implementation, so they are bit-identical
+/// by construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Draw {
+    F64(f64),
+    Int(i64),
+    /// Index into the domain's `Choice` values.
+    Choice(usize),
+}
+
 impl Domain {
-    /// Draw one value.
-    pub fn sample(&self, rng: &mut Pcg64) -> ParamValue {
+    /// Draw one value in typed form — the single sampling implementation
+    /// every path (legacy `sample`, columnar batch generation) goes
+    /// through. One `Draw` consumes exactly the RNG values the legacy
+    /// `sample` consumed, in the same order.
+    pub fn sample_draw(&self, rng: &mut Pcg64) -> Draw {
         match self {
-            Domain::Uniform { lo, hi } => ParamValue::F64(rng.uniform(*lo, *hi)),
+            Domain::Uniform { lo, hi } => Draw::F64(rng.uniform(*lo, *hi)),
             Domain::LogUniform { lo, hi } => {
                 let (ll, lh) = (lo.ln(), hi.ln());
-                ParamValue::F64(rng.uniform(ll, lh).exp())
+                Draw::F64(rng.uniform(ll, lh).exp())
             }
             Domain::QUniform { lo, hi, q } => {
                 let v = rng.uniform(*lo, *hi);
-                ParamValue::F64((v / q).round() * q)
+                Draw::F64((v / q).round() * q)
             }
-            Domain::Normal { mean, std } => ParamValue::F64(rng.normal_scaled(*mean, *std)),
+            Domain::Normal { mean, std } => Draw::F64(rng.normal_scaled(*mean, *std)),
             Domain::Range { lo, hi } => {
-                ParamValue::Int(rng.uniform_usize(0, (*hi - *lo + 1) as usize) as i64 + lo)
+                Draw::Int(rng.uniform_usize(0, (*hi - *lo + 1) as usize) as i64 + lo)
             }
-            Domain::Choice(vals) => vals[rng.uniform_usize(0, vals.len())].clone(),
-            Domain::Custom(d) => ParamValue::F64(d.sample(rng)),
+            Domain::Choice(vals) => Draw::Choice(rng.uniform_usize(0, vals.len())),
+            Domain::Custom(d) => Draw::F64(d.sample(rng)),
+        }
+    }
+
+    /// Draw one value.
+    pub fn sample(&self, rng: &mut Pcg64) -> ParamValue {
+        match (self.sample_draw(rng), self) {
+            (Draw::F64(x), _) => ParamValue::F64(x),
+            (Draw::Int(i), _) => ParamValue::Int(i),
+            (Draw::Choice(i), Domain::Choice(vals)) => vals[i].clone(),
+            (Draw::Choice(_), _) => unreachable!("only Choice domains draw indices"),
         }
     }
 
@@ -160,7 +189,12 @@ impl SearchSpace {
         )
     }
 
-    /// Sample a batch of configurations.
+    /// Sample a batch of configurations, one `Config` per draw.
+    ///
+    /// This is the *legacy row-major path*, kept as the correctness oracle
+    /// for [`SearchSpace::sample_columnar`] (the allocation-free batch
+    /// sampler the optimizers use): both draw in the same config-major,
+    /// param-order RNG sequence and are property-tested bit-identical.
     pub fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<Config> {
         (0..n).map(|_| self.sample(rng)).collect()
     }

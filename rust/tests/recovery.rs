@@ -231,11 +231,16 @@ fn lost_in_flight_at_crash_honors_retry_budget_across_restarts() {
     let case_path = tmp("retry_case");
     std::fs::write(&case_path, &bytes[..cut]).unwrap();
 
-    let resumed = Tuner::resume_from(space, &case_path)
-        .unwrap()
-        .with_celery(Some(celery))
-        .maximize(quad)
-        .unwrap();
+    // No `with_celery` here: the v2 journal header carries the fault-model
+    // override and `resume_from` re-applies it (the old API required the
+    // caller to re-supply it or silently simulate a default cluster).
+    let mut resumed_tuner = Tuner::resume_from(space, &case_path).unwrap();
+    assert_eq!(
+        resumed_tuner.config().celery.as_ref(),
+        Some(&celery),
+        "resume must restore the journaled fault model"
+    );
+    let resumed = resumed_tuner.maximize(quad).unwrap();
     assert_eq!(
         resumed.evaluations + resumed.lost as usize,
         14,
@@ -284,6 +289,60 @@ fn lost_in_flight_at_crash_honors_retry_budget_across_restarts() {
 
     std::fs::remove_file(&full_path).ok();
     std::fs::remove_file(&case_path).ok();
+}
+
+/// Satellite: the Celery fault-sim override is journaled in the v2 header
+/// and re-applied by `resume_from` — a crash + resume must continue under
+/// the configured cluster (and the resumed run's own journal header keeps
+/// carrying it, so a second crash resumes identically).
+#[test]
+fn celery_fault_model_survives_crash_and_resume_from_header_alone() {
+    let space = svm_space();
+    let celery = CelerySimConfig {
+        workers: 2,
+        base_latency_ms: 0.2,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        crash_prob: 0.0, // reliable but custom: the override is detectable
+        result_timeout: Duration::from_millis(1234),
+    };
+    let cfg = TunerConfig {
+        optimizer: OptimizerKind::Random,
+        num_iterations: 4,
+        batch_size: 2,
+        backend: SurrogateBackend::Native,
+        scheduler: SchedulerKind::Celery,
+        workers: 2,
+        seed: 8,
+        mode: ExecutionMode::Async,
+        celery: Some(celery.clone()),
+        ..Default::default()
+    };
+    let path = tmp("celery_header");
+    Tuner::new(space.clone(), cfg)
+        .with_journal(&path)
+        .maximize(quad)
+        .unwrap();
+
+    // Crash mid-run: truncate to an early boundary, resume WITHOUT
+    // re-supplying the override.
+    let bytes = std::fs::read(&path).unwrap();
+    let boundaries = event_boundaries(&bytes);
+    std::fs::write(&path, &bytes[..boundaries[boundaries.len() / 2]]).unwrap();
+    let mut resumed = Tuner::resume_from(space.clone(), &path).unwrap();
+    assert_eq!(
+        resumed.config().celery.as_ref(),
+        Some(&celery),
+        "the journal header must supply the fault model on resume"
+    );
+    let result = resumed.maximize(quad).unwrap();
+    assert_eq!(result.evaluations, 8, "resumed run completes the budget");
+
+    // A second resume (crash-after-resume) still finds the override in the
+    // stitched journal's header.
+    let again = Tuner::resume_from(space, &path).unwrap();
+    assert_eq!(again.config().celery.as_ref(), Some(&celery));
+    std::fs::remove_file(&path).ok();
 }
 
 /// Threaded sync: completion order inside a batch is nondeterministic, so
@@ -429,6 +488,7 @@ fn resumed_async_run_stays_early_stopped_after_post_stop_improvement() {
             space_fp: space.fingerprint(),
             sense: SenseTag::Maximize,
             run: tc.to_run_config(),
+            celery: None,
         };
         let mut w = JournalWriter::create(&path, &header).unwrap();
         for (pid, c) in [(0u64, 10.0), (1, 20.0), (2, 30.0)] {
@@ -487,9 +547,15 @@ fn resume_guards_fire_end_to_end() {
     let err = Tuner::resume_from(other, &path).unwrap_err();
     assert!(err.to_string().contains("different search space"), "got: {err:#}");
 
-    // Wrong schema version.
+    // Wrong schema version (also covers pre-celery v1 journals).
     let text = std::fs::read_to_string(&path).unwrap();
-    std::fs::write(&path, text.replacen("\"version\":1", "\"version\":99", 1)).unwrap();
+    let stale = text.replacen(
+        &format!("\"version\":{}", mango::persist::JOURNAL_VERSION),
+        "\"version\":99",
+        1,
+    );
+    assert_ne!(stale, text, "version literal must be present to corrupt");
+    std::fs::write(&path, stale).unwrap();
     let err = Tuner::resume_from(svm_space(), &path).unwrap_err();
     assert!(err.to_string().contains("version"), "got: {err:#}");
     std::fs::remove_file(&path).ok();
