@@ -18,16 +18,20 @@
 //! 4. **Sharded scoring rounds**: the same propose step at m ∈ {10⁴, 10⁵}
 //!    with `proposal_shards` ∈ {0 (local), 4 (threaded pool)} — the
 //!    scheduler-sharded path the m ≥ 10⁵ regime uses.
+//! 5. **Kernel profiles**: Exact vs Fast propose rounds at
+//!    n ∈ {256, 1024} × m ∈ {10⁴, 10⁵} (tolerance cross-check before any
+//!    timing), plus the distance-cache footprint per mode — dense f64 vs
+//!    the tiled triangle at f64 and f32 element widths.
 //!
 //! Run: `cargo bench --bench propose_hot_path`. Writes `BENCH_propose.json`
 //! at the repo root (overwriting the committed placeholder), mirroring the
 //! `BENCH_gp_refit.json` format.
 
 use mango::exp::benchkit::bench;
-use mango::gp::kernel::{rbf_kernel, rbf_pair};
-use mango::gp::ShardExec;
-use mango::linalg::Matrix;
-use mango::optimizer::bayesian::BayesianCore;
+use mango::gp::kernel::{rbf_kernel, rbf_pair, sq_dist_from_parts};
+use mango::gp::{KernelProfile, ShardExec};
+use mango::linalg::{dot, dot_fast, Matrix};
+use mango::optimizer::bayesian::{BayesianCore, TileElem, TiledDistCache};
 use mango::optimizer::{GpOptions, History};
 use mango::space::{Encoder, SearchSpace};
 use mango::util::rng::Pcg64;
@@ -37,6 +41,14 @@ const D: usize = 8;
 /// pass is common to both paths and bounds the attainable ratio; the madd
 /// pipeline itself is several times faster.
 const KERNEL_SPEEDUP_TARGET: f64 = 1.3;
+/// Fast-profile floor at the large-n regime (n = 1024, m = 1e5): the
+/// chunked kernels + tiled cache must buy at least this much per round.
+const FAST_SPEEDUP_TARGET: f64 = 1.5;
+/// End-to-end Exact-vs-Fast tolerance: the kernel-level contract is 1e-10,
+/// and one Cholesky solve over the perturbed Gram amplifies it by the
+/// (noise-jittered) condition number — 1e-8 is the honest round-level
+/// bound, the same one the integration tests assert.
+const FAST_UCB_RTOL: f64 = 1e-8;
 
 /// Scalar reference: the element-wise closure the library used before the
 /// GEMM path (one bounds-checked `rbf_pair` per entry). Kept in the bench
@@ -237,13 +249,143 @@ fn main() {
         }
     }
 
+    // ---- 5. kernel profiles: Exact vs Fast rounds + cache footprints ----
+    let mut profile_rows = String::new();
+    let mut footprint_rows = String::new();
+    let mut fast_speedup_large = f64::NAN;
+    for n in [256usize, 1024] {
+        let history = bench_history(&space, n, 2_000 + n as u64);
+
+        // Cache footprint at this n: pure tile geometry, but the tiled
+        // entries must match a sequential-dot scalar oracle before any
+        // byte counting (the same ≤1e-10 contract the unit tests assert).
+        {
+            let enc = Encoder::new(&space);
+            let flat = enc.encode_batch(history.configs());
+            let hx = Matrix::from_vec(n, enc.dims(), flat);
+            let norms: Vec<f64> =
+                (0..n).map(|i| dot_fast(hx.row(i), hx.row(i))).collect();
+            let mut t64 = TiledDistCache::new(TileElem::F64);
+            t64.sync(&hx, &norms, 0);
+            let mut t32 = TiledDistCache::new(TileElem::F32);
+            t32.sync(&hx, &norms, 0);
+            let mut worst = 0.0f64;
+            for i in 0..n {
+                for j in 0..n {
+                    let want = sq_dist_from_parts(
+                        dot(hx.row(i), hx.row(i)),
+                        dot(hx.row(j), hx.row(j)),
+                        dot(hx.row(i), hx.row(j)),
+                    );
+                    let dev = (t64.get(i, j) - want).abs() / want.abs().max(1.0);
+                    worst = worst.max(dev);
+                }
+            }
+            assert!(worst <= 1e-10, "tiled f64 D^2 deviates from the dot oracle: {worst:e}");
+            let dense = n * n * 8;
+            let f32_ratio = t32.footprint_bytes() as f64 / dense as f64;
+            assert!(
+                f32_ratio <= 0.55,
+                "tiled f32 footprint {:.3} of dense exceeds the 55% budget at n={n}",
+                f32_ratio
+            );
+            println!(
+                "dist cache n={n}: dense {dense} B, tiled f64 {} B, tiled f32 {} B ({:.1}%)",
+                t64.footprint_bytes(),
+                t32.footprint_bytes(),
+                100.0 * f32_ratio
+            );
+            if !footprint_rows.is_empty() {
+                footprint_rows.push_str(",\n");
+            }
+            footprint_rows.push_str(&format!(
+                "    {{\"n\": {n}, \"dense_f64_bytes\": {dense}, \
+                 \"tiled_f64_bytes\": {}, \"tiled_f32_bytes\": {}, \
+                 \"f32_over_dense\": {:.4}}}",
+                t64.footprint_bytes(),
+                t32.footprint_bytes(),
+                f32_ratio
+            ));
+        }
+
+        for m in [10_000usize, 100_000] {
+            let mk_core = |profile: KernelProfile| {
+                let opts = GpOptions {
+                    mc_samples: m,
+                    proposal_threads: 1,
+                    fixed_beta: Some(2.0),
+                    kernel_profile: profile,
+                    ..Default::default()
+                };
+                BayesianCore::new(space.clone(), opts).expect("native core")
+            };
+            let mut exact = mk_core(KernelProfile::Exact);
+            let mut fast = mk_core(KernelProfile::Fast);
+            // Same seed → same candidate stream; the profiles must agree
+            // to the round-level tolerance before any timing.
+            let se = exact.fit_and_score(&history, 1, &mut Pcg64::new(31)).unwrap();
+            let sf = fast.fit_and_score(&history, 1, &mut Pcg64::new(31)).unwrap();
+            assert_eq!(se.xc, sf.xc, "profiles must score the same candidates");
+            let mut max_rel = 0.0f64;
+            for (a, b) in se.acq.ucb.iter().zip(sf.acq.ucb.iter()) {
+                max_rel = max_rel.max((a - b).abs() / a.abs().max(1.0));
+            }
+            assert!(
+                max_rel <= FAST_UCB_RTOL,
+                "fast-profile ucb deviates from exact: {max_rel:e} (n={n} m={m})"
+            );
+            drop((se, sf));
+
+            let iters = if m >= 100_000 || n >= 1024 { 3 } else { 8 };
+            let mut seed_e = 9_000 + (n + m) as u64;
+            let t_exact =
+                bench(&format!("fit_and_score exact n={n} m={m}"), 1, iters, || {
+                    seed_e += 1;
+                    let mut rng = Pcg64::new(seed_e);
+                    std::hint::black_box(
+                        exact.fit_and_score(&history, 1, &mut rng).expect("fit_and_score"),
+                    );
+                });
+            let mut seed_f = 9_000 + (n + m) as u64;
+            let t_fast =
+                bench(&format!("fit_and_score fast  n={n} m={m}"), 1, iters, || {
+                    seed_f += 1;
+                    let mut rng = Pcg64::new(seed_f);
+                    std::hint::black_box(
+                        fast.fit_and_score(&history, 1, &mut rng).expect("fit_and_score"),
+                    );
+                });
+            let speedup = t_exact.mean_us / t_fast.mean_us.max(1e-9);
+            if n == 1024 && m == 100_000 {
+                fast_speedup_large = speedup;
+            }
+            println!("{}", t_exact.row());
+            println!("{}", t_fast.row());
+            println!(
+                "profile n={n} m={m}: fast {speedup:.2}x vs exact (max rel dev {max_rel:e})"
+            );
+            if !profile_rows.is_empty() {
+                profile_rows.push_str(",\n");
+            }
+            profile_rows.push_str(&format!(
+                "    {{\"n\": {n}, \"m\": {m}, \"exact_mean_us\": {:.1}, \
+                 \"fast_mean_us\": {:.1}, \"speedup\": {:.2}, \"max_rel_dev\": {:e}}}",
+                t_exact.mean_us, t_fast.mean_us, speedup, max_rel
+            ));
+        }
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"propose_hot_path\",\n  \"dims\": {D},\n  \
          \"kernel\": {{\"n\": {kn}, \"m\": {km}, \"scalar_mean_us\": {:.1}, \
          \"gemm_mean_us\": {:.1}, \"speedup\": {:.2}, \
          \"target_speedup\": {KERNEL_SPEEDUP_TARGET}, \"pass\": {}, \
          \"max_abs_deviation\": {:e}}},\n  \"generation\": [\n{}\n  ],\n  \
-         \"rounds\": [\n{}\n  ],\n  \"sharded_rounds\": [\n{}\n  ]\n}}\n",
+         \"rounds\": [\n{}\n  ],\n  \"sharded_rounds\": [\n{}\n  ],\n  \
+         \"profiles\": [\n{}\n  ],\n  \
+         \"cache_footprint\": [\n{}\n  ],\n  \
+         \"fast_speedup_target\": {FAST_SPEEDUP_TARGET},\n  \
+         \"fast_pass\": {}\n}}\n",
         t_scalar.mean_us,
         t_gemm.mean_us,
         kernel_speedup,
@@ -252,6 +394,9 @@ fn main() {
         gen_rows,
         round_rows,
         shard_rows,
+        profile_rows,
+        footprint_rows,
+        fast_speedup_large >= FAST_SPEEDUP_TARGET,
     );
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_propose.json");
     std::fs::write(out, &json).expect("write BENCH_propose.json");
@@ -259,5 +404,10 @@ fn main() {
     assert!(
         kernel_speedup >= KERNEL_SPEEDUP_TARGET,
         "GEMM kernel speedup {kernel_speedup:.2}x below the {KERNEL_SPEEDUP_TARGET}x target"
+    );
+    assert!(
+        fast_speedup_large >= FAST_SPEEDUP_TARGET,
+        "fast profile {fast_speedup_large:.2}x at n=1024 m=1e5 below the \
+         {FAST_SPEEDUP_TARGET}x target"
     );
 }

@@ -110,6 +110,9 @@ TUNE OPTIONS:
                            run's scheduler machinery, native backend
                            (0 = local-only; output is byte-identical
                            for every setting)                [0]
+  --kernel-profile <name>  exact (bit-exact contracts) | fast (chunked
+                           SIMD-friendly kernels + tiled distance cache;
+                           deterministic, ~1e-10 of exact)   [exact]
   --seed <s>               RNG seed                          [0]
   --early-stop <n>         stop after n iterations without improvement
   --max-surrogate-obs <n>  history window the GP sees        [512]

@@ -48,6 +48,12 @@ pub struct RunConfig {
     /// candidate chunks as pool jobs under the run's scheduler kind.
     /// Byte-identical output for every setting.
     pub proposal_shards: usize,
+    /// Propose-hot-path arithmetic profile: "exact" (default — every
+    /// bit-exactness contract holds) or "fast" (SIMD-friendly chunked
+    /// kernels + tiled mixed-precision distance cache; run-to-run
+    /// deterministic and threads/shards-invariant, ≤1e-10 relative of the
+    /// scalar oracles, not bit-equal to exact).
+    pub kernel_profile: String,
     /// Journal durability: fsync after every n appends (0 = flush-only —
     /// survives a process kill; a machine crash can lose recent events).
     pub fsync_every_n: usize,
@@ -80,6 +86,7 @@ impl Default for RunConfig {
             max_retries: 2,
             proposal_threads: 1,
             proposal_shards: 0,
+            kernel_profile: "exact".into(),
             fsync_every_n: 0,
             journal: String::new(),
             resume: false,
@@ -111,6 +118,7 @@ impl RunConfig {
                 "scheduler" => c.scheduler = str_(v, k)?,
                 "backend" => c.backend = str_(v, k)?,
                 "mode" => c.mode = str_(v, k)?,
+                "kernel_profile" => c.kernel_profile = str_(v, k)?,
                 "journal" => c.journal = str_(v, k)?,
                 "tune_lengthscale" => {
                     c.tune_lengthscale = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
@@ -146,6 +154,13 @@ impl RunConfig {
         if !MODES.contains(&self.mode.as_str()) {
             return Err(anyhow!("unknown mode '{}' (one of {MODES:?})", self.mode));
         }
+        const PROFILES: [&str; 2] = ["exact", "fast"];
+        if !PROFILES.contains(&self.kernel_profile.as_str()) {
+            return Err(anyhow!(
+                "unknown kernel_profile '{}' (one of {PROFILES:?})",
+                self.kernel_profile
+            ));
+        }
         if self.max_surrogate_obs == 0 {
             return Err(anyhow!("max_surrogate_obs must be >= 1"));
         }
@@ -174,6 +189,7 @@ impl RunConfig {
             ("max_retries", Json::Num(self.max_retries as f64)),
             ("proposal_threads", Json::Num(self.proposal_threads as f64)),
             ("proposal_shards", Json::Num(self.proposal_shards as f64)),
+            ("kernel_profile", Json::Str(self.kernel_profile.clone())),
             ("fsync_every_n", Json::Num(self.fsync_every_n as f64)),
             ("journal", Json::Str(self.journal.clone())),
             ("resume", Json::Bool(self.resume)),
@@ -314,6 +330,21 @@ mod tests {
         assert!(!c.resume);
         let c2 = RunConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2, "journal fields survive the json round trip");
+    }
+
+    #[test]
+    fn kernel_profile_parses_validates_and_roundtrips() {
+        let c = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.kernel_profile, "exact", "exact is the default profile");
+        let c =
+            RunConfig::from_json(&parse(r#"{"kernel_profile": "fast"}"#).unwrap()).unwrap();
+        assert_eq!(c.kernel_profile, "fast");
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "kernel_profile survives the json round trip");
+        assert!(
+            RunConfig::from_json(&parse(r#"{"kernel_profile": "simd"}"#).unwrap()).is_err(),
+            "unknown profiles are rejected loudly"
+        );
     }
 
     #[test]

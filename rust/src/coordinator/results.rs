@@ -70,6 +70,12 @@ pub struct TuningResult {
     pub retried: u64,
     /// Async mode: proposals abandoned after exhausting their retries.
     pub lost: u64,
+    /// GP distance-cache lifecycle counters `(builds, appends, evicts)`:
+    /// full rebuilds, prefix-reusing appends, and (Fast profile) tiles
+    /// dropped by truncate-and-regrow. All zeros for optimizers without a
+    /// distance cache. Surfaced so cache-thrash regressions (every round
+    /// rebuilding instead of appending) are observable instead of silent.
+    pub dist_cache: (u64, u64, u64),
 }
 
 impl TuningResult {
@@ -84,6 +90,14 @@ impl TuningResult {
             (
                 "best_series",
                 Json::Arr(self.best_series.iter().map(|&v| Json::Num(v)).collect()),
+            ),
+            (
+                "dist_cache",
+                Json::obj(vec![
+                    ("builds", Json::Num(self.dist_cache.0 as f64)),
+                    ("appends", Json::Num(self.dist_cache.1 as f64)),
+                    ("evicts", Json::Num(self.dist_cache.2 as f64)),
+                ]),
             ),
         ];
         if let Some(stats) = &self.scheduler_stats {
@@ -139,6 +153,7 @@ mod tests {
             scheduler_stats: None,
             retried: 0,
             lost: 0,
+            dist_cache: (0, 0, 0),
         }
     }
 
@@ -148,6 +163,17 @@ mod tests {
         assert_eq!(j.get("best_objective").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("best_series").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("scheduler").is_none(), "sync dumps omit async fields");
+    }
+
+    #[test]
+    fn json_dump_contains_dist_cache_counters() {
+        let mut r = base_result();
+        r.dist_cache = (2, 5, 3);
+        let j = r.to_json();
+        let dc = j.get("dist_cache").unwrap();
+        assert_eq!(dc.get("builds").unwrap().as_f64(), Some(2.0));
+        assert_eq!(dc.get("appends").unwrap().as_f64(), Some(5.0));
+        assert_eq!(dc.get("evicts").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

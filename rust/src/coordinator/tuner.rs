@@ -43,7 +43,7 @@ use crate::persist::{
     RunHeader, SenseTag, SyncReplay,
 };
 use crate::scheduler::{
-    self, AsyncScheduler, BatchResult, Completion, CompletionStatus, SchedulerKind,
+    self, AsyncScheduler, BatchResult, Completion, CompletionStatus, LossReason, SchedulerKind,
 };
 use crate::space::{Config, SearchSpace};
 use crate::util::rng::Pcg64;
@@ -131,6 +131,11 @@ pub struct TunerConfig {
     /// byte-identical for every `proposal_shards` × `proposal_threads` ×
     /// scheduler setting.
     pub proposal_shards: usize,
+    /// Propose-hot-path arithmetic profile: `Exact` (default) keeps every
+    /// bit-exactness contract; `Fast` swaps in SIMD-friendly chunked
+    /// kernels and the tiled distance cache — run-to-run deterministic and
+    /// threads/shards-invariant, but not bit-equal to `Exact`.
+    pub kernel_profile: crate::gp::KernelProfile,
     /// Journal durability: fsync after every n appends (0 = flush-only,
     /// the default — survives a process kill but a machine crash can lose
     /// recent events).
@@ -159,6 +164,7 @@ impl Default for TunerConfig {
             max_retries: 2,
             proposal_threads: 1,
             proposal_shards: 0,
+            kernel_profile: crate::gp::KernelProfile::Exact,
             fsync_every_n: 0,
             celery: None,
         }
@@ -193,6 +199,8 @@ impl TunerConfig {
             max_retries: rc.max_retries,
             proposal_threads: rc.proposal_threads,
             proposal_shards: rc.proposal_shards,
+            kernel_profile: crate::gp::KernelProfile::from_str(&rc.kernel_profile)
+                .ok_or_else(|| anyhow!("bad kernel_profile {}", rc.kernel_profile))?,
             fsync_every_n: rc.fsync_every_n,
             celery: None,
         })
@@ -225,6 +233,7 @@ impl TunerConfig {
             max_retries: self.max_retries,
             proposal_threads: self.proposal_threads,
             proposal_shards: self.proposal_shards,
+            kernel_profile: self.kernel_profile.as_str().into(),
             fsync_every_n: self.fsync_every_n,
             journal: String::new(),
             resume: false,
@@ -502,6 +511,7 @@ impl Tuner {
             tune_lengthscale: self.config.tune_lengthscale,
             proposal_threads: self.config.proposal_threads,
             proposal_shards: self.config.proposal_shards,
+            kernel_profile: self.config.kernel_profile,
             // Scoring shards execute under the same scheduler model as the
             // objective evaluations — including the Celery simulator's
             // fault fates (shard losses are retried; output byte-identical
@@ -739,6 +749,7 @@ impl Tuner {
             scheduler_stats: None,
             retried: 0,
             lost: 0,
+            dist_cache: optimizer.dist_cache_stats(),
         })
     }
 
@@ -982,12 +993,54 @@ impl Tuner {
             let completions: Vec<Completion> = sched.poll(POLL_TIMEOUT);
             if completions.is_empty() {
                 if sched.in_flight() == 0 {
-                    // Scheduler lost track of outstanding work (worker
-                    // panic). Not journaled as Lost: on a later resume
-                    // these re-enqueue as still-pending work, which is the
-                    // better recovery.
-                    lost += pending.len() as u64;
-                    pending.clear();
+                    // Every worker died without reporting (worker panic):
+                    // the scheduler has lost track of the outstanding
+                    // work and no retry can land. Conclude each in-flight
+                    // proposal as a journaled `Lost(Crashed)` terminal —
+                    // so a later resume agrees with this process about
+                    // what was returned, instead of re-enqueueing
+                    // proposals this run already counted as lost and
+                    // silently diverging from the result it reported.
+                    let crashed: Vec<(u64, PendingTask)> =
+                        std::mem::take(&mut pending).into_iter().collect();
+                    for (task_id, task) in crashed {
+                        jappend(
+                            &mut journal,
+                            &JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: task_id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Lost(LossReason::Crashed),
+                                queue_ms: 0.0,
+                                eval_ms: 0.0,
+                            },
+                        )?;
+                        lost += 1;
+                        completion_log.push(CompletionRecord {
+                            task_id,
+                            queue_wait_ms: 0.0,
+                            eval_ms: 0.0,
+                            retries: task.retries,
+                            outcome: CompletionOutcome::Lost,
+                        });
+                        let user_best = match sense {
+                            Sense::Maximize => best_so_far,
+                            Sense::Minimize => -best_so_far,
+                        };
+                        push_best_point(sense, &mut best_series, user_best, &mut since_improvement);
+                        let record = IterationRecord {
+                            iteration: iterations.len(),
+                            proposed: proposed_since_record,
+                            returned: 0,
+                            best_so_far: user_best,
+                            wall_ms: 0.0,
+                        };
+                        proposed_since_record = 0;
+                        if let Some(cb) = &mut self.callback {
+                            cb(&record);
+                        }
+                        iterations.push(record);
+                    }
                     break;
                 }
                 anyhow::ensure!(
@@ -1173,6 +1226,7 @@ impl Tuner {
             scheduler_stats: Some(sched.stats()),
             retried,
             lost,
+            dist_cache: optimizer.dist_cache_stats(),
         })
     }
 }
@@ -1423,6 +1477,7 @@ mod tests {
             max_retries: 1,
             proposal_threads: 4,
             proposal_shards: 3,
+            kernel_profile: crate::gp::KernelProfile::Fast,
             fsync_every_n: 16,
             celery: None,
         };
@@ -1446,6 +1501,7 @@ mod tests {
         assert_eq!(back.max_retries, tc.max_retries);
         assert_eq!(back.proposal_threads, tc.proposal_threads);
         assert_eq!(back.proposal_shards, tc.proposal_shards);
+        assert_eq!(back.kernel_profile, tc.kernel_profile);
         assert_eq!(back.fsync_every_n, tc.fsync_every_n);
     }
 

@@ -21,7 +21,7 @@
 //! grid points without perturbing the incremental-Cholesky and recovery
 //! bit-identity contracts.
 
-use crate::linalg::{dot, Matrix};
+use crate::linalg::{dot, dot_fast, Matrix};
 
 /// k(a, b) = exp(-0.5 * sum_d ((a_d - b_d) * inv_ls_d)^2) for one pair.
 ///
@@ -86,6 +86,32 @@ pub fn sq_dists(x: &Matrix, z: &Matrix) -> Matrix {
     g
 }
 
+/// [`row_sq_norms`] on the `Fast` profile's chunked reduction
+/// ([`dot_fast`]) — used wherever the fast D² pipeline derives norms.
+pub fn row_sq_norms_fast(x: &Matrix) -> Vec<f64> {
+    (0..x.rows()).map(|i| dot_fast(x.row(i), x.row(i))).collect()
+}
+
+/// [`sq_dists`] on the `Fast` kernel profile: the cross-product GEMM and
+/// the row norms both use the fixed 4-lane chunked reduction. Every
+/// element still depends only on its own two rows, so the matrix is
+/// deterministic and invariant under candidate chunking; it is within
+/// rounding of [`sq_dists`], not bit-equal.
+pub fn sq_dists_fast(x: &Matrix, z: &Matrix) -> Matrix {
+    assert_eq!(x.cols(), z.cols(), "feature dims differ");
+    let mut g = x.matmul_transb_fast(z);
+    let nx = row_sq_norms_fast(x);
+    let nz = row_sq_norms_fast(z);
+    let m = z.rows();
+    for i in 0..x.rows() {
+        let row = &mut g.data_mut()[i * m..(i + 1) * m];
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = sq_dist_from_parts(nx[i], nz[j], *v);
+        }
+    }
+    g
+}
+
 /// Isotropic RBF value from an *unscaled* squared distance:
 /// `exp(−0.5 · il² · D²)`. The single shared expression every isotropic
 /// call site uses (bit-exactness contract, module docs).
@@ -119,11 +145,42 @@ fn map_sq_dists_iso(mut d2: Matrix, il: f64) -> Matrix {
     d2
 }
 
+/// The `Fast` profile's exp pass: the `−0.5·il²` coefficient is hoisted
+/// and the loop unrolled 4-wide so the multiply feeding each `exp` can be
+/// packed. Given the same D² element this produces the same bits as
+/// [`rbf_from_sq_dist`] (`c·d2` with `c = −0.5·il²` is the identical
+/// floating-point expression) — the Fast/Exact divergence in a Gram matrix
+/// comes entirely from the chunked D², never from this pass.
+fn map_sq_dists_iso_fast(mut d2: Matrix, il: f64) -> Matrix {
+    let c = -0.5 * (il * il);
+    let data = d2.data_mut();
+    let mut k = 0;
+    while k + 4 <= data.len() {
+        let (e0, e1, e2, e3) =
+            (c * data[k], c * data[k + 1], c * data[k + 2], c * data[k + 3]);
+        data[k] = e0.exp();
+        data[k + 1] = e1.exp();
+        data[k + 2] = e2.exp();
+        data[k + 3] = e3.exp();
+        k += 4;
+    }
+    while k < data.len() {
+        data[k] = (c * data[k]).exp();
+        k += 1;
+    }
+    d2
+}
+
 /// Map a precomputed unscaled squared-distance matrix to an isotropic RBF
 /// correlation matrix — the elementwise pass the shared-distance LML grid
 /// amortizes its kernel builds down to.
 pub fn rbf_kernel_from_sq_dists(d2: &Matrix, il: f64) -> Matrix {
     map_sq_dists_iso(d2.clone(), il)
+}
+
+/// [`rbf_kernel_from_sq_dists`] through the `Fast` exp pass.
+pub fn rbf_kernel_from_sq_dists_fast(d2: &Matrix, il: f64) -> Matrix {
+    map_sq_dists_iso_fast(d2.clone(), il)
 }
 
 /// Full (n x m) correlation matrix between row sets — GEMM path.
@@ -139,6 +196,21 @@ pub fn rbf_kernel(x: &Matrix, z: &Matrix, inv_ls: &[f64]) -> Matrix {
             *v = rbf_from_scaled_sq_dist(*v);
         }
         k
+    }
+}
+
+/// [`rbf_kernel`] on the `Fast` kernel profile: chunked-GEMM D² and the
+/// unrolled exp pass on the isotropic branch; the anisotropic fallback
+/// scales rows then runs the same fast D² + exp pipeline. Property-tested
+/// against [`rbf_pair`] at ≤1e-10 relative tolerance.
+pub fn rbf_kernel_fast(x: &Matrix, z: &Matrix, inv_ls: &[f64]) -> Matrix {
+    assert_eq!(x.cols(), z.cols(), "feature dims differ");
+    if let Some(il) = iso_inv_ls(inv_ls, x.cols()) {
+        map_sq_dists_iso_fast(sq_dists_fast(x, z), il)
+    } else {
+        let xs = scale_rows(x, inv_ls);
+        let zs = scale_rows(z, inv_ls);
+        map_sq_dists_iso_fast(sq_dists_fast(&xs, &zs), 1.0)
     }
 }
 
@@ -248,6 +320,69 @@ mod tests {
                             want
                         ));
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The Fast-profile contract: the chunked-GEMM + unrolled-exp path
+    /// must match the scalar [`rbf_pair`] oracle within 1e-10 relative
+    /// tolerance over the same shape/lengthscale space the Exact test
+    /// covers, and must be bitwise run-to-run deterministic.
+    #[test]
+    fn fast_profile_rbf_matches_rbf_pair_oracle() {
+        check("fast rbf ~= rbf_pair oracle", 64, |g| {
+            let n = g.usize_range(1, 14);
+            let m = g.usize_range(1, 14);
+            let d = g.usize_range(1, 8);
+            let x = Matrix::from_fn(n, d, |_, _| g.f64_range(-1.0, 2.0));
+            let z = Matrix::from_fn(m, d, |_, _| g.f64_range(-1.0, 2.0));
+            let inv_ls: Vec<f64> = match g.usize_range(0, 3) {
+                0 => vec![g.f64_range(0.2, 6.0); d], // isotropic
+                1 => (0..d).map(|_| g.f64_range(0.2, 6.0)).collect(), // anisotropic
+                _ => {
+                    let keep = g.usize_range(0, d);
+                    (0..keep).map(|_| g.f64_range(0.2, 6.0)).collect()
+                }
+            };
+            let k = rbf_kernel_fast(&x, &z, &inv_ls);
+            for i in 0..n {
+                for j in 0..m {
+                    let want = rbf_pair(x.row(i), z.row(j), &inv_ls);
+                    if (k[(i, j)] - want).abs() > 1e-10 * want.abs().max(1.0) {
+                        return Err(format!(
+                            "({i},{j}) inv_ls len {}: fast {} vs oracle {}",
+                            inv_ls.len(),
+                            k[(i, j)],
+                            want
+                        ));
+                    }
+                }
+            }
+            // Determinism: a second evaluation reproduces every bit.
+            let again = rbf_kernel_fast(&x, &z, &inv_ls);
+            if k != again {
+                return Err("fast rbf not run-to-run deterministic".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// The Fast exp pass is bit-identical to the Exact one given the same
+    /// D² — Fast/Exact divergence comes only from the chunked reduction.
+    #[test]
+    fn fast_profile_exp_pass_matches_exact_given_same_dists() {
+        check("fast exp pass == exact exp pass", 32, |g| {
+            let n = g.usize_range(1, 12);
+            let il = g.f64_range(0.3, 5.0);
+            let x = Matrix::from_fn(n, g.usize_range(1, 6), |_, _| g.f64_range(0.0, 1.0));
+            let d2 = sq_dists(&x, &x);
+            let exact = rbf_kernel_from_sq_dists(&d2, il);
+            let fast = rbf_kernel_from_sq_dists_fast(&d2, il);
+            for (a, b) in exact.data().iter().zip(fast.data()) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("exp pass diverges: {a} vs {b}"));
                 }
             }
             Ok(())

@@ -28,6 +28,49 @@ pub mod update;
 use crate::linalg::{self, Matrix};
 use anyhow::Result;
 
+/// Which inner-kernel implementations the native propose pipeline uses.
+///
+/// * [`Exact`](Self::Exact) (default) — the sequential-reduction kernels
+///   with the full bit-exactness contract suite: append==scratch Cholesky,
+///   shared-D² fits, thread/shard-invariant scoring, recovery replay — all
+///   byte-for-byte.
+/// * [`Fast`](Self::Fast) — SIMD-friendly rewrites of the inner kernels
+///   (chunked-accumulator GEMM/dot, 4-wide triangular solves, unrolled exp
+///   pass, chunked score fold) plus the tiled `DistCache` mode in
+///   `BayesianCore`. The chunking scheme is *fixed* (depends only on
+///   element indices, never on `proposal_threads`/`proposal_shards`), so
+///   Fast output is still run-to-run deterministic and invariant across
+///   every threads × shards × scheduler setting — it is just not bit-equal
+///   to Exact. Property-tested against the scalar oracles (`rbf_pair`,
+///   sequential `dot`, the vector solves) at ≤1e-10 relative tolerance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelProfile {
+    /// Byte-for-byte the historical path — every bit-identity test applies.
+    #[default]
+    Exact,
+    /// Chunked SIMD-friendly kernels + tiled DistCache: deterministic and
+    /// chunking-invariant, tolerance-equal (≤1e-10) to Exact.
+    Fast,
+}
+
+impl KernelProfile {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "exact" => Some(Self::Exact),
+            "fast" => Some(Self::Fast),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`from_str`](Self::from_str) (journal header round trip).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Fast => "fast",
+        }
+    }
+}
+
 /// GP hyperparameters over the *encoded* (unit-cube) feature space.
 #[derive(Clone, Debug)]
 pub struct GpParams {
@@ -467,24 +510,70 @@ pub(crate) fn acquire_columns(
     xc: &Matrix,
     params: &GpParams,
 ) -> Result<AcquireOut> {
+    acquire_columns_profile(x, fit, xc, params, KernelProfile::Exact)
+}
+
+/// [`acquire_columns`] with the kernel profile dispatched per stage:
+/// `Exact` runs the sequential kernels byte-for-byte; `Fast` swaps in the
+/// chunked GEMM cross-kernel, the 4-wide triangular solves, and a 4-lane
+/// score fold. Both profiles keep every stage per-candidate-column
+/// independent, so the chunked/sharded fold contract holds for each.
+pub(crate) fn acquire_columns_profile(
+    x: &Matrix,
+    fit: &FitOut,
+    xc: &Matrix,
+    params: &GpParams,
+    profile: KernelProfile,
+) -> Result<AcquireOut> {
     let (n, m) = (x.rows(), xc.rows());
     anyhow::ensure!(fit.alpha.len() == n, "fit/x size mismatch");
     anyhow::ensure!(fit.chol.rows() == n, "fit/chol size mismatch");
     // kc: (n x m) cross-kernel.
-    let mut kc = kernel::rbf_kernel(x, xc, &params.inv_lengthscale);
+    let mut kc = match profile {
+        KernelProfile::Exact => kernel::rbf_kernel(x, xc, &params.inv_lengthscale),
+        KernelProfile::Fast => kernel::rbf_kernel_fast(x, xc, &params.inv_lengthscale),
+    };
     for v in kc.data_mut() {
         *v *= params.amp;
     }
     let mean = kc.matvec_t(&fit.alpha);
     // w = K^{-1} k_c via two triangular solves against L.
-    let w = linalg::solve_spd_mat(&fit.chol, &kc);
+    let w = match profile {
+        KernelProfile::Exact => linalg::solve_spd_mat(&fit.chol, &kc),
+        KernelProfile::Fast => linalg::solve_spd_mat_fast(&fit.chol, &kc),
+    };
     let mut var = vec![0.0; m];
-    for c in 0..m {
-        let mut s = 0.0;
-        for i in 0..n {
-            s += kc[(i, c)] * w[(i, c)];
+    match profile {
+        KernelProfile::Exact => {
+            for c in 0..m {
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += kc[(i, c)] * w[(i, c)];
+                }
+                var[c] = (params.amp - s).max(1e-10);
+            }
         }
-        var[c] = (params.amp - s).max(1e-10);
+        KernelProfile::Fast => {
+            // 4-lane chunked fold down each candidate column. The lane
+            // assignment depends only on the row index i, so the fold is
+            // deterministic and identical however columns are chunked.
+            for (c, v) in var.iter_mut().enumerate() {
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                let mut i = 0;
+                while i + 4 <= n {
+                    s0 += kc[(i, c)] * w[(i, c)];
+                    s1 += kc[(i + 1, c)] * w[(i + 1, c)];
+                    s2 += kc[(i + 2, c)] * w[(i + 2, c)];
+                    s3 += kc[(i + 3, c)] * w[(i + 3, c)];
+                    i += 4;
+                }
+                while i < n {
+                    s0 += kc[(i, c)] * w[(i, c)];
+                    i += 1;
+                }
+                *v = (params.amp - ((s0 + s1) + (s2 + s3))).max(1e-10);
+            }
+        }
     }
     let ucb = mean
         .iter()
@@ -544,17 +633,33 @@ pub fn acquire_parallel(
     params: &GpParams,
     threads: usize,
 ) -> Result<AcquireOut> {
+    acquire_parallel_profile(x, fit, xc, params, threads, KernelProfile::Exact)
+}
+
+/// [`acquire_parallel`] under an explicit [`KernelProfile`]. The chunking
+/// and fold arithmetic are profile-independent; within one profile the
+/// output stays byte-identical for every thread count (Fast's chunked
+/// kernels depend only on element indices, never on the thread layout).
+pub fn acquire_parallel_profile(
+    x: &Matrix,
+    fit: &FitOut,
+    xc: &Matrix,
+    params: &GpParams,
+    threads: usize,
+    profile: KernelProfile,
+) -> Result<AcquireOut> {
     let (n, m) = (x.rows(), xc.rows());
     let t = threads.clamp(1, m.max(1));
     if t <= 1 {
-        return acquire_columns(x, fit, xc, params);
+        return acquire_columns_profile(x, fit, xc, params, profile);
     }
     let ranges = chunk_ranges(m, t);
     let parts: Vec<Result<AcquireOut>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(ranges.len());
         for &(start, end) in &ranges {
             let sub = Matrix::from_fn(end - start, xc.cols(), |i, j| xc[(start + i, j)]);
-            handles.push(scope.spawn(move || acquire_columns(x, fit, &sub, params)));
+            handles
+                .push(scope.spawn(move || acquire_columns_profile(x, fit, &sub, params, profile)));
         }
         handles
             .into_iter()
@@ -619,6 +724,24 @@ pub fn acquire_sharded(
     exec: &ShardExec,
     fate_salt: u64,
 ) -> Result<AcquireOut> {
+    acquire_sharded_profile(x, fit, xc, params, shards, threads, exec, fate_salt, KernelProfile::Exact)
+}
+
+/// [`acquire_sharded`] under an explicit [`KernelProfile`] — within one
+/// profile the folded output is byte-identical for every shards × threads
+/// × scheduler-kind setting (and to the local profile paths).
+#[allow(clippy::too_many_arguments)]
+pub fn acquire_sharded_profile(
+    x: &Matrix,
+    fit: &FitOut,
+    xc: &Matrix,
+    params: &GpParams,
+    shards: usize,
+    threads: usize,
+    exec: &ShardExec,
+    fate_salt: u64,
+    profile: KernelProfile,
+) -> Result<AcquireOut> {
     use crate::scheduler::pool::{Fate, Job, JobPool, JobStatus};
     use std::time::{Duration, Instant};
 
@@ -630,7 +753,7 @@ pub fn acquire_sharded(
     if matches!(exec, ShardExec::Serial) || ranges.len() <= 1 {
         let parts = ranges
             .iter()
-            .map(|r| acquire_columns(x, fit, &sub(r), params))
+            .map(|r| acquire_columns_profile(x, fit, &sub(r), params, profile))
             .collect::<Result<Vec<_>>>()?;
         return fold_parts(n, m, parts);
     }
@@ -662,7 +785,7 @@ pub fn acquire_sharded(
     // the job's Done payload (stringified) so the root cause survives the
     // pool boundary instead of degrading to a bare "shard failed".
     let score = |r: &(usize, usize)| -> Option<Result<AcquireOut, String>> {
-        Some(acquire_columns(x, fit, &sub(r), params).map_err(|e| format!("{e:#}")))
+        Some(acquire_columns_profile(x, fit, &sub(r), params, profile).map_err(|e| format!("{e:#}")))
     };
     std::thread::scope(|scope| -> Result<AcquireOut> {
         let mut pool: JobPool<(usize, usize), Result<AcquireOut, String>> =
@@ -701,7 +824,8 @@ pub fn acquire_sharded(
                         // Fault-storm backstop: identical arithmetic run
                         // locally, so the byte-identity contract holds
                         // even under crash_prob = 1.
-                        done[idx] = Some(acquire_columns(x, fit, &sub(&ranges[idx]), params)?);
+                        done[idx] =
+                            Some(acquire_columns_profile(x, fit, &sub(&ranges[idx]), params, profile)?);
                         remaining -= 1;
                     }
                     JobStatus::Lost(_) => {
@@ -1049,6 +1173,90 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The Fast-profile acquisition contract: (1) within 1e-10 relative
+    /// tolerance of the Exact pipeline; (2) run-to-run deterministic;
+    /// (3) byte-identical across every `proposal_threads` ×
+    /// `proposal_shards` × scheduler-exec setting — Fast changes the
+    /// per-element arithmetic, never the chunk-invariance property.
+    #[test]
+    fn fast_profile_scoring_is_deterministic_across_threads_and_shards() {
+        let (x, y) = toy_problem(22, 3, 44);
+        let (yn, _, _) = normalize_y(&y);
+        let params = GpParams::new(3);
+        let mut gp = NativeGp;
+        let fit = gp.fit(&x, &yn, &params).unwrap();
+        let mut rng = Pcg64::new(17);
+        let xc = Matrix::from_fn(101, 3, |_, _| rng.next_f64()); // odd m: ragged chunks
+        let exact = acquire_columns_profile(&x, &fit, &xc, &params, KernelProfile::Exact).unwrap();
+        let fast = acquire_columns_profile(&x, &fit, &xc, &params, KernelProfile::Fast).unwrap();
+        // (1) tolerance-equal to Exact.
+        for c in 0..xc.rows() {
+            for (name, a, b) in [
+                ("ucb", exact.ucb[c], fast.ucb[c]),
+                ("mean", exact.mean[c], fast.mean[c]),
+                ("var", exact.var[c], fast.var[c]),
+            ] {
+                let tol = 1e-10 * a.abs().max(1.0);
+                assert!((a - b).abs() <= tol, "{name}[{c}]: exact {a} vs fast {b}");
+            }
+        }
+        // (2) run-to-run determinism.
+        let again = acquire_columns_profile(&x, &fit, &xc, &params, KernelProfile::Fast).unwrap();
+        assert_eq!(fast.ucb, again.ucb);
+        assert_eq!(fast.w, again.w);
+        // (3) thread/shard invariance, byte-for-byte against the 1-pass Fast result.
+        for threads in [1usize, 2, 3, 8] {
+            let par =
+                acquire_parallel_profile(&x, &fit, &xc, &params, threads, KernelProfile::Fast)
+                    .unwrap();
+            assert_eq!(par.ucb, fast.ucb, "{threads} threads: fast ucb deviates");
+            assert_eq!(par.var, fast.var, "{threads} threads: fast var deviates");
+            assert_eq!(par.w, fast.w, "{threads} threads: fast w deviates");
+        }
+        let faulty = crate::scheduler::celery::CelerySimConfig {
+            workers: 3,
+            base_latency_ms: 0.05,
+            straggler_prob: 0.3,
+            straggler_factor: 1000.0,
+            crash_prob: 0.3,
+            result_timeout: std::time::Duration::from_millis(2),
+        };
+        let execs = [
+            ShardExec::Serial,
+            ShardExec::Threaded,
+            ShardExec::CelerySim { config: faulty, seed: 5 },
+        ];
+        for exec in &execs {
+            for shards in [1usize, 3, 7] {
+                let out = acquire_sharded_profile(
+                    &x,
+                    &fit,
+                    &xc,
+                    &params,
+                    shards,
+                    2,
+                    exec,
+                    shards as u64,
+                    KernelProfile::Fast,
+                )
+                .unwrap();
+                let tag = format!("{exec:?} shards={shards}");
+                assert_eq!(out.ucb, fast.ucb, "{tag}: fast ucb deviates");
+                assert_eq!(out.var, fast.var, "{tag}: fast var deviates");
+                assert_eq!(out.w, fast.w, "{tag}: fast w deviates");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_profile_string_roundtrip() {
+        for p in [KernelProfile::Exact, KernelProfile::Fast] {
+            assert_eq!(KernelProfile::from_str(p.as_str()), Some(p));
+        }
+        assert_eq!(KernelProfile::from_str("simd"), None);
+        assert_eq!(KernelProfile::default(), KernelProfile::Exact);
     }
 
     #[test]

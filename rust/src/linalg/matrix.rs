@@ -25,6 +25,35 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Fixed 4-lane chunked dot product — the `Fast` kernel profile's
+/// reduction. Four independent accumulators stride the k dimension (lane =
+/// k mod 4, over the largest multiple-of-4 prefix; the remainder lands in
+/// lane 0), combined as `(s0 + s1) + (s2 + s3)`. The lane assignment
+/// depends only on k and the slice length — never on threads or shards —
+/// so the result is run-to-run deterministic and identical wherever the
+/// same two rows are reduced; it is just not bit-equal to the sequential
+/// [`dot`]. The independent accumulators are what lets the autovectorizer
+/// lift this to packed adds.
+#[inline]
+pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut k = 0;
+    while k + 4 <= n {
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+        k += 4;
+    }
+    while k < n {
+        s0 += a[k] * b[k];
+        k += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
 /// Row-major `rows x cols` matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -152,6 +181,26 @@ impl Matrix {
         out
     }
 
+    /// self @ other^T with the [`dot_fast`] chunked reduction — the `Fast`
+    /// kernel profile's GEMM. Output elements equal `dot_fast` of the two
+    /// rows exactly (same fixed chunking for every call site), so the Fast
+    /// path stays deterministic and thread/shard-invariant; they are within
+    /// rounding (≤1e-10 relative, property-tested) of the sequential
+    /// [`matmul_transb`](Self::matmul_transb) but not bit-equal to it.
+    pub fn matmul_transb_fast(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_transb shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        let m = other.rows;
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let out_row = &mut out.data[i * m..(i + 1) * m];
+            for (j, v) in out_row.iter_mut().enumerate() {
+                *v = dot_fast(arow, other.row(j));
+            }
+        }
+        out
+    }
+
     /// self @ v.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len(), "matvec shape mismatch");
@@ -266,6 +315,36 @@ mod tests {
                     let want = dot(a.row(i), b.row(j));
                     if out[(i, j)].to_bits() != want.to_bits() {
                         return Err(format!("({i},{j}): {} vs dot {}", out[(i, j)], want));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Fast-profile GEMM vs the sequential `dot` oracle: ≤1e-10 relative
+    /// error across all chunk-remainder widths, and bit-identical to
+    /// `dot_fast` (the fixed chunking is the determinism contract).
+    #[test]
+    fn fast_profile_matmul_matches_dot_oracle() {
+        use crate::util::proptest::check;
+        check("matmul_transb_fast ~= dot per element", 64, |g| {
+            let n = g.usize_range(1, 9);
+            let m = g.usize_range(1, 11);
+            let d = g.usize_range(1, 19); // covers 4k, 4k+1..4k+3 remainders
+            let a = Matrix::from_vec(n, d, g.vec_f64(n * d, -2.0, 2.0));
+            let b = Matrix::from_vec(m, d, g.vec_f64(m * d, -2.0, 2.0));
+            let out = a.matmul_transb_fast(&b);
+            for i in 0..n {
+                for j in 0..m {
+                    let want = dot(a.row(i), b.row(j));
+                    let got = out[(i, j)];
+                    let scale = want.abs().max(1.0);
+                    if (got - want).abs() > 1e-10 * scale {
+                        return Err(format!("({i},{j}): {got} vs dot {want}"));
+                    }
+                    if got.to_bits() != dot_fast(a.row(i), b.row(j)).to_bits() {
+                        return Err(format!("({i},{j}): not bit-equal to dot_fast"));
                     }
                 }
             }

@@ -11,7 +11,7 @@
 
 mod matrix;
 
-pub use matrix::{dot, Matrix};
+pub use matrix::{dot, dot_fast, Matrix};
 
 /// Pivot clamp shared by [`cholesky`] and [`chol_append_row`] (and mirrored
 /// by `python/compile/linalg.py`): a pivot below this is treated as a
@@ -222,6 +222,121 @@ pub fn solve_lower_t_mat(l: &Matrix, b: &Matrix) -> Matrix {
     x
 }
 
+/// [`solve_lower_mat`] with 4-wide source-row blocking — the `Fast` kernel
+/// profile's forward substitution. Four axpy updates fuse into one pass
+/// over the destination row (four independent products per element the
+/// autovectorizer can pack), with a 2-wide then 1-wide remainder. The
+/// block boundaries depend only on the row index `i` — never on `m`,
+/// threads, or shards — so column results keep the chunking-invariance
+/// property; output is within rounding of [`solve_lower_mat`]
+/// (property-tested vs the vector solves at ≤1e-9), not bit-equal.
+pub fn solve_lower_mat_fast(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_lower_mat shape mismatch");
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let (head, tail) = x.data_mut().split_at_mut(i * m);
+        let xi = &mut tail[..m];
+        let mut j = 0;
+        while j + 4 <= i {
+            let (l0, l1, l2, l3) = (l[(i, j)], l[(i, j + 1)], l[(i, j + 2)], l[(i, j + 3)]);
+            if l0 != 0.0 || l1 != 0.0 || l2 != 0.0 || l3 != 0.0 {
+                let xj0 = &head[j * m..(j + 1) * m];
+                let xj1 = &head[(j + 1) * m..(j + 2) * m];
+                let xj2 = &head[(j + 2) * m..(j + 3) * m];
+                let xj3 = &head[(j + 3) * m..(j + 4) * m];
+                for c in 0..m {
+                    xi[c] -= (l0 * xj0[c] + l1 * xj1[c]) + (l2 * xj2[c] + l3 * xj3[c]);
+                }
+            }
+            j += 4;
+        }
+        if j + 2 <= i {
+            let (l0, l1) = (l[(i, j)], l[(i, j + 1)]);
+            if l0 != 0.0 || l1 != 0.0 {
+                let xj0 = &head[j * m..(j + 1) * m];
+                let xj1 = &head[(j + 1) * m..(j + 2) * m];
+                for c in 0..m {
+                    xi[c] -= l0 * xj0[c] + l1 * xj1[c];
+                }
+            }
+            j += 2;
+        }
+        if j < i {
+            let lij = l[(i, j)];
+            if lij != 0.0 {
+                let xj = &head[j * m..(j + 1) * m];
+                for c in 0..m {
+                    xi[c] -= lij * xj[c];
+                }
+            }
+        }
+        let lii = l[(i, i)];
+        for v in xi {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// [`solve_lower_t_mat`] with 4-wide source-row blocking — the `Fast`
+/// kernel profile's back substitution. Same fixed block boundaries and
+/// chunking-invariance property as [`solve_lower_mat_fast`].
+pub fn solve_lower_t_mat_fast(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_lower_t_mat shape mismatch");
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        // Rows j > i are read-only sources; row i is the destination.
+        let (head, tail) = x.data_mut().split_at_mut((i + 1) * m);
+        let xi = &mut head[i * m..];
+        let mut j = i + 1;
+        while j + 4 <= n {
+            let (l0, l1, l2, l3) = (l[(j, i)], l[(j + 1, i)], l[(j + 2, i)], l[(j + 3, i)]);
+            if l0 != 0.0 || l1 != 0.0 || l2 != 0.0 || l3 != 0.0 {
+                let off = (j - i - 1) * m;
+                let xj0 = &tail[off..off + m];
+                let xj1 = &tail[off + m..off + 2 * m];
+                let xj2 = &tail[off + 2 * m..off + 3 * m];
+                let xj3 = &tail[off + 3 * m..off + 4 * m];
+                for c in 0..m {
+                    xi[c] -= (l0 * xj0[c] + l1 * xj1[c]) + (l2 * xj2[c] + l3 * xj3[c]);
+                }
+            }
+            j += 4;
+        }
+        if j + 2 <= n {
+            let (l0, l1) = (l[(j, i)], l[(j + 1, i)]);
+            if l0 != 0.0 || l1 != 0.0 {
+                let off = (j - i - 1) * m;
+                let xj0 = &tail[off..off + m];
+                let xj1 = &tail[off + m..off + 2 * m];
+                for c in 0..m {
+                    xi[c] -= l0 * xj0[c] + l1 * xj1[c];
+                }
+            }
+            j += 2;
+        }
+        if j < n {
+            let lji = l[(j, i)];
+            if lji != 0.0 {
+                let off = (j - i - 1) * m;
+                let xj = &tail[off..off + m];
+                for c in 0..m {
+                    xi[c] -= lji * xj[c];
+                }
+            }
+        }
+        let lii = l[(i, i)];
+        for v in xi {
+            *v /= lii;
+        }
+    }
+    x
+}
+
 /// Solve K x = b via Cholesky (K SPD).
 pub fn solve_spd(l: &Matrix, b: &[f64]) -> Vec<f64> {
     solve_lower_t(l, &solve_lower(l, b))
@@ -231,6 +346,11 @@ pub fn solve_spd(l: &Matrix, b: &[f64]) -> Vec<f64> {
 /// `w = K^{-1} k_c` of acquisition, without materializing K^{-1}.
 pub fn solve_spd_mat(l: &Matrix, b: &Matrix) -> Matrix {
     solve_lower_t_mat(l, &solve_lower_mat(l, b))
+}
+
+/// [`solve_spd_mat`] on the `Fast` kernel profile's 4-wide substitutions.
+pub fn solve_spd_mat_fast(l: &Matrix, b: &Matrix) -> Matrix {
+    solve_lower_t_mat_fast(l, &solve_lower_mat_fast(l, b))
 }
 
 /// K^{-1} from the Cholesky factor.
@@ -395,6 +515,78 @@ mod tests {
             "deviation {}",
             appended.max_abs_diff(&scratch)
         );
+    }
+
+    /// Fast-profile 4-wide substitutions vs two oracles: the sequential
+    /// vector solves (≤1e-9, the same bound the 2-wide kernels are held
+    /// to) and the `spd_inverse` reconstruction of K^{-1}B (≤1e-6·scale —
+    /// the inverse oracle itself carries that much conditioning error, see
+    /// `inverse_property`).
+    #[test]
+    fn fast_profile_solves_match_vector_and_inverse_oracles() {
+        check("solve_*_mat_fast == oracles", 48, |g| {
+            let n = g.usize_range(1, 14);
+            let m = g.usize_range(1, 9);
+            let k = spd_from_gen(g, n);
+            let l = cholesky(&k);
+            let b = Matrix::from_vec(n, m, g.vec_f64(n * m, -3.0, 3.0));
+            let fwd = solve_lower_mat_fast(&l, &b);
+            let bwd = solve_lower_t_mat_fast(&l, &b);
+            for c in 0..m {
+                let col: Vec<f64> = (0..n).map(|i| b[(i, c)]).collect();
+                let fwd_col = solve_lower(&l, &col);
+                let bwd_col = solve_lower_t(&l, &col);
+                for i in 0..n {
+                    if (fwd[(i, c)] - fwd_col[i]).abs() > 1e-9 {
+                        return Err(format!("fwd ({i},{c})"));
+                    }
+                    if (bwd[(i, c)] - bwd_col[i]).abs() > 1e-9 {
+                        return Err(format!("bwd ({i},{c})"));
+                    }
+                }
+            }
+            // Full K^{-1} B against the inverse oracle.
+            let x = solve_spd_mat_fast(&l, &b);
+            let want = spd_inverse(&l).matmul(&b);
+            for i in 0..n {
+                for c in 0..m {
+                    let scale = want[(i, c)].abs().max(1.0);
+                    if (x[(i, c)] - want[(i, c)]).abs() > 1e-6 * scale {
+                        return Err(format!(
+                            "spd ({i},{c}): {} vs {}",
+                            x[(i, c)],
+                            want[(i, c)]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The fast solves' column results must not depend on which columns
+    /// share the RHS matrix (the chunking-invariance half of the Fast
+    /// determinism contract: shard folds slice candidate columns).
+    #[test]
+    fn fast_profile_solve_columns_invariant_under_rhs_chunking() {
+        check("fast solve column == solo-column solve", 32, |g| {
+            let n = g.usize_range(2, 12);
+            let m = g.usize_range(2, 8);
+            let k = spd_from_gen(g, n);
+            let l = cholesky(&k);
+            let b = Matrix::from_vec(n, m, g.vec_f64(n * m, -3.0, 3.0));
+            let full = solve_spd_mat_fast(&l, &b);
+            for c in 0..m {
+                let solo = Matrix::from_fn(n, 1, |i, _| b[(i, c)]);
+                let got = solve_spd_mat_fast(&l, &solo);
+                for i in 0..n {
+                    if full[(i, c)].to_bits() != got[(i, 0)].to_bits() {
+                        return Err(format!("({i},{c}) differs when solved alone"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

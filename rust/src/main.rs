@@ -64,6 +64,10 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
         max_retries: args.get_usize("max-retries", 2)?,
         proposal_threads: args.get_usize("proposal-threads", 1)?,
         proposal_shards: args.get_usize("proposal-shards", 0)?,
+        kernel_profile: mango::gp::KernelProfile::from_str(
+            args.get_or("kernel-profile", "exact"),
+        )
+        .ok_or_else(|| anyhow!("bad --kernel-profile (exact | fast)"))?,
         fsync_every_n: args.get_usize("fsync-every", 0)?,
         celery: None,
     })
@@ -74,7 +78,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
         "max-surrogate-obs", "mode", "async-window", "max-retries", "proposal-threads",
-        "proposal-shards", "fsync-every", "journal",
+        "proposal-shards", "kernel-profile", "fsync-every", "journal",
     ])?;
     let name = args
         .get("workload")
@@ -133,6 +137,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
             result.iterations.len(),
             result.wall_ms
         );
+        let (builds, appends, evicts) = result.dist_cache;
+        if builds + appends + evicts > 0 {
+            println!("dist cache:  {builds} builds   {appends} appends   {evicts} tile evicts");
+        }
         if let Some(opt) = workload.optimum {
             println!("known optimum: {opt:.6} (regret {:.6})", result.best_objective - opt);
         }

@@ -64,10 +64,167 @@ pub struct Scored {
 struct DistCache {
     /// Encoded rows the distances cover.
     x: Matrix,
-    /// Row squared norms (sequential-`dot` reduction, appendable).
+    /// Row squared norms (sequential-`dot` reduction in the Exact
+    /// profile, `dot_fast` in Fast; appendable either way).
     norms: Vec<f64>,
-    /// Pairwise squared distances (n x n, symmetric).
-    d2: Matrix,
+    body: DistBody,
+}
+
+/// Storage layout of the cached D², selected by the kernel profile.
+enum DistBody {
+    /// `Exact` profile: dense symmetric n×n f64 — byte-for-byte the
+    /// pre-profile representation and arithmetic.
+    Dense(Matrix),
+    /// `Fast` profile: the lower triangle in fixed-size tiles.
+    Tiled(TiledDistCache),
+}
+
+/// Side length of the square tiles the Fast-profile distance cache is
+/// stored in. Row blocks are appended/evicted at this granularity.
+pub const DIST_TILE: usize = 64;
+
+/// Element type of the tiled cache's slabs. `F32` halves the footprint
+/// again (~25% of the dense f64 matrix) at ~1e-7 relative distance error —
+/// an opt-in for footprint-bound deployments and the bench's
+/// `footprint_bytes` measurements; the Fast hot path defaults to `F64`
+/// tiles (~50% footprint) so end-to-end proposals stay within the 1e-10
+/// tolerance contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileElem {
+    F64,
+    F32,
+}
+
+enum TileSlabs {
+    F64(Vec<Vec<f64>>),
+    F32(Vec<Vec<f32>>),
+}
+
+/// The Fast-profile distance cache: the lower triangle of the symmetric
+/// pairwise-D² matrix, stored as [`DIST_TILE`]² tiles grouped by row
+/// block. Row block `b` covers global rows `[b·T, min((b+1)·T, n))` and
+/// holds one contiguous slab of `(b+1)` tiles — tiles `(b, 0..=b)` — so
+/// the per-core footprint is ~50% of the dense f64 matrix (f64 tiles) or
+/// ~25% (f32), and the cache grows past any fixed artifact cap one row
+/// block at a time.
+///
+/// Growth reuses the dense cache's prefix-reuse/truncate-and-regrow state
+/// machine at *tile* granularity: a verified row prefix of `q` keeps the
+/// `q / T` fully-covered row blocks bitwise (appending rows never touches
+/// them — new columns against old rows land in the new rows' blocks via
+/// the symmetric read), evicts everything past them, and regrows. Every
+/// entry is computed with the same `sq_dist_from_parts ∘ dot_fast`
+/// arithmetic on every path, so a grown triangle is bit-identical to a
+/// from-scratch build over the same rows.
+pub struct TiledDistCache {
+    elem: TileElem,
+    /// Observation rows currently covered.
+    n: usize,
+    /// Per row block `b`: `(b+1)·T·T` elements, tile `(b, c)` at slab
+    /// offset `c·T·T`, entry `(i, j)` at `(i − bT)·T + (j − cT)`. Entries
+    /// above the diagonal (inside diagonal tiles) and past row/col `n` are
+    /// zero padding — never read.
+    slabs: TileSlabs,
+}
+
+impl TiledDistCache {
+    pub fn new(elem: TileElem) -> Self {
+        let slabs = match elem {
+            TileElem::F64 => TileSlabs::F64(Vec::new()),
+            TileElem::F32 => TileSlabs::F32(Vec::new()),
+        };
+        Self { elem, n: 0, slabs }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn nblocks(&self) -> usize {
+        match &self.slabs {
+            TileSlabs::F64(v) => v.len(),
+            TileSlabs::F32(v) => v.len(),
+        }
+    }
+
+    /// Tiles currently held (row block `b` holds `b + 1`).
+    pub fn tile_count(&self) -> u64 {
+        let nb = self.nblocks() as u64;
+        nb * (nb + 1) / 2
+    }
+
+    /// Bytes held by the tile slabs — the footprint the tiled mode trades
+    /// against the dense n²·8 matrix.
+    pub fn footprint_bytes(&self) -> usize {
+        match &self.slabs {
+            TileSlabs::F64(v) => v.iter().map(|s| s.len()).sum::<usize>() * 8,
+            TileSlabs::F32(v) => v.iter().map(|s| s.len()).sum::<usize>() * 4,
+        }
+    }
+
+    /// Bring the triangle up to date with the `n` rows of `x` given a
+    /// verified matching-row prefix of `q` (`q = 0` → full build). Keeps
+    /// the `q / T` fully-covered row blocks, evicts every block past them,
+    /// and regrows; returns the number of tiles evicted. `norms` must hold
+    /// the `dot_fast` row squared norms for all `n` rows.
+    pub fn sync(&mut self, x: &Matrix, norms: &[f64], q: usize) -> u64 {
+        let t = DIST_TILE;
+        let n = x.rows();
+        debug_assert_eq!(norms.len(), n);
+        let keep = (q / t).min(self.nblocks());
+        let dropped: u64 = (keep..self.nblocks()).map(|b| b as u64 + 1).sum();
+        match &mut self.slabs {
+            TileSlabs::F64(v) => v.truncate(keep),
+            TileSlabs::F32(v) => v.truncate(keep),
+        }
+        for b in keep..n.div_ceil(t) {
+            let row_hi = ((b + 1) * t).min(n);
+            let mut slab = vec![0.0f64; (b + 1) * t * t];
+            for c in 0..=b {
+                let col_hi = ((c + 1) * t).min(n);
+                let base = c * t * t;
+                for i in b * t..row_hi {
+                    for j in c * t..col_hi.min(i + 1) {
+                        slab[base + (i - b * t) * t + (j - c * t)] = kernel::sq_dist_from_parts(
+                            norms[i],
+                            norms[j],
+                            crate::linalg::dot_fast(x.row(i), x.row(j)),
+                        );
+                    }
+                }
+            }
+            match &mut self.slabs {
+                TileSlabs::F64(v) => v.push(slab),
+                TileSlabs::F32(v) => v.push(slab.iter().map(|&e| e as f32).collect()),
+            }
+        }
+        self.n = n;
+        dropped
+    }
+
+    /// D²(i, j), reading the lower triangle symmetrically (f32 slabs widen
+    /// on read).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        let t = DIST_TILE;
+        let (b, c) = (i / t, j / t);
+        let off = c * t * t + (i - b * t) * t + (j - c * t);
+        match &self.slabs {
+            TileSlabs::F64(v) => v[b][off],
+            TileSlabs::F32(v) => v[b][off] as f64,
+        }
+    }
+
+    /// Materialize the symmetric dense f64 matrix a fit consumes. A
+    /// transient per-fit allocation — the persistent footprint stays the
+    /// tiled triangle.
+    pub fn to_dense(&self) -> Matrix {
+        Matrix::from_fn(self.n, self.n, |i, j| self.get(i, j))
+    }
+
+    pub fn elem(&self) -> TileElem {
+        self.elem
+    }
 }
 
 /// Incrementally encoded history rows: re-encoding is deterministic, so a
@@ -96,6 +253,9 @@ pub struct BayesianCore {
     dist_builds: usize,
     /// Incremental distance appends performed (test introspection).
     dist_appends: usize,
+    /// Tiles evicted by the Fast profile's truncate-and-regrow (window
+    /// slides and divergent liar tails); always 0 in Exact.
+    dist_evicts: usize,
     /// Incrementally encoded history rows.
     enc_cache: EncodeCache,
     /// Iterations seen (drives the adaptive beta schedule).
@@ -118,6 +278,7 @@ impl BayesianCore {
             dist_cache: None,
             dist_builds: 0,
             dist_appends: 0,
+            dist_evicts: 0,
             enc_cache: EncodeCache::default(),
             rounds: 0,
         })
@@ -155,21 +316,27 @@ impl BayesianCore {
 
     /// Bring the shared squared-distance cache up to date with `x`
     /// (append-only prefix reuse; truncate-and-regrow on a divergent tail;
-    /// full rebuild on a broken prefix).
+    /// full rebuild on a broken prefix). The Exact profile keeps the dense
+    /// symmetric matrix and sequential-`dot` arithmetic byte-for-byte; the
+    /// Fast profile routes to the tiled triangle.
     fn update_dist_cache(&mut self, x: &Matrix) {
+        let fast = self.opts.kernel_profile == gp::KernelProfile::Fast;
         let n = x.rows();
         let q = self.dist_cache.as_ref().map_or(0, |c| {
-            if c.x.cols() != x.cols() {
+            if c.x.cols() != x.cols() || matches!(c.body, DistBody::Tiled(_)) != fast {
                 return 0;
             }
             let max = c.x.rows().min(n);
             (0..max).take_while(|&r| c.x.row(r) == x.row(r)).count()
         });
+        if fast {
+            return self.update_dist_cache_tiled(x, q);
+        }
         if q == 0 {
             // Window slide / first build: one GEMM-based distance build.
             let norms = kernel::row_sq_norms(x);
             let d2 = kernel::sq_dists(x, x);
-            self.dist_cache = Some(DistCache { x: x.clone(), norms, d2 });
+            self.dist_cache = Some(DistCache { x: x.clone(), norms, body: DistBody::Dense(d2) });
             self.dist_builds += 1;
             return;
         }
@@ -185,7 +352,9 @@ impl BayesianCore {
         for r in q..n {
             cache.norms.push(crate::linalg::dot(x.row(r), x.row(r)));
         }
-        let old = &cache.d2;
+        let DistBody::Dense(old) = &cache.body else {
+            unreachable!("exact profile always carries a dense body");
+        };
         let norms = &cache.norms;
         let d2 = Matrix::from_fn(n, n, |i, j| {
             if i < q && j < q {
@@ -198,7 +367,42 @@ impl BayesianCore {
                 )
             }
         });
-        cache.d2 = d2;
+        cache.body = DistBody::Dense(d2);
+        cache.x = x.clone();
+        self.dist_appends += 1;
+    }
+
+    /// Fast-profile cache maintenance: the same prefix-reuse state machine
+    /// at tile-row-block granularity. `q` is the verified matching-row
+    /// prefix against the current cache (0 when absent/broken).
+    fn update_dist_cache_tiled(&mut self, x: &Matrix, q: usize) {
+        let n = x.rows();
+        if q == 0 {
+            // Full (re)build: whatever the old triangle held is evicted.
+            if let Some(DistCache { body: DistBody::Tiled(t), .. }) = &self.dist_cache {
+                self.dist_evicts += t.tile_count() as usize;
+            }
+            let norms: Vec<f64> =
+                (0..n).map(|r| crate::linalg::dot_fast(x.row(r), x.row(r))).collect();
+            let mut tri = TiledDistCache::new(TileElem::F64);
+            tri.sync(x, &norms, 0);
+            self.dist_cache =
+                Some(DistCache { x: x.clone(), norms, body: DistBody::Tiled(tri) });
+            self.dist_builds += 1;
+            return;
+        }
+        let cache = self.dist_cache.as_mut().expect("q > 0 implies a cache");
+        if q == cache.x.rows() && q == n {
+            return; // same window, nothing to do
+        }
+        cache.norms.truncate(q);
+        for r in q..n {
+            cache.norms.push(crate::linalg::dot_fast(x.row(r), x.row(r)));
+        }
+        let DistBody::Tiled(tri) = &mut cache.body else {
+            unreachable!("fast profile always carries a tiled body");
+        };
+        self.dist_evicts += tri.sync(x, &cache.norms, q) as usize;
         cache.x = x.clone();
         self.dist_appends += 1;
     }
@@ -220,10 +424,21 @@ impl BayesianCore {
             // old scheme could evict the fixed-default key while hot grid
             // keys churned.
             .map(|i| self.chol_cache.remove(i));
-        let sq_dists = if kernel::iso_inv_ls(&params.inv_lengthscale, x.cols()).is_some() {
-            self.dist_cache.as_ref().filter(|c| c.x == *x).map(|c| &c.d2)
+        let cache_hit = if kernel::iso_inv_ls(&params.inv_lengthscale, x.cols()).is_some() {
+            self.dist_cache.as_ref().filter(|c| c.x == *x)
         } else {
             None
+        };
+        // Tiled triangles materialize a transient dense f64 view per fit;
+        // the dense body is borrowed in place (byte-for-byte the old path).
+        let tiled_dense = match cache_hit.map(|c| &c.body) {
+            Some(DistBody::Tiled(t)) => Some(t.to_dense()),
+            _ => None,
+        };
+        let sq_dists = match cache_hit.map(|c| &c.body) {
+            Some(DistBody::Dense(d2)) => Some(d2),
+            Some(DistBody::Tiled(_)) => tiled_dense.as_ref(),
+            None => None,
         };
         let (fit, state) = self.surrogate.fit_incremental_shared(x, y, params, state, sq_dists)?;
         if self.chol_cache.len() >= CHOL_CACHE_MAX {
@@ -308,23 +523,32 @@ impl BayesianCore {
         // for every setting. Artifact backends keep their own chunked
         // execution model.
         let acq_out = match self.opts.backend {
-            SurrogateBackend::Native if self.opts.proposal_shards > 0 => gp::acquire_sharded(
+            SurrogateBackend::Native if self.opts.proposal_shards > 0 => {
+                gp::acquire_sharded_profile(
+                    &x_obs,
+                    &fit,
+                    &xc,
+                    &params,
+                    self.opts.proposal_shards,
+                    self.scoring_threads(),
+                    &self.opts.shard_exec,
+                    // Round counter as the fate salt: the simulated
+                    // cluster's fault sequence evolves per propose round
+                    // instead of replaying one schedule forever
+                    // (wall-clock only — the scored output is
+                    // salt-independent).
+                    self.rounds as u64,
+                    self.opts.kernel_profile,
+                )?
+            }
+            SurrogateBackend::Native => gp::acquire_parallel_profile(
                 &x_obs,
                 &fit,
                 &xc,
                 &params,
-                self.opts.proposal_shards,
                 self.scoring_threads(),
-                &self.opts.shard_exec,
-                // Round counter as the fate salt: the simulated cluster's
-                // fault sequence evolves per propose round instead of
-                // replaying one schedule forever (wall-clock only — the
-                // scored output is salt-independent).
-                self.rounds as u64,
+                self.opts.kernel_profile,
             )?,
-            SurrogateBackend::Native => {
-                gp::acquire_parallel(&x_obs, &fit, &xc, &params, self.scoring_threads())?
-            }
             SurrogateBackend::Pjrt => self.surrogate.acquire(&x_obs, &fit, &xc, &params)?,
         };
         Ok(Scored { x_obs, cands, xc, acq: acq_out, params })
@@ -408,6 +632,19 @@ impl BayesianCore {
     /// Incremental distance-row appends performed so far.
     pub fn dist_matrix_appends(&self) -> usize {
         self.dist_appends
+    }
+
+    /// Tiles evicted by the Fast profile's truncate-and-regrow so far
+    /// (always 0 in Exact, which has no tiles).
+    pub fn dist_matrix_evicts(&self) -> usize {
+        self.dist_evicts
+    }
+
+    /// `(builds, appends, evicts)` for [`super::BatchOptimizer::dist_cache_stats`]
+    /// — the telemetry triple surfaced in `TuningResult` and the CLI
+    /// summary.
+    pub fn dist_cache_stats(&self) -> (u64, u64, u64) {
+        (self.dist_builds as u64, self.dist_appends as u64, self.dist_evicts as u64)
     }
 }
 
@@ -751,6 +988,163 @@ mod tests {
             live_state.factor(),
             "warmed factor must be bit-identical to the live liar fit's"
         );
+    }
+
+    /// The tiled triangle against the scalar D² oracle, plus its two
+    /// structural contracts: tile-granular growth is bit-identical to a
+    /// from-scratch build over the same rows, and f32 slabs hold ≤ ~55%
+    /// of the dense f64 footprint while staying within f32 precision.
+    #[test]
+    fn tiled_dist_cache_matches_oracle_and_grows_bitwise() {
+        use crate::linalg::{dot, dot_fast};
+        let (n, d) = (192, 5); // 3 full 64-row blocks
+        let mut rng = Pcg64::new(13);
+        let x = Matrix::from_fn(n, d, |_, _| rng.next_f64() * 3.0 - 1.0);
+        let norms: Vec<f64> = (0..n).map(|r| dot_fast(x.row(r), x.row(r))).collect();
+        let mut full = TiledDistCache::new(TileElem::F64);
+        assert_eq!(full.sync(&x, &norms, 0), 0, "fresh build evicts nothing");
+        assert_eq!(full.rows(), n);
+        assert_eq!(full.tile_count(), 6); // blocks of 1 + 2 + 3 tiles
+        // Every entry within 1e-10 relative of the scalar-dot oracle.
+        for i in (0..n).step_by(7) {
+            for j in (0..n).step_by(5) {
+                let want = kernel::sq_dist_from_parts(
+                    dot(x.row(i), x.row(i)),
+                    dot(x.row(j), x.row(j)),
+                    dot(x.row(i), x.row(j)),
+                );
+                let got = full.get(i, j);
+                assert!(
+                    (got - want).abs() <= 1e-10 * want.abs().max(1.0),
+                    "d2[{i},{j}]: tiled {got} vs oracle {want}"
+                );
+            }
+        }
+        // Grow from a 130-row prefix: block 0+1 (rows 0..128) survive
+        // bitwise, block 2 (2 rows + 1 partial-tile row block) is evicted
+        // and regrown; the result is bit-identical to the fresh build.
+        let sub = Matrix::from_fn(130, d, |i, j| x[(i, j)]);
+        let mut grown = TiledDistCache::new(TileElem::F64);
+        grown.sync(&sub, &norms[..130], 0);
+        assert_eq!(grown.rows(), 130);
+        let evicted = grown.sync(&x, &norms, 130);
+        assert_eq!(evicted, 3, "row block 2 holds tiles (2,0..=2)");
+        assert_eq!(grown.to_dense(), full.to_dense(), "growth must be bit-identical");
+        // f32 slabs: ≤ ~55% of the dense footprint (here exactly 25%:
+        // half for the triangle, half again for f32), f32-accurate.
+        let mut half = TiledDistCache::new(TileElem::F32);
+        half.sync(&x, &norms, 0);
+        let dense_bytes = n * n * 8;
+        assert_eq!(half.footprint_bytes(), 6 * DIST_TILE * DIST_TILE * 4);
+        assert!(
+            (half.footprint_bytes() as f64) <= 0.55 * dense_bytes as f64,
+            "f32 tiles must cut the dense footprint to ≤ ~55%"
+        );
+        // f64 tiles halve the footprint only asymptotically (tile-padding
+        // overhead shrinks as nblocks grows); here 3 blocks give 2/3.
+        assert_eq!(full.footprint_bytes(), 6 * DIST_TILE * DIST_TILE * 8);
+        for i in (0..n).step_by(11) {
+            for j in (0..n).step_by(13) {
+                let (a, b) = (full.get(i, j), half.get(i, j));
+                assert!(
+                    (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+                    "d2[{i},{j}]: f32 {b} too far from f64 {a}"
+                );
+            }
+        }
+    }
+
+    /// End-to-end Fast profile at the optimizer level: within tolerance of
+    /// Exact, byte-identical across `proposal_threads` ×
+    /// `proposal_shards`, run-to-run deterministic, and the tiled cache
+    /// follows the build/append/evict state machine (counters observable
+    /// through `dist_cache_stats`).
+    #[test]
+    fn fast_profile_fit_and_score_is_deterministic_and_near_exact() {
+        use crate::gp::{KernelProfile, ShardExec};
+        let space = svm_space();
+        let h = history_from(&space, 13, 57);
+        let run = |profile: KernelProfile, threads: usize, shards: usize| {
+            let opts = GpOptions {
+                kernel_profile: profile,
+                proposal_threads: threads,
+                proposal_shards: shards,
+                shard_exec: if shards > 0 { ShardExec::Threaded } else { ShardExec::Serial },
+                fixed_beta: Some(2.0),
+                mc_samples: 257, // odd: ragged chunk/lane boundaries
+                ..Default::default()
+            };
+            let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+            core.fit_and_score(&h, 1, &mut Pcg64::new(83)).unwrap()
+        };
+        let exact = run(KernelProfile::Exact, 1, 0);
+        let fast = run(KernelProfile::Fast, 1, 0);
+        assert_eq!(fast.xc, exact.xc, "candidate generation is profile-independent");
+        // Tolerance-equal to Exact end to end. The kernel-level contract
+        // is 1e-10; one Cholesky solve over the perturbed Gram can
+        // amplify by the (noise-jittered) condition number, so the
+        // end-to-end bound is 1e-8 relative.
+        for c in 0..fast.acq.ucb.len() {
+            for (name, a, b) in [
+                ("ucb", exact.acq.ucb[c], fast.acq.ucb[c]),
+                ("mean", exact.acq.mean[c], fast.acq.mean[c]),
+                ("var", exact.acq.var[c], fast.acq.var[c]),
+            ] {
+                assert!(
+                    (a - b).abs() <= 1e-8 * a.abs().max(1.0),
+                    "{name}[{c}]: exact {a} vs fast {b}"
+                );
+            }
+        }
+        // Run-to-run determinism and threads×shards byte-invariance.
+        for (threads, shards) in [(1, 0), (2, 0), (8, 0), (1, 1), (2, 3)] {
+            let s = run(KernelProfile::Fast, threads, shards);
+            let tag = format!("threads={threads} shards={shards}");
+            assert_eq!(s.acq.ucb, fast.acq.ucb, "{tag}: fast ucb deviates");
+            assert_eq!(s.acq.mean, fast.acq.mean, "{tag}: fast mean deviates");
+            assert_eq!(s.acq.var, fast.acq.var, "{tag}: fast var deviates");
+            assert_eq!(s.acq.w, fast.acq.w, "{tag}: fast w deviates");
+        }
+    }
+
+    /// The Fast profile's cache lifecycle through `fit_and_score`: the LML
+    /// grid shares one tiled build, append-only growth appends, and a
+    /// window slide rebuilds — evicting the old triangle's tiles into the
+    /// `dist_cache_stats` evict counter.
+    #[test]
+    fn fast_profile_tiled_cache_counts_builds_appends_and_evicts() {
+        use crate::gp::KernelProfile;
+        let space = svm_space();
+        let opts = GpOptions {
+            kernel_profile: KernelProfile::Fast,
+            tune_lengthscale: true,
+            fixed_beta: Some(2.0),
+            ..Default::default()
+        };
+        let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+        let h = history_from(&space, 14, 31);
+        let prefix = |n: usize| {
+            let mut p = History::new();
+            for i in 0..n {
+                p.push(h.configs()[i].clone(), h.values()[i]);
+            }
+            p
+        };
+        let mut rng = Pcg64::new(61);
+        core.fit_and_score(&prefix(10), 1, &mut rng).unwrap();
+        assert_eq!(core.dist_cache_stats(), (1, 0, 0), "grid shares one tiled build");
+        // Growth 10 → 14 rows: one append; both windows live inside one
+        // partial 64-row block, so the append evicts that 1 tile and
+        // regrows it (sub-tile granularity always rebuilds the partial
+        // block — row blocks only survive appends once fully covered).
+        core.fit_and_score(&h, 1, &mut rng).unwrap();
+        assert_eq!(core.dist_cache_stats(), (1, 1, 1), "growth appends, regrowing the tile");
+        core.fit_and_score(&h, 1, &mut rng).unwrap();
+        assert_eq!(core.dist_cache_stats(), (1, 1, 1), "same window: cache untouched");
+        // Window slide: prefix broken → rebuild, old triangle evicted
+        // (14 rows < one 64-row block → exactly 1 more tile).
+        core.fit_and_score(&h.recent(9), 1, &mut rng).unwrap();
+        assert_eq!(core.dist_cache_stats(), (2, 1, 2), "slide rebuilds and evicts");
     }
 
     #[test]

@@ -107,6 +107,10 @@ impl BatchOptimizer for ClusteringOptimizer {
         self.core.rehydrate_pending(history, pending, rounds)
     }
 
+    fn dist_cache_stats(&self) -> (u64, u64, u64) {
+        self.core.dist_cache_stats()
+    }
+
     fn name(&self) -> &'static str {
         "clustering"
     }

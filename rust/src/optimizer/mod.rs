@@ -193,6 +193,16 @@ pub trait BatchOptimizer {
         self.rehydrate(history, rounds)
     }
 
+    /// Distance-cache lifecycle counters `(builds, appends, evicts)` since
+    /// construction — full O(n·q·d) rebuilds, prefix-reusing appends, and
+    /// (tiled mode) tiles dropped by truncate-and-regrow. Surfaced through
+    /// [`crate::coordinator::results::TuningResult`] so cache-thrash
+    /// regressions are observable instead of silent. Optimizers without a
+    /// distance cache report zeros.
+    fn dist_cache_stats(&self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -300,6 +310,13 @@ pub struct GpOptions {
     /// mirrors its scheduler kind here (serial / threaded pool /
     /// celery-sim with fault fates).
     pub shard_exec: crate::gp::ShardExec,
+    /// Arithmetic profile for the propose hot path (native backend only).
+    /// `Exact` (default) keeps every bit-exactness contract; `Fast` trades
+    /// bit-equality with Exact for SIMD-friendly chunked kernels and a
+    /// tiled mixed-precision distance cache, while staying run-to-run
+    /// deterministic and threads/shards-invariant (see README "Kernel
+    /// profiles").
+    pub kernel_profile: crate::gp::KernelProfile,
 }
 
 impl Default for GpOptions {
@@ -315,6 +332,7 @@ impl Default for GpOptions {
             proposal_threads: 1,
             proposal_shards: 0,
             shard_exec: crate::gp::ShardExec::Serial,
+            kernel_profile: crate::gp::KernelProfile::Exact,
         }
     }
 }

@@ -91,6 +91,10 @@ impl BatchOptimizer for ThompsonOptimizer {
         self.core.rehydrate_pending(history, pending, rounds)
     }
 
+    fn dist_cache_stats(&self) -> (u64, u64, u64) {
+        self.core.dist_cache_stats()
+    }
+
     fn name(&self) -> &'static str {
         "thompson"
     }

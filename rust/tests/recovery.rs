@@ -175,6 +175,95 @@ fn panic_mid_objective_leaves_a_resumable_journal() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Satellite: when every worker dies without reporting (a real
+/// worker-thread panic, not a simulated fault fate), the event loop's
+/// bail-out journals each still-in-flight proposal as a terminal
+/// `Lost(Crashed)` before the scope join propagates the panic — so a
+/// resume agrees with the crashed process instead of silently
+/// re-enqueueing work the dead run already concluded.
+#[test]
+fn worker_panic_bailout_journals_lost_crashed_terminals() {
+    use mango::scheduler::LossReason;
+    use std::panic::AssertUnwindSafe;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let space = svm_space();
+    let cfg = TunerConfig {
+        optimizer: OptimizerKind::Random,
+        num_iterations: 6,
+        batch_size: 3,
+        backend: SurrogateBackend::Native,
+        scheduler: SchedulerKind::Threaded,
+        workers: 1, // a single panic kills the whole pool
+        seed: 9,
+        mode: ExecutionMode::Async,
+        ..Default::default()
+    };
+    let path = tmp("worker_panic");
+    let calls = AtomicUsize::new(0);
+    let crashed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let mut t = Tuner::new(space.clone(), cfg.clone()).with_journal(&path);
+        t.maximize(|c: &Config| {
+            if calls.fetch_add(1, Ordering::SeqCst) + 1 == 3 {
+                panic!("injected worker panic");
+            }
+            quad(c)
+        })
+    }));
+    assert!(crashed.is_err(), "the scope join must propagate the worker panic");
+
+    // The crashed process's own journal concludes everything in flight.
+    let prefix = read_journal(&path).unwrap().events;
+    let crashed_pids: Vec<u64> = prefix
+        .iter()
+        .filter_map(|e| match e {
+            JournalEvent::AsyncComplete {
+                pid,
+                outcome: EventOutcome::Lost(LossReason::Crashed),
+                ..
+            } => Some(*pid),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        !crashed_pids.is_empty(),
+        "in-flight proposals at the pool collapse must be journaled as Lost(Crashed)"
+    );
+
+    // Resume completes the remaining budget and honors the terminals.
+    let resumed = Tuner::resume_from(space, &path).unwrap().maximize(quad).unwrap();
+    assert_eq!(
+        resumed.evaluations + resumed.lost as usize,
+        18,
+        "6 iterations x 3: every proposal concludes exactly once, got {} + {}",
+        resumed.evaluations,
+        resumed.lost
+    );
+    assert!(
+        resumed.lost >= crashed_pids.len() as u64,
+        "replayed Lost(Crashed) terminals must be counted, not re-run"
+    );
+
+    // Stitched journal audit: a concluded proposal is never re-enqueued by
+    // the resumed process, and concludes exactly once overall.
+    let stitched = read_journal(&path).unwrap().events;
+    for pid in &crashed_pids {
+        let resubmitted_after_crash = stitched[prefix.len()..]
+            .iter()
+            .any(|e| matches!(e, JournalEvent::AsyncSubmit { pid: p, .. } if p == pid));
+        assert!(!resubmitted_after_crash, "proposal {pid} was re-enqueued after its terminal");
+        let terminals = stitched
+            .iter()
+            .filter(|e| {
+                matches!(e, JournalEvent::AsyncComplete { pid: p, outcome, .. }
+                         if p == pid && !matches!(outcome, EventOutcome::Resubmitted(_)))
+            })
+            .count();
+        assert_eq!(terminals, 1, "proposal {pid} concluded {terminals} times");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 /// `Lost(Crashed)` work in flight at the kill: the retry budget is a
 /// per-proposal property of the *run*, not of one process lifetime — a
 /// resumed run must honor retries already consumed before the crash and
