@@ -10,6 +10,7 @@
 //! fault statistics and scheduler latency.
 //!
 //! Run: `cargo run --release --example celery_cluster`
+#![allow(clippy::disallowed_methods)] // example wall-timing is clock-permitted (lint rule R1)
 
 use mango::exp::workloads;
 use mango::prelude::*;

@@ -10,6 +10,7 @@
 //!
 //! Run: `cargo bench --bench async_vs_sync`
 //! Knobs: MANGO_ITERS (8), MANGO_BATCH (8), MANGO_REPEATS (3)
+#![allow(clippy::disallowed_methods)] // bench timing is clock-permitted (lint rule R1)
 
 use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
 use mango::exp::workloads;

@@ -1,5 +1,6 @@
 //! Shared helpers for the figure/ablation bench harnesses.
 #![allow(dead_code)] // shared across benches; each uses a subset
+#![allow(clippy::disallowed_methods)] // bench timing is clock-permitted (lint rule R1)
 //!
 //! Env knobs (keep default runs fast; the paper-scale settings are noted in
 //! EXPERIMENTS.md):

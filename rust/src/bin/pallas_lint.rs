@@ -1,0 +1,159 @@
+//! `pallas-lint` — the static contract checker, as a CI-runnable binary.
+//!
+//! ```text
+//! cargo run --bin pallas-lint -- [--deny] [--json] [--write-baseline]
+//!                                [--root <src-dir>] [--baseline <file>]
+//! ```
+//!
+//! * default: scan, print findings (human text), exit 0.
+//! * `--deny`: exit 1 on any new (non-pragma'd, non-baselined) finding —
+//!   the CI mode. Stale baseline entries warn but do not fail; the test
+//!   suite pins the baseline count so it can only shrink.
+//! * `--json`: machine-readable report on stdout.
+//! * `--write-baseline`: grandfather every current finding into the
+//!   baseline file and exit (entries get a generic reason — edit in a real
+//!   justification, or better, fix/pragma the finding).
+//! * `--root`: the source root to scan (default: auto-locate `rust/src`
+//!   from the working directory, falling back to the compile-time crate
+//!   dir, so it works from the workspace root, from `rust/`, and from CI).
+//! * `--baseline`: baseline path (default: `<root>/../lint-baseline.json`,
+//!   i.e. `rust/lint-baseline.json`).
+
+use mango::lint::{self, report, Baseline};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    root: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    json: bool,
+    deny: bool,
+    write_baseline: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: None,
+        baseline: None,
+        json: false,
+        deny: false,
+        write_baseline: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => args.json = true,
+            "--deny" => args.deny = true,
+            "--write-baseline" => args.write_baseline = true,
+            "--root" => {
+                args.root = Some(PathBuf::from(
+                    it.next().ok_or("--root needs a directory argument")?,
+                ))
+            }
+            "--baseline" => {
+                args.baseline = Some(PathBuf::from(
+                    it.next().ok_or("--baseline needs a file argument")?,
+                ))
+            }
+            "--help" | "-h" => {
+                println!(
+                    "pallas-lint [--deny] [--json] [--write-baseline] \
+                     [--root <src-dir>] [--baseline <file>]"
+                );
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+/// Locate `rust/src` without assuming the working directory: workspace
+/// root and `rust/` both work, and the compile-time manifest dir is the
+/// backstop for odd CI layouts.
+fn locate_src_root() -> Option<PathBuf> {
+    let cwd = std::env::current_dir().ok()?;
+    for cand in [cwd.join("rust/src"), cwd.join("src")] {
+        // `lib.rs` distinguishes the real source root from e.g. a stray
+        // `src/` directory elsewhere.
+        if cand.join("lib.rs").is_file() {
+            return Some(cand);
+        }
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    manifest.join("lib.rs").is_file().then_some(manifest)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let Some(root) = args.root.or_else(locate_src_root) else {
+        eprintln!(
+            "pallas-lint: could not locate the source root (run from the \
+             workspace root or pass --root rust/src)"
+        );
+        return ExitCode::from(2);
+    };
+    let baseline_path = args
+        .baseline
+        .unwrap_or_else(|| root.parent().unwrap_or(&root).join("lint-baseline.json"));
+
+    if args.write_baseline {
+        let report = match lint::lint_tree(&root, None) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("pallas-lint: scanning {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        };
+        let b = Baseline::from_findings(
+            &report.findings,
+            "grandfathered by --write-baseline; fix or pragma before touching this line",
+        );
+        if let Err(e) = b.save(&baseline_path) {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+        println!(
+            "pallas-lint: wrote {} entr{} to {}",
+            b.entries.len(),
+            if b.entries.len() == 1 { "y" } else { "ies" },
+            baseline_path.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let baseline = if baseline_path.is_file() {
+        match Baseline::load(&baseline_path) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("pallas-lint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        None
+    };
+    let report = match lint::lint_tree(&root, baseline.as_ref()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if args.json {
+        print!("{}", report::json(&report));
+    } else {
+        print!("{}", report::human(&report));
+    }
+    if args.deny && !report.is_clean() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

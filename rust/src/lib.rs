@@ -51,6 +51,7 @@ pub mod ml;
 pub mod benchfn;
 pub mod exp;
 pub mod cli;
+pub mod lint;
 
 /// Convenience re-exports covering the common tuning workflow.
 pub mod prelude {

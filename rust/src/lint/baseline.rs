@@ -1,0 +1,221 @@
+//! The grandfather file: `lint-baseline.json`.
+//!
+//! A baseline entry matches a finding on `(rule, file, excerpt)` — the
+//! line number is recorded for humans but ignored for matching, so
+//! unrelated edits that shift a grandfathered line don't break the build.
+//! Matching is multiset-style: each entry absolves at most one finding.
+//!
+//! Entries that match nothing are reported as **stale** — the tree got
+//! cleaner; regenerate with `--write-baseline` (the committed test suite
+//! asserts the exact count, so the baseline can only shrink).
+
+use super::rules::{Finding, RuleId};
+use crate::config::json::{self, Json};
+use std::fs;
+use std::path::Path;
+
+pub const BASELINE_VERSION: f64 = 1.0;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineEntry {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub reason: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    /// Build a baseline that grandfathers exactly the given findings.
+    pub fn from_findings(findings: &[Finding], reason: &str) -> Self {
+        Self {
+            entries: findings
+                .iter()
+                .map(|f| BaselineEntry {
+                    rule: f.rule,
+                    file: f.file.clone(),
+                    line: f.line,
+                    excerpt: f.excerpt.clone(),
+                    reason: reason.to_string(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let root = json::parse(text).map_err(|e| e.to_string())?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("baseline missing `version`")?;
+        if version != BASELINE_VERSION {
+            return Err(format!(
+                "baseline version {version} unsupported (expected {BASELINE_VERSION})"
+            ));
+        }
+        let raw = root
+            .get("findings")
+            .and_then(Json::as_arr)
+            .ok_or("baseline missing `findings` array")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for (i, e) in raw.iter().enumerate() {
+            let field = |k: &str| -> Result<String, String> {
+                e.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or(format!("baseline entry {i}: missing string `{k}`"))
+            };
+            let rule_txt = field("rule")?;
+            let rule = RuleId::parse(&rule_txt)
+                .ok_or(format!("baseline entry {i}: unknown rule `{rule_txt}`"))?;
+            let reason = field("reason")?;
+            if reason.trim().is_empty() {
+                return Err(format!("baseline entry {i}: empty reason"));
+            }
+            entries.push(BaselineEntry {
+                rule,
+                file: field("file")?,
+                line: e.get("line").and_then(Json::as_usize).unwrap_or(0),
+                excerpt: field("excerpt")?,
+                reason,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Serialize: one entry per line, keys in fixed order, stable output
+    /// for reviewable diffs.
+    pub fn to_json_string(&self) -> String {
+        let mut s = String::from("{\n  \"version\": 1,\n  \"findings\": [");
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str("\n    ");
+            let obj = [
+                ("rule", Json::Str(e.rule.as_str().to_string())),
+                ("file", Json::Str(e.file.clone())),
+                ("line", Json::Num(e.line as f64)),
+                ("excerpt", Json::Str(e.excerpt.clone())),
+                ("reason", Json::Str(e.reason.clone())),
+            ];
+            s.push('{');
+            for (j, (k, v)) in obj.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("{}: {v}", Json::Str(k.to_string())));
+            }
+            s.push('}');
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        fs::write(path, self.to_json_string())
+            .map_err(|e| format!("writing {}: {e}", path.display()))
+    }
+
+    /// Split findings into (new, baselined-count); returns the stale
+    /// (unmatched) entries as the third element.
+    pub fn apply(&self, findings: Vec<Finding>) -> (Vec<Finding>, usize, Vec<BaselineEntry>) {
+        let mut used = vec![false; self.entries.len()];
+        let mut new = Vec::new();
+        let mut absolved = 0usize;
+        for f in findings {
+            let hit = self.entries.iter().enumerate().find(|(i, e)| {
+                !used[*i] && e.rule == f.rule && e.file == f.file && e.excerpt == f.excerpt
+            });
+            match hit {
+                Some((i, _)) => {
+                    used[i] = true;
+                    absolved += 1;
+                }
+                None => new.push(f),
+            }
+        }
+        let stale = self
+            .entries
+            .iter()
+            .zip(&used)
+            .filter(|(_, u)| !**u)
+            .map(|(e, _)| e.clone())
+            .collect();
+        (new, absolved, stale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: RuleId, file: &str, line: usize, excerpt: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.into(),
+            line,
+            excerpt: excerpt.into(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let b = Baseline::from_findings(
+            &[f(RuleId::R3, "runtime/pjrt.rs", 31, "use std::collections::HashMap;")],
+            "lookup-only cache",
+        );
+        let text = b.to_json_string();
+        let b2 = Baseline::parse(&text).expect("parse");
+        assert_eq!(b2.entries, b.entries);
+    }
+
+    #[test]
+    fn matching_ignores_line_numbers() {
+        let b = Baseline::from_findings(&[f(RuleId::R1, "gp/mod.rs", 10, "x()")], "ok");
+        let (new, absolved, stale) = b.apply(vec![f(RuleId::R1, "gp/mod.rs", 99, "x()")]);
+        assert!(new.is_empty());
+        assert_eq!(absolved, 1);
+        assert!(stale.is_empty());
+    }
+
+    #[test]
+    fn multiset_semantics_one_entry_one_finding() {
+        let b = Baseline::from_findings(&[f(RuleId::R1, "gp/mod.rs", 10, "x()")], "ok");
+        let (new, absolved, _) = b.apply(vec![
+            f(RuleId::R1, "gp/mod.rs", 10, "x()"),
+            f(RuleId::R1, "gp/mod.rs", 11, "x()"),
+        ]);
+        assert_eq!(absolved, 1, "one entry absolves exactly one finding");
+        assert_eq!(new.len(), 1);
+    }
+
+    #[test]
+    fn stale_entries_are_surfaced() {
+        let b = Baseline::from_findings(&[f(RuleId::R2, "a.rs", 1, "gone()")], "fixed since");
+        let (new, absolved, stale) = b.apply(vec![]);
+        assert!(new.is_empty());
+        assert_eq!(absolved, 0);
+        assert_eq!(stale.len(), 1);
+    }
+
+    #[test]
+    fn rejects_unknown_rule_and_empty_reason() {
+        let bad_rule = r#"{"version": 1, "findings": [{"rule": "P0", "file": "a", "line": 1, "excerpt": "x", "reason": "r"}]}"#;
+        assert!(Baseline::parse(bad_rule).is_err(), "P0 must not be baselineable");
+        let bad_reason = r#"{"version": 1, "findings": [{"rule": "R1", "file": "a", "line": 1, "excerpt": "x", "reason": "  "}]}"#;
+        assert!(Baseline::parse(bad_reason).is_err());
+    }
+}

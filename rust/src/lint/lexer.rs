@@ -1,0 +1,363 @@
+//! A minimal Rust source lexer for `pallas-lint`: splits every line into
+//! *code text* and *comment text* so the rule scanners never match inside
+//! comments, string/char literals, or doc text, and marks the line ranges
+//! belonging to `#[cfg(test)] mod … { … }` blocks so panic/lock rules can
+//! exempt test code.
+//!
+//! This is deliberately not a full Rust lexer — it only has to be exact
+//! about the four things that would make substring rules lie:
+//!
+//! * line comments (`//`) and *nested* block comments (`/* /* */ */`),
+//! * string literals with escapes (`"a\"b"`), including byte strings,
+//! * raw strings with hash fences (`r#"…"#`, `br##"…"##`),
+//! * char literals vs lifetimes (`'x'` / `'\n'` vs `'a` and `'static`).
+//!
+//! Stripped regions are replaced by spaces, so column positions and line
+//! counts in findings match the original file.
+
+/// One source line, split into its code and comment parts.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Source text with comments, string contents, and char-literal
+    /// contents blanked to spaces (delimiters too). Same length as the
+    /// original line.
+    pub code: String,
+    /// The concatenated comment text of this line (line + block comments,
+    /// without the `//` / `/*` markers). Pragmas are parsed from this.
+    pub comment: String,
+    /// True if this line sits inside a `#[cfg(test)] mod … { … }` region.
+    pub in_test: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    /// Inside `/* … */`; payload = nesting depth.
+    Block(u32),
+    /// Inside `"…"`; `raw_hashes = None` for escaped strings, `Some(n)`
+    /// for raw strings fenced by `n` hashes.
+    Str { raw_hashes: Option<u32> },
+    /// Inside a char literal `'…'`.
+    Char,
+}
+
+/// Lex a whole file into per-line code/comment splits.
+pub fn lex(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for raw in src.lines() {
+        let (line, next) = lex_line(raw, mode);
+        mode = match next {
+            // Strings and chars do not continue across a newline except
+            // raw strings and escaped multi-line strings — both of which
+            // we keep open. A char literal never spans lines; reset.
+            Mode::Char => Mode::Code,
+            m => m,
+        };
+        out.push(line);
+    }
+    mark_test_regions(&mut out);
+    out
+}
+
+fn lex_line(raw: &str, mut mode: Mode) -> (Line, Mode) {
+    let bytes: Vec<char> = raw.chars().collect();
+    let n = bytes.len();
+    let mut code = String::with_capacity(n);
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = bytes[i];
+        match mode {
+            Mode::Block(depth) => {
+                if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                    mode = Mode::Block(depth + 1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && i + 1 < n && bytes[i + 1] == '/' {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Str { raw_hashes } => {
+                match raw_hashes {
+                    None => {
+                        if c == '\\' && i + 1 < n {
+                            code.push_str("  ");
+                            i += 2;
+                        } else if c == '"' {
+                            code.push(' ');
+                            mode = Mode::Code;
+                            i += 1;
+                        } else {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                    Some(h) => {
+                        if c == '"' && closes_raw(&bytes, i, h) {
+                            for _ in 0..(1 + h as usize) {
+                                code.push(' ');
+                            }
+                            i += 1 + h as usize;
+                            mode = Mode::Code;
+                        } else {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            Mode::Char => {
+                if c == '\\' && i + 1 < n {
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    code.push(' ');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                if c == '/' && i + 1 < n && bytes[i + 1] == '/' {
+                    // Line comment: the rest of the line is comment text.
+                    comment.push_str(&raw[byte_pos(raw, i + 2)..]);
+                    for _ in i..n {
+                        code.push(' ');
+                    }
+                    i = n;
+                } else if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                    mode = Mode::Block(1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    code.push(' ');
+                    mode = Mode::Str { raw_hashes: None };
+                    i += 1;
+                } else if is_raw_string_start(&bytes, i) {
+                    let (consumed, hashes) = raw_string_open(&bytes, i);
+                    for _ in 0..consumed {
+                        code.push(' ');
+                    }
+                    i += consumed;
+                    mode = Mode::Str { raw_hashes: Some(hashes) };
+                } else if c == 'b' && i + 1 < n && bytes[i + 1] == '"' {
+                    code.push_str("  ");
+                    i += 2;
+                    mode = Mode::Str { raw_hashes: None };
+                } else if c == '\'' {
+                    // Lifetime (`'a`, `'static`) or char literal (`'x'`,
+                    // `'\n'`)? A lifetime is `'` + ident NOT followed by a
+                    // closing `'`.
+                    let is_lifetime = i + 1 < n
+                        && (bytes[i + 1].is_alphabetic() || bytes[i + 1] == '_')
+                        && !(i + 2 < n && bytes[i + 2] == '\'');
+                    if is_lifetime {
+                        code.push(c);
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        mode = Mode::Char;
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // `b` prefix before a raw string is consumed by is_raw_string_start;
+    // pad code to the original char length if a 2-char consume ran past.
+    while code.chars().count() < n {
+        code.push(' ');
+    }
+    (Line { code, comment, in_test: false }, mode)
+}
+
+/// `raw` is char-indexed by the lexer; translate a char index into a byte
+/// offset for slicing the original line.
+fn byte_pos(raw: &str, char_idx: usize) -> usize {
+    raw.char_indices().nth(char_idx).map(|(b, _)| b).unwrap_or(raw.len())
+}
+
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    let start = if b[i] == 'b' { i + 1 } else { i };
+    if b.get(start) != Some(&'r') {
+        return false;
+    }
+    // Don't treat identifiers ending in r/br (e.g. `var"`) as raw strings.
+    if i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_') {
+        return false;
+    }
+    let mut j = start + 1;
+    while b.get(j) == Some(&'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&'"')
+}
+
+/// Returns (chars consumed by the opener, hash count).
+fn raw_string_open(b: &[char], i: usize) -> (usize, u32) {
+    let start = if b[i] == 'b' { i + 1 } else { i };
+    let mut j = start + 1;
+    let mut hashes = 0u32;
+    while b.get(j) == Some(&'#') {
+        j += 1;
+        hashes += 1;
+    }
+    // consume: optional b, r, hashes, opening quote
+    (j + 1 - i, hashes)
+}
+
+fn closes_raw(b: &[char], i: usize, hashes: u32) -> bool {
+    for k in 0..hashes as usize {
+        if b.get(i + 1 + k) != Some(&'#') {
+            return false;
+        }
+    }
+    true
+}
+
+/// Mark every line inside `#[cfg(test)] mod … { … }` regions. Tracks brace
+/// depth over the *code* text (strings/comments already blanked), arms on a
+/// line containing the literal attribute `#[cfg(test)]`, and opens a region
+/// at the next `{`, closing when depth returns to the opening level.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut armed_line = 0usize;
+    // (depth the region opened at)
+    let mut region_open: Option<i64> = None;
+    for idx in 0..lines.len() {
+        let code = lines[idx].code.clone();
+        if region_open.is_none() && code.contains("#[cfg(test)]") {
+            armed = true;
+            armed_line = idx;
+        }
+        let was_inside = region_open.is_some() || armed;
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if armed && region_open.is_none() {
+                        region_open = Some(depth - 1);
+                        armed = false;
+                        // The attribute and `mod` header lines count too.
+                        for l in lines.iter_mut().take(idx).skip(armed_line) {
+                            l.in_test = true;
+                        }
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(open) = region_open {
+                        if depth <= open {
+                            region_open = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if was_inside || region_open.is_some() || armed {
+            lines[idx].in_test = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_stripped() {
+        let c = codes("let x = 1; // Instant::now()\nlet y = 2;");
+        assert!(!c[0].contains("Instant::now"));
+        assert!(c[0].contains("let x = 1;"));
+        assert!(c[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_are_stripped() {
+        let c = codes("a /* x /* HashMap */ y */ b\nplain");
+        assert!(c[0].contains('a') && c[0].contains('b'));
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[1].contains("plain"));
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let c = codes("pre /* one\n SystemTime \n*/ post");
+        assert!(!c[1].contains("SystemTime"));
+        assert!(c[2].contains("post"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let c = codes(r#"let s = "Instant::now()"; let t = s;"#);
+        assert!(!c[0].contains("Instant::now"));
+        assert!(c[0].contains("let t = s;"));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let c = codes(r#"let s = "a\"HashMap"; keep"#);
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("keep"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = codes(r##"let s = r#"thread_rng " still"#; after"##);
+        assert!(!c[0].contains("thread_rng"));
+        assert!(c[0].contains("after"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = codes("let a: &'static str = x; let q = '\"'; let b = 1;");
+        // The lifetime must not open a char literal that swallows the line.
+        assert!(c[0].contains("let b = 1;"));
+        // The quote char's content is blanked.
+        assert!(!c[0].contains('"'));
+    }
+
+    #[test]
+    fn comment_text_is_captured_for_pragmas() {
+        let l = lex("x(); // pallas-lint: allow(R1, \"why\")");
+        assert!(l[0].comment.contains("pallas-lint: allow(R1"));
+    }
+
+    #[test]
+    fn cfg_test_region_marking() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let l = lex(src);
+        assert!(!l[0].in_test, "code before the region");
+        assert!(l[1].in_test, "attribute line");
+        assert!(l[2].in_test, "mod header");
+        assert!(l[3].in_test, "body");
+        assert!(l[4].in_test, "closing brace");
+        assert!(!l[5].in_test, "code after the region");
+    }
+
+    #[test]
+    fn nested_braces_keep_region_open() {
+        let src = "#[cfg(test)]\nmod t {\n    fn b() { if x { y(); } }\n    fn d() {}\n}\nfn after() {}\n";
+        let l = lex(src);
+        assert!(l[3].in_test, "second fn still inside");
+        assert!(!l[5].in_test);
+    }
+}

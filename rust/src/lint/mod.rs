@@ -1,0 +1,229 @@
+//! # `pallas-lint` — static contract enforcement for the deterministic core
+//!
+//! The crash+resume story (persist/), the bit-exactness contracts (gp/,
+//! linalg/), and seed-replay determinism (space/, optimizer/) all rest on
+//! source-level invariants that no test can fully police: no wall-clock
+//! reads in pure modules, no NaN-unsafe float sorts, no hash-order
+//! iteration on decision paths, no ambient entropy, no panics on recovery
+//! paths. This module checks them *statically* — it lexes every file under
+//! `rust/src`, strips comments and string literals, and pattern-scans the
+//! remaining code per [`rules`] (R1–R6), before any toolchain ever runs a
+//! test.
+//!
+//! Run it via the dedicated binary:
+//!
+//! ```text
+//! cargo run --bin pallas-lint -- --deny        # CI gate: fail on new findings
+//! cargo run --bin pallas-lint -- --json        # machine-readable findings
+//! cargo run --bin pallas-lint -- --write-baseline
+//! ```
+//!
+//! Justified violations are suppressed inline:
+//!
+//! ```text
+//! let cache = HashMap::new(); // pallas-lint: allow(R3, "lookup-only, never iterated")
+//! ```
+//!
+//! and pre-existing ones are grandfathered in `rust/lint-baseline.json`
+//! ([`baseline`]), which the test suite pins to an exact count so it can
+//! only shrink.
+
+pub mod baseline;
+pub mod lexer;
+pub mod pragma;
+pub mod report;
+pub mod rules;
+
+pub use baseline::{Baseline, BaselineEntry};
+pub use rules::{Finding, RuleId};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The outcome of linting a tree: `findings` are *new* (neither suppressed
+/// by a pragma nor absolved by the baseline).
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+    pub baselined: usize,
+    pub stale_baseline: Vec<BaselineEntry>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// What `--deny` gates on: any new finding (malformed pragmas are
+    /// findings too, rule `P0`).
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Lint one file's source text. Returns (findings, suppressed-count).
+/// `rel_path` is the path relative to the source root, forward slashes —
+/// it decides which rule scopes apply.
+pub fn lint_source(rel_path: &str, source: &str) -> (Vec<Finding>, usize) {
+    let raw_lines: Vec<&str> = source.lines().collect();
+    let lines = lexer::lex(source);
+
+    // Per-line effective pragmas: a pragma applies to its own line, or —
+    // on a comment-only line — to the next code-bearing line.
+    let mut effective: Vec<Vec<pragma::Pragma>> = vec![Vec::new(); lines.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut carried: Vec<pragma::Pragma> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let (pragmas, errors) = pragma::parse_line(&line.comment);
+        for e in errors {
+            findings.push(Finding {
+                rule: RuleId::P0,
+                file: rel_path.to_string(),
+                line: i + 1,
+                excerpt: rules::excerpt_of(raw_lines.get(i).copied().unwrap_or("")),
+                message: e.message,
+            });
+        }
+        let code_bearing = !line.code.trim().is_empty();
+        if code_bearing {
+            effective[i].append(&mut carried);
+        }
+        if pragmas.is_empty() {
+            continue;
+        }
+        if code_bearing {
+            effective[i].extend(pragmas);
+        } else {
+            carried.extend(pragmas);
+        }
+    }
+
+    let mut suppressed = 0usize;
+    for f in rules::scan_file(rel_path, &raw_lines, &lines) {
+        let allowed = effective
+            .get(f.line - 1)
+            .is_some_and(|ps| ps.iter().any(|p| p.rule == f.rule));
+        if allowed {
+            suppressed += 1;
+        } else {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    (findings, suppressed)
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for deterministic
+/// finding order (the linter holds itself to R3).
+fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(&dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `src_root`, applying `baseline` if given.
+pub fn lint_tree(src_root: &Path, baseline: Option<&Baseline>) -> io::Result<LintReport> {
+    let files = collect_rs_files(src_root)?;
+    let mut all = Vec::new();
+    let mut suppressed = 0usize;
+    for path in &files {
+        let source = fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let (f, s) = lint_source(&rel, &source);
+        all.extend(f);
+        suppressed += s;
+    }
+    let (findings, baselined, stale_baseline) = match baseline {
+        Some(b) => b.apply(all),
+        None => (all, 0, Vec::new()),
+    };
+    Ok(LintReport {
+        findings,
+        suppressed,
+        baselined,
+        stale_baseline,
+        files_scanned: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_line_pragma_suppresses() {
+        let src = "use std::collections::HashMap; // pallas-lint: allow(R3, \"lookup-only\")\n";
+        let (f, s) = lint_source("gp/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s, 1);
+    }
+
+    #[test]
+    fn standalone_pragma_covers_next_code_line() {
+        let src = "// pallas-lint: allow(R3, \"lookup-only\")\nuse std::collections::HashMap;\n";
+        let (f, s) = lint_source("gp/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s, 1);
+    }
+
+    #[test]
+    fn pragma_does_not_leak_past_next_code_line() {
+        let src = "// pallas-lint: allow(R3, \"only the first\")\n\
+                   use std::collections::HashMap;\n\
+                   use std::collections::HashSet;\n";
+        let (f, s) = lint_source("gp/x.rs", src);
+        assert_eq!(s, 1);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn wrong_rule_pragma_does_not_suppress() {
+        let src = "use std::collections::HashMap; // pallas-lint: allow(R1, \"wrong rule\")\n";
+        let (f, s) = lint_source("gp/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::R3);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn malformed_pragma_is_a_p0_finding() {
+        let src = "let x = 1; // pallas-lint: allow(R3)\n";
+        let (f, _) = lint_source("util/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::P0);
+    }
+
+    #[test]
+    fn out_of_scope_files_are_clean() {
+        // HashMap in a non-decision-path module is fine.
+        let (f, _) = lint_source("cli/mod.rs", "use std::collections::HashMap;\n");
+        assert!(f.is_empty());
+        // Clock reads in scheduler are fine (R1 scope excludes it).
+        let (f, _) = lint_source("scheduler/pool.rs", "let t = Instant::now();\n");
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn findings_in_comments_and_strings_do_not_fire() {
+        let src = "// Instant::now() is forbidden here\nlet s = \"SystemTime\";\n";
+        let (f, _) = lint_source("gp/mod.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Inline suppression pragmas.
+//!
+//! Syntax (inside any comment):
+//!
+//! ```text
+//! // pallas-lint: allow(R3, "membership-only: set order never observed")
+//! ```
+//!
+//! A pragma suppresses findings of the named rule on **its own line**, or
+//! — when the pragma's line carries no code — on the **next code-bearing
+//! line**. The reason string is mandatory: an allow without a justification
+//! is itself reported (`P0`), so suppressions can't rot silently.
+
+use super::rules::RuleId;
+
+/// One parsed `allow` pragma.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    pub rule: RuleId,
+    pub reason: String,
+}
+
+/// A pragma that failed to parse — reported as a finding so it fails
+/// `--deny` instead of silently not suppressing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PragmaError {
+    pub message: String,
+}
+
+const MARKER: &str = "pallas-lint:";
+
+/// Parse every pragma in one line's comment text.
+pub fn parse_line(comment: &str) -> (Vec<Pragma>, Vec<PragmaError>) {
+    let mut pragmas = Vec::new();
+    let mut errors = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(MARKER) {
+        rest = &rest[pos + MARKER.len()..];
+        match parse_one(rest) {
+            Ok(p) => pragmas.push(p),
+            Err(msg) => errors.push(PragmaError { message: msg }),
+        }
+    }
+    (pragmas, errors)
+}
+
+fn parse_one(after_marker: &str) -> Result<Pragma, String> {
+    let s = after_marker.trim_start();
+    let Some(body) = s.strip_prefix("allow") else {
+        return Err(format!(
+            "expected `allow(<rule>, \"<reason>\")` after `{MARKER}`, got `{}`",
+            s.chars().take(40).collect::<String>()
+        ));
+    };
+    let body = body.trim_start();
+    let Some(body) = body.strip_prefix('(') else {
+        return Err("expected `(` after `allow`".into());
+    };
+    let Some(close) = body.find(')') else {
+        return Err("unterminated `allow(` pragma".into());
+    };
+    let inner = &body[..close];
+    let Some(comma) = inner.find(',') else {
+        return Err("allow pragma needs a justification: `allow(R_, \"why\")`".into());
+    };
+    let rule_txt = inner[..comma].trim();
+    let Some(rule) = RuleId::parse(rule_txt) else {
+        return Err(format!("unknown rule `{rule_txt}` in allow pragma"));
+    };
+    let reason_txt = inner[comma + 1..].trim();
+    let reason = reason_txt
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .map(str::trim)
+        .filter(|r| !r.is_empty());
+    let Some(reason) = reason else {
+        return Err("allow pragma reason must be a non-empty quoted string".into());
+    };
+    Ok(Pragma { rule, reason: reason.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_pragma() {
+        let (p, e) = parse_line(r#" pallas-lint: allow(R3, "lookup-only cache") "#);
+        assert!(e.is_empty());
+        assert_eq!(p, vec![Pragma { rule: RuleId::R3, reason: "lookup-only cache".into() }]);
+    }
+
+    #[test]
+    fn reason_is_mandatory() {
+        let (p, e) = parse_line("pallas-lint: allow(R1)");
+        assert!(p.is_empty());
+        assert_eq!(e.len(), 1);
+        assert!(e[0].message.contains("justification"));
+    }
+
+    #[test]
+    fn empty_reason_is_rejected() {
+        let (p, e) = parse_line(r#"pallas-lint: allow(R1, "")"#);
+        assert!(p.is_empty());
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn unknown_rule_is_reported() {
+        let (_, e) = parse_line(r#"pallas-lint: allow(R9, "nope")"#);
+        assert_eq!(e.len(), 1);
+        assert!(e[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn multiple_pragmas_on_one_line() {
+        let (p, e) = parse_line(
+            r#"pallas-lint: allow(R5, "a") pallas-lint: allow(R6, "b")"#,
+        );
+        assert!(e.is_empty());
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].rule, RuleId::R5);
+        assert_eq!(p[1].rule, RuleId::R6);
+    }
+
+    #[test]
+    fn ordinary_comments_are_ignored() {
+        let (p, e) = parse_line("just a normal comment mentioning lint");
+        assert!(p.is_empty() && e.is_empty());
+    }
+}

@@ -1,0 +1,85 @@
+//! Rendering a [`LintReport`](super::LintReport) as human text or JSON
+//! (`--json`, for tooling/CI annotations).
+
+use super::LintReport;
+use crate::config::json::Json;
+use std::fmt::Write as _;
+
+pub fn human(report: &LintReport) -> String {
+    let mut s = String::new();
+    for f in &report.findings {
+        let _ = writeln!(
+            s,
+            "{}:{} [{}] {}\n    {}\n    {}",
+            f.file,
+            f.line,
+            f.rule.as_str(),
+            f.rule.title(),
+            f.excerpt,
+            f.message
+        );
+    }
+    for e in &report.stale_baseline {
+        let _ = writeln!(
+            s,
+            "stale baseline entry: {} [{}] `{}` no longer matches — regenerate with \
+             --write-baseline (the baseline only shrinks)",
+            e.file,
+            e.rule.as_str(),
+            e.excerpt
+        );
+    }
+    let _ = writeln!(
+        s,
+        "pallas-lint: {} new finding(s), {} suppressed by pragma, {} baselined, \
+         {} stale baseline entr{}, {} file(s) scanned",
+        report.findings.len(),
+        report.suppressed,
+        report.baselined,
+        report.stale_baseline.len(),
+        if report.stale_baseline.len() == 1 { "y" } else { "ies" },
+        report.files_scanned,
+    );
+    s
+}
+
+pub fn json(report: &LintReport) -> String {
+    let findings = report
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::Str(f.rule.as_str().to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("excerpt", Json::Str(f.excerpt.clone())),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        })
+        .collect();
+    let stale = report
+        .stale_baseline
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("rule", Json::Str(e.rule.as_str().to_string())),
+                ("file", Json::Str(e.file.clone())),
+                ("excerpt", Json::Str(e.excerpt.clone())),
+            ])
+        })
+        .collect();
+    let root = Json::obj(vec![
+        ("findings", Json::Arr(findings)),
+        ("stale_baseline", Json::Arr(stale)),
+        (
+            "counts",
+            Json::obj(vec![
+                ("new", Json::Num(report.findings.len() as f64)),
+                ("suppressed", Json::Num(report.suppressed as f64)),
+                ("baselined", Json::Num(report.baselined as f64)),
+                ("files_scanned", Json::Num(report.files_scanned as f64)),
+            ]),
+        ),
+    ]);
+    format!("{root}\n")
+}

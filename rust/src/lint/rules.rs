@@ -1,0 +1,344 @@
+//! The R1–R6 contract rules: what is scanned for, and where.
+//!
+//! Scopes are path prefixes relative to the source root (`rust/src`), so
+//! rules track module boundaries, not syntax. The ROADMAP contracts these
+//! encode:
+//!
+//! * **R1 wall-clock purity** — propose/persist/replay arithmetic must be
+//!   a pure function of (history, seed). Clock reads live only in
+//!   scheduler/coordinator telemetry and `util/timer.rs`.
+//! * **R2 NaN-safe ordering** — `partial_cmp().unwrap()` panics on NaN,
+//!   which is reachable from user objectives; f64 sorts go through
+//!   `total_cmp` / `stats::nan_as_worst` (the PR 2 sweep).
+//! * **R3 deterministic iteration** — hash-order iteration in a decision
+//!   path silently breaks seed-replay bit-identity. Decision-path modules
+//!   use `BTreeMap`/`Vec`, or prove a hash container lookup-only with a
+//!   pragma.
+//! * **R4 seeded randomness only** — every draw flows from
+//!   `util::rng::Pcg64` so journals replay; ambient entropy is forbidden.
+//! * **R5 no-panic recovery paths** — a panic in `persist/recover.rs` or
+//!   inside a scheduler worker closure turns a recoverable event into a
+//!   silent `Lost`; these paths return `Result` instead.
+//! * **R6 atomics/ordering hygiene** — `Ordering::Relaxed` and bare
+//!   `.lock().unwrap()` in `scheduler/` need a written justification
+//!   (poison propagation is usually the right call — say so).
+
+use super::lexer::Line;
+
+/// Identifier of one contract rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    R6,
+    /// Malformed suppression pragma (not a contract rule; never
+    /// baselineable or suppressible).
+    P0,
+}
+
+impl RuleId {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::R1 => "R1",
+            RuleId::R2 => "R2",
+            RuleId::R3 => "R3",
+            RuleId::R4 => "R4",
+            RuleId::R5 => "R5",
+            RuleId::R6 => "R6",
+            RuleId::P0 => "P0",
+        }
+    }
+
+    /// Parse a rule name as written in pragmas and baselines. `P0` is
+    /// intentionally not parseable: malformed pragmas must be fixed, not
+    /// suppressed or grandfathered.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        match s {
+            "R1" => Some(RuleId::R1),
+            "R2" => Some(RuleId::R2),
+            "R3" => Some(RuleId::R3),
+            "R4" => Some(RuleId::R4),
+            "R5" => Some(RuleId::R5),
+            "R6" => Some(RuleId::R6),
+            _ => None,
+        }
+    }
+
+    pub fn title(&self) -> &'static str {
+        match self {
+            RuleId::R1 => "wall-clock purity",
+            RuleId::R2 => "NaN-safe ordering",
+            RuleId::R3 => "deterministic iteration",
+            RuleId::R4 => "seeded randomness only",
+            RuleId::R5 => "no-panic recovery path",
+            RuleId::R6 => "atomics/locking hygiene",
+            RuleId::P0 => "malformed pragma",
+        }
+    }
+}
+
+/// One rule violation at a source location. `file` is relative to the
+/// scanned source root, forward slashes; `line` is 1-indexed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub message: String,
+}
+
+/// Modules whose arithmetic must be a pure function of (history, seed):
+/// no wall-clock reads (R1). Everything else — scheduler, coordinator,
+/// util/timer, exp, cli — may read the clock for telemetry.
+const R1_PURE_MODULES: &[&str] =
+    &["gp/", "optimizer/", "space/", "acq/", "persist/", "linalg/"];
+
+/// Decision-path modules for R3: anything whose iteration order can reach
+/// proposal numerics, journal bytes, or replayed state.
+const R3_DECISION_PATH: &[&str] =
+    &["gp/", "optimizer/", "space/", "acq/", "persist/", "linalg/", "runtime/"];
+
+/// R4 exemption: the one module that owns seed expansion.
+const R4_EXEMPT: &[&str] = &["util/rng.rs"];
+
+/// R5 scope: the replay path and the scheduler files whose closures run on
+/// worker threads (where a panic degrades to a silent `Lost`).
+const R5_FILES: &[&str] = &[
+    "persist/recover.rs",
+    "scheduler/pool.rs",
+    "scheduler/threaded.rs",
+    "scheduler/celery.rs",
+];
+
+const R6_SCOPE: &[&str] = &["scheduler/"];
+
+fn in_scope(file: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| {
+        if p.ends_with('/') {
+            file.starts_with(p)
+        } else {
+            file == *p
+        }
+    })
+}
+
+/// True if `needle` occurs at `idx` delimited by non-identifier chars.
+fn word_at(code: &str, idx: usize, needle: &str) -> bool {
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    let before_ok = idx == 0 || !code[..idx].chars().next_back().is_some_and(ident);
+    let after = idx + needle.len();
+    let after_ok = after >= code.len() || !code[after..].chars().next().is_some_and(ident);
+    before_ok && after_ok
+}
+
+fn word_occurrences(code: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(needle) {
+        let idx = start + pos;
+        if word_at(code, idx, needle) {
+            out.push(idx);
+        }
+        start = idx + needle.len();
+    }
+    out
+}
+
+/// Run every rule over one lexed file. `raw_lines` provides the excerpts;
+/// `lines` is the lexed code/comment split (same length).
+pub fn scan_file(file: &str, raw_lines: &[&str], lines: &[Line]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let finding = |rule: RuleId, line_no: usize, message: String, raw: &str| Finding {
+        rule,
+        file: file.to_string(),
+        line: line_no,
+        excerpt: excerpt_of(raw),
+        message,
+    };
+
+    for (i, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let raw = raw_lines.get(i).copied().unwrap_or("");
+        let line_no = i + 1;
+
+        // R1 — wall-clock purity in pure modules (tests included: a test
+        // that needs a clock belongs next to the scheduler, not the math).
+        if in_scope(file, R1_PURE_MODULES) {
+            for pat in ["Instant::now", "SystemTime"] {
+                for _ in word_occurrences(code, pat) {
+                    out.push(finding(
+                        RuleId::R1,
+                        line_no,
+                        format!(
+                            "`{pat}` in a pure module — propose/persist/replay \
+                             arithmetic must not read the clock (telemetry lives in \
+                             scheduler/, coordinator/, util/timer.rs)"
+                        ),
+                        raw,
+                    ));
+                }
+            }
+        }
+
+        // R2 — NaN-unsafe float ordering, everywhere. The unwrap may sit
+        // on the next line; search the rest of the statement (up to `;`).
+        for idx in word_occurrences(code, "partial_cmp") {
+            let mut tail = code[idx + "partial_cmp".len()..].to_string();
+            if !tail.contains(';') {
+                if let Some(next) = lines.get(i + 1) {
+                    tail.push(' ');
+                    tail.push_str(next.code.trim());
+                }
+            }
+            let stmt = tail.split(';').next().unwrap_or("");
+            if stmt.contains(".unwrap()") || stmt.contains(".expect(") {
+                out.push(finding(
+                    RuleId::R2,
+                    line_no,
+                    "`partial_cmp(..).unwrap()` panics on NaN (reachable from user \
+                     objectives) — use `total_cmp`, or `stats::nan_as_worst` for \
+                     objective ranks"
+                        .to_string(),
+                    raw,
+                ));
+            }
+        }
+
+        // R3 — hash containers in decision-path modules (tests included:
+        // assertions that iterate a hash container flake the same way).
+        if in_scope(file, R3_DECISION_PATH) {
+            for pat in ["HashMap", "HashSet"] {
+                for _ in word_occurrences(code, pat) {
+                    out.push(finding(
+                        RuleId::R3,
+                        line_no,
+                        format!(
+                            "`{pat}` in a decision-path module — iteration order is \
+                             nondeterministic; use BTreeMap/BTreeSet/Vec, or prove it \
+                             lookup-only with `// pallas-lint: allow(R3, \"…\")`"
+                        ),
+                        raw,
+                    ));
+                }
+            }
+        }
+
+        // R4 — ambient entropy, everywhere but util/rng.rs.
+        if !in_scope(file, R4_EXEMPT) {
+            for pat in ["thread_rng", "from_entropy", "OsRng", "getrandom"] {
+                for _ in word_occurrences(code, pat) {
+                    out.push(finding(
+                        RuleId::R4,
+                        line_no,
+                        format!(
+                            "`{pat}` — all randomness must flow from a journaled \
+                             `util::rng::Pcg64` seed so runs replay bit-exactly"
+                        ),
+                        raw,
+                    ));
+                }
+            }
+            if code.contains("rand::random") {
+                out.push(finding(
+                    RuleId::R4,
+                    line_no,
+                    "`rand::random` — all randomness must flow from a journaled \
+                     `util::rng::Pcg64` seed so runs replay bit-exactly"
+                        .to_string(),
+                    raw,
+                ));
+            }
+        }
+
+        // R5 — panics on recovery/worker paths (non-test code only; tests
+        // panic by design). `.lock().unwrap()` is R6's finding, not R5's.
+        if !line.in_test && in_scope(file, R5_FILES) {
+            for pat in [".unwrap()", ".expect("] {
+                for idx in occurrences(code, pat) {
+                    if pat == ".unwrap()" && code[..idx].ends_with(".lock()") {
+                        continue;
+                    }
+                    out.push(finding(
+                        RuleId::R5,
+                        line_no,
+                        format!(
+                            "`{pat}` on a recovery/worker path — a panic here becomes \
+                             a silent `Lost`; bubble a Result (or justify with an R5 \
+                             pragma)"
+                        ),
+                        raw,
+                    ));
+                }
+            }
+            for pat in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+                for _ in word_occurrences(code, pat) {
+                    out.push(finding(
+                        RuleId::R5,
+                        line_no,
+                        format!(
+                            "`{pat}` on a recovery/worker path — a panic here becomes \
+                             a silent `Lost`; bubble a Result (or justify with an R5 \
+                             pragma)"
+                        ),
+                        raw,
+                    ));
+                }
+            }
+        }
+
+        // R6 — locking/atomics hygiene in scheduler/ (non-test code).
+        if !line.in_test && in_scope(file, R6_SCOPE) {
+            for _ in occurrences(code, ".lock().unwrap()") {
+                out.push(finding(
+                    RuleId::R6,
+                    line_no,
+                    "bare `.lock().unwrap()` in scheduler code — justify the poison \
+                     policy with `// pallas-lint: allow(R6, \"…\")` or handle the \
+                     PoisonError"
+                        .to_string(),
+                    raw,
+                ));
+            }
+            for _ in occurrences(code, "Ordering::Relaxed") {
+                out.push(finding(
+                    RuleId::R6,
+                    line_no,
+                    "`Ordering::Relaxed` in scheduler code — justify why relaxed \
+                     ordering is safe with `// pallas-lint: allow(R6, \"…\")` or use \
+                     SeqCst/Acquire-Release"
+                        .to_string(),
+                    raw,
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn occurrences(code: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(needle) {
+        out.push(start + pos);
+        start = start + pos + needle.len();
+    }
+    out
+}
+
+/// A finding's excerpt: the trimmed raw source line, truncated on a char
+/// boundary. Baseline entries match on this, so edits that move a line
+/// without changing it keep matching.
+pub fn excerpt_of(raw: &str) -> String {
+    const MAX: usize = 160;
+    let t = raw.trim();
+    if t.chars().count() <= MAX {
+        t.to_string()
+    } else {
+        let cut: String = t.chars().take(MAX).collect();
+        format!("{cut}…")
+    }
+}

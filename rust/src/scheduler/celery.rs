@@ -219,6 +219,7 @@ impl Scheduler for CelerySimScheduler {
                 let tx = tx.clone();
                 let broker = &broker;
                 scope.spawn(move || loop {
+                    // pallas-lint: allow(R6, "broker poisoning means a sibling sim-worker panicked; re-panicking lets the scope join report it")
                     let task = { broker.lock().unwrap().pop_front() };
                     let Some(task) = task else { break };
                     std::thread::sleep(task.latency);

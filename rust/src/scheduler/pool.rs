@@ -114,6 +114,7 @@ impl<P: Send, R: Send> JobPool<P, R> {
 
     pub(crate) fn submit_job(&mut self, job: Job<P>) {
         let (lock, cv) = &*self.broker;
+        // pallas-lint: allow(R6, "broker poisoning means a worker panicked mid-pop; propagating the panic to the submitter is the contract")
         lock.lock().unwrap().queue.push_back(job);
         cv.notify_one();
         self.in_flight += 1;
@@ -160,6 +161,7 @@ impl<P: Send, R: Send> JobPool<P, R> {
     pub(crate) fn cancel_pending(&mut self) -> Vec<TaskId> {
         let (lock, _) = &*self.broker;
         let cancelled: Vec<TaskId> =
+            // pallas-lint: allow(R6, "broker poisoning means a worker panicked mid-pop; propagating the panic to the canceller is the contract")
             lock.lock().unwrap().queue.drain(..).map(|t| t.id).collect();
         self.in_flight -= cancelled.len();
         self.stats.cancelled += cancelled.len() as u64;
@@ -174,6 +176,7 @@ impl<P: Send, R: Send> JobPool<P, R> {
 impl<P, R> Drop for JobPool<P, R> {
     fn drop(&mut self) {
         let (lock, cv) = &*self.broker;
+        // pallas-lint: allow(R6, "poison on drop: the panicking worker already doomed the scope join; a double panic here would abort, but only during unwind of a dead run")
         let mut st = lock.lock().unwrap();
         st.shutdown = true;
         // Nobody will collect queued work now — don't make the scope join
@@ -191,6 +194,7 @@ fn worker_loop<P: Send, R: Send>(
     loop {
         let job = {
             let (lock, cv) = &**broker;
+            // pallas-lint: allow(R6, "a poisoned broker means a sibling worker panicked holding the queue; this worker re-panics and the scope join reports it")
             let mut st = lock.lock().unwrap();
             loop {
                 if let Some(t) = st.queue.pop_front() {
@@ -199,6 +203,7 @@ fn worker_loop<P: Send, R: Send>(
                 if st.shutdown {
                     break None;
                 }
+                // pallas-lint: allow(R5, "condvar poison, same as the lock above: re-panic so the scope join surfaces the original worker panic")
                 st = cv.wait(st).unwrap();
             }
         };
@@ -393,11 +398,11 @@ mod tests {
     #[test]
     fn cancel_pending_withdraws_queued_work() {
         // A single worker stuck on a slow task leaves the rest queued.
-        use std::sync::atomic::{AtomicBool, Ordering};
-        let started = AtomicBool::new(false);
+        let started = (Mutex::new(false), Condvar::new());
         let objective = |c: &Config| {
             if c.get_i64("i").unwrap() == 0 {
-                started.store(true, Ordering::SeqCst);
+                *started.0.lock().unwrap() = true;
+                started.1.notify_all();
                 std::thread::sleep(Duration::from_millis(80));
             }
             Some(1.0)
@@ -407,11 +412,14 @@ mod tests {
             for i in 0..5 {
                 pool.submit_task(deliver(i, i as i64));
             }
-            // Wait until the worker has claimed task 0, then cancel the rest.
-            let deadline = Instant::now() + Duration::from_secs(5);
-            while !started.load(Ordering::SeqCst) && Instant::now() < deadline {
-                std::thread::sleep(Duration::from_millis(1));
-            }
+            // Block until the worker has claimed task 0 (condvar handshake —
+            // no sleep-poll spin), then cancel the rest while it sleeps.
+            let (claimed, timeout) = started
+                .1
+                .wait_timeout_while(started.0.lock().unwrap(), Duration::from_secs(5), |s| !*s)
+                .unwrap();
+            assert!(!timeout.timed_out(), "worker never claimed task 0");
+            drop(claimed);
             let cancelled = pool.cancel_pending();
             assert!(!cancelled.is_empty(), "queued tasks must be cancellable");
             assert!(!cancelled.contains(&0), "running task is not cancellable");
