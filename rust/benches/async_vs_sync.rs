@@ -8,15 +8,24 @@
 //! * `mode = "async"` — the event loop refills the in-flight window as
 //!   results trickle in, and retries crashed/timed-out tasks.
 //!
+//! A second workload measures trial-level pruning: a staged objective
+//! (8 simulated epochs per trial, each costing wall-clock) under
+//! `--pruner none` vs `median` vs `asha`, reporting the epochs of work
+//! saved (in whole-evaluation units) and the best-found delta. Results
+//! land in `BENCH_async_pruning.json`.
+//!
 //! Run: `cargo bench --bench async_vs_sync`
-//! Knobs: MANGO_ITERS (8), MANGO_BATCH (8), MANGO_REPEATS (3)
+//! Knobs: MANGO_ITERS (8), MANGO_BATCH (8), MANGO_REPEATS (3),
+//!        MANGO_TRIALS (24, pruning workload budget)
 #![allow(clippy::disallowed_methods)] // bench timing is clock-permitted (lint rule R1)
 
 use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
 use mango::exp::workloads;
+use mango::optimizer::prune::PrunerKind;
 use mango::optimizer::{OptimizerKind, SurrogateBackend};
 use mango::scheduler::celery::CelerySimConfig;
 use mango::scheduler::SchedulerKind;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -91,6 +100,114 @@ fn run_mode(mode: ExecutionMode, iters: usize, batch: usize, repeats: usize) -> 
     }
 }
 
+/// Epochs per trial in the staged pruning workload.
+const PRUNE_STEPS: u64 = 8;
+
+struct PruneRow {
+    label: &'static str,
+    wall_ms: f64,
+    evals: f64,
+    pruned: f64,
+    /// Epochs actually executed across the run (<= trials * PRUNE_STEPS).
+    steps: f64,
+    best: f64,
+}
+
+/// Staged-objective pruning workload: branin split into `PRUNE_STEPS`
+/// simulated epochs (each costing real wall-clock), values ramping toward
+/// the final objective so partial rankings track full rankings. Serial
+/// async with window 1 — decisions are deterministic, so rows differ only
+/// by pruner.
+fn run_pruned(pruner: PrunerKind, label: &'static str, trials: usize, repeats: usize) -> PruneRow {
+    let workload = workloads::by_name("branin").expect("branin workload");
+    let step_cost = Duration::from_micros(500);
+    let (mut wall, mut evals, mut pruned, mut steps, mut best) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for r in 0..repeats {
+        let cfg = TunerConfig {
+            batch_size: 1,
+            num_iterations: trials,
+            optimizer: OptimizerKind::Hallucination,
+            scheduler: SchedulerKind::Serial,
+            workers: 1,
+            backend: SurrogateBackend::Native,
+            seed: 2000 + r as u64,
+            mode: ExecutionMode::Async,
+            async_window: 1,
+            pruner,
+            pruner_warmup: 2,
+            asha_reduction: 2.0,
+            ..Default::default()
+        };
+        let mut tuner = Tuner::new(workload.space.clone(), cfg);
+        let obj = workload.objective.clone();
+        let steps_run = AtomicU64::new(0);
+        let t = Instant::now();
+        let result = tuner
+            .minimize_with_reports(|c, reporter| {
+                let full = obj(c)?;
+                for step in 0..PRUNE_STEPS {
+                    std::thread::sleep(step_cost); // one simulated epoch
+                    steps_run.fetch_add(1, Ordering::Relaxed);
+                    let v = full * ((step + 1) as f64) / PRUNE_STEPS as f64;
+                    if !reporter.report(step, v) {
+                        return Some(v); // pruned: stop paying for epochs
+                    }
+                }
+                Some(full)
+            })
+            .expect("pruning run");
+        wall += t.elapsed().as_secs_f64() * 1e3;
+        evals += result.evaluations as f64;
+        pruned += result.pruned as f64;
+        steps += steps_run.load(Ordering::Relaxed) as f64;
+        best += result.best_objective;
+    }
+    let n = repeats as f64;
+    PruneRow {
+        label,
+        wall_ms: wall / n,
+        evals: evals / n,
+        pruned: pruned / n,
+        steps: steps / n,
+        best: best / n,
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Record the pruning rows (committed file starts as a flagged
+/// placeholder; running the bench overwrites it with honest numbers).
+fn write_pruning_json(rows: &[PruneRow], trials: usize) {
+    let budget_steps = (trials as u64 * PRUNE_STEPS) as f64;
+    let baseline_steps = rows[0].steps;
+    let mut out = String::from("{\n  \"bench\": \"async_pruning\",\n");
+    out.push_str(&format!("  \"trials\": {trials},\n  \"steps_per_trial\": {PRUNE_STEPS},\n"));
+    out.push_str(&format!("  \"budget_steps\": {budget_steps},\n"));
+    for r in rows {
+        let key = if r.label == "none" { "none".to_string() } else { r.label.to_string() };
+        out.push_str(&format!(
+            "  \"{key}\": {{ \"wall_ms\": {}, \"steps\": {}, \"pruned\": {}, \
+             \"evals_of_work_saved\": {}, \"best\": {} }},\n",
+            json_num(r.wall_ms),
+            json_num(r.steps),
+            json_num(r.pruned),
+            json_num((baseline_steps - r.steps) / PRUNE_STEPS as f64),
+            json_num(r.best)
+        ));
+    }
+    out.push_str("  \"note\": \"written by `cargo bench --bench async_vs_sync`\"\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_async_pruning.json");
+    if let Err(e) = std::fs::write(&path, out) {
+        eprintln!("[async_vs_sync] could not write {}: {e}", path.display());
+    }
+}
+
 fn main() {
     let iters = env_usize("MANGO_ITERS", 8);
     let batch = env_usize("MANGO_BATCH", 8);
@@ -122,4 +239,34 @@ fn main() {
         iters * batch,
         rows[0].evals
     );
+
+    // ---- trial-level pruning: epochs of work saved vs `--pruner none` ----
+    let trials = env_usize("MANGO_TRIALS", 24);
+    eprintln!(
+        "\n[async_vs_sync] staged branin, {trials} trials x {PRUNE_STEPS} epochs, \
+         serial async, {repeats} repeats"
+    );
+    let prune_rows = [
+        run_pruned(PrunerKind::None, "none", trials, repeats),
+        run_pruned(PrunerKind::Median, "median", trials, repeats),
+        run_pruned(PrunerKind::Asha, "asha", trials, repeats),
+    ];
+    println!(
+        "\n{:<8} {:>10} {:>8} {:>8} {:>8} {:>12} {:>10}",
+        "pruner", "wall_ms", "evals", "pruned", "epochs", "evals_saved", "best"
+    );
+    let baseline_steps = prune_rows[0].steps;
+    for r in &prune_rows {
+        println!(
+            "{:<8} {:>10.0} {:>8.1} {:>8.1} {:>8.1} {:>12.2} {:>10.4}",
+            r.label,
+            r.wall_ms,
+            r.evals,
+            r.pruned,
+            r.steps,
+            (baseline_steps - r.steps) / PRUNE_STEPS as f64,
+            r.best
+        );
+    }
+    write_pruning_json(&prune_rows, trials);
 }

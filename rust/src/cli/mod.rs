@@ -68,6 +68,13 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{flag}: '{v}' is not a number")),
+        }
+    }
+
     /// Error on flags the subcommand doesn't understand.
     pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
@@ -114,6 +121,12 @@ TUNE OPTIONS:
                            SIMD-friendly kernels + tiled distance cache;
                            deterministic, ~1e-10 of exact)   [exact]
   --seed <s>               RNG seed                          [0]
+  --pruner <name>          trial-level early stopping on intermediate
+                           reports, async mode only:
+                           none | median | asha              [none]
+  --pruner-warmup <n>      reports before the median rule may prune, or
+                           the ASHA first-rung budget r0     [1]
+  --asha-reduction <eta>   ASHA reduction factor (> 1)       [3]
   --early-stop <n>         stop after n iterations without improvement
   --max-surrogate-obs <n>  history window the GP sees        [512]
   --tune-lengthscale       GP lengthscale by marginal likelihood
@@ -155,6 +168,15 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("tune --batch-size five").unwrap();
         assert!(a.get_usize("batch-size", 1).is_err());
+    }
+
+    #[test]
+    fn float_flags_parse_with_default() {
+        let a = parse("tune --asha-reduction 2.5").unwrap();
+        assert_eq!(a.get_f64("asha-reduction", 3.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("absent", 3.0).unwrap(), 3.0);
+        let a = parse("tune --asha-reduction eta").unwrap();
+        assert!(a.get_f64("asha-reduction", 3.0).is_err());
     }
 
     #[test]

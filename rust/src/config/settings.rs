@@ -57,6 +57,15 @@ pub struct RunConfig {
     /// Journal durability: fsync after every n appends (0 = flush-only —
     /// survives a process kill; a machine crash can lose recent events).
     pub fsync_every_n: usize,
+    /// Trial-level early stopping rule consulted on each intermediate
+    /// report (async mode only): "none" | "median" | "asha".
+    pub pruner: String,
+    /// Reports a trial must make before the pruner may cancel it
+    /// ("median"), or the first-rung budget r0 ("asha").
+    pub pruner_warmup: usize,
+    /// ASHA reduction factor eta (> 1): rung budgets grow as r0 * eta^k
+    /// and the top 1/eta of each rung survives.
+    pub asha_reduction: f64,
     /// Crash-safe run journal path ("" = no persistence). The run appends
     /// one JSONL event per proposal/submission/completion so it can be
     /// resumed after a coordinator crash.
@@ -88,6 +97,9 @@ impl Default for RunConfig {
             proposal_shards: 0,
             kernel_profile: "exact".into(),
             fsync_every_n: 0,
+            pruner: "none".into(),
+            pruner_warmup: 1,
+            asha_reduction: 3.0,
             journal: String::new(),
             resume: false,
         }
@@ -114,6 +126,9 @@ impl RunConfig {
                 "proposal_threads" => c.proposal_threads = num(v, k)? as usize,
                 "proposal_shards" => c.proposal_shards = num(v, k)? as usize,
                 "fsync_every_n" => c.fsync_every_n = num(v, k)? as usize,
+                "pruner_warmup" => c.pruner_warmup = num(v, k)? as usize,
+                "asha_reduction" => c.asha_reduction = num(v, k)?,
+                "pruner" => c.pruner = str_(v, k)?,
                 "optimizer" => c.optimizer = str_(v, k)?,
                 "scheduler" => c.scheduler = str_(v, k)?,
                 "backend" => c.backend = str_(v, k)?,
@@ -164,6 +179,22 @@ impl RunConfig {
         if self.max_surrogate_obs == 0 {
             return Err(anyhow!("max_surrogate_obs must be >= 1"));
         }
+        const PRUNERS: [&str; 3] = ["none", "median", "asha"];
+        if !PRUNERS.contains(&self.pruner.as_str()) {
+            return Err(anyhow!("unknown pruner '{}' (one of {PRUNERS:?})", self.pruner));
+        }
+        if self.pruner != "none" && self.mode != "async" {
+            return Err(anyhow!(
+                "pruner '{}' requires mode \"async\" (sync batches have no report channel)",
+                self.pruner
+            ));
+        }
+        if !self.asha_reduction.is_finite() || self.asha_reduction <= 1.0 {
+            return Err(anyhow!(
+                "asha_reduction must be a finite factor > 1 (got {})",
+                self.asha_reduction
+            ));
+        }
         if self.resume && self.journal.is_empty() {
             return Err(anyhow!("resume requires a journal path"));
         }
@@ -191,6 +222,9 @@ impl RunConfig {
             ("proposal_shards", Json::Num(self.proposal_shards as f64)),
             ("kernel_profile", Json::Str(self.kernel_profile.clone())),
             ("fsync_every_n", Json::Num(self.fsync_every_n as f64)),
+            ("pruner", Json::Str(self.pruner.clone())),
+            ("pruner_warmup", Json::Num(self.pruner_warmup as f64)),
+            ("asha_reduction", Json::Num(self.asha_reduction)),
             ("journal", Json::Str(self.journal.clone())),
             ("resume", Json::Bool(self.resume)),
         ])
@@ -345,6 +379,35 @@ mod tests {
             RunConfig::from_json(&parse(r#"{"kernel_profile": "simd"}"#).unwrap()).is_err(),
             "unknown profiles are rejected loudly"
         );
+    }
+
+    #[test]
+    fn pruner_fields_parse_validate_and_roundtrip() {
+        let c = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.pruner, "none", "pruning is off by default");
+        assert_eq!(c.pruner_warmup, 1);
+        assert_eq!(c.asha_reduction, 3.0);
+        let j = parse(
+            r#"{"mode": "async", "pruner": "asha", "pruner_warmup": 2,
+                "asha_reduction": 4.0}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.pruner, "asha");
+        assert_eq!(c.pruner_warmup, 2);
+        assert_eq!(c.asha_reduction, 4.0);
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "pruner knobs survive the json round trip");
+        // Unknown rules, sync-mode pruning, and degenerate eta are loud.
+        assert!(RunConfig::from_json(&parse(r#"{"pruner": "hyperband"}"#).unwrap()).is_err());
+        assert!(
+            RunConfig::from_json(&parse(r#"{"pruner": "median"}"#).unwrap()).is_err(),
+            "pruning requires async mode"
+        );
+        assert!(RunConfig::from_json(
+            &parse(r#"{"mode": "async", "pruner": "asha", "asha_reduction": 1.0}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub enum CompletionOutcome {
     Lost,
     /// Lost but resubmitted — a later record concludes the same proposal.
     Resubmitted,
+    /// Cancelled by the pruner on an intermediate report; its censored
+    /// value (worst-seen policy) may still have entered the history.
+    Pruned,
 }
 
 /// Per-completion telemetry from the async event loop (queue wait, eval
@@ -70,6 +73,12 @@ pub struct TuningResult {
     pub retried: u64,
     /// Async mode: proposals abandoned after exhausting their retries.
     pub lost: u64,
+    /// Async mode: trials cancelled early by the configured pruner.
+    pub pruned: u64,
+    /// Async mode: intermediate reports received (and journaled, when a
+    /// journal is attached). Zero unless the objective calls
+    /// `TrialReporter::report` under an active pruner.
+    pub reports: u64,
     /// GP distance-cache lifecycle counters `(builds, appends, evicts)`:
     /// full rebuilds, prefix-reusing appends, and (Fast profile) tiles
     /// dropped by truncate-and-regrow. All zeros for optimizers without a
@@ -103,6 +112,8 @@ impl TuningResult {
         if let Some(stats) = &self.scheduler_stats {
             fields.push(("retried", Json::Num(self.retried as f64)));
             fields.push(("lost", Json::Num(self.lost as f64)));
+            fields.push(("pruned", Json::Num(self.pruned as f64)));
+            fields.push(("reports", Json::Num(self.reports as f64)));
             fields.push((
                 "scheduler",
                 Json::obj(vec![
@@ -153,6 +164,8 @@ mod tests {
             scheduler_stats: None,
             retried: 0,
             lost: 0,
+            pruned: 0,
+            reports: 0,
             dist_cache: (0, 0, 0),
         }
     }
@@ -182,6 +195,8 @@ mod tests {
         r.scheduler_stats = Some(AsyncStats { submitted: 4, completed: 2, ..Default::default() });
         r.retried = 1;
         r.lost = 1;
+        r.pruned = 3;
+        r.reports = 7;
         r.completions = vec![
             CompletionRecord {
                 task_id: 0,
@@ -201,6 +216,8 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("retried").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("lost").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("pruned").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("reports").unwrap().as_f64(), Some(7.0));
         assert_eq!(j.get("scheduler").unwrap().get("submitted").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("mean_queue_wait_ms").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("mean_eval_ms").unwrap().as_f64(), Some(15.0));

@@ -37,20 +37,24 @@
 
 use super::results::{CompletionOutcome, CompletionRecord, IterationRecord, TuningResult};
 use crate::config::settings::RunConfig;
+use crate::optimizer::prune::{self, Pruner, PrunerKind, ReportBook};
 use crate::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
 use crate::persist::{
     self, AsyncReplay, EventOutcome, JournalEvent, JournalWriter, RecoveredRun, Replay,
     RunHeader, SenseTag, SyncReplay,
 };
 use crate::scheduler::{
-    self, AsyncScheduler, BatchResult, Completion, CompletionStatus, LossReason, SchedulerKind,
+    self, AsyncScheduler, BatchResult, Completion, CompletionStatus, LossReason, ReportSink,
+    SchedulerKind, TaskId, TrialReporter,
 };
 use crate::space::{Config, SearchSpace};
 use crate::util::rng::Pcg64;
+use crate::util::stats;
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Per-config objective closure type (boxed form used by the CLI).
@@ -140,6 +144,14 @@ pub struct TunerConfig {
     /// the default — survives a process kill but a machine crash can lose
     /// recent events).
     pub fsync_every_n: usize,
+    /// Trial-level early stopping rule applied to intermediate reports
+    /// (async mode only; `None` keeps today's path byte-identical).
+    pub pruner: PrunerKind,
+    /// Reports a trial must produce before the pruner engages (median
+    /// rule), and the first ASHA rung's resource milestone.
+    pub pruner_warmup: usize,
+    /// ASHA reduction factor η (rungs at warmup·η^k; must be > 1).
+    pub asha_reduction: f64,
     /// Override the Celery simulator's fault/latency model.
     pub celery: Option<scheduler::celery::CelerySimConfig>,
 }
@@ -166,6 +178,9 @@ impl Default for TunerConfig {
             proposal_shards: 0,
             kernel_profile: crate::gp::KernelProfile::Exact,
             fsync_every_n: 0,
+            pruner: PrunerKind::None,
+            pruner_warmup: 1,
+            asha_reduction: 3.0,
             celery: None,
         }
     }
@@ -202,6 +217,10 @@ impl TunerConfig {
             kernel_profile: crate::gp::KernelProfile::from_str(&rc.kernel_profile)
                 .ok_or_else(|| anyhow!("bad kernel_profile {}", rc.kernel_profile))?,
             fsync_every_n: rc.fsync_every_n,
+            pruner: PrunerKind::from_str(&rc.pruner)
+                .ok_or_else(|| anyhow!("bad pruner {}", rc.pruner))?,
+            pruner_warmup: rc.pruner_warmup,
+            asha_reduction: rc.asha_reduction,
             celery: None,
         })
     }
@@ -235,6 +254,9 @@ impl TunerConfig {
             proposal_shards: self.proposal_shards,
             kernel_profile: self.kernel_profile.as_str().into(),
             fsync_every_n: self.fsync_every_n,
+            pruner: self.pruner.as_str().into(),
+            pruner_warmup: self.pruner_warmup,
+            asha_reduction: self.asha_reduction,
             journal: String::new(),
             resume: false,
         }
@@ -304,6 +326,122 @@ fn push_best_point(
             }
         };
     *since_improvement = if improved { 0 } else { *since_improvement + 1 };
+}
+
+/// One intermediate report as drained by the event loop for journaling:
+/// `value` is in the user's sense (what the objective reported), `pruned`
+/// is the decision the pruner took at this report.
+struct ReportRec {
+    pid: u64,
+    task: TaskId,
+    step: u64,
+    value: f64,
+    pruned: bool,
+}
+
+/// Shared pruning state behind the coordinator's mutex.
+struct PruneState {
+    /// Internal-sense (maximization, NaN-folded) report streams — the only
+    /// input the pure pruning rules see.
+    book: ReportBook,
+    /// Live task → proposal mapping (reports arrive keyed by task id; the
+    /// journal and the book key by pid, which survives resubmissions).
+    task_to_pid: BTreeMap<TaskId, u64>,
+    /// Reports not yet journaled, in arrival order.
+    log: Vec<ReportRec>,
+    /// pid → (at_step, last user-sense value) for every pruned trial.
+    pruned: BTreeMap<u64, (u64, f64)>,
+}
+
+/// The coordinator's pruning state machine: worker threads stream
+/// intermediate metrics into [`ReportSink::on_report`]; the event loop
+/// registers/concludes tasks, drains the report log for journaling, and
+/// consults the pruned set when folding completions. Decisions are pure
+/// functions of the (deterministically ordered) report book, so a journal
+/// replay through the same rule reproduces every decision bit-for-bit.
+struct PruneCoordinator {
+    pruner: Box<dyn Pruner>,
+    minimize: bool,
+    state: Mutex<PruneState>,
+}
+
+impl PruneCoordinator {
+    fn new(pruner: Box<dyn Pruner>, minimize: bool) -> Self {
+        Self {
+            pruner,
+            minimize,
+            state: Mutex::new(PruneState {
+                book: ReportBook::new(),
+                task_to_pid: BTreeMap::new(),
+                log: Vec::new(),
+                pruned: BTreeMap::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PruneState> {
+        // A poisoned lock means a worker panicked mid-report; the scope
+        // join will surface that panic — keep serving the state meanwhile.
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn register(&self, task: TaskId, pid: u64) {
+        let mut st = self.lock();
+        // Mirror replay semantics: a (re)submitted trial re-reports from
+        // scratch, so any stream from a lost prior attempt is discarded.
+        st.book.reset(pid);
+        st.task_to_pid.insert(task, pid);
+    }
+
+    fn conclude(&self, task: TaskId) {
+        self.lock().task_to_pid.remove(&task);
+    }
+
+    fn drain_log(&self) -> Vec<ReportRec> {
+        std::mem::take(&mut self.lock().log)
+    }
+
+    fn pruned_info(&self, pid: u64) -> Option<(u64, f64)> {
+        self.lock().pruned.get(&pid).copied()
+    }
+
+    /// Seed the book from journal-replayed reports (user-sense values, in
+    /// journal order) so post-resume decisions see exactly what the
+    /// crashed process saw. Only concluded proposals' streams are seeded —
+    /// in-flight-at-crash trials re-execute and re-report from scratch.
+    fn seed(&self, reports: &[(u64, u64, f64, bool)]) {
+        let mut st = self.lock();
+        for &(pid, step, value, pruned) in reports {
+            let internal = if self.minimize { -value } else { value };
+            st.book.push(pid, step, stats::nan_as_worst(internal));
+            if pruned {
+                st.pruned.insert(pid, (step, value));
+            }
+        }
+    }
+}
+
+impl ReportSink for PruneCoordinator {
+    fn on_report(&self, task: TaskId, step: u64, value: f64) -> bool {
+        let mut st = self.lock();
+        let Some(&pid) = st.task_to_pid.get(&task) else {
+            return true; // unknown task (already concluded): ignore
+        };
+        if st.pruned.contains_key(&pid) {
+            return false; // decided: keep telling the worker to stop
+        }
+        let internal = if self.minimize { -value } else { value };
+        st.book.push(pid, step, stats::nan_as_worst(internal));
+        let decision = self.pruner.should_prune(pid, &st.book);
+        st.log.push(ReportRec { pid, task, step, value, pruned: decision });
+        if decision {
+            st.pruned.insert(pid, (step, value));
+        }
+        !decision
+    }
 }
 
 /// The paper's Fig. 1 coordinator.
@@ -383,13 +521,36 @@ impl Tuner {
     where
         F: Fn(&Config) -> Option<f64> + Sync,
     {
-        self.run_objective(Sense::Maximize, &objective)
+        self.run_objective(Sense::Maximize, &|c, _| objective(c))
     }
 
     /// Minimize a per-config objective.
     pub fn minimize<F>(&mut self, objective: F) -> Result<TuningResult>
     where
         F: Fn(&Config) -> Option<f64> + Sync,
+    {
+        self.run_objective(Sense::Minimize, &|c, _| objective(c))
+    }
+
+    /// Maximize an objective that streams intermediate metrics through a
+    /// [`TrialReporter`] — the trial-level early-stopping form: call
+    /// `reporter.report(step, value)` between training stages and treat a
+    /// `false` return as "pruned, stop now". With
+    /// [`TunerConfig::pruner`] = [`PrunerKind::None`] the reports are
+    /// accepted and discarded and the run is byte-identical to
+    /// [`maximize`](Self::maximize).
+    pub fn maximize_with_reports<F>(&mut self, objective: F) -> Result<TuningResult>
+    where
+        F: Fn(&Config, &TrialReporter) -> Option<f64> + Sync,
+    {
+        self.run_objective(Sense::Maximize, &objective)
+    }
+
+    /// Minimize with an intermediate-report channel
+    /// ([`maximize_with_reports`](Self::maximize_with_reports)).
+    pub fn minimize_with_reports<F>(&mut self, objective: F) -> Result<TuningResult>
+    where
+        F: Fn(&Config, &TrialReporter) -> Option<f64> + Sync,
     {
         self.run_objective(Sense::Minimize, &objective)
     }
@@ -433,7 +594,7 @@ impl Tuner {
     fn run_objective(
         &mut self,
         sense: Sense,
-        objective: &(dyn Fn(&Config) -> Option<f64> + Sync),
+        objective: &(dyn Fn(&Config, &TrialReporter) -> Option<f64> + Sync),
     ) -> Result<TuningResult> {
         let (journal, replay) = self.prepare_journal(sense)?;
         match self.config.mode {
@@ -451,7 +612,10 @@ impl Tuner {
                     self.config.seed,
                     self.config.celery.clone(),
                 );
-                self.run_sync(sense, &mut |batch| sched.evaluate(objective, batch), journal, rep)
+                // Sync mode has no report channel: a detached reporter
+                // swallows any reports the objective emits.
+                let plain = |c: &Config| objective(c, &TrialReporter::detached());
+                self.run_sync(sense, &mut |batch| sched.evaluate(&plain, batch), journal, rep)
             }
             ExecutionMode::Async => {
                 let rep = match replay {
@@ -543,6 +707,11 @@ impl Tuner {
         replay: Option<SyncReplay>,
     ) -> Result<TuningResult> {
         let cfg = self.config.clone();
+        anyhow::ensure!(
+            cfg.pruner == PrunerKind::None,
+            "pruner '{}' requires async mode (sync batches have no report channel)",
+            cfg.pruner.as_str()
+        );
         let early_stop = cfg.early_stop.map(|n| n.max(1));
         let opts = self.gp_options();
         let mut optimizer: Box<dyn BatchOptimizer> =
@@ -749,6 +918,8 @@ impl Tuner {
             scheduler_stats: None,
             retried: 0,
             lost: 0,
+            pruned: 0,
+            reports: 0,
             dist_cache: optimizer.dist_cache_stats(),
         })
     }
@@ -759,7 +930,7 @@ impl Tuner {
     fn run_async(
         &mut self,
         sense: Sense,
-        objective: &(dyn Fn(&Config) -> Option<f64> + Sync),
+        objective: &(dyn Fn(&Config, &TrialReporter) -> Option<f64> + Sync),
         journal: Option<JournalWriter>,
         replay: Option<AsyncReplay>,
     ) -> Result<TuningResult> {
@@ -769,6 +940,23 @@ impl Tuner {
         let space = self.space.clone();
         // Task ids continue past the crashed run's high-water mark.
         let first_id = replay.as_ref().map_or(0, |r| r.next_task_id);
+        // The pruning state machine (`--pruner none` builds nothing: the
+        // report channel stays sinkless and the event loop takes exactly
+        // the pre-pruning path).
+        let coordinator: Option<Arc<PruneCoordinator>> =
+            prune::build_pruner(cfg.pruner, cfg.pruner_warmup, cfg.asha_reduction)
+                .map(|p| Arc::new(PruneCoordinator::new(p, sense == Sense::Minimize)));
+        if let (Some(pc), Some(rep)) = (&coordinator, &replay) {
+            pc.seed(&rep.reports);
+        }
+        let sink: Option<Arc<dyn ReportSink>> =
+            coordinator.as_ref().map(|pc| pc.clone() as Arc<dyn ReportSink>);
+        // The task-id-aware form the schedulers execute: each evaluation
+        // gets a reporter keyed to its task id, routing reports back here.
+        let task_objective = move |id: TaskId, c: &Config| {
+            let reporter = TrialReporter::new(id, sink.clone());
+            objective(c, &reporter)
+        };
         std::thread::scope(|scope| {
             let mut sched = scheduler::build_async_from(
                 cfg.scheduler,
@@ -776,10 +964,19 @@ impl Tuner {
                 cfg.seed,
                 cfg.celery.clone(),
                 scope,
-                objective,
+                &task_objective,
                 first_id,
             );
-            self.event_loop(sense, &cfg, &space, optimizer.as_mut(), sched.as_mut(), journal, replay)
+            self.event_loop(
+                sense,
+                &cfg,
+                &space,
+                optimizer.as_mut(),
+                sched.as_mut(),
+                coordinator.as_deref(),
+                journal,
+                replay,
+            )
         })
     }
 
@@ -832,6 +1029,9 @@ impl Tuner {
 
     /// The event loop: keep `window` evaluations in flight; fold each
     /// completion into the history the moment it arrives; retry lost work.
+    /// With a pruning coordinator, intermediate reports are journaled as
+    /// they drain (always before the reporting trial's terminal event) and
+    /// pruned trials conclude as `Pruned` with a censored history entry.
     #[allow(clippy::too_many_arguments)]
     fn event_loop(
         &mut self,
@@ -840,6 +1040,7 @@ impl Tuner {
         space: &SearchSpace,
         optimizer: &mut dyn BatchOptimizer,
         sched: &mut dyn AsyncScheduler,
+        prune_coord: Option<&PruneCoordinator>,
         mut journal: Option<JournalWriter>,
         replay: Option<AsyncReplay>,
     ) -> Result<TuningResult> {
@@ -857,17 +1058,29 @@ impl Tuner {
         let mut proposals_made = 0usize;
         let mut proposed_since_record = 0usize;
         let mut best_so_far = f64::NEG_INFINITY; // internal sense
+        let mut worst_so_far = f64::INFINITY; // internal sense (censoring)
         let mut since_improvement = 0usize;
         let mut stopped_early = false;
         let mut retried = 0u64;
         let mut lost = 0u64;
+        let mut pruned_count = 0u64;
+        let mut reports_count = 0u64;
+        // The id the scheduler will assign to the next submission. Task
+        // registration with the pruning coordinator must happen *before*
+        // submit returns — a pool worker can start executing (and
+        // reporting) the moment the task is enqueued — so each submit
+        // site registers under this predicted id and then verifies it.
+        let mut next_task_id: u64 = replay.as_ref().map_or(0, |r| r.next_task_id);
         let mut last_progress = std::time::Instant::now();
 
         // ---- journal replay: pure data reconstruction, no re-evaluation ----
         if let Some(rep) = replay {
             let mut done_values = rep.history.into_iter();
             for t in &rep.terminals {
-                let returned = matches!(t.outcome, EventOutcome::Done(_));
+                // `contributed` covers Done and Pruned-with-censored-value
+                // terminals: exactly the conclusions that pushed a history
+                // entry in the original run.
+                let returned = t.contributed;
                 if returned {
                     let Some((cfg_done, v)) = done_values.next() else {
                         return Err(anyhow!("journal replay: missing value for a Done event"));
@@ -877,6 +1090,7 @@ impl Tuner {
                         Sense::Minimize => -v,
                     };
                     best_so_far = best_so_far.max(internal);
+                    worst_so_far = worst_so_far.min(internal);
                     history.push(cfg_done.clone(), internal);
                     user_history.push((cfg_done, v));
                 }
@@ -914,11 +1128,17 @@ impl Tuner {
                         EventOutcome::Failed => CompletionOutcome::Failed,
                         EventOutcome::Lost(_) => CompletionOutcome::Lost,
                         EventOutcome::Resubmitted(_) => CompletionOutcome::Resubmitted,
+                        EventOutcome::Pruned { .. } => CompletionOutcome::Pruned,
                     },
                 });
             }
             retried = rep.retried;
             lost = rep.lost;
+            pruned_count = rep.pruned;
+            // Only concluded proposals' reports replay (in-flight trials
+            // re-execute and re-report), so the resumed counter converges
+            // on the uninterrupted run's.
+            reports_count = rep.reports.len() as u64;
             proposals_made = rep.proposals_made as usize;
             proposed_since_record = rep.trailing_proposed;
             // Warm the optimizer over the view its *first post-resume fit*
@@ -939,8 +1159,18 @@ impl Tuner {
             // order, with the retry budget it had already consumed.
             let re_enqueued = rep.pending.len();
             for p in rep.pending {
+                if let Some(pc) = prune_coord {
+                    pc.register(next_task_id, p.pid);
+                }
                 let ids = sched.submit(std::slice::from_ref(&p.config));
                 anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
+                anyhow::ensure!(
+                    prune_coord.is_none() || ids[0] == next_task_id,
+                    "scheduler assigned task id {} (expected {next_task_id}): \
+                     pruning requires sequential task ids",
+                    ids[0]
+                );
+                next_task_id = ids[0] + 1;
                 jappend(
                     &mut journal,
                     &JournalEvent::AsyncSubmit { pid: p.pid, task: ids[0], retries: p.retries },
@@ -974,8 +1204,20 @@ impl Tuner {
                         config: proposal.clone(),
                     },
                 )?;
+                // Register before submit: a pool worker may begin executing
+                // (and reporting) the instant the task hits the queue.
+                if let Some(pc) = prune_coord {
+                    pc.register(next_task_id, pid);
+                }
                 let ids = sched.submit(std::slice::from_ref(&proposal));
                 anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
+                anyhow::ensure!(
+                    prune_coord.is_none() || ids[0] == next_task_id,
+                    "scheduler assigned task id {} (expected {next_task_id}): \
+                     pruning requires sequential task ids",
+                    ids[0]
+                );
+                next_task_id = ids[0] + 1;
                 jappend(
                     &mut journal,
                     &JournalEvent::AsyncSubmit { pid, task: ids[0], retries: 0 },
@@ -991,6 +1233,26 @@ impl Tuner {
 
             // ---- wait for completions ----
             let completions: Vec<Completion> = sched.poll(POLL_TIMEOUT);
+            // Journal intermediate reports before folding this poll's
+            // completions: a worker pushes its reports before it sends the
+            // completion, so draining here keeps every `async_report` line
+            // ahead of its trial's `async_complete` — the order the replay
+            // relies on.
+            if let Some(pc) = prune_coord {
+                for r in pc.drain_log() {
+                    jappend(
+                        &mut journal,
+                        &JournalEvent::AsyncReport {
+                            pid: r.pid,
+                            task: r.task,
+                            step: r.step,
+                            value: r.value,
+                            pruned: r.pruned,
+                        },
+                    )?;
+                    reports_count += 1;
+                }
+            }
             if completions.is_empty() {
                 if sched.in_flight() == 0 {
                     // Every worker died without reporting (worker panic):
@@ -1056,57 +1318,53 @@ impl Tuner {
             // ---- fold completions in (poll returns them sorted by id) ----
             for comp in completions {
                 let Some(mut task) = pending.remove(&comp.id) else { continue };
-                let outcome = match comp.status {
-                    CompletionStatus::Done(v) => {
-                        anyhow::ensure!(
-                            v.is_finite(),
-                            "objective returned a non-finite value"
-                        );
-                        jappend(
-                            &mut journal,
-                            &JournalEvent::AsyncComplete {
-                                pid: task.pid,
-                                task: comp.id,
-                                retries: task.retries,
-                                outcome: EventOutcome::Done(v),
-                                queue_ms: comp.queue_wait_ms,
-                                eval_ms: comp.eval_ms,
-                            },
-                        )?;
-                        let internal = match sense {
-                            Sense::Maximize => v,
-                            Sense::Minimize => -v,
+                // A pruned trial's scheduler-level status (the early
+                // return's Done/Failed) is superseded by the pruning
+                // decision: conclude it as `Pruned` with a censored
+                // history entry under the worst-seen policy.
+                let pruned_at = prune_coord.and_then(|pc| pc.pruned_info(task.pid));
+                if let Some(pc) = prune_coord {
+                    pc.conclude(comp.id);
+                }
+                let (outcome, contributed) = if let Some((at_step, last_value)) = pruned_at {
+                    jappend(
+                        &mut journal,
+                        &JournalEvent::AsyncComplete {
+                            pid: task.pid,
+                            task: comp.id,
+                            retries: task.retries,
+                            outcome: EventOutcome::Pruned { at_step, last_value },
+                            queue_ms: comp.queue_wait_ms,
+                            eval_ms: comp.eval_ms,
+                        },
+                    )?;
+                    let last_internal = match sense {
+                        Sense::Maximize => last_value,
+                        Sense::Minimize => -last_value,
+                    };
+                    let worst = worst_so_far.is_finite().then_some(worst_so_far);
+                    let contributed =
+                        if let Some(censored) = prune::censored_value(last_internal, worst) {
+                            let user = match sense {
+                                Sense::Maximize => censored,
+                                Sense::Minimize => -censored,
+                            };
+                            best_so_far = best_so_far.max(censored);
+                            worst_so_far = worst_so_far.min(censored);
+                            history.push(task.config.clone(), censored);
+                            user_history.push((task.config.clone(), user));
+                            true
+                        } else {
+                            false
                         };
-                        best_so_far = best_so_far.max(internal);
-                        history.push(task.config.clone(), internal);
-                        user_history.push((task.config.clone(), v));
-                        CompletionOutcome::Done
-                    }
-                    CompletionStatus::Failed => {
-                        jappend(
-                            &mut journal,
-                            &JournalEvent::AsyncComplete {
-                                pid: task.pid,
-                                task: comp.id,
-                                retries: task.retries,
-                                outcome: EventOutcome::Failed,
-                                queue_ms: comp.queue_wait_ms,
-                                eval_ms: comp.eval_ms,
-                            },
-                        )?;
-                        CompletionOutcome::Failed
-                    }
-                    CompletionStatus::Lost(reason) => {
-                        // After early stop, a retried result could no longer
-                        // change anything — let the proposal die instead.
-                        if !stopped_early && task.retries < cfg.max_retries {
-                            task.retries += 1;
-                            retried += 1;
-                            crate::log_debug!(
-                                "task {} lost ({reason:?}); retry {}/{}",
-                                comp.id,
-                                task.retries,
-                                cfg.max_retries
+                    pruned_count += 1;
+                    (CompletionOutcome::Pruned, contributed)
+                } else {
+                    match comp.status {
+                        CompletionStatus::Done(v) => {
+                            anyhow::ensure!(
+                                v.is_finite(),
+                                "objective returned a non-finite value"
                             );
                             jappend(
                                 &mut journal,
@@ -1114,44 +1372,102 @@ impl Tuner {
                                     pid: task.pid,
                                     task: comp.id,
                                     retries: task.retries,
-                                    outcome: EventOutcome::Resubmitted(reason),
+                                    outcome: EventOutcome::Done(v),
                                     queue_ms: comp.queue_wait_ms,
                                     eval_ms: comp.eval_ms,
                                 },
                             )?;
-                            completion_log.push(CompletionRecord {
-                                task_id: comp.id,
-                                queue_wait_ms: comp.queue_wait_ms,
-                                eval_ms: comp.eval_ms,
-                                retries: task.retries,
-                                outcome: CompletionOutcome::Resubmitted,
-                            });
-                            let ids = sched.submit(std::slice::from_ref(&task.config));
-                            anyhow::ensure!(ids.len() == 1, "resubmit must assign one id");
+                            let internal = match sense {
+                                Sense::Maximize => v,
+                                Sense::Minimize => -v,
+                            };
+                            best_so_far = best_so_far.max(internal);
+                            worst_so_far = worst_so_far.min(internal);
+                            history.push(task.config.clone(), internal);
+                            user_history.push((task.config.clone(), v));
+                            (CompletionOutcome::Done, true)
+                        }
+                        CompletionStatus::Failed => {
                             jappend(
                                 &mut journal,
-                                &JournalEvent::AsyncSubmit {
+                                &JournalEvent::AsyncComplete {
                                     pid: task.pid,
-                                    task: ids[0],
+                                    task: comp.id,
                                     retries: task.retries,
+                                    outcome: EventOutcome::Failed,
+                                    queue_ms: comp.queue_wait_ms,
+                                    eval_ms: comp.eval_ms,
                                 },
                             )?;
-                            pending.insert(ids[0], task);
-                            continue; // not concluded: no iteration record
+                            (CompletionOutcome::Failed, false)
                         }
-                        jappend(
-                            &mut journal,
-                            &JournalEvent::AsyncComplete {
-                                pid: task.pid,
-                                task: comp.id,
-                                retries: task.retries,
-                                outcome: EventOutcome::Lost(reason),
-                                queue_ms: comp.queue_wait_ms,
-                                eval_ms: comp.eval_ms,
-                            },
-                        )?;
-                        lost += 1;
-                        CompletionOutcome::Lost
+                        CompletionStatus::Lost(reason) => {
+                            // After early stop, a retried result could no longer
+                            // change anything — let the proposal die instead.
+                            if !stopped_early && task.retries < cfg.max_retries {
+                                task.retries += 1;
+                                retried += 1;
+                                crate::log_debug!(
+                                    "task {} lost ({reason:?}); retry {}/{}",
+                                    comp.id,
+                                    task.retries,
+                                    cfg.max_retries
+                                );
+                                jappend(
+                                    &mut journal,
+                                    &JournalEvent::AsyncComplete {
+                                        pid: task.pid,
+                                        task: comp.id,
+                                        retries: task.retries,
+                                        outcome: EventOutcome::Resubmitted(reason),
+                                        queue_ms: comp.queue_wait_ms,
+                                        eval_ms: comp.eval_ms,
+                                    },
+                                )?;
+                                completion_log.push(CompletionRecord {
+                                    task_id: comp.id,
+                                    queue_wait_ms: comp.queue_wait_ms,
+                                    eval_ms: comp.eval_ms,
+                                    retries: task.retries,
+                                    outcome: CompletionOutcome::Resubmitted,
+                                });
+                                if let Some(pc) = prune_coord {
+                                    pc.register(next_task_id, task.pid);
+                                }
+                                let ids = sched.submit(std::slice::from_ref(&task.config));
+                                anyhow::ensure!(ids.len() == 1, "resubmit must assign one id");
+                                anyhow::ensure!(
+                                    prune_coord.is_none() || ids[0] == next_task_id,
+                                    "scheduler assigned task id {} (expected {next_task_id}): \
+                                     pruning requires sequential task ids",
+                                    ids[0]
+                                );
+                                next_task_id = ids[0] + 1;
+                                jappend(
+                                    &mut journal,
+                                    &JournalEvent::AsyncSubmit {
+                                        pid: task.pid,
+                                        task: ids[0],
+                                        retries: task.retries,
+                                    },
+                                )?;
+                                pending.insert(ids[0], task);
+                                continue; // not concluded: no iteration record
+                            }
+                            jappend(
+                                &mut journal,
+                                &JournalEvent::AsyncComplete {
+                                    pid: task.pid,
+                                    task: comp.id,
+                                    retries: task.retries,
+                                    outcome: EventOutcome::Lost(reason),
+                                    queue_ms: comp.queue_wait_ms,
+                                    eval_ms: comp.eval_ms,
+                                },
+                            )?;
+                            lost += 1;
+                            (CompletionOutcome::Lost, false)
+                        }
                     }
                 };
 
@@ -1171,7 +1487,7 @@ impl Tuner {
                 let record = IterationRecord {
                     iteration: iterations.len(),
                     proposed: proposed_since_record,
-                    returned: usize::from(outcome == CompletionOutcome::Done),
+                    returned: usize::from(contributed),
                     best_so_far: user_best,
                     wall_ms: comp.queue_wait_ms + comp.eval_ms,
                 };
@@ -1195,6 +1511,9 @@ impl Tuner {
                                     &mut journal,
                                     &JournalEvent::AsyncCancel { pid: t.pid, task: *id },
                                 )?;
+                                if let Some(pc) = prune_coord {
+                                    pc.conclude(*id);
+                                }
                             }
                         }
                         crate::log_info!(
@@ -1226,6 +1545,8 @@ impl Tuner {
             scheduler_stats: Some(sched.stats()),
             retried,
             lost,
+            pruned: pruned_count,
+            reports: reports_count,
             dist_cache: optimizer.dist_cache_stats(),
         })
     }
@@ -1479,6 +1800,9 @@ mod tests {
             proposal_shards: 3,
             kernel_profile: crate::gp::KernelProfile::Fast,
             fsync_every_n: 16,
+            pruner: PrunerKind::Asha,
+            pruner_warmup: 2,
+            asha_reduction: 4.0,
             celery: None,
         };
         let rc = tc.to_run_config();
@@ -1503,6 +1827,9 @@ mod tests {
         assert_eq!(back.proposal_shards, tc.proposal_shards);
         assert_eq!(back.kernel_profile, tc.kernel_profile);
         assert_eq!(back.fsync_every_n, tc.fsync_every_n);
+        assert_eq!(back.pruner, tc.pruner);
+        assert_eq!(back.pruner_warmup, tc.pruner_warmup);
+        assert_eq!(back.asha_reduction, tc.asha_reduction);
     }
 
     // ---------------- async event-loop tests ----------------

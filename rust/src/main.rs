@@ -69,6 +69,10 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
         )
         .ok_or_else(|| anyhow!("bad --kernel-profile (exact | fast)"))?,
         fsync_every_n: args.get_usize("fsync-every", 0)?,
+        pruner: mango::optimizer::prune::PrunerKind::from_str(args.get_or("pruner", "none"))
+            .ok_or_else(|| anyhow!("bad --pruner (none | median | asha)"))?,
+        pruner_warmup: args.get_usize("pruner-warmup", 1)?,
+        asha_reduction: args.get_f64("asha-reduction", 3.0)?,
         celery: None,
     })
 }
@@ -78,7 +82,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "workload", "optimizer", "scheduler", "backend", "batch-size", "iterations",
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
         "max-surrogate-obs", "mode", "async-window", "max-retries", "proposal-threads",
-        "proposal-shards", "kernel-profile", "fsync-every", "journal",
+        "proposal-shards", "kernel-profile", "fsync-every", "journal", "pruner",
+        "pruner-warmup", "asha-reduction",
     ])?;
     let name = args
         .get("workload")
@@ -140,6 +145,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
         let (builds, appends, evicts) = result.dist_cache;
         if builds + appends + evicts > 0 {
             println!("dist cache:  {builds} builds   {appends} appends   {evicts} tile evicts");
+        }
+        if result.pruned > 0 || result.reports > 0 {
+            println!(
+                "pruning:     {} trials pruned   {} intermediate reports",
+                result.pruned, result.reports
+            );
         }
         if let Some(opt) = workload.optimum {
             println!("known optimum: {opt:.6} (regret {:.6})", result.best_objective - opt);

@@ -19,6 +19,7 @@ pub mod bayesian;
 pub mod cluster;
 pub mod hallucinate;
 pub mod kmeans;
+pub mod prune;
 pub mod random;
 pub mod thompson;
 pub mod tpe;

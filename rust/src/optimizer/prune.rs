@@ -1,0 +1,419 @@
+//! Trial-level early stopping: pruners over intermediate-metric reports.
+//!
+//! An evaluation is no longer atomic — workers stream `report(step, value)`
+//! observations mid-flight (Tune's trial schedulers, Sherpa's robust-HPO
+//! design), and a [`Pruner`] decides after each report whether the trial is
+//! hopeless and should be cancelled. Two classic rules are implemented:
+//!
+//! * [`MedianRule`] — prune a trial whose latest value is strictly below
+//!   the median of the other trials' values at a comparable step;
+//! * [`AsyncSuccessiveHalving`] — ASHA: rung milestones at
+//!   `r0 * eta^k` steps, keeping the top `floor(n / eta)` of the trials
+//!   that reached each rung.
+//!
+//! **Determinism contract.** A pruner is a *pure function* of the
+//! [`ReportBook`] — the journaled report history — and nothing else: no
+//! wall clock, no entropy, no iteration-order-dependent state (the book is
+//! `BTreeMap`-backed, comparisons use `total_cmp`). The same book always
+//! yields the same decision, which is what makes pruning decisions
+//! byte-identical run-to-run, identical across schedulers when the report
+//! streams are identical, and exactly replayable from the journal on
+//! resume (`persist/recover.rs` rebuilds the book; the resumed process
+//! re-derives the crashed process's rung state instead of trusting it).
+//!
+//! Values in the book are in *internal* (maximization) convention, exactly
+//! like [`super::History`] — the coordinator negates user values for
+//! minimization problems before they reach the book, and NaN reports are
+//! folded to `-inf` via [`crate::util::stats::nan_as_worst`] so they can
+//! never poison a median or a rung rank.
+
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// Which pruner a run uses (`--pruner {none,median,asha}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrunerKind {
+    /// No trial-level pruning — byte-identical to the pre-pruning path.
+    None,
+    /// [`MedianRule`].
+    Median,
+    /// [`AsyncSuccessiveHalving`].
+    Asha,
+}
+
+impl PrunerKind {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Self::None),
+            "median" => Some(Self::Median),
+            "asha" => Some(Self::Asha),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`from_str`](Self::from_str) (config round trips).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Median => "median",
+            Self::Asha => "asha",
+        }
+    }
+}
+
+/// The journaled report history: per-proposal streams of
+/// `(step, internal_value)` observations, in arrival order.
+///
+/// Streams of concluded trials stay in the book — the median rule and
+/// ASHA both compare a live trial against *everything* that ever reported
+/// at a comparable step, finished trials included.
+#[derive(Clone, Debug, Default)]
+pub struct ReportBook {
+    streams: BTreeMap<u64, Vec<(u64, f64)>>,
+}
+
+impl ReportBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one report to proposal `pid`'s stream. The trial's "latest"
+    /// report is the last pushed, whatever its step label.
+    pub fn push(&mut self, pid: u64, step: u64, value: f64) {
+        self.streams.entry(pid).or_default().push((step, value));
+    }
+
+    /// Proposal `pid`'s reports in arrival order (empty if it never
+    /// reported).
+    pub fn reports(&self, pid: u64) -> &[(u64, f64)] {
+        self.streams.get(&pid).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Every proposal that has reported, in ascending pid order.
+    pub fn pids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.streams.keys().copied()
+    }
+
+    /// Drop proposal `pid`'s stream — a fresh submission restarts the
+    /// trial from step 0, so its pre-restart reports must not double-count
+    /// (the replay applies the same rule at every `async_submit`).
+    pub fn reset(&mut self, pid: u64) {
+        self.streams.remove(&pid);
+    }
+
+    /// Total reports across all streams.
+    pub fn len(&self) -> usize {
+        self.streams.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+}
+
+/// A trial-level early-stopping rule: a pure function of the report book.
+///
+/// `should_prune(pid, book)` is consulted immediately after `pid`'s latest
+/// report was pushed into `book`; `true` cancels the trial. Implementations
+/// must not hold mutable state that the book cannot reconstruct — resume
+/// re-derives every decision by replaying the journaled reports through
+/// the same rule.
+pub trait Pruner: Send + Sync {
+    fn should_prune(&self, pid: u64, book: &ReportBook) -> bool;
+    fn name(&self) -> &'static str;
+}
+
+/// Median-rule pruning: at the trial's latest report `(s, v)`, compare `v`
+/// against the median of every *other* trial's last report at a step
+/// `<= s`. Prune iff `v` is strictly below that median — ties survive, so
+/// lowering a value can only flip a decision toward pruning, never away
+/// from it (the monotonicity property `rust/tests/pruning.rs` checks).
+///
+/// `warmup` is the number of reports a trial must have produced before the
+/// rule engages, and at least two other trials must offer a comparable
+/// report — with fewer, there is no meaningful median and the trial runs.
+#[derive(Clone, Copy, Debug)]
+pub struct MedianRule {
+    pub warmup: usize,
+}
+
+impl Pruner for MedianRule {
+    fn should_prune(&self, pid: u64, book: &ReportBook) -> bool {
+        let mine = book.reports(pid);
+        let Some(&(step, value)) = mine.last() else { return false };
+        if mine.len() < self.warmup.max(1) {
+            return false;
+        }
+        let mut others: Vec<f64> = Vec::new();
+        for other in book.pids() {
+            if other == pid {
+                continue;
+            }
+            // The other trial's most recent report at a comparable step.
+            if let Some(&(_, v)) = book
+                .reports(other)
+                .iter()
+                .filter(|(s, _)| *s <= step)
+                .last()
+            {
+                others.push(v);
+            }
+        }
+        if others.len() < 2 {
+            return false;
+        }
+        value < stats::median(&others)
+    }
+
+    fn name(&self) -> &'static str {
+        "median"
+    }
+}
+
+/// Asynchronous Successive Halving (ASHA): rung `k` sits at step milestone
+/// `r0 * eta^k`. A trial *reaches* rung `k` at its first report with
+/// `step >= milestone(k)`, and that report's value is its rung value. At
+/// the trial's latest report, only the highest reached milestone is
+/// judged: of the `n` trials that reached it, the top
+/// `max(1, floor(n / eta))` by rung value survive; a trial survives iff
+/// strictly fewer than that many rung values beat its own (ties promote).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncSuccessiveHalving {
+    /// Rung-0 step milestone (>= 1).
+    pub r0: u64,
+    /// Reduction factor eta (> 1).
+    pub eta: f64,
+}
+
+impl AsyncSuccessiveHalving {
+    /// Step milestone of rung `k` (exactly `r0 * eta^k` in f64 — `eta` is
+    /// validated finite and > 1, so milestones strictly increase).
+    fn milestone(&self, k: i32) -> f64 {
+        (self.r0.max(1) as f64) * self.eta.powi(k)
+    }
+
+    /// Highest rung whose milestone is `<= step`, if any.
+    fn rung_of(&self, step: u64) -> Option<i32> {
+        let s = step as f64;
+        if s < self.milestone(0) {
+            return None;
+        }
+        let mut k = 0i32;
+        while self.milestone(k + 1) <= s {
+            k += 1;
+        }
+        Some(k)
+    }
+
+    /// The value `pid` carried when it first reached rung `k`.
+    fn rung_value(&self, book: &ReportBook, pid: u64, k: i32) -> Option<f64> {
+        let m = self.milestone(k);
+        book.reports(pid).iter().find(|(s, _)| (*s as f64) >= m).map(|&(_, v)| v)
+    }
+}
+
+impl Pruner for AsyncSuccessiveHalving {
+    fn should_prune(&self, pid: u64, book: &ReportBook) -> bool {
+        let Some(&(step, _)) = book.reports(pid).last() else { return false };
+        let Some(k) = self.rung_of(step) else { return false };
+        let Some(mine) = self.rung_value(book, pid, k) else { return false };
+        let rung: Vec<f64> =
+            book.pids().filter_map(|p| self.rung_value(book, p, k)).collect();
+        let keep = (((rung.len() as f64) / self.eta).floor() as usize).max(1);
+        let rank = rung
+            .iter()
+            .filter(|v| v.total_cmp(&mine) == std::cmp::Ordering::Greater)
+            .count();
+        rank >= keep
+    }
+
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+}
+
+/// Build the configured pruner (`None` for [`PrunerKind::None`]).
+pub fn build_pruner(kind: PrunerKind, warmup: usize, reduction: f64) -> Option<Box<dyn Pruner>> {
+    match kind {
+        PrunerKind::None => None,
+        PrunerKind::Median => Some(Box::new(MedianRule { warmup })),
+        PrunerKind::Asha => Some(Box::new(AsyncSuccessiveHalving {
+            r0: (warmup.max(1)) as u64,
+            eta: reduction,
+        })),
+    }
+}
+
+/// Censored-value policy `worst-seen` for pruned trials: the value a
+/// pruned trial contributes to the surrogate history is the worse of its
+/// last reported value and the worst value already in the history — so a
+/// trial cancelled mid-flight can never look *better* than anything that
+/// ran to completion. All arguments and the result are in internal
+/// (maximization) convention.
+///
+/// NaN last-reports fold to `-inf` ([`stats::nan_as_worst`]); if the
+/// candidate is non-finite (NaN/`-inf` report with no finite history
+/// floor) the trial contributes nothing (`None`) — the coordinator then
+/// records the pruning without a history entry, exactly like a `Failed`
+/// completion. The live event loop and the journal replay both call this
+/// one function, so a resumed run's censored values are bit-identical to
+/// the crashed process's.
+pub fn censored_value(last_internal: f64, worst_history: Option<f64>) -> Option<f64> {
+    let last = stats::nan_as_worst(last_internal);
+    let candidate = match worst_history {
+        Some(w) => last.min(w),
+        None => last,
+    };
+    if candidate.is_finite() {
+        Some(candidate)
+    } else {
+        worst_history.filter(|w| w.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn book(streams: &[(u64, &[(u64, f64)])]) -> ReportBook {
+        let mut b = ReportBook::new();
+        for (pid, reports) in streams {
+            for (s, v) in *reports {
+                b.push(*pid, *s, *v);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn pruner_kind_round_trips() {
+        for kind in [PrunerKind::None, PrunerKind::Median, PrunerKind::Asha] {
+            assert_eq!(PrunerKind::from_str(kind.as_str()), Some(kind));
+        }
+        assert_eq!(PrunerKind::from_str("hyperband"), None);
+    }
+
+    #[test]
+    fn book_push_reset_and_len() {
+        let mut b = ReportBook::new();
+        assert!(b.is_empty());
+        b.push(3, 1, 0.5);
+        b.push(3, 2, 0.6);
+        b.push(1, 1, 0.1);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.reports(3), &[(1, 0.5), (2, 0.6)]);
+        assert_eq!(b.pids().collect::<Vec<_>>(), vec![1, 3]);
+        b.reset(3);
+        assert_eq!(b.reports(3), &[] as &[(u64, f64)]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn median_rule_needs_warmup_and_two_others() {
+        let p = MedianRule { warmup: 2 };
+        // Only one report: below warmup.
+        let b = book(&[(0, &[(1, -9.0)]), (1, &[(1, 1.0)]), (2, &[(1, 2.0)])]);
+        assert!(!p.should_prune(0, &b));
+        // Two reports but only one other trial: no median.
+        let b = book(&[(0, &[(1, -9.0), (2, -9.0)]), (1, &[(1, 1.0)])]);
+        assert!(!p.should_prune(0, &b));
+        // Two others at comparable steps: now it prunes.
+        let b = book(&[
+            (0, &[(1, -9.0), (2, -9.0)]),
+            (1, &[(1, 1.0), (2, 1.5)]),
+            (2, &[(1, 2.0)]),
+        ]);
+        assert!(p.should_prune(0, &b));
+    }
+
+    #[test]
+    fn median_rule_ties_survive() {
+        // value == median must NOT prune (strictly-below rule).
+        let p = MedianRule { warmup: 1 };
+        let b = book(&[(0, &[(1, 1.0)]), (1, &[(1, 1.0)]), (2, &[(1, 1.0)])]);
+        assert!(!p.should_prune(0, &b));
+    }
+
+    #[test]
+    fn median_rule_ignores_future_steps_of_others() {
+        let p = MedianRule { warmup: 1 };
+        // Others' step-5 values are great, but at step <= 1 they were bad:
+        // the comparison must use the comparable-step values only.
+        let b = book(&[
+            (0, &[(1, 0.0)]),
+            (1, &[(1, -5.0), (5, 100.0)]),
+            (2, &[(1, -4.0), (5, 100.0)]),
+        ]);
+        assert!(!p.should_prune(0, &b), "0.0 beats the step-1 median of -4.5");
+    }
+
+    #[test]
+    fn asha_prunes_bottom_of_rung() {
+        // r0 = 2, eta = 2: rung 0 at step 2. Four trials reach it; keep
+        // floor(4 / 2) = 2. The two worst rung values prune.
+        let p = AsyncSuccessiveHalving { r0: 2, eta: 2.0 };
+        let b = book(&[
+            (0, &[(1, 0.0), (2, 4.0)]),
+            (1, &[(1, 0.0), (2, 3.0)]),
+            (2, &[(1, 0.0), (2, 2.0)]),
+            (3, &[(1, 0.0), (2, 1.0)]),
+        ]);
+        assert!(!p.should_prune(0, &b));
+        assert!(!p.should_prune(1, &b));
+        assert!(p.should_prune(2, &b));
+        assert!(p.should_prune(3, &b));
+    }
+
+    #[test]
+    fn asha_below_first_milestone_never_prunes() {
+        let p = AsyncSuccessiveHalving { r0: 4, eta: 3.0 };
+        let b = book(&[(0, &[(1, -100.0)]), (1, &[(1, 5.0)]), (2, &[(2, 5.0)])]);
+        assert!(!p.should_prune(0, &b));
+    }
+
+    #[test]
+    fn asha_judges_highest_reached_rung_only() {
+        // r0 = 1, eta = 2: milestones 1, 2, 4. A trial at step 4 is judged
+        // at rung 2, where only trials that reached step 4 compete.
+        let p = AsyncSuccessiveHalving { r0: 1, eta: 2.0 };
+        let b = book(&[
+            // Worst at rung 0/1, but the only one at rung 2 so it's top-1.
+            (0, &[(1, -9.0), (2, -9.0), (4, -9.0)]),
+            (1, &[(1, 5.0), (2, 5.0)]),
+            (2, &[(1, 4.0), (2, 4.0)]),
+        ]);
+        assert!(!p.should_prune(0, &b), "alone at its rung, keep = max(1, ..) saves it");
+    }
+
+    #[test]
+    fn asha_ties_promote() {
+        let p = AsyncSuccessiveHalving { r0: 1, eta: 2.0 };
+        // Two trials, identical rung values: keep = max(1, floor(2/2)) = 1,
+        // rank of each is 0 (no strictly-greater value) — both survive.
+        let b = book(&[(0, &[(1, 1.0)]), (1, &[(1, 1.0)])]);
+        assert!(!p.should_prune(0, &b));
+        assert!(!p.should_prune(1, &b));
+    }
+
+    #[test]
+    fn build_pruner_maps_kinds() {
+        assert!(build_pruner(PrunerKind::None, 1, 3.0).is_none());
+        assert_eq!(build_pruner(PrunerKind::Median, 2, 3.0).unwrap().name(), "median");
+        assert_eq!(build_pruner(PrunerKind::Asha, 2, 3.0).unwrap().name(), "asha");
+    }
+
+    #[test]
+    fn censored_value_is_worst_seen() {
+        // Worse of (last report, worst history).
+        assert_eq!(censored_value(-2.0, Some(-5.0)), Some(-5.0));
+        assert_eq!(censored_value(-9.0, Some(-5.0)), Some(-9.0));
+        // No history yet: the last report stands alone.
+        assert_eq!(censored_value(-2.0, None), Some(-2.0));
+        // NaN folds to -inf, then falls back to the finite history floor.
+        assert_eq!(censored_value(f64::NAN, Some(-5.0)), Some(-5.0));
+        assert_eq!(censored_value(f64::NEG_INFINITY, Some(-5.0)), Some(-5.0));
+        // Nothing finite anywhere: no history contribution at all.
+        assert_eq!(censored_value(f64::NAN, None), None);
+        assert_eq!(censored_value(f64::NEG_INFINITY, None), None);
+    }
+}

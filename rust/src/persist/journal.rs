@@ -10,9 +10,10 @@
 //!   iteration;
 //! * async mode — `async_propose` (stable proposal id + config + rounds),
 //!   `async_submit` (proposal → scheduler task id, including resubmissions
-//!   after a loss), and `async_complete` (terminal `done`/`failed`/`lost`
-//!   outcomes plus `resubmitted` intermediates, with retry counters and
-//!   queue/eval telemetry).
+//!   after a loss), `async_report` (one intermediate metric report plus
+//!   the pruner's decision on it), and `async_complete` (terminal
+//!   `done`/`failed`/`lost`/`pruned` outcomes plus `resubmitted`
+//!   intermediates, with retry counters and queue/eval telemetry).
 //!
 //! Every `append` writes one complete `\n`-terminated line in a single
 //! `write_all` and flushes, so a process kill leaves at worst one
@@ -46,9 +47,16 @@ pub const JOURNAL_MAGIC: &str = "mango-run-journal";
 ///
 /// v2: the header carries the Celery fault-simulator override
 /// ([`RunHeader::celery`]), so a resumed run re-applies the exact fault
-/// model instead of silently reverting to defaults. v1 journals fail
-/// loudly, as every version mismatch does.
-pub const JOURNAL_VERSION: u64 = 2;
+/// model instead of silently reverting to defaults.
+///
+/// v3: trial-level early stopping — intermediate-metric reports are
+/// journaled as `async_report` events and a pruned trial concludes with
+/// the `pruned` completion outcome (`at_step` + `last_v`); the header's
+/// `RunConfig` grew the `pruner`/`pruner_warmup`/`asha_reduction` knobs.
+/// v1 and v2 journals fail loudly, as every version mismatch does — a v2
+/// replay under v3 rules could silently resume a pruning run without its
+/// rung state.
+pub const JOURNAL_VERSION: u64 = 3;
 
 /// Objective sense recorded in the header; `Tuner::maximize`/`minimize`
 /// on a resumed run must match it.
@@ -159,6 +167,13 @@ pub enum EventOutcome {
     Lost(LossReason),
     /// Lost but re-enqueued; a later event concludes the same proposal.
     Resubmitted(LossReason),
+    /// Cancelled mid-flight by the pruner at intermediate step `at_step`;
+    /// terminal. `last_value` is the trial's final reported value (user
+    /// objective sense) — the censored history contribution is recomputed
+    /// from it (and the worst history value) by
+    /// [`crate::optimizer::prune::censored_value`], identically in the
+    /// live loop and the replay.
+    Pruned { at_step: u64, last_value: f64 },
 }
 
 fn reason_str(r: LossReason) -> &'static str {
@@ -198,6 +213,13 @@ pub enum JournalEvent {
     /// stop. Terminal for its proposal — without this event a resume would
     /// re-enqueue and evaluate work the original run cancelled.
     AsyncCancel { pid: u64, task: TaskId },
+    /// Async mode: one intermediate metric report from the worker
+    /// evaluating proposal `pid` as task `task` (`value` in user objective
+    /// sense). `pruned` records the pruner's decision *on this report* —
+    /// journaling the decision, not just the observation, lets the replay
+    /// cross-check that re-deriving decisions from the report book agrees
+    /// with what the crashed process actually did.
+    AsyncReport { pid: u64, task: TaskId, step: u64, value: f64, pruned: bool },
     /// Async mode: one completion event for proposal `pid`.
     AsyncComplete {
         pid: u64,
@@ -261,6 +283,14 @@ impl JournalEvent {
                 ("pid", Json::Num(*pid as f64)),
                 ("task", Json::Num(*task as f64)),
             ]),
+            JournalEvent::AsyncReport { pid, task, step, value, pruned } => Json::obj(vec![
+                ("e", Json::Str("async_report".into())),
+                ("pid", Json::Num(*pid as f64)),
+                ("task", Json::Num(*task as f64)),
+                ("step", Json::Num(*step as f64)),
+                ("v", f64_to_json(*value)),
+                ("pruned", Json::Bool(*pruned)),
+            ]),
             JournalEvent::AsyncComplete { pid, task, retries, outcome, queue_ms, eval_ms } => {
                 let mut fields = vec![
                     ("e", Json::Str("async_complete".into())),
@@ -281,6 +311,11 @@ impl JournalEvent {
                     EventOutcome::Resubmitted(r) => {
                         fields.push(("o", Json::Str("resubmitted".into())));
                         fields.push(("reason", Json::Str(reason_str(*r).into())));
+                    }
+                    EventOutcome::Pruned { at_step, last_value } => {
+                        fields.push(("o", Json::Str("pruned".into())));
+                        fields.push(("at_step", Json::Num(*at_step as f64)));
+                        fields.push(("last_v", f64_to_json(*last_value)));
                     }
                 }
                 fields.push(("queue_ms", Json::Num(*queue_ms)));
@@ -356,6 +391,18 @@ impl JournalEvent {
                 pid: req_u64(j, "pid")?,
                 task: req_u64(j, "task")?,
             }),
+            "async_report" => Ok(JournalEvent::AsyncReport {
+                pid: req_u64(j, "pid")?,
+                task: req_u64(j, "task")?,
+                step: req_u64(j, "step")?,
+                value: f64_from_json(
+                    j.get("v").ok_or_else(|| anyhow!("async_report missing v"))?,
+                )?,
+                pruned: j
+                    .get("pruned")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("async_report missing bool 'pruned'"))?,
+            }),
             "async_complete" => {
                 let outcome = match req_str(j, "o")? {
                     "done" => EventOutcome::Done(f64_from_json(
@@ -366,6 +413,13 @@ impl JournalEvent {
                     "resubmitted" => {
                         EventOutcome::Resubmitted(reason_from(req_str(j, "reason")?)?)
                     }
+                    "pruned" => EventOutcome::Pruned {
+                        at_step: req_u64(j, "at_step")?,
+                        last_value: f64_from_json(
+                            j.get("last_v")
+                                .ok_or_else(|| anyhow!("pruned completion missing last_v"))?,
+                        )?,
+                    },
                     other => return Err(anyhow!("unknown completion outcome '{other}'")),
                 };
                 Ok(JournalEvent::AsyncComplete {
@@ -663,6 +717,16 @@ mod tests {
                 queue_ms: 0.1,
                 eval_ms: 0.2,
             },
+            JournalEvent::AsyncReport { pid: 7, task: 13, step: 2, value: -1.5, pruned: false },
+            JournalEvent::AsyncReport { pid: 7, task: 13, step: 3, value: -8.25, pruned: true },
+            JournalEvent::AsyncComplete {
+                pid: 7,
+                task: 13,
+                retries: 0,
+                outcome: EventOutcome::Pruned { at_step: 3, last_value: -8.25 },
+                queue_ms: 0.1,
+                eval_ms: 0.3,
+            },
         ]
     }
 
@@ -889,14 +953,20 @@ mod tests {
         std::fs::write(&path, format!("{h}\n")).unwrap();
         let err = read_journal(&path).unwrap_err();
         assert!(err.to_string().contains("version"), "got: {err:#}");
-        // Pre-celery (v1) journals fail loudly too — the schema bump is
-        // what keeps an old header from silently resuming without its
-        // fault model.
-        let mut h = header().to_json().to_string();
-        h = h.replace(&format!("\"version\":{JOURNAL_VERSION}"), "\"version\":1");
-        std::fs::write(&path, format!("{h}\n")).unwrap();
-        let err = read_journal(&path).unwrap_err();
-        assert!(err.to_string().contains("version"), "got: {err:#}");
+        // Stale schemas fail loudly too: v1 (pre-celery-header) and v2
+        // (pre-pruning — no async_report events or pruned outcomes). A v2
+        // journal silently replayed under v3 rules would resume a pruning
+        // run without its rung state.
+        for old in [1u64, 2] {
+            let mut h = header().to_json().to_string();
+            h = h.replace(
+                &format!("\"version\":{JOURNAL_VERSION}"),
+                &format!("\"version\":{old}"),
+            );
+            std::fs::write(&path, format!("{h}\n")).unwrap();
+            let err = read_journal(&path).unwrap_err();
+            assert!(err.to_string().contains("version"), "v{old}: got {err:#}");
+        }
         std::fs::remove_file(&path).ok();
     }
 

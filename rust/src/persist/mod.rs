@@ -8,10 +8,12 @@
 //!
 //! * [`journal`] — the event log: a header (schema version, search-space
 //!   fingerprint, full `RunConfig` + seed, objective sense) and one line
-//!   per proposal, submission, completion (including `Lost` fates), and
-//!   optimizer round. Writes are line-atomic-on-kill: at most one torn
-//!   trailing line, which the reader detects and drops.
-//! * [`recover`] — pure replay: reconstructs the history, pending set
+//!   per proposal, submission, intermediate report, completion (including
+//!   `Lost` fates and `Pruned` cancellations), and optimizer round. Writes
+//!   are line-atomic-on-kill: at most one torn trailing line, which the
+//!   reader detects and drops.
+//! * [`recover`] — pure replay: reconstructs the history (including
+//!   censored entries of pruned trials), report streams, pending set
 //!   (with retry counters), telemetry, and RNG/rounds state without
 //!   calling the objective or fitting anything.
 //!

@@ -25,7 +25,8 @@
 //! (RNG state, rounds, in-flight set and order) or recomputed from
 //! journaled data by the same arithmetic.
 
-use super::journal::{read_journal, EventOutcome, JournalEvent, RunHeader};
+use super::journal::{read_journal, EventOutcome, JournalEvent, RunHeader, SenseTag};
+use crate::optimizer::prune;
 use crate::space::{Config, SearchSpace};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -89,6 +90,10 @@ pub struct TerminalReplay {
     /// Proposals journaled since the previous terminal conclusion — the
     /// event loop's `proposed_since_record` bookkeeping.
     pub proposed_before: usize,
+    /// Did this conclusion push a history entry? True for `Done` and for
+    /// `Pruned` whose censored value (recomputed here under the same
+    /// worst-seen policy as the live loop) was `Some`.
+    pub contributed: bool,
 }
 
 /// A proposal in flight at the crash, to be re-enqueued on resume.
@@ -127,6 +132,13 @@ pub struct AsyncReplay {
     /// Proposals journaled after the last terminal conclusion (carried
     /// into the resumed loop's `proposed_since_record`).
     pub trailing_proposed: usize,
+    /// Intermediate reports of *concluded* proposals, journal order:
+    /// `(pid, step, user-sense value, pruned decision)`. Reports of
+    /// in-flight-at-crash proposals are dropped — those trials re-execute
+    /// and re-report from scratch on resume.
+    pub reports: Vec<(u64, u64, f64, bool)>,
+    /// Trials the crashed run's pruner cancelled, replayed.
+    pub pruned: u64,
 }
 
 /// Mode-specific replay payload.
@@ -168,7 +180,7 @@ pub fn recover(path: &Path) -> Result<RecoveredRun> {
     let contents = read_journal(path)?;
     let replay = match contents.header.run.mode.as_str() {
         "sync" => Replay::Sync(replay_sync(&contents.events)?),
-        "async" => Replay::Async(replay_async(&contents.events)?),
+        "async" => Replay::Async(replay_async(&contents.events, contents.header.sense)?),
         other => return Err(anyhow!("journal header has unknown mode '{other}'")),
     };
     Ok(RecoveredRun { header: contents.header, valid_len: contents.valid_len, replay })
@@ -241,13 +253,25 @@ struct PidState {
     /// if the crash landed between propose and submit).
     order: u64,
     concluded: bool,
+    /// Intermediate reports of the proposal's *current* attempt:
+    /// `(step, user-sense value, pruned decision)`. Cleared on every
+    /// submit — a re-enqueued trial re-reports from scratch, so only the
+    /// final attempt's stream may reach `AsyncReplay::reports`.
+    reports: Vec<(u64, f64, bool)>,
 }
 
-fn replay_async(events: &[JournalEvent]) -> Result<AsyncReplay> {
+fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay> {
+    let to_internal = |v: f64| match sense {
+        SenseTag::Maximize => v,
+        SenseTag::Minimize => -v,
+    };
     let mut r = AsyncReplay::default();
     let mut pids: BTreeMap<u64, PidState> = BTreeMap::new();
     let mut seq = 0u64; // global event order for pending-order reconstruction
     let mut proposed_counter = 0usize;
+    // Running worst internal-sense history value — the same state the live
+    // loop's censoring policy reads, rebuilt in the same push order.
+    let mut worst_internal = f64::INFINITY;
     for ev in events {
         seq += 1;
         match ev {
@@ -258,7 +282,13 @@ fn replay_async(events: &[JournalEvent]) -> Result<AsyncReplay> {
                 );
                 pids.insert(
                     *pid,
-                    PidState { config: config.clone(), retries: 0, order: seq, concluded: false },
+                    PidState {
+                        config: config.clone(),
+                        retries: 0,
+                        order: seq,
+                        concluded: false,
+                        reports: Vec::new(),
+                    },
                 );
                 r.proposals_made = r.proposals_made.max(pid + 1);
                 r.rounds = *rounds;
@@ -271,7 +301,15 @@ fn replay_async(events: &[JournalEvent]) -> Result<AsyncReplay> {
                 anyhow::ensure!(!st.concluded, "async_submit for concluded proposal {pid}");
                 st.retries = *retries;
                 st.order = seq;
+                st.reports.clear(); // fresh attempt: any prior stream is stale
                 r.next_task_id = r.next_task_id.max(task + 1);
+            }
+            JournalEvent::AsyncReport { pid, step, value, pruned, .. } => {
+                let st = pids
+                    .get_mut(pid)
+                    .ok_or_else(|| anyhow!("async_report for unknown proposal {pid}"))?;
+                anyhow::ensure!(!st.concluded, "async_report for concluded proposal {pid}");
+                st.reports.push((*step, *value, *pruned));
             }
             JournalEvent::AsyncCancel { pid, .. } => {
                 let st = pids
@@ -309,11 +347,42 @@ fn replay_async(events: &[JournalEvent]) -> Result<AsyncReplay> {
                     }
                     terminal => {
                         st.concluded = true;
-                        if let EventOutcome::Done(v) = terminal {
-                            r.history.push((st.config.clone(), *v));
-                        }
-                        if matches!(terminal, EventOutcome::Lost(_)) {
-                            r.lost += 1;
+                        let contributed = match terminal {
+                            EventOutcome::Done(v) => {
+                                let internal = to_internal(*v);
+                                worst_internal = worst_internal.min(internal);
+                                r.history.push((st.config.clone(), *v));
+                                true
+                            }
+                            EventOutcome::Pruned { last_value, .. } => {
+                                // Recompute the censored entry with the
+                                // exact policy (and running state) the live
+                                // loop applied, instead of journaling a
+                                // second derived value that could drift.
+                                r.pruned += 1;
+                                let worst =
+                                    worst_internal.is_finite().then_some(worst_internal);
+                                match prune::censored_value(to_internal(*last_value), worst) {
+                                    Some(censored) => {
+                                        worst_internal = worst_internal.min(censored);
+                                        let user = match sense {
+                                            SenseTag::Maximize => censored,
+                                            SenseTag::Minimize => -censored,
+                                        };
+                                        r.history.push((st.config.clone(), user));
+                                        true
+                                    }
+                                    None => false,
+                                }
+                            }
+                            EventOutcome::Lost(_) => {
+                                r.lost += 1;
+                                false
+                            }
+                            _ => false,
+                        };
+                        for &(step, value, pruned) in &st.reports {
+                            r.reports.push((*pid, step, value, pruned));
                         }
                         r.terminals.push(TerminalReplay {
                             task: *task,
@@ -321,6 +390,7 @@ fn replay_async(events: &[JournalEvent]) -> Result<AsyncReplay> {
                             outcome: *outcome,
                             wall_ms: *queue_ms + *eval_ms,
                             proposed_before: std::mem::take(&mut proposed_counter),
+                            contributed,
                         });
                     }
                 }
@@ -491,6 +561,109 @@ mod tests {
         let pids: Vec<u64> = a.pending.iter().map(|p| p.pid).collect();
         assert_eq!(pids, vec![2, 0, 3]);
         assert_eq!(a.pending[1].retries, 1, "retry count survives the crash");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn async_replay_replays_reports_and_pruned_terminals() {
+        let path = tmp("async_prune");
+        write_journal(
+            &path,
+            "async",
+            &[
+                JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) },
+                JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0 },
+                JournalEvent::AsyncPropose { pid: 1, rounds: 0, config: cfg(1) },
+                JournalEvent::AsyncSubmit { pid: 1, task: 1, retries: 0 },
+                JournalEvent::AsyncReport { pid: 0, task: 0, step: 0, value: 1.0, pruned: false },
+                JournalEvent::AsyncReport { pid: 0, task: 0, step: 1, value: 2.0, pruned: false },
+                JournalEvent::AsyncComplete {
+                    pid: 0,
+                    task: 0,
+                    retries: 0,
+                    outcome: EventOutcome::Done(2.0),
+                    queue_ms: 1.0,
+                    eval_ms: 2.0,
+                },
+                JournalEvent::AsyncReport { pid: 1, task: 1, step: 0, value: 0.5, pruned: true },
+                JournalEvent::AsyncComplete {
+                    pid: 1,
+                    task: 1,
+                    retries: 0,
+                    outcome: EventOutcome::Pruned { at_step: 0, last_value: 0.5 },
+                    queue_ms: 1.0,
+                    eval_ms: 1.0,
+                },
+                JournalEvent::AsyncPropose { pid: 2, rounds: 2, config: cfg(2) },
+                JournalEvent::AsyncSubmit { pid: 2, task: 2, retries: 0 },
+                JournalEvent::AsyncReport { pid: 2, task: 2, step: 0, value: 9.0, pruned: false },
+                // crash: pid 2 in flight with a half-journaled report stream
+            ],
+        );
+        let rec = recover(&path).unwrap();
+        let Replay::Async(a) = rec.replay else { panic!("expected async replay") };
+        // Pruned pid 1's censored value: min(last=0.5, worst-seen=2.0) = 0.5.
+        assert_eq!(a.history, vec![(cfg(0), 2.0), (cfg(1), 0.5)]);
+        assert_eq!(a.pruned, 1);
+        assert_eq!(a.terminals.len(), 2);
+        assert!(a.terminals[0].contributed);
+        assert!(a.terminals[1].contributed, "censored entry counts as contributed");
+        assert!(matches!(a.terminals[1].outcome, EventOutcome::Pruned { at_step: 0, .. }));
+        // Only concluded pids' streams replay; pid 2 re-reports on resume.
+        assert_eq!(
+            a.reports,
+            vec![(0, 0, 1.0, false), (0, 1, 2.0, false), (1, 0, 0.5, true)]
+        );
+        assert_eq!(a.pending.iter().map(|p| p.pid).collect::<Vec<_>>(), vec![2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn async_replay_censors_to_none_with_empty_history() {
+        // A trial pruned on a NaN report before any history exists has no
+        // finite censored value: it must not contribute an entry.
+        let path = tmp("async_prune_nan");
+        write_journal(
+            &path,
+            "async",
+            &[
+                JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) },
+                JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0 },
+                JournalEvent::AsyncReport {
+                    pid: 0,
+                    task: 0,
+                    step: 0,
+                    value: f64::NAN,
+                    pruned: true,
+                },
+                JournalEvent::AsyncComplete {
+                    pid: 0,
+                    task: 0,
+                    retries: 0,
+                    outcome: EventOutcome::Pruned { at_step: 0, last_value: f64::NAN },
+                    queue_ms: 0.0,
+                    eval_ms: 0.0,
+                },
+            ],
+        );
+        let rec = recover(&path).unwrap();
+        let Replay::Async(a) = rec.replay else { panic!("expected async replay") };
+        assert!(a.history.is_empty());
+        assert_eq!(a.pruned, 1);
+        assert!(!a.terminals[0].contributed);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn async_replay_rejects_orphan_reports() {
+        let path = tmp("async_orphan_report");
+        write_journal(
+            &path,
+            "async",
+            &[JournalEvent::AsyncReport { pid: 7, task: 0, step: 0, value: 1.0, pruned: false }],
+        );
+        let err = recover(&path).unwrap_err();
+        assert!(err.to_string().contains("unknown proposal 7"), "got: {err:#}");
         std::fs::remove_file(&path).ok();
     }
 

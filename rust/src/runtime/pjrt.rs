@@ -28,7 +28,7 @@ mod xla_impl {
     use crate::runtime::artifact::ArtifactManifest;
     use anyhow::{Context, Result};
     use std::cell::RefCell;
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     use std::path::{Path, PathBuf};
     use std::rc::Rc;
 
@@ -36,8 +36,8 @@ mod xla_impl {
         /// One PJRT CPU client per thread (executables are tied to a client).
         static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
         /// Compiled-executable cache keyed by artifact path.
-        static EXE_CACHE: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>> =
-            RefCell::new(HashMap::new());
+        static EXE_CACHE: RefCell<BTreeMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>> =
+            RefCell::new(BTreeMap::new());
     }
 
     fn thread_client() -> Result<Rc<xla::PjRtClient>> {
@@ -85,7 +85,7 @@ mod xla_impl {
         #[allow(dead_code)] // keeps the client alive alongside its executables
         client: Rc<xla::PjRtClient>,
         manifest: ArtifactManifest,
-        compiled: HashMap<usize, CompiledVariant>,
+        compiled: BTreeMap<usize, CompiledVariant>,
         /// Counters for the perf pass (EXPERIMENTS.md §Perf).
         pub fit_calls: u64,
         pub acquire_calls: u64,
@@ -101,7 +101,7 @@ mod xla_impl {
         pub fn new(artifacts_dir: &Path) -> Result<Self> {
             let manifest = ArtifactManifest::load(artifacts_dir)?;
             let client = thread_client()?;
-            Ok(Self { client, manifest, compiled: HashMap::new(), fit_calls: 0, acquire_calls: 0 })
+            Ok(Self { client, manifest, compiled: BTreeMap::new(), fit_calls: 0, acquire_calls: 0 })
         }
 
         pub fn manifest(&self) -> &ArtifactManifest {

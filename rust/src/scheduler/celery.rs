@@ -20,6 +20,7 @@
 use super::pool::{Fate, Task as PoolTask, WorkerPool};
 use super::{
     AsyncScheduler, AsyncStats, BatchResult, Completion, Objective, Scheduler, TaskId,
+    TaskObjective,
 };
 use crate::config::json::Json;
 use crate::space::{f64_from_json, f64_to_json, Config};
@@ -283,7 +284,7 @@ pub struct CeleryAsyncScheduler {
 impl CeleryAsyncScheduler {
     pub fn spawn<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
-        objective: Objective<'env>,
+        objective: TaskObjective<'env>,
         config: CelerySimConfig,
         seed: u64,
     ) -> Self {
@@ -297,7 +298,7 @@ impl CeleryAsyncScheduler {
     /// a replay of the old cluster's fault schedule.
     pub fn spawn_from<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
-        objective: Objective<'env>,
+        objective: TaskObjective<'env>,
         config: CelerySimConfig,
         seed: u64,
         first_id: TaskId,
@@ -490,7 +491,7 @@ mod tests {
         use crate::scheduler::{CompletionStatus, LossReason};
         let mut cfg = reliable_config(4);
         cfg.crash_prob = 0.5;
-        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        let objective = |_: TaskId, c: &Config| Some(c.get_i64("i").unwrap() as f64);
         std::thread::scope(|scope| {
             let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg, 7);
             s.submit(&batch_of(40));
@@ -520,7 +521,7 @@ mod tests {
             crash_prob: 0.0,
             result_timeout: Duration::from_millis(50),
         };
-        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        let objective = |_: TaskId, c: &Config| Some(c.get_i64("i").unwrap() as f64);
         std::thread::scope(|scope| {
             let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg, 3);
             let t = Instant::now();
@@ -542,7 +543,7 @@ mod tests {
     fn async_fates_deterministic_per_seed() {
         let mut cfg = reliable_config(3);
         cfg.crash_prob = 0.3;
-        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        let objective = |_: TaskId, c: &Config| Some(c.get_i64("i").unwrap() as f64);
         let run = |seed: u64| {
             std::thread::scope(|scope| {
                 let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg.clone(), seed);

@@ -42,6 +42,7 @@ pub mod serial;
 pub mod threaded;
 
 use crate::space::Config;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Per-config objective: `None` = evaluation failed (worker crash, NaN, …).
@@ -49,6 +50,62 @@ pub type Objective<'a> = &'a (dyn Fn(&Config) -> Option<f64> + Sync);
 
 /// Identifier the scheduler assigns to each submitted evaluation.
 pub type TaskId = u64;
+
+/// Task-id-aware objective — the form the async engines execute. The id
+/// tags the evaluation so worker-side machinery (the [`TrialReporter`]
+/// channel) can attribute intermediate reports to trials; the coordinator
+/// builds this wrapper around the user objective, and plain objectives
+/// adapt via `|_, c| f(c)`.
+pub type TaskObjective<'a> = &'a (dyn Fn(TaskId, &Config) -> Option<f64> + Sync);
+
+/// Objective with an intermediate-report channel — the form user code
+/// writes when it wants trial-level early stopping: call
+/// `reporter.report(step, value)` between epochs, and treat a `false`
+/// return as "you've been pruned — stop wasting cycles".
+pub type TrialObjective<'a> = &'a (dyn Fn(&Config, &TrialReporter) -> Option<f64> + Sync);
+
+/// Receiver side of the intermediate-report channel. The coordinator's
+/// pruning state machine implements this; `on_report` returns `false`
+/// once the trial has been pruned so cooperative objectives can bail out
+/// early instead of training to completion.
+pub trait ReportSink: Send + Sync {
+    fn on_report(&self, task: TaskId, step: u64, value: f64) -> bool;
+}
+
+/// Worker-side handle for streaming intermediate metrics out of a running
+/// evaluation. Constructed per task by the coordinator's objective wrapper
+/// (async mode) or as [`detached`](Self::detached) (sync mode, `--pruner
+/// none`) where reports are accepted and discarded. Fault simulation
+/// composes for free: a task whose pre-rolled fate is a crash or timeout
+/// never executes the objective, so its reports are dropped; a delivered
+/// task's simulated latency delays its reports along with its result.
+pub struct TrialReporter {
+    task: TaskId,
+    sink: Option<Arc<dyn ReportSink>>,
+}
+
+impl TrialReporter {
+    pub fn new(task: TaskId, sink: Option<Arc<dyn ReportSink>>) -> Self {
+        Self { task, sink }
+    }
+
+    /// A reporter with no sink: every report is swallowed and answered
+    /// `true` (keep going). The `--pruner none` and sync-mode form.
+    pub fn detached() -> Self {
+        Self { task: 0, sink: None }
+    }
+
+    /// Stream one intermediate metric. Returns `true` to continue, `false`
+    /// once this trial has been pruned — the objective should then return
+    /// promptly (its return value is recorded as the trial's last word
+    /// either way; the coordinator journals the completion as `Pruned`).
+    pub fn report(&self, step: u64, value: f64) -> bool {
+        match &self.sink {
+            Some(sink) => sink.on_report(self.task, step, value),
+            None => true,
+        }
+    }
+}
 
 /// What a batch evaluation returned — the paper's `(evals, params)` pair.
 /// `params[i]` produced `evals[i]`; configs missing from `params` were lost
@@ -233,13 +290,16 @@ pub fn build_custom(
 /// their workers on `scope`, borrowing `objective` for the scope's
 /// lifetime — the coordinator wraps its event loop in
 /// [`std::thread::scope`] so the pool lives exactly as long as the run.
+/// The objective is the task-id-aware form ([`TaskObjective`]) so the
+/// coordinator can hand each evaluation a [`TrialReporter`] keyed to its
+/// task id.
 pub fn build_async<'scope, 'env>(
     kind: SchedulerKind,
     workers: usize,
     seed: u64,
     celery_config: Option<celery::CelerySimConfig>,
     scope: &'scope std::thread::Scope<'scope, 'env>,
-    objective: Objective<'env>,
+    objective: TaskObjective<'env>,
 ) -> Box<dyn AsyncScheduler + 'scope> {
     build_async_from(kind, workers, seed, celery_config, scope, objective, 0)
 }
@@ -254,7 +314,7 @@ pub fn build_async_from<'scope, 'env>(
     seed: u64,
     celery_config: Option<celery::CelerySimConfig>,
     scope: &'scope std::thread::Scope<'scope, 'env>,
-    objective: Objective<'env>,
+    objective: TaskObjective<'env>,
     first_id: TaskId,
 ) -> Box<dyn AsyncScheduler + 'scope> {
     match kind {
@@ -287,6 +347,26 @@ mod tests {
     }
 
     #[test]
+    fn trial_reporter_routes_to_sink_and_detached_swallows() {
+        struct Recorder(std::sync::Mutex<Vec<(TaskId, u64, f64)>>);
+        impl ReportSink for Recorder {
+            fn on_report(&self, task: TaskId, step: u64, value: f64) -> bool {
+                self.0.lock().unwrap().push((task, step, value));
+                step < 2 // "pruned" from step 2 on
+            }
+        }
+        let sink = Arc::new(Recorder(std::sync::Mutex::new(Vec::new())));
+        let rep = TrialReporter::new(7, Some(sink.clone()));
+        assert!(rep.report(1, 0.5));
+        assert!(!rep.report(2, 0.25), "sink's false must reach the caller");
+        assert_eq!(*sink.0.lock().unwrap(), vec![(7, 1, 0.5), (7, 2, 0.25)]);
+        // Detached reporters accept everything and record nothing.
+        let det = TrialReporter::detached();
+        assert!(det.report(1, 1.0));
+        assert!(det.report(999, f64::NAN));
+    }
+
+    #[test]
     fn batch_result_push() {
         let mut r = BatchResult::default();
         assert!(r.is_empty());
@@ -297,7 +377,7 @@ mod tests {
 
     #[test]
     fn build_async_all_kinds_submit_poll() {
-        let objective = |c: &Config| c.get_f64("x");
+        let objective = |_: TaskId, c: &Config| c.get_f64("x");
         let batch = vec![
             Config::new(vec![("x".into(), crate::space::ParamValue::F64(2.0))]),
             Config::new(vec![("x".into(), crate::space::ParamValue::F64(3.0))]),

@@ -12,19 +12,25 @@
 //!   [`JobPool::poll`].
 //!
 //! The core is **generic over the work item**: [`JobPool<P, R>`] carries
-//! any `Send` payload `P` to an executor `Fn(&P) -> Option<R>` and drains
-//! typed [`JobDone<P, R>`] results — objective evaluations
+//! any `Send` payload `P` to an executor — the plain `Fn(&P) -> Option<R>`
+//! form or the task-id-tagged `Fn(TaskId, &P) -> Option<R>` form — and
+//! drains typed [`JobDone<P, R>`] results. Objective evaluations
 //! (`P = Config, R = f64`, via the [`WorkerPool`] adapter the schedulers
-//! use) and candidate-scoring shards (`P = range, R = AcquireOut`) ride
-//! the identical machinery, so propose-time work scales through the same
-//! scheduler abstraction as trial evaluations.
+//! use; the tagged form, so each evaluation can key a
+//! [`super::TrialReporter`] intermediate-report channel by its task id)
+//! and candidate-scoring shards (`P = range, R = AcquireOut`; the plain
+//! form) ride the identical machinery, so propose-time work scales through
+//! the same scheduler abstraction as trial evaluations.
 //!
 //! Each job carries a pre-rolled [`Fate`]: real execution (optionally
 //! after a simulated latency) or an explicit loss. Lost jobs still report
 //! — as [`JobStatus::Lost`] — so the caller can retry them instead of
-//! inferring losses from silence.
+//! inferring losses from silence. Fated-to-be-lost jobs never execute the
+//! objective at all, which is exactly the report-channel fault semantics:
+//! a crashed or timed-out trial's intermediate reports are dropped, and a
+//! delivered trial's reports are delayed by its simulated latency.
 
-use super::{AsyncStats, Completion, CompletionStatus, LossReason, Objective, TaskId};
+use super::{AsyncStats, Completion, CompletionStatus, LossReason, TaskId, TaskObjective};
 use crate::space::Config;
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -89,10 +95,61 @@ pub(crate) struct JobPool<P, R> {
     stats: AsyncStats,
 }
 
+/// How a worker invokes the executor: the plain per-payload form (scoring
+/// shards) or the task-id-tagged form (objective evaluations, where the id
+/// keys the [`super::TrialReporter`] report channel).
+enum Exec<'a, P, R> {
+    Plain(&'a (dyn Fn(&P) -> Option<R> + Sync)),
+    Tagged(&'a (dyn Fn(TaskId, &P) -> Option<R> + Sync)),
+}
+
+// Manual impls: derive would demand `P: Copy, R: Copy`, but the enum only
+// holds references.
+impl<P, R> Clone for Exec<'_, P, R> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<P, R> Copy for Exec<'_, P, R> {}
+
+impl<P, R> Exec<'_, P, R> {
+    fn run(&self, id: TaskId, payload: &P) -> Option<R> {
+        match self {
+            Exec::Plain(f) => f(payload),
+            Exec::Tagged(f) => f(id, payload),
+        }
+    }
+}
+
 impl<P: Send, R: Send> JobPool<P, R> {
     pub(crate) fn spawn<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
         exec: &'env (dyn Fn(&P) -> Option<R> + Sync),
+        workers: usize,
+    ) -> Self
+    where
+        P: 'env,
+        R: 'env,
+    {
+        Self::spawn_exec(scope, Exec::Plain(exec), workers)
+    }
+
+    /// [`spawn`](Self::spawn) with the task-id-tagged executor form.
+    pub(crate) fn spawn_tagged<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        exec: &'env (dyn Fn(TaskId, &P) -> Option<R> + Sync),
+        workers: usize,
+    ) -> Self
+    where
+        P: 'env,
+        R: 'env,
+    {
+        Self::spawn_exec(scope, Exec::Tagged(exec), workers)
+    }
+
+    fn spawn_exec<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        exec: Exec<'env, P, R>,
         workers: usize,
     ) -> Self
     where
@@ -188,7 +245,7 @@ impl<P, R> Drop for JobPool<P, R> {
 
 fn worker_loop<P: Send, R: Send>(
     broker: &Broker<P>,
-    exec: &(dyn Fn(&P) -> Option<R> + Sync),
+    exec: Exec<'_, P, R>,
     tx: &mpsc::Sender<JobDone<P, R>>,
 ) {
     loop {
@@ -215,7 +272,7 @@ fn worker_loop<P: Send, R: Send>(
                 }
                 let queue_wait_ms = job.submitted_at.elapsed().as_secs_f64() * 1e3;
                 let t0 = Instant::now();
-                let value = exec(&job.payload);
+                let value = exec.run(job.id, &job.payload);
                 let eval_ms = t0.elapsed().as_secs_f64() * 1e3;
                 JobDone {
                     id: job.id,
@@ -273,10 +330,10 @@ pub(crate) struct WorkerPool {
 impl WorkerPool {
     pub(crate) fn spawn<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
-        objective: Objective<'env>,
+        objective: TaskObjective<'env>,
         workers: usize,
     ) -> Self {
-        Self { inner: JobPool::spawn(scope, objective, workers) }
+        Self { inner: JobPool::spawn_tagged(scope, objective, workers) }
     }
 
     pub(crate) fn submit_task(&mut self, task: Task) {
@@ -339,7 +396,7 @@ mod tests {
 
     #[test]
     fn pool_runs_tasks_and_counts() {
-        let objective = |c: &Config| Some(c.get_i64("i").unwrap() as f64 * 2.0);
+        let objective = |_: TaskId, c: &Config| Some(c.get_i64("i").unwrap() as f64 * 2.0);
         std::thread::scope(|scope| {
             let mut pool = WorkerPool::spawn(scope, &objective, 3);
             for i in 0..10 {
@@ -367,9 +424,37 @@ mod tests {
         });
     }
 
+    /// The tagged executor sees each job's task id — the substrate the
+    /// [`super::super::TrialReporter`] channel keys reports on.
+    #[test]
+    fn tagged_exec_receives_task_ids() {
+        let seen = Mutex::new(Vec::new());
+        let objective = |id: TaskId, c: &Config| {
+            seen.lock().unwrap().push((id, c.get_i64("i").unwrap()));
+            Some(0.0)
+        };
+        std::thread::scope(|scope| {
+            let mut pool = WorkerPool::spawn(scope, &objective, 1);
+            for i in 0..4 {
+                pool.submit_task(deliver(100 + i, i as i64));
+            }
+            while pool.in_flight() > 0 {
+                pool.poll(Duration::from_secs(10));
+            }
+        });
+        let mut got = seen.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![(100, 0), (101, 1), (102, 2), (103, 3)]);
+    }
+
     #[test]
     fn lost_fates_report_explicitly() {
-        let objective = |_: &Config| Some(1.0);
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ran = AtomicUsize::new(0);
+        let objective = |_: TaskId, _: &Config| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            Some(1.0)
+        };
         std::thread::scope(|scope| {
             let mut pool = WorkerPool::spawn(scope, &objective, 2);
             pool.submit_task(Task {
@@ -393,13 +478,16 @@ mod tests {
             assert_eq!(got[1].status, CompletionStatus::Lost(LossReason::TimedOut));
             assert_eq!(pool.stats().lost, 2);
         });
+        // A fated-to-be-lost job never executes — its reports are dropped
+        // at the source, not filtered downstream.
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "lost fates must not run the objective");
     }
 
     #[test]
     fn cancel_pending_withdraws_queued_work() {
         // A single worker stuck on a slow task leaves the rest queued.
         let started = (Mutex::new(false), Condvar::new());
-        let objective = |c: &Config| {
+        let objective = |_: TaskId, c: &Config| {
             if c.get_i64("i").unwrap() == 0 {
                 *started.0.lock().unwrap() = true;
                 started.1.notify_all();

@@ -5,7 +5,7 @@
 
 use super::{
     AsyncScheduler, AsyncStats, BatchResult, Completion, CompletionStatus, Objective, Scheduler,
-    TaskId,
+    TaskId, TaskObjective,
 };
 use crate::space::Config;
 use std::collections::VecDeque;
@@ -34,14 +34,14 @@ impl Scheduler for SerialScheduler {
 /// each `poll` runs exactly one task to completion. Nothing is ever lost,
 /// so every completion is `Done`/`Failed` and runs are deterministic.
 pub struct SerialAsyncScheduler<'a> {
-    objective: Objective<'a>,
+    objective: TaskObjective<'a>,
     queue: VecDeque<(TaskId, Config, Instant)>,
     next_id: TaskId,
     stats: AsyncStats,
 }
 
 impl<'a> SerialAsyncScheduler<'a> {
-    pub fn new(objective: Objective<'a>) -> Self {
+    pub fn new(objective: TaskObjective<'a>) -> Self {
         Self { objective, queue: VecDeque::new(), next_id: 0, stats: AsyncStats::default() }
     }
 
@@ -75,7 +75,7 @@ impl AsyncScheduler for SerialAsyncScheduler<'_> {
         };
         let queue_wait_ms = submitted_at.elapsed().as_secs_f64() * 1e3;
         let t0 = Instant::now();
-        let value = (self.objective)(&config);
+        let value = (self.objective)(id, &config);
         let eval_ms = t0.elapsed().as_secs_f64() * 1e3;
         let status = match value {
             Some(v) => {
@@ -151,7 +151,7 @@ mod tests {
 
     #[test]
     fn async_adapter_polls_one_at_a_time_in_order() {
-        let objective = |cfg: &Config| cfg.get_f64("x");
+        let objective = |_: TaskId, cfg: &Config| cfg.get_f64("x");
         let batch: Vec<Config> = (0..3)
             .map(|i| Config::new(vec![("x".into(), ParamValue::F64(i as f64))]))
             .collect();
@@ -172,7 +172,7 @@ mod tests {
 
     #[test]
     fn async_adapter_cancels_queue() {
-        let objective = |_: &Config| Some(1.0);
+        let objective = |_: TaskId, _: &Config| Some(1.0);
         let mut s = SerialAsyncScheduler::new(&objective);
         s.submit(&[Config::default(), Config::default()]);
         let cancelled = s.cancel_pending();

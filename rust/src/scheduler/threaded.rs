@@ -10,7 +10,7 @@
 use super::pool::{Fate, Task, WorkerPool};
 use super::{
     AsyncScheduler, AsyncStats, BatchResult, Completion, CompletionStatus, Objective, Scheduler,
-    TaskId,
+    TaskId, TaskObjective,
 };
 use crate::space::Config;
 use std::time::{Duration, Instant};
@@ -30,8 +30,10 @@ impl Scheduler for ThreadedScheduler {
         // The paper: "maximum level of parallelism per job is decided by the
         // size of the batch".
         let workers = self.workers.min(batch.len()).max(1);
+        // Sync mode has no report channel: adapt the plain objective.
+        let exec = |_: TaskId, cfg: &Config| objective(cfg);
         std::thread::scope(|scope| {
-            let mut engine = ThreadedAsyncScheduler::spawn(scope, objective, workers);
+            let mut engine = ThreadedAsyncScheduler::spawn(scope, &exec, workers);
             engine.submit(batch);
             let completions = engine.drain(Duration::from_secs(24 * 3600));
             // Results arrive out of order; keep arrival order (the optimizer
@@ -64,7 +66,7 @@ impl ThreadedAsyncScheduler {
     /// until the scope ends.
     pub fn spawn<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
-        objective: Objective<'env>,
+        objective: TaskObjective<'env>,
         workers: usize,
     ) -> Self {
         Self::spawn_from(scope, objective, workers, 0)
@@ -74,7 +76,7 @@ impl ThreadedAsyncScheduler {
     /// `first_id` (resumed runs continue the crashed run's id sequence).
     pub fn spawn_from<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
-        objective: Objective<'env>,
+        objective: TaskObjective<'env>,
         workers: usize,
         first_id: TaskId,
     ) -> Self {
@@ -190,7 +192,7 @@ mod tests {
     fn async_engine_overlaps_submissions() {
         // Submit in two waves without waiting for the first: 8 sleepy tasks
         // across 8 workers still finish in ~1 task's wall time.
-        let objective = |_: &Config| {
+        let objective = |_: TaskId, _: &Config| {
             std::thread::sleep(Duration::from_millis(30));
             Some(1.0)
         };
@@ -211,7 +213,7 @@ mod tests {
 
     #[test]
     fn poll_reports_queue_wait_and_eval_time() {
-        let objective = |_: &Config| {
+        let objective = |_: TaskId, _: &Config| {
             std::thread::sleep(Duration::from_millis(10));
             Some(1.0)
         };

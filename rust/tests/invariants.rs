@@ -165,8 +165,9 @@ fn async_schedulers_conclude_every_submission() {
             }
         };
         let seed = g.rng().next_u64();
+        let task_f = |_: scheduler::TaskId, cfg: &Config| f(cfg);
         std::thread::scope(|scope| {
-            let mut sched = scheduler::build_async(kind, 4, seed, Some(celery), scope, &f);
+            let mut sched = scheduler::build_async(kind, 4, seed, Some(celery), scope, &task_f);
             let ids = sched.submit(&batch);
             if ids != (0..batch.len() as u64).collect::<Vec<_>>() {
                 return Err(format!("ids not sequential: {ids:?}"));

@@ -1,0 +1,360 @@
+//! Trial-level early-stopping tests: pruner property tests (median
+//! monotonicity, ASHA rung invariants over arbitrary report streams),
+//! decision-determinism tests (byte-identical run-to-run and across the
+//! serial / threaded / celery-sim schedulers and every
+//! proposal-threads × proposal-shards setting), and the `--pruner none`
+//! byte-identity guard that pins the pre-pruning path.
+
+use mango::coordinator::{ExecutionMode, Tuner, TunerConfig, TuningResult};
+use mango::optimizer::prune::{
+    AsyncSuccessiveHalving, MedianRule, Pruner, PrunerKind, ReportBook,
+};
+use mango::optimizer::{OptimizerKind, SurrogateBackend};
+use mango::persist::{self, AsyncReplay, Replay};
+use mango::scheduler::celery::CelerySimConfig;
+use mango::scheduler::{SchedulerKind, TrialReporter};
+use mango::space::{Config, SearchSpace};
+use mango::util::proptest::{check, Gen};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mango_pruning_{}_{name}.jsonl", std::process::id()))
+}
+
+fn space() -> SearchSpace {
+    SearchSpace::builder().uniform("x", 0.0, 10.0).build()
+}
+
+/// Staged objective: four intermediate reports ramping up to the final
+/// value, honouring a prune decision by returning early.
+fn staged(cfg: &Config, reporter: &TrialReporter) -> Option<f64> {
+    let base = cfg.get_f64("x")?;
+    for step in 0..4u64 {
+        let v = base * ((step + 1) as f64) / 4.0;
+        if !reporter.report(step, v) {
+            return Some(v);
+        }
+    }
+    Some(base)
+}
+
+/// The same objective with the report channel ignored — must be what
+/// `--pruner none` behaves like, byte for byte.
+fn plain(cfg: &Config) -> Option<f64> {
+    cfg.get_f64("x")
+}
+
+fn async_config(scheduler: SchedulerKind, pruner: PrunerKind) -> TunerConfig {
+    TunerConfig {
+        optimizer: OptimizerKind::Tpe,
+        num_iterations: 12,
+        batch_size: 1,
+        initial_random: 2,
+        backend: SurrogateBackend::Native,
+        mode: ExecutionMode::Async,
+        scheduler,
+        workers: 1,
+        async_window: 1,
+        seed: 7,
+        pruner,
+        pruner_warmup: 1,
+        asha_reduction: 2.0,
+        ..Default::default()
+    }
+}
+
+/// A fault-free celery sim: full distributed machinery (broker queue,
+/// result collector, pre-rolled fates) with every fate `Deliver`.
+fn quiet_celery() -> CelerySimConfig {
+    CelerySimConfig {
+        workers: 1,
+        base_latency_ms: 0.1,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        crash_prob: 0.0,
+        result_timeout: Duration::from_secs(30),
+    }
+}
+
+/// Run the staged objective journaled, then recover the journal so the
+/// test sees exactly the decision record a resumed process would.
+fn run_staged(cfg: TunerConfig, name: &str) -> (TuningResult, AsyncReplay, String) {
+    let path = tmp(name);
+    let _ = std::fs::remove_file(&path);
+    let mut tuner = Tuner::new(space(), cfg).with_journal(&path);
+    let result = tuner.maximize_with_reports(staged).expect("tuning run");
+    let text = std::fs::read_to_string(&path).expect("journal readable");
+    let rec = persist::recover(&path).expect("journal recovers");
+    let Replay::Async(replay) = rec.replay else { panic!("expected an async replay") };
+    let _ = std::fs::remove_file(&path);
+    (result, replay, text)
+}
+
+/// The run's decision-relevant record, bit-exact: every journaled
+/// intermediate report with its prune decision, the surrogate history
+/// (f64 bit patterns, so censored values compare exactly), and counters.
+#[derive(Debug, PartialEq, Eq)]
+struct DecisionTrace {
+    reports: Vec<(u64, u64, u64, bool)>,
+    history_bits: Vec<u64>,
+    best_bits: u64,
+    pruned: u64,
+    evaluations: usize,
+}
+
+fn trace(result: &TuningResult, replay: &AsyncReplay) -> DecisionTrace {
+    DecisionTrace {
+        reports: replay.reports.iter().map(|&(p, s, v, d)| (p, s, v.to_bits(), d)).collect(),
+        history_bits: result.history.iter().map(|(_, v)| v.to_bits()).collect(),
+        best_bits: result.best_objective.to_bits(),
+        pruned: result.pruned,
+        evaluations: result.evaluations,
+    }
+}
+
+/// Random report book: 2-6 trials, each with 1-5 reports at consecutive
+/// steps.
+fn random_book(g: &mut Gen) -> ReportBook {
+    let n_pids = g.usize_range(2, 7);
+    let mut b = ReportBook::new();
+    for pid in 0..n_pids as u64 {
+        for step in 0..g.usize_range(1, 6) as u64 {
+            b.push(pid, step, g.f64_range(-5.0, 5.0));
+        }
+    }
+    b
+}
+
+/// Rebuild a book with the streams unchanged except (optionally) one
+/// trial's latest value replaced.
+fn rebuild(book: &ReportBook, patch: Option<(u64, f64)>) -> ReportBook {
+    let mut out = ReportBook::new();
+    for pid in book.pids().collect::<Vec<_>>() {
+        let reps = book.reports(pid);
+        for (i, &(s, v)) in reps.iter().enumerate() {
+            let v = match patch {
+                Some((p, nv)) if p == pid && i == reps.len() - 1 => nv,
+                _ => v,
+            };
+            out.push(pid, s, v);
+        }
+    }
+    out
+}
+
+// ---- property tests ----
+
+/// Median-rule monotonicity: lowering a trial's latest value can flip a
+/// decision toward pruning but never away from it (ties survive, strict
+/// inequality prunes).
+#[test]
+fn median_rule_lowering_latest_value_never_unprunes() {
+    check("median monotonicity", 96, |g| {
+        let rule = MedianRule { warmup: g.usize_range(1, 4) };
+        let book = random_book(g);
+        let pids: Vec<u64> = book.pids().collect();
+        let pid = *g.choose(&pids);
+        let before = rule.should_prune(pid, &book);
+        let &(_, latest) = book.reports(pid).last().expect("every pid reported");
+        let lowered = rebuild(&book, Some((pid, latest - g.f64_range(0.1, 10.0))));
+        let after = rule.should_prune(pid, &lowered);
+        if before && !after {
+            return Err(format!("lowering pid {pid}'s latest value un-pruned it"));
+        }
+        Ok(())
+    });
+}
+
+/// ASHA rung invariants on arbitrary streams, checked against an
+/// independent oracle: below the first milestone nothing prunes, a rung's
+/// leader always survives, and the decision equals the documented
+/// rank-vs-keep rule at the highest reached rung.
+#[test]
+fn asha_rung_invariants_on_arbitrary_streams() {
+    check("asha rung invariants", 96, |g| {
+        let r0 = g.usize_range(1, 4) as u64;
+        let eta = *g.choose(&[2.0, 3.0, 4.0]);
+        let rule = AsyncSuccessiveHalving { r0, eta };
+        let book = random_book(g);
+        for pid in book.pids().collect::<Vec<_>>() {
+            let &(step, _) = book.reports(pid).last().expect("every pid reported");
+            // Oracle rung: highest k with r0 * eta^k <= step.
+            if (step as f64) < r0 as f64 {
+                if rule.should_prune(pid, &book) {
+                    return Err(format!("pid {pid} pruned below the first milestone"));
+                }
+                continue;
+            }
+            let mut k = 0i32;
+            while (r0 as f64) * eta.powi(k + 1) <= step as f64 {
+                k += 1;
+            }
+            let milestone = (r0 as f64) * eta.powi(k);
+            let rung_value = |p: u64| {
+                book.reports(p).iter().find(|(s, _)| (*s as f64) >= milestone).map(|&(_, v)| v)
+            };
+            let Some(mine) = rung_value(pid) else { continue };
+            let rung: Vec<f64> = book.pids().filter_map(rung_value).collect();
+            let keep = (((rung.len() as f64) / eta).floor() as usize).max(1);
+            let rank = rung.iter().filter(|v| **v > mine).count();
+            let decision = rule.should_prune(pid, &book);
+            let best = rung.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if mine == best && decision {
+                return Err(format!("pid {pid} leads rung {k} yet was pruned"));
+            }
+            if decision != (rank >= keep) {
+                return Err(format!(
+                    "pid {pid} at rung {k}: decision {decision}, oracle rank {rank} \
+                     vs keep {keep} of {}",
+                    rung.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Decisions are a pure function of the streams, not of the order trials
+/// were inserted into the book.
+#[test]
+fn decisions_are_insertion_order_invariant() {
+    check("pruner permutation invariance", 48, |g| {
+        let book = random_book(g);
+        let mut reversed = ReportBook::new();
+        for pid in book.pids().collect::<Vec<_>>().into_iter().rev() {
+            for &(s, v) in book.reports(pid) {
+                reversed.push(pid, s, v);
+            }
+        }
+        let median = MedianRule { warmup: 1 };
+        let asha = AsyncSuccessiveHalving { r0: 1, eta: 2.0 };
+        for pid in book.pids().collect::<Vec<_>>() {
+            if median.should_prune(pid, &book) != median.should_prune(pid, &reversed) {
+                return Err(format!("median decision for pid {pid} depends on insertion order"));
+            }
+            if asha.should_prune(pid, &book) != asha.should_prune(pid, &reversed) {
+                return Err(format!("asha decision for pid {pid} depends on insertion order"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- determinism tests ----
+
+/// The same pruned run twice: every report, decision, censored history
+/// value, and counter is bit-identical.
+#[test]
+fn pruned_run_decisions_are_identical_run_to_run() {
+    for pruner in [PrunerKind::Median, PrunerKind::Asha] {
+        let cfg = || async_config(SchedulerKind::Serial, pruner);
+        let (r1, a1, _) = run_staged(cfg(), &format!("rerun_a_{pruner:?}"));
+        let (r2, a2, _) = run_staged(cfg(), &format!("rerun_b_{pruner:?}"));
+        assert!(r1.pruned >= 1, "{pruner:?}: the staged workload must actually prune");
+        assert!(r1.reports >= 1);
+        assert_eq!(trace(&r1, &a1), trace(&r2, &a2), "{pruner:?} decisions drifted run-to-run");
+    }
+}
+
+/// Serial, threaded, and celery-sim (fault-free) schedulers deliver the
+/// same report streams, so the pruner must reach byte-identical decisions
+/// and censored history on all three.
+#[test]
+fn pruned_run_decisions_are_identical_across_schedulers() {
+    for pruner in [PrunerKind::Median, PrunerKind::Asha] {
+        let (r_serial, a_serial, _) =
+            run_staged(async_config(SchedulerKind::Serial, pruner), &format!("xs_serial_{pruner:?}"));
+        assert!(r_serial.pruned >= 1, "{pruner:?}: the staged workload must actually prune");
+        let reference = trace(&r_serial, &a_serial);
+
+        let (r_thr, a_thr, _) = run_staged(
+            async_config(SchedulerKind::Threaded, pruner),
+            &format!("xs_threaded_{pruner:?}"),
+        );
+        assert_eq!(trace(&r_thr, &a_thr), reference, "{pruner:?}: threaded drifted from serial");
+
+        let mut celery_cfg = async_config(SchedulerKind::Celery, pruner);
+        celery_cfg.celery = Some(quiet_celery());
+        let (r_cel, a_cel, _) = run_staged(celery_cfg, &format!("xs_celery_{pruner:?}"));
+        assert_eq!(trace(&r_cel, &a_cel), reference, "{pruner:?}: celery-sim drifted from serial");
+    }
+}
+
+/// Proposal-scoring parallelism knobs are wall-clock knobs, never numerics
+/// knobs: pruning decisions are identical at every proposal-threads ×
+/// proposal-shards setting.
+#[test]
+fn pruned_run_decisions_are_invariant_to_proposal_threads_and_shards() {
+    let gp_config = |threads: usize, shards: usize| {
+        let mut cfg = async_config(SchedulerKind::Serial, PrunerKind::Median);
+        cfg.optimizer = OptimizerKind::Hallucination;
+        cfg.num_iterations = 8;
+        cfg.mc_samples = 128;
+        cfg.proposal_threads = threads;
+        cfg.proposal_shards = shards;
+        cfg
+    };
+    let (r0, a0, _) = run_staged(gp_config(1, 0), "knobs_t1_s0");
+    let reference = trace(&r0, &a0);
+    assert!(r0.reports >= 1);
+    for (threads, shards) in [(2, 0), (4, 0), (1, 2), (2, 3)] {
+        let (r, a, _) = run_staged(gp_config(threads, shards), &format!("knobs_t{threads}_s{shards}"));
+        assert_eq!(
+            trace(&r, &a),
+            reference,
+            "decisions drifted at proposal_threads={threads} proposal_shards={shards}"
+        );
+    }
+}
+
+// ---- `--pruner none` byte-identity guard ----
+
+/// With the pruner off, a reporting objective takes exactly today's path:
+/// the journal carries no report events, the counters stay zero, and the
+/// result is bit-identical to the same run driven through plain
+/// `maximize`.
+#[test]
+fn pruner_none_is_byte_identical_to_the_pre_pruning_path() {
+    let (with_reports, replay, journal_text) =
+        run_staged(async_config(SchedulerKind::Serial, PrunerKind::None), "none_reporting");
+    assert_eq!(with_reports.pruned, 0);
+    assert_eq!(with_reports.reports, 0);
+    assert!(replay.reports.is_empty(), "pruner none must journal no reports");
+    assert_eq!(replay.pruned, 0);
+    assert!(
+        !journal_text.contains("\"async_report\""),
+        "pruner none must not emit async_report events"
+    );
+
+    let path = tmp("none_plain");
+    let _ = std::fs::remove_file(&path);
+    let mut tuner = Tuner::new(space(), async_config(SchedulerKind::Serial, PrunerKind::None))
+        .with_journal(&path);
+    let baseline = tuner.maximize(plain).expect("baseline run");
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        with_reports.best_objective.to_bits(),
+        baseline.best_objective.to_bits(),
+        "best objective drifted"
+    );
+    assert_eq!(with_reports.best_params, baseline.best_params);
+    assert_eq!(with_reports.evaluations, baseline.evaluations);
+    let bits = |r: &TuningResult| -> Vec<u64> { r.history.iter().map(|(_, v)| v.to_bits()).collect() };
+    assert_eq!(bits(&with_reports), bits(&baseline), "history drifted");
+    assert_eq!(with_reports.best_series.len(), baseline.best_series.len());
+}
+
+/// Sync mode has no report channel, so configuring a pruner there must be
+/// a loud configuration error, not a silent no-op.
+#[test]
+fn sync_mode_refuses_pruners() {
+    let mut cfg = async_config(SchedulerKind::Serial, PrunerKind::Median);
+    cfg.mode = ExecutionMode::Sync;
+    let err = Tuner::new(space(), cfg).maximize_with_reports(staged).unwrap_err();
+    assert!(
+        err.to_string().contains("requires async mode"),
+        "unexpected error: {err:#}"
+    );
+}

@@ -17,9 +17,10 @@ use mango::gp::{fit_posterior, GpParams};
 use mango::linalg::Matrix;
 use mango::optimizer::bayesian::BayesianCore;
 use mango::optimizer::{GpOptions, History, OptimizerKind, SurrogateBackend};
+use mango::optimizer::prune::PrunerKind;
 use mango::persist::{read_journal, EventOutcome, JournalEvent};
 use mango::scheduler::celery::CelerySimConfig;
-use mango::scheduler::SchedulerKind;
+use mango::scheduler::{SchedulerKind, TrialReporter};
 use mango::space::{svm_space, Config, Encoder, SearchSpace};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -608,6 +609,134 @@ fn resumed_async_run_stays_early_stopped_after_post_stop_improvement() {
     );
     assert_eq!(resumed.best_objective, 2.0);
     assert_eq!(resumed.best_series, vec![1.0, 1.0, 2.0]);
+    std::fs::remove_file(&path).ok();
+}
+
+/// `quad` split into three intermediate reports ramping toward the final
+/// value, honouring prune decisions by returning early.
+fn staged_quad(cfg: &Config, reporter: &TrialReporter) -> Option<f64> {
+    let full = quad(cfg)?;
+    for step in 0..3u64 {
+        let v = full * ((step + 1) as f64) / 3.0;
+        if !reporter.report(step, v) {
+            return Some(v);
+        }
+    }
+    Some(full)
+}
+
+/// Tentpole acceptance criterion: with a pruner active, "kill the process
+/// after event k" for *every* k — which includes every intermediate-report
+/// boundary and every `Pruned` completion boundary — then resume, and the
+/// stitched run reproduces the uninterrupted result (best, history with
+/// censored entries, best-series, and the pruning counters). The resumed
+/// process re-derives the pruner's rung/median state from the journaled
+/// reports rather than trusting the crashed process.
+#[test]
+fn pruned_async_crash_at_any_point_resumes_to_identical_result() {
+    let space = svm_space();
+    for (pruner, label) in [(PrunerKind::Median, "median"), (PrunerKind::Asha, "asha")] {
+        let cfg = TunerConfig {
+            optimizer: OptimizerKind::Hallucination,
+            num_iterations: 5,
+            batch_size: 2,
+            backend: SurrogateBackend::Native,
+            scheduler: SchedulerKind::Serial,
+            mc_samples: 128,
+            seed: 13,
+            mode: ExecutionMode::Async,
+            pruner,
+            pruner_warmup: 1,
+            asha_reduction: 2.0,
+            ..Default::default()
+        };
+
+        // Baseline: un-journaled uninterrupted run.
+        let baseline = Tuner::new(space.clone(), cfg.clone())
+            .maximize_with_reports(staged_quad)
+            .unwrap();
+        assert!(baseline.pruned >= 1, "{label}: the staged workload must actually prune");
+        assert!(baseline.reports >= 1, "{label}: reports must flow");
+
+        // Journaled uninterrupted run must be transparent.
+        let full_path = tmp(&format!("pruned_{label}_full"));
+        let journaled = Tuner::new(space.clone(), cfg.clone())
+            .with_journal(&full_path)
+            .maximize_with_reports(staged_quad)
+            .unwrap();
+        assert_result_eq(&journaled, &baseline, &format!("{label}: journaling changed the run"));
+        assert_eq!(journaled.pruned, baseline.pruned, "{label}: pruned counter drifted");
+
+        // The boundary sweep must actually cover report and pruned-
+        // completion boundaries, not just submits and completions.
+        let events = read_journal(&full_path).unwrap().events;
+        let n_reports = events
+            .iter()
+            .filter(|e| matches!(e, JournalEvent::AsyncReport { .. }))
+            .count();
+        let n_pruned = events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    JournalEvent::AsyncComplete { outcome: EventOutcome::Pruned { .. }, .. }
+                )
+            })
+            .count();
+        assert!(n_reports >= 1, "{label}: no async_report events journaled");
+        assert_eq!(n_pruned as u64, baseline.pruned, "{label}: pruned terminals must be journaled");
+
+        let bytes = std::fs::read(&full_path).unwrap();
+        let boundaries = event_boundaries(&bytes);
+        let case_path = tmp(&format!("pruned_{label}_case"));
+        for (idx, &cut) in boundaries.iter().enumerate() {
+            std::fs::write(&case_path, &bytes[..cut]).unwrap();
+            let mut resumed_tuner = Tuner::resume_from(space.clone(), &case_path)
+                .unwrap_or_else(|e| panic!("{label}: resume at boundary {idx} failed: {e:#}"));
+            let resumed = resumed_tuner
+                .maximize_with_reports(staged_quad)
+                .unwrap_or_else(|e| panic!("{label}: resumed run at boundary {idx} failed: {e:#}"));
+            assert_result_eq(&resumed, &baseline, &format!("{label}: crash at event {idx}"));
+            assert_eq!(
+                resumed.pruned, baseline.pruned,
+                "{label}: crash at event {idx}: pruned counter drifted"
+            );
+        }
+        std::fs::remove_file(&full_path).ok();
+        std::fs::remove_file(&case_path).ok();
+    }
+}
+
+/// Pre-pruning (v2) journals predate `async_report` events, the `Pruned`
+/// outcome, and the pruner header knobs — replaying one under v3 rules
+/// could silently mis-censor a resumed history, so the reader must refuse
+/// the version outright instead of guessing.
+#[test]
+fn v2_journal_is_refused_loudly() {
+    let space = svm_space();
+    let path = tmp("v2_guard");
+    Tuner::new(
+        space.clone(),
+        TunerConfig {
+            optimizer: OptimizerKind::Random,
+            num_iterations: 2,
+            backend: SurrogateBackend::Native,
+            ..Default::default()
+        },
+    )
+    .with_journal(&path)
+    .maximize(quad)
+    .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let stale = text.replacen(
+        &format!("\"version\":{}", mango::persist::JOURNAL_VERSION),
+        "\"version\":2",
+        1,
+    );
+    assert_ne!(stale, text, "version literal must be present to corrupt");
+    std::fs::write(&path, stale).unwrap();
+    let err = Tuner::resume_from(space, &path).unwrap_err();
+    assert!(err.to_string().contains("version"), "got: {err:#}");
     std::fs::remove_file(&path).ok();
 }
 
