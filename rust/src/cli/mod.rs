@@ -134,10 +134,24 @@ TUNE OPTIONS:
                            truncates an existing file at this path)
   --fsync-every <n>        fsync the journal every n appends for machine-
                            crash durability (0 = flush-only) [0]
+  --journal-on-error <p>   journal write-error policy: fail-stop (abort
+                           with the cause) | degrade (log once, finish the
+                           run without persistence)          [fail-stop]
   --resume                 resume the run recorded in --journal (the journal
                            header supplies the config; other tune flags are
                            ignored); with a fixed seed the resumed run
                            reproduces the uninterrupted result
+  --replay <order>         async completion-folding order: wallclock
+                           (arrival order) | stable (ascending task id —
+                           the trajectory is byte-identical run-to-run,
+                           across schedulers, and across crash+resume)
+                                                             [wallclock]
+  --retry-backoff-ms <ms>  base delay before resubmitting a lost task;
+                           doubles per attempt (capped at 64x) with
+                           seed-deterministic jitter (0 = immediate) [0]
+  --stall-timeout-ms <ms>  abandon in-flight work and return partial
+                           results after this long without any completion
+                           (0 = wait forever)                [3600000]
   --json                   machine-readable output
 ";
 

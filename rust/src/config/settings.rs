@@ -73,6 +73,25 @@ pub struct RunConfig {
     /// Resume from `journal` instead of starting fresh (requires an
     /// existing journal written by a crashed or finished run).
     pub resume: bool,
+    /// Async completion-folding order: "wallclock" (default — fold in
+    /// arrival order, today's path byte-for-byte) or "stable" (reorder
+    /// buffer folds in ascending task id, making the trajectory
+    /// byte-identical run-to-run and across schedulers; requires async
+    /// mode).
+    pub replay: String,
+    /// What a journal write error does: "fail-stop" (default — the run
+    /// aborts with the cause) or "degrade" (log once, drop the journal,
+    /// finish the run with `journal_degraded` set on the result).
+    pub journal_on_error: String,
+    /// Base retry backoff in ms (0 = resubmit immediately, today's path).
+    /// Retries wait `base * 2^(attempt-1)` capped at 64x, jittered
+    /// deterministically from the run seed; journaled so a resumed run
+    /// keeps the crashed run's schedule.
+    pub retry_backoff_ms: f64,
+    /// Async mode: abandon in-flight work and return partial results
+    /// (`stalled: true`) after this many ms without any completion
+    /// (0 = wait forever).
+    pub stall_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -102,6 +121,10 @@ impl Default for RunConfig {
             asha_reduction: 3.0,
             journal: String::new(),
             resume: false,
+            replay: "wallclock".into(),
+            journal_on_error: "fail-stop".into(),
+            retry_backoff_ms: 0.0,
+            stall_timeout_ms: 3_600_000,
         }
     }
 }
@@ -135,6 +158,10 @@ impl RunConfig {
                 "mode" => c.mode = str_(v, k)?,
                 "kernel_profile" => c.kernel_profile = str_(v, k)?,
                 "journal" => c.journal = str_(v, k)?,
+                "replay" => c.replay = str_(v, k)?,
+                "journal_on_error" => c.journal_on_error = str_(v, k)?,
+                "retry_backoff_ms" => c.retry_backoff_ms = num(v, k)?,
+                "stall_timeout_ms" => c.stall_timeout_ms = num(v, k)? as u64,
                 "tune_lengthscale" => {
                     c.tune_lengthscale = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
                 }
@@ -198,6 +225,29 @@ impl RunConfig {
         if self.resume && self.journal.is_empty() {
             return Err(anyhow!("resume requires a journal path"));
         }
+        const REPLAYS: [&str; 2] = ["wallclock", "stable"];
+        if !REPLAYS.contains(&self.replay.as_str()) {
+            return Err(anyhow!("unknown replay '{}' (one of {REPLAYS:?})", self.replay));
+        }
+        if self.replay == "stable" && self.mode != "async" {
+            return Err(anyhow!(
+                "replay \"stable\" requires mode \"async\" (sync batches already fold \
+                 deterministically)"
+            ));
+        }
+        const JOURNAL_POLICIES: [&str; 2] = ["fail-stop", "degrade"];
+        if !JOURNAL_POLICIES.contains(&self.journal_on_error.as_str()) {
+            return Err(anyhow!(
+                "unknown journal_on_error '{}' (one of {JOURNAL_POLICIES:?})",
+                self.journal_on_error
+            ));
+        }
+        if !self.retry_backoff_ms.is_finite() || self.retry_backoff_ms < 0.0 {
+            return Err(anyhow!(
+                "retry_backoff_ms must be a finite delay >= 0 (got {})",
+                self.retry_backoff_ms
+            ));
+        }
         Ok(())
     }
 
@@ -227,6 +277,10 @@ impl RunConfig {
             ("asha_reduction", Json::Num(self.asha_reduction)),
             ("journal", Json::Str(self.journal.clone())),
             ("resume", Json::Bool(self.resume)),
+            ("replay", Json::Str(self.replay.clone())),
+            ("journal_on_error", Json::Str(self.journal_on_error.clone())),
+            ("retry_backoff_ms", Json::Num(self.retry_backoff_ms)),
+            ("stall_timeout_ms", Json::Num(self.stall_timeout_ms as f64)),
         ])
     }
 }
@@ -408,6 +462,39 @@ mod tests {
             &parse(r#"{"mode": "async", "pruner": "asha", "asha_reduction": 1.0}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn replay_and_robustness_fields_parse_validate_and_roundtrip() {
+        let c = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.replay, "wallclock", "arrival-order folding is the default");
+        assert_eq!(c.journal_on_error, "fail-stop");
+        assert_eq!(c.retry_backoff_ms, 0.0);
+        assert_eq!(c.stall_timeout_ms, 3_600_000);
+        let j = parse(
+            r#"{"mode": "async", "replay": "stable", "journal_on_error": "degrade",
+                "retry_backoff_ms": 250.5, "stall_timeout_ms": 60000}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.replay, "stable");
+        assert_eq!(c.journal_on_error, "degrade");
+        assert_eq!(c.retry_backoff_ms, 250.5);
+        assert_eq!(c.stall_timeout_ms, 60_000);
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "replay knobs survive the json round trip");
+        // Unknown modes/policies and stable-on-sync are rejected loudly.
+        assert!(RunConfig::from_json(&parse(r#"{"replay": "sorted"}"#).unwrap()).is_err());
+        assert!(
+            RunConfig::from_json(&parse(r#"{"replay": "stable"}"#).unwrap()).is_err(),
+            "stable replay requires async mode"
+        );
+        assert!(
+            RunConfig::from_json(&parse(r#"{"journal_on_error": "retry"}"#).unwrap()).is_err()
+        );
+        assert!(
+            RunConfig::from_json(&parse(r#"{"retry_backoff_ms": -1.0}"#).unwrap()).is_err()
+        );
     }
 
     #[test]

@@ -15,4 +15,4 @@ mod results;
 mod tuner;
 
 pub use results::{CompletionOutcome, CompletionRecord, IterationRecord, TuningResult};
-pub use tuner::{ExecutionMode, ObjectiveFn, Tuner, TunerConfig};
+pub use tuner::{ExecutionMode, ObjectiveFn, ReplayMode, Tuner, TunerConfig};

@@ -85,6 +85,14 @@ pub struct TuningResult {
     /// distance cache. Surfaced so cache-thrash regressions (every round
     /// rebuilding instead of appending) are observable instead of silent.
     pub dist_cache: (u64, u64, u64),
+    /// Async mode: the run hit its stall patience (`--stall-timeout-ms`)
+    /// with work still in flight and returned partial results instead of
+    /// aborting. The abandoned tasks are counted in `lost`.
+    pub stalled: bool,
+    /// The journal hit an I/O error under `--journal-on-error degrade`:
+    /// the run finished, but the journal on disk is a truncated prefix and
+    /// must not be resumed as if complete.
+    pub journal_degraded: bool,
 }
 
 impl TuningResult {
@@ -108,6 +116,8 @@ impl TuningResult {
                     ("evicts", Json::Num(self.dist_cache.2 as f64)),
                 ]),
             ),
+            ("stalled", Json::Bool(self.stalled)),
+            ("journal_degraded", Json::Bool(self.journal_degraded)),
         ];
         if let Some(stats) = &self.scheduler_stats {
             fields.push(("retried", Json::Num(self.retried as f64)));
@@ -167,6 +177,8 @@ mod tests {
             pruned: 0,
             reports: 0,
             dist_cache: (0, 0, 0),
+            stalled: false,
+            journal_degraded: false,
         }
     }
 
@@ -176,6 +188,19 @@ mod tests {
         assert_eq!(j.get("best_objective").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("best_series").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("scheduler").is_none(), "sync dumps omit async fields");
+    }
+
+    #[test]
+    fn json_dump_surfaces_degradation_flags() {
+        let j = base_result().to_json();
+        assert_eq!(j.get("stalled").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("journal_degraded").unwrap().as_bool(), Some(false));
+        let mut r = base_result();
+        r.stalled = true;
+        r.journal_degraded = true;
+        let j = r.to_json();
+        assert_eq!(j.get("stalled").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("journal_degraded").unwrap().as_bool(), Some(true));
     }
 
     #[test]

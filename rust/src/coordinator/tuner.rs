@@ -40,12 +40,12 @@ use crate::config::settings::RunConfig;
 use crate::optimizer::prune::{self, Pruner, PrunerKind, ReportBook};
 use crate::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
 use crate::persist::{
-    self, AsyncReplay, EventOutcome, JournalEvent, JournalWriter, RecoveredRun, Replay,
-    RunHeader, SenseTag, SyncReplay,
+    self, AsyncReplay, EventOutcome, JournalEvent, JournalFault, JournalPolicy, JournalWriter,
+    RecoveredRun, Replay, RunHeader, SenseTag, SyncReplay,
 };
 use crate::scheduler::{
     self, AsyncScheduler, BatchResult, Completion, CompletionStatus, LossReason, ReportSink,
-    SchedulerKind, TaskId, TrialReporter,
+    SchedulerKind, SubmitMeta, TaskId, TrialReporter,
 };
 use crate::space::{Config, SearchSpace};
 use crate::util::rng::Pcg64;
@@ -87,12 +87,43 @@ impl ExecutionMode {
     }
 }
 
+/// How completions are ordered into the async fold (`--replay`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// Fold completions in arrival order (the default) — byte-identical
+    /// to the pre-knob event loop. Crash+resume equality holds only on
+    /// deterministic schedulers (serial; quiet celery-sim).
+    Wallclock,
+    /// Drain completions through a reorder buffer and fold in canonical
+    /// ascending-task-id order, one journaled fold epoch per fold, with
+    /// admission (the in-flight window) alternating fold-one-then-refill.
+    /// best/`history`/`best_series` and every pruning decision become
+    /// byte-identical run-to-run on serial, threaded, *and* celery-sim —
+    /// and a crash+resume at any event boundary equals a seed-matched
+    /// uninterrupted run.
+    Stable,
+}
+
+impl ReplayMode {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "wallclock" => Some(Self::Wallclock),
+            "stable" => Some(Self::Stable),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`from_str`](Self::from_str) (journal header round trip).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Wallclock => "wallclock",
+            Self::Stable => "stable",
+        }
+    }
+}
+
 /// How long one event-loop poll waits before re-checking the window.
 const POLL_TIMEOUT: Duration = Duration::from_millis(25);
-/// Abort an async run if nothing completes for this long (a worker died
-/// without reporting — the in-repo schedulers themselves never go silent,
-/// so this is a deadlock backstop, set far above any sane eval time).
-const STALL_TIMEOUT: Duration = Duration::from_secs(3600);
 
 /// Tuner configuration — the paper's user-controlled options (§2.4).
 #[derive(Clone, Debug)]
@@ -152,6 +183,27 @@ pub struct TunerConfig {
     pub pruner_warmup: usize,
     /// ASHA reduction factor η (rungs at warmup·η^k; must be > 1).
     pub asha_reduction: f64,
+    /// Async completion-fold ordering ([`ReplayMode`]; `--replay`).
+    pub replay: ReplayMode,
+    /// What a journal append failure does mid-run
+    /// ([`JournalPolicy`]; `--journal-on-error`): fail-stop (default)
+    /// aborts with the I/O error; degrade logs it, stops journaling,
+    /// finishes the run, and sets [`TuningResult::journal_degraded`].
+    pub journal_on_error: JournalPolicy,
+    /// Base delay in ms before a lost evaluation's resubmission executes
+    /// (`--retry-backoff-ms`): bounded exponential per attempt with
+    /// seeded jitter, journaled per submission so a resume re-applies the
+    /// exact schedule. 0 (default) = immediate re-enqueue, byte-identical
+    /// to the pre-knob path.
+    pub retry_backoff_ms: f64,
+    /// Async stall patience in ms (`--stall-timeout-ms`): if nothing
+    /// completes for this long while work is in flight (a worker died
+    /// without reporting — the in-repo schedulers themselves never go
+    /// silent), the run journals terminal `stalled` events for the
+    /// outstanding tasks, drains, and returns partial results with
+    /// [`TuningResult::stalled`] set, instead of aborting. 0 = wait
+    /// forever.
+    pub stall_timeout_ms: u64,
     /// Override the Celery simulator's fault/latency model.
     pub celery: Option<scheduler::celery::CelerySimConfig>,
 }
@@ -181,6 +233,10 @@ impl Default for TunerConfig {
             pruner: PrunerKind::None,
             pruner_warmup: 1,
             asha_reduction: 3.0,
+            replay: ReplayMode::Wallclock,
+            journal_on_error: JournalPolicy::FailStop,
+            retry_backoff_ms: 0.0,
+            stall_timeout_ms: 3_600_000,
             celery: None,
         }
     }
@@ -221,6 +277,12 @@ impl TunerConfig {
                 .ok_or_else(|| anyhow!("bad pruner {}", rc.pruner))?,
             pruner_warmup: rc.pruner_warmup,
             asha_reduction: rc.asha_reduction,
+            replay: ReplayMode::from_str(&rc.replay)
+                .ok_or_else(|| anyhow!("bad replay {}", rc.replay))?,
+            journal_on_error: JournalPolicy::from_str(&rc.journal_on_error)
+                .ok_or_else(|| anyhow!("bad journal_on_error {}", rc.journal_on_error))?,
+            retry_backoff_ms: rc.retry_backoff_ms,
+            stall_timeout_ms: rc.stall_timeout_ms,
             celery: None,
         })
     }
@@ -257,6 +319,10 @@ impl TunerConfig {
             pruner: self.pruner.as_str().into(),
             pruner_warmup: self.pruner_warmup,
             asha_reduction: self.asha_reduction,
+            replay: self.replay.as_str().into(),
+            journal_on_error: self.journal_on_error.as_str().into(),
+            retry_backoff_ms: self.retry_backoff_ms,
+            stall_timeout_ms: self.stall_timeout_ms,
             journal: String::new(),
             resume: false,
         }
@@ -296,12 +362,113 @@ struct PendingTask {
     pid: u64,
 }
 
-/// Append to the journal if one is active.
-fn jappend(journal: &mut Option<JournalWriter>, event: &JournalEvent) -> Result<()> {
-    if let Some(w) = journal.as_mut() {
-        w.append(event)?;
+/// The coordinator's journal handle: the writer (if journaling) plus the
+/// append-failure policy. `FailStop` propagates the first
+/// [`crate::persist::JournalError`] and aborts the run; `Degrade` logs it
+/// once, drops the writer — the bytes already on disk stay a valid,
+/// resumable prefix — and keeps tuning with `degraded` surfaced as
+/// [`TuningResult::journal_degraded`].
+struct JournalSink {
+    writer: Option<JournalWriter>,
+    policy: JournalPolicy,
+    degraded: bool,
+}
+
+impl JournalSink {
+    fn new(writer: Option<JournalWriter>, policy: JournalPolicy) -> Self {
+        Self { writer, policy, degraded: false }
     }
-    Ok(())
+
+    fn append(&mut self, event: &JournalEvent) -> Result<()> {
+        let Some(w) = self.writer.as_mut() else { return Ok(()) };
+        match w.append(event) {
+            Ok(()) => Ok(()),
+            Err(e) => match self.policy {
+                JournalPolicy::FailStop => Err(e.into()),
+                JournalPolicy::Degrade => {
+                    crate::log_warn!(
+                        "journal degraded, run continues without persistence: {e}"
+                    );
+                    self.writer = None;
+                    self.degraded = true;
+                    Ok(())
+                }
+            },
+        }
+    }
+}
+
+/// Stable-mode reorder buffer between `AsyncScheduler::poll` and the fold
+/// (`--replay stable`). Completions are absorbed in whatever order the
+/// scheduler delivered them and released strictly in ascending task id:
+/// [`pop_ready`](Self::pop_ready) yields the frontier task iff its
+/// completion has arrived. Resubmissions get fresh (higher) task ids, so
+/// the frontier never waits on an id that will not complete — early-stop
+/// cancellations are always a queued suffix of the in-flight ids and are
+/// removed from `pending` before the frontier could reach them, and a
+/// worker bailout or stall tears the buffer down wholesale.
+struct Sequencer {
+    buffer: BTreeMap<TaskId, Completion>,
+    /// The fold frontier: next task id eligible to fold. Doubles as the
+    /// pruning-visibility cutoff journaled on each admission.
+    fold_next: TaskId,
+}
+
+impl Sequencer {
+    fn new(fold_next: TaskId) -> Self {
+        Self { buffer: BTreeMap::new(), fold_next }
+    }
+
+    fn absorb(&mut self, completions: Vec<Completion>) {
+        for c in completions {
+            self.buffer.insert(c.id, c);
+        }
+    }
+
+    /// Is the frontier completion already buffered (i.e. a fold is
+    /// unblocked right now)?
+    fn has_ready(&self) -> bool {
+        self.buffer.contains_key(&self.fold_next)
+    }
+
+    /// Release the frontier completion if it has arrived, advancing the
+    /// frontier past it.
+    fn pop_ready(&mut self) -> Option<Completion> {
+        let c = self.buffer.remove(&self.fold_next)?;
+        self.fold_next += 1;
+        Some(c)
+    }
+
+    /// Drop every buffered completion (bailout/stall teardown: the
+    /// outstanding tasks are being concluded as lost).
+    fn clear(&mut self) {
+        self.buffer.clear();
+    }
+}
+
+/// Stable-mode fate key: one independent fault-model RNG stream per
+/// (proposal, attempt), so a resumed run re-derives the crashed run's
+/// exact celery-sim fates no matter how many sequential draws either
+/// process happened to make.
+fn stable_fate_key(pid: u64, attempt: usize) -> u64 {
+    pid.wrapping_mul(1 << 20).wrapping_add(attempt as u64)
+}
+
+/// Deterministic retry backoff for `attempt` (1-based): bounded
+/// exponential over the configured base (cap 2^6) with seeded jitter in
+/// `[delay/2, delay)`. The jitter draws from a fresh RNG stream keyed by
+/// (seed, pid, attempt) — order-independent, so the journaled value a
+/// resume re-applies is exactly what an uninterrupted run would compute.
+/// A base of 0 (the default) returns 0 without touching any RNG.
+fn retry_backoff_ms(cfg: &TunerConfig, pid: u64, attempt: usize) -> f64 {
+    if cfg.retry_backoff_ms <= 0.0 {
+        return 0.0;
+    }
+    let delay = cfg.retry_backoff_ms * f64::powi(2.0, attempt.saturating_sub(1).min(6) as i32);
+    let mut rng = Pcg64::new(
+        cfg.seed ^ 0xBACC_0FF ^ pid.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ attempt as u64,
+    );
+    delay / 2.0 + rng.next_f64() * (delay / 2.0)
 }
 
 /// Append one best-so-far point and update the no-improvement streak.
@@ -351,6 +518,16 @@ struct PruneState {
     log: Vec<ReportRec>,
     /// pid → (at_step, last user-sense value) for every pruned trial.
     pruned: BTreeMap<u64, (u64, f64)>,
+    /// pid → task id of its latest (re)submission; survives conclusion.
+    /// Stable mode's visibility predicate: pid q is visible to a task
+    /// admitted at cutoff c iff `pid_last_task[q] < c` — q's final attempt
+    /// folded before that task was admitted, so q's stream is complete and
+    /// identical in every run.
+    pid_last_task: BTreeMap<u64, TaskId>,
+    /// task → stable-mode admission cutoff (the fold frontier at submit
+    /// time, journaled on `async_submit`). Absent in wallclock mode: the
+    /// pruner sees the whole book, byte-for-byte the pre-knob behavior.
+    task_cutoff: BTreeMap<TaskId, TaskId>,
 }
 
 /// The coordinator's pruning state machine: worker threads stream
@@ -375,6 +552,8 @@ impl PruneCoordinator {
                 task_to_pid: BTreeMap::new(),
                 log: Vec::new(),
                 pruned: BTreeMap::new(),
+                pid_last_task: BTreeMap::new(),
+                task_cutoff: BTreeMap::new(),
             }),
         }
     }
@@ -388,16 +567,24 @@ impl PruneCoordinator {
         }
     }
 
-    fn register(&self, task: TaskId, pid: u64) {
+    /// Register a (re)submission. `cutoff` is the stable-mode admission
+    /// cutoff (`None` in wallclock mode: decisions see the whole book).
+    fn register(&self, task: TaskId, pid: u64, cutoff: Option<TaskId>) {
         let mut st = self.lock();
         // Mirror replay semantics: a (re)submitted trial re-reports from
         // scratch, so any stream from a lost prior attempt is discarded.
         st.book.reset(pid);
         st.task_to_pid.insert(task, pid);
+        st.pid_last_task.insert(pid, task);
+        if let Some(c) = cutoff {
+            st.task_cutoff.insert(task, c);
+        }
     }
 
     fn conclude(&self, task: TaskId) {
-        self.lock().task_to_pid.remove(&task);
+        let mut st = self.lock();
+        st.task_to_pid.remove(&task);
+        st.task_cutoff.remove(&task);
     }
 
     fn drain_log(&self) -> Vec<ReportRec> {
@@ -422,11 +609,23 @@ impl PruneCoordinator {
             }
         }
     }
+
+    /// Seed the last-attempt map from the replay (stable mode): each
+    /// concluded pid's final task id, so post-resume visibility predicates
+    /// agree exactly with the crashed process's. In-flight-at-crash pids
+    /// re-register at re-enqueue time under their fresh (higher) ids.
+    fn seed_pid_last(&self, entries: &[(u64, u64)]) {
+        let mut st = self.lock();
+        for &(pid, task) in entries {
+            st.pid_last_task.insert(pid, task);
+        }
+    }
 }
 
 impl ReportSink for PruneCoordinator {
     fn on_report(&self, task: TaskId, step: u64, value: f64) -> bool {
-        let mut st = self.lock();
+        let mut guard = self.lock();
+        let st = &mut *guard;
         let Some(&pid) = st.task_to_pid.get(&task) else {
             return true; // unknown task (already concluded): ignore
         };
@@ -435,7 +634,22 @@ impl ReportSink for PruneCoordinator {
         }
         let internal = if self.minimize { -value } else { value };
         st.book.push(pid, step, stats::nan_as_worst(internal));
-        let decision = self.pruner.should_prune(pid, &st.book);
+        // Stable mode: the decision sees only its own stream plus the
+        // streams of pids whose final attempt folded before this task was
+        // admitted — a wall-clock-independent view, so the decision comes
+        // out identical run-to-run and across crash+resume. Wallclock
+        // (no cutoff registered) keeps the whole-book comparison,
+        // byte-for-byte the pre-knob behavior.
+        let decision = match st.task_cutoff.get(&task).copied() {
+            Some(cutoff) => {
+                let pid_last = &st.pid_last_task;
+                let view = st
+                    .book
+                    .filtered(pid, |q| pid_last.get(&q).map_or(false, |&last| last < cutoff));
+                self.pruner.should_prune(pid, &view)
+            }
+            None => self.pruner.should_prune(pid, &st.book),
+        };
         st.log.push(ReportRec { pid, task, step, value, pruned: decision });
         if decision {
             st.pruned.insert(pid, (step, value));
@@ -455,11 +669,21 @@ pub struct Tuner {
     journal_path: Option<PathBuf>,
     /// Replayed state from `resume_from`, consumed by the next run.
     recovered: Option<RecoveredRun>,
+    /// Failing-writer test double: `(appends, kind)` applied to the journal
+    /// writer on open ([`with_journal_fault`](Self::with_journal_fault)).
+    journal_fault: Option<(usize, JournalFault)>,
 }
 
 impl Tuner {
     pub fn new(space: SearchSpace, config: TunerConfig) -> Self {
-        Self { space, config, callback: None, journal_path: None, recovered: None }
+        Self {
+            space,
+            config,
+            callback: None,
+            journal_path: None,
+            recovered: None,
+            journal_fault: None,
+        }
     }
 
     /// Register a per-iteration callback.
@@ -486,6 +710,16 @@ impl Tuner {
         self
     }
 
+    /// Failing-writer test double: let `appends` more journal event
+    /// appends succeed, then fail every later one with `kind` — exercising
+    /// the [`TunerConfig::journal_on_error`] policy at every append site
+    /// without a real full disk. Test hook, not part of the public API.
+    #[doc(hidden)]
+    pub fn with_journal_fault(mut self, appends: usize, kind: JournalFault) -> Self {
+        self.journal_fault = Some((appends, kind));
+        self
+    }
+
     /// Rebuild a tuner from a crash-truncated run journal. The journal
     /// header supplies the full [`TunerConfig`] (the caller only re-supplies
     /// the space, which is validated against the journaled fingerprint and
@@ -508,6 +742,7 @@ impl Tuner {
             callback: None,
             journal_path: Some(path.to_path_buf()),
             recovered: Some(rec),
+            journal_fault: None,
         })
     }
 
@@ -566,7 +801,7 @@ impl Tuner {
                 rec.header.sense.as_str()
             );
         }
-        let journal = match (&self.journal_path, &recovered) {
+        let mut journal = match (&self.journal_path, &recovered) {
             (Some(path), Some(rec)) => Some(
                 JournalWriter::resume(path, rec.valid_len)?
                     .with_fsync_every(self.config.fsync_every_n),
@@ -588,6 +823,9 @@ impl Tuner {
             }
             (None, None) => None,
         };
+        if let (Some((appends, kind)), Some(w)) = (self.journal_fault, journal.as_mut()) {
+            w.inject_fault_after(appends, kind);
+        }
         Ok((journal, recovered.map(|r| r.replay)))
     }
 
@@ -596,7 +834,8 @@ impl Tuner {
         sense: Sense,
         objective: &(dyn Fn(&Config, &TrialReporter) -> Option<f64> + Sync),
     ) -> Result<TuningResult> {
-        let (journal, replay) = self.prepare_journal(sense)?;
+        let (writer, replay) = self.prepare_journal(sense)?;
+        let journal = JournalSink::new(writer, self.config.journal_on_error);
         match self.config.mode {
             ExecutionMode::Sync => {
                 let rep = match replay {
@@ -654,7 +893,8 @@ impl Tuner {
         sense: Sense,
         evaluate: &mut dyn FnMut(&[Config]) -> BatchResult,
     ) -> Result<TuningResult> {
-        let (journal, replay) = self.prepare_journal(sense)?;
+        let (writer, replay) = self.prepare_journal(sense)?;
+        let journal = JournalSink::new(writer, self.config.journal_on_error);
         let rep = match replay {
             None => None,
             Some(Replay::Sync(s)) => Some(s),
@@ -703,7 +943,7 @@ impl Tuner {
         &mut self,
         sense: Sense,
         evaluate: &mut dyn FnMut(&[Config]) -> BatchResult,
-        mut journal: Option<JournalWriter>,
+        mut journal: JournalSink,
         replay: Option<SyncReplay>,
     ) -> Result<TuningResult> {
         let cfg = self.config.clone();
@@ -783,15 +1023,12 @@ impl Tuner {
                         let opt_view = history.recent(cap);
                         let batch = optimizer.propose(&opt_view, cfg.batch_size, &mut rng)?;
                         anyhow::ensure!(!batch.is_empty(), "optimizer proposed an empty batch");
-                        jappend(
-                            &mut journal,
-                            &JournalEvent::SyncPropose {
-                                iter: iteration,
-                                rounds: optimizer.rounds(),
-                                rng: rng.state(),
-                                configs: batch.clone(),
-                            },
-                        )?;
+                        journal.append(&JournalEvent::SyncPropose {
+                            iter: iteration,
+                            rounds: optimizer.rounds(),
+                            rng: rng.state(),
+                            configs: batch.clone(),
+                        })?;
                         (batch, Vec::new())
                     }
                 };
@@ -838,14 +1075,11 @@ impl Tuner {
                 }
                 for (cfg_done, v) in result.params.into_iter().zip(result.evals) {
                     anyhow::ensure!(v.is_finite(), "objective returned a non-finite value");
-                    jappend(
-                        &mut journal,
-                        &JournalEvent::SyncEval {
-                            iter: iteration,
-                            config: cfg_done.clone(),
-                            value: Some(v),
-                        },
-                    )?;
+                    journal.append(&JournalEvent::SyncEval {
+                        iter: iteration,
+                        config: cfg_done.clone(),
+                        value: Some(v),
+                    })?;
                     let internal = match sense {
                         Sense::Maximize => v,
                         Sense::Minimize => -v,
@@ -868,16 +1102,13 @@ impl Tuner {
                     wall_ms: it_timer.elapsed_ms(),
                 };
                 returned_total = history.len();
-                jappend(
-                    &mut journal,
-                    &JournalEvent::SyncRound {
-                        iter: iteration,
-                        proposed: record.proposed,
-                        returned: record.returned,
-                        best: user_best,
-                        wall_ms: record.wall_ms,
-                    },
-                )?;
+                journal.append(&JournalEvent::SyncRound {
+                    iter: iteration,
+                    proposed: record.proposed,
+                    returned: record.returned,
+                    best: user_best,
+                    wall_ms: record.wall_ms,
+                })?;
                 if let Some(cb) = &mut self.callback {
                     cb(&record);
                 }
@@ -920,6 +1151,8 @@ impl Tuner {
             lost: 0,
             pruned: 0,
             reports: 0,
+            stalled: false,
+            journal_degraded: journal.degraded,
             dist_cache: optimizer.dist_cache_stats(),
         })
     }
@@ -931,7 +1164,7 @@ impl Tuner {
         &mut self,
         sense: Sense,
         objective: &(dyn Fn(&Config, &TrialReporter) -> Option<f64> + Sync),
-        journal: Option<JournalWriter>,
+        journal: JournalSink,
         replay: Option<AsyncReplay>,
     ) -> Result<TuningResult> {
         let cfg = self.config.clone();
@@ -948,6 +1181,7 @@ impl Tuner {
                 .map(|p| Arc::new(PruneCoordinator::new(p, sense == Sense::Minimize)));
         if let (Some(pc), Some(rep)) = (&coordinator, &replay) {
             pc.seed(&rep.reports);
+            pc.seed_pid_last(&rep.pid_last_task);
         }
         let sink: Option<Arc<dyn ReportSink>> =
             coordinator.as_ref().map(|pc| pc.clone() as Arc<dyn ReportSink>);
@@ -1041,7 +1275,7 @@ impl Tuner {
         optimizer: &mut dyn BatchOptimizer,
         sched: &mut dyn AsyncScheduler,
         prune_coord: Option<&PruneCoordinator>,
-        mut journal: Option<JournalWriter>,
+        mut journal: JournalSink,
         replay: Option<AsyncReplay>,
     ) -> Result<TuningResult> {
         let budget = cfg.num_iterations * cfg.batch_size;
@@ -1072,6 +1306,18 @@ impl Tuner {
         // site registers under this predicted id and then verifies it.
         let mut next_task_id: u64 = replay.as_ref().map_or(0, |r| r.next_task_id);
         let mut last_progress = std::time::Instant::now();
+        let stable = cfg.replay == ReplayMode::Stable;
+        // Stable mode: the reorder buffer. The fold frontier starts at the
+        // first id this process can see complete — a resume has already
+        // folded everything below the journaled high-water mark or is
+        // about to re-enqueue it under fresh ids at or above it.
+        let mut seq = Sequencer::new(next_task_id);
+        // Stable mode: fold-epoch counter (continues the journal's on
+        // resume — contiguity is audited by the replay).
+        let mut epoch_seq: u64 = 0;
+        let stall_timeout =
+            (cfg.stall_timeout_ms > 0).then(|| Duration::from_millis(cfg.stall_timeout_ms));
+        let mut stalled = false;
 
         // ---- journal replay: pure data reconstruction, no re-evaluation ----
         if let Some(rep) = replay {
@@ -1141,6 +1387,10 @@ impl Tuner {
             reports_count = rep.reports.len() as u64;
             proposals_made = rep.proposals_made as usize;
             proposed_since_record = rep.trailing_proposed;
+            epoch_seq = rep.epochs;
+            // A journal that already recorded a stall keeps the flag: the
+            // resumed trajectory includes the abandoned tasks.
+            stalled = rep.stalled;
             // Warm the optimizer over the view its *first post-resume fit*
             // will actually cover: with work still in flight that is the
             // constant-liar `[history + pending]` matrix over the
@@ -1159,10 +1409,18 @@ impl Tuner {
             // order, with the retry budget it had already consumed.
             let re_enqueued = rep.pending.len();
             for p in rep.pending {
+                // The re-enqueued attempt keeps its ORIGINAL journaled
+                // admission cutoff and backoff — the decisions and delays
+                // of the resumed trajectory must match the ones the
+                // uninterrupted run derived at the original admission.
                 if let Some(pc) = prune_coord {
-                    pc.register(next_task_id, p.pid);
+                    pc.register(next_task_id, p.pid, stable.then_some(p.cutoff));
                 }
-                let ids = sched.submit(std::slice::from_ref(&p.config));
+                let meta = SubmitMeta {
+                    backoff: Duration::from_secs_f64(p.backoff_ms / 1e3),
+                    fate_key: stable.then(|| stable_fate_key(p.pid, p.retries)),
+                };
+                let ids = sched.submit_with(std::slice::from_ref(&p.config), &meta);
                 anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
                 anyhow::ensure!(
                     prune_coord.is_none() || ids[0] == next_task_id,
@@ -1171,10 +1429,13 @@ impl Tuner {
                     ids[0]
                 );
                 next_task_id = ids[0] + 1;
-                jappend(
-                    &mut journal,
-                    &JournalEvent::AsyncSubmit { pid: p.pid, task: ids[0], retries: p.retries },
-                )?;
+                journal.append(&JournalEvent::AsyncSubmit {
+                    pid: p.pid,
+                    task: ids[0],
+                    retries: p.retries,
+                    cutoff: p.cutoff,
+                    backoff_ms: p.backoff_ms,
+                })?;
                 pending.insert(ids[0], PendingTask { config: p.config, retries: p.retries, pid: p.pid });
             }
             crate::log_info!(
@@ -1196,20 +1457,26 @@ impl Tuner {
                     // completion to free a point before proposing again.
                     break;
                 };
-                jappend(
-                    &mut journal,
-                    &JournalEvent::AsyncPropose {
-                        pid,
-                        rounds: optimizer.rounds(),
-                        config: proposal.clone(),
-                    },
-                )?;
+                journal.append(&JournalEvent::AsyncPropose {
+                    pid,
+                    rounds: optimizer.rounds(),
+                    config: proposal.clone(),
+                })?;
+                // The admission cutoff: the fold frontier at submit time —
+                // stable mode's pruning-visibility horizon, journaled so a
+                // resume re-derives identical decisions (0 and unused in
+                // wallclock mode).
+                let cutoff = if stable { seq.fold_next } else { 0 };
                 // Register before submit: a pool worker may begin executing
                 // (and reporting) the instant the task hits the queue.
                 if let Some(pc) = prune_coord {
-                    pc.register(next_task_id, pid);
+                    pc.register(next_task_id, pid, stable.then_some(cutoff));
                 }
-                let ids = sched.submit(std::slice::from_ref(&proposal));
+                let meta = SubmitMeta {
+                    backoff: Duration::ZERO,
+                    fate_key: stable.then(|| stable_fate_key(pid, 0)),
+                };
+                let ids = sched.submit_with(std::slice::from_ref(&proposal), &meta);
                 anyhow::ensure!(ids.len() == 1, "scheduler must assign one id per config");
                 anyhow::ensure!(
                     prune_coord.is_none() || ids[0] == next_task_id,
@@ -1218,10 +1485,13 @@ impl Tuner {
                     ids[0]
                 );
                 next_task_id = ids[0] + 1;
-                jappend(
-                    &mut journal,
-                    &JournalEvent::AsyncSubmit { pid, task: ids[0], retries: 0 },
-                )?;
+                journal.append(&JournalEvent::AsyncSubmit {
+                    pid,
+                    task: ids[0],
+                    retries: 0,
+                    cutoff,
+                    backoff_ms: 0.0,
+                })?;
                 pending.insert(ids[0], PendingTask { config: proposal, retries: 0, pid });
                 proposals_made += 1;
                 proposed_since_record += 1;
@@ -1232,7 +1502,13 @@ impl Tuner {
             }
 
             // ---- wait for completions ----
-            let completions: Vec<Completion> = sched.poll(POLL_TIMEOUT);
+            // Stable mode with an unblocked frontier: don't sleep — fold
+            // it now and only then admit the next proposal. This fold-one-
+            // then-refill alternation is what makes proposal k condition on
+            // exactly max(0, k - window) folds in every run, on every
+            // scheduler.
+            let timeout = if stable && seq.has_ready() { Duration::ZERO } else { POLL_TIMEOUT };
+            let completions: Vec<Completion> = sched.poll(timeout);
             // Journal intermediate reports before folding this poll's
             // completions: a worker pushes its reports before it sends the
             // completion, so draining here keeps every `async_report` line
@@ -1240,20 +1516,30 @@ impl Tuner {
             // relies on.
             if let Some(pc) = prune_coord {
                 for r in pc.drain_log() {
-                    jappend(
-                        &mut journal,
-                        &JournalEvent::AsyncReport {
-                            pid: r.pid,
-                            task: r.task,
-                            step: r.step,
-                            value: r.value,
-                            pruned: r.pruned,
-                        },
-                    )?;
+                    journal.append(&JournalEvent::AsyncReport {
+                        pid: r.pid,
+                        task: r.task,
+                        step: r.step,
+                        value: r.value,
+                        pruned: r.pruned,
+                    })?;
                     reports_count += 1;
                 }
             }
-            if completions.is_empty() {
+            if !completions.is_empty() {
+                last_progress = std::time::Instant::now();
+            }
+            // ---- admit to the fold ----
+            // Wallclock: this poll's whole batch in arrival order — the
+            // pre-knob path byte-for-byte. Stable: absorb into the reorder
+            // buffer and release at most the frontier completion.
+            let to_fold: Vec<Completion> = if stable {
+                seq.absorb(completions);
+                seq.pop_ready().into_iter().collect()
+            } else {
+                completions
+            };
+            if to_fold.is_empty() {
                 if sched.in_flight() == 0 {
                     // Every worker died without reporting (worker panic):
                     // the scheduler has lost track of the outstanding
@@ -1263,20 +1549,27 @@ impl Tuner {
                     // what was returned, instead of re-enqueueing
                     // proposals this run already counted as lost and
                     // silently diverging from the result it reported.
+                    //
+                    // Stable mode: buffered completions can no longer be
+                    // ordered (their frontier blocker died with the
+                    // workers) — tear the buffer down and conclude every
+                    // outstanding task, in one final fold epoch.
+                    if stable {
+                        journal.append(&JournalEvent::AsyncEpoch { seq: epoch_seq })?;
+                        epoch_seq += 1;
+                        seq.clear();
+                    }
                     let crashed: Vec<(u64, PendingTask)> =
                         std::mem::take(&mut pending).into_iter().collect();
                     for (task_id, task) in crashed {
-                        jappend(
-                            &mut journal,
-                            &JournalEvent::AsyncComplete {
-                                pid: task.pid,
-                                task: task_id,
-                                retries: task.retries,
-                                outcome: EventOutcome::Lost(LossReason::Crashed),
-                                queue_ms: 0.0,
-                                eval_ms: 0.0,
-                            },
-                        )?;
+                        journal.append(&JournalEvent::AsyncComplete {
+                            pid: task.pid,
+                            task: task_id,
+                            retries: task.retries,
+                            outcome: EventOutcome::Lost(LossReason::Crashed),
+                            queue_ms: 0.0,
+                            eval_ms: 0.0,
+                        })?;
                         lost += 1;
                         completion_log.push(CompletionRecord {
                             task_id,
@@ -1305,19 +1598,83 @@ impl Tuner {
                     }
                     break;
                 }
-                anyhow::ensure!(
-                    last_progress.elapsed() < STALL_TIMEOUT,
-                    "async scheduler stalled: {} tasks in flight, none completed in {:?}",
-                    sched.in_flight(),
-                    STALL_TIMEOUT
-                );
+                if let Some(timeout) = stall_timeout {
+                    if last_progress.elapsed() >= timeout {
+                        // Nothing has completed within the stall window but
+                        // the scheduler still claims in-flight work: a
+                        // worker went silent. Degrade instead of aborting —
+                        // conclude every outstanding task with a journaled
+                        // terminal `stalled` event (a resume will not
+                        // re-enqueue them, mirroring this run giving up on
+                        // them), drain, and return partial results with
+                        // `stalled: true`.
+                        crate::log_warn!(
+                            "async scheduler stalled: {} tasks in flight, none completed \
+                             in {timeout:?} — abandoning them and returning partial results",
+                            sched.in_flight()
+                        );
+                        if stable {
+                            journal.append(&JournalEvent::AsyncEpoch { seq: epoch_seq })?;
+                            epoch_seq += 1;
+                            seq.clear();
+                        }
+                        let abandoned: Vec<(u64, PendingTask)> =
+                            std::mem::take(&mut pending).into_iter().collect();
+                        for (task_id, task) in abandoned {
+                            let ev = JournalEvent::AsyncStalled { pid: task.pid, task: task_id };
+                            journal.append(&ev)?;
+                            if let Some(pc) = prune_coord {
+                                pc.conclude(task_id);
+                            }
+                            lost += 1;
+                            completion_log.push(CompletionRecord {
+                                task_id,
+                                queue_wait_ms: 0.0,
+                                eval_ms: 0.0,
+                                retries: task.retries,
+                                outcome: CompletionOutcome::Lost,
+                            });
+                            let user_best = match sense {
+                                Sense::Maximize => best_so_far,
+                                Sense::Minimize => -best_so_far,
+                            };
+                            push_best_point(
+                                sense,
+                                &mut best_series,
+                                user_best,
+                                &mut since_improvement,
+                            );
+                            let record = IterationRecord {
+                                iteration: iterations.len(),
+                                proposed: proposed_since_record,
+                                returned: 0,
+                                best_so_far: user_best,
+                                wall_ms: 0.0,
+                            };
+                            proposed_since_record = 0;
+                            if let Some(cb) = &mut self.callback {
+                                cb(&record);
+                            }
+                            iterations.push(record);
+                        }
+                        stalled = true;
+                        break;
+                    }
+                }
                 continue;
             }
-            last_progress = std::time::Instant::now();
 
-            // ---- fold completions in (poll returns them sorted by id) ----
-            for comp in completions {
+            // ---- fold completions in (canonical ascending-id order under
+            // `stable`; this poll's arrival order under `wallclock`) ----
+            for comp in to_fold {
                 let Some(mut task) = pending.remove(&comp.id) else { continue };
+                // Stable mode: one journaled fold epoch per fold — the
+                // replay audits both the marker contiguity and that every
+                // fold between markers lands in ascending task-id order.
+                if stable {
+                    journal.append(&JournalEvent::AsyncEpoch { seq: epoch_seq })?;
+                    epoch_seq += 1;
+                }
                 // A pruned trial's scheduler-level status (the early
                 // return's Done/Failed) is superseded by the pruning
                 // decision: conclude it as `Pruned` with a censored
@@ -1327,17 +1684,14 @@ impl Tuner {
                     pc.conclude(comp.id);
                 }
                 let (outcome, contributed) = if let Some((at_step, last_value)) = pruned_at {
-                    jappend(
-                        &mut journal,
-                        &JournalEvent::AsyncComplete {
-                            pid: task.pid,
-                            task: comp.id,
-                            retries: task.retries,
-                            outcome: EventOutcome::Pruned { at_step, last_value },
-                            queue_ms: comp.queue_wait_ms,
-                            eval_ms: comp.eval_ms,
-                        },
-                    )?;
+                    journal.append(&JournalEvent::AsyncComplete {
+                        pid: task.pid,
+                        task: comp.id,
+                        retries: task.retries,
+                        outcome: EventOutcome::Pruned { at_step, last_value },
+                        queue_ms: comp.queue_wait_ms,
+                        eval_ms: comp.eval_ms,
+                    })?;
                     let last_internal = match sense {
                         Sense::Maximize => last_value,
                         Sense::Minimize => -last_value,
@@ -1366,17 +1720,14 @@ impl Tuner {
                                 v.is_finite(),
                                 "objective returned a non-finite value"
                             );
-                            jappend(
-                                &mut journal,
-                                &JournalEvent::AsyncComplete {
-                                    pid: task.pid,
-                                    task: comp.id,
-                                    retries: task.retries,
-                                    outcome: EventOutcome::Done(v),
-                                    queue_ms: comp.queue_wait_ms,
-                                    eval_ms: comp.eval_ms,
-                                },
-                            )?;
+                            journal.append(&JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: comp.id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Done(v),
+                                queue_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                            })?;
                             let internal = match sense {
                                 Sense::Maximize => v,
                                 Sense::Minimize => -v,
@@ -1388,17 +1739,14 @@ impl Tuner {
                             (CompletionOutcome::Done, true)
                         }
                         CompletionStatus::Failed => {
-                            jappend(
-                                &mut journal,
-                                &JournalEvent::AsyncComplete {
-                                    pid: task.pid,
-                                    task: comp.id,
-                                    retries: task.retries,
-                                    outcome: EventOutcome::Failed,
-                                    queue_ms: comp.queue_wait_ms,
-                                    eval_ms: comp.eval_ms,
-                                },
-                            )?;
+                            journal.append(&JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: comp.id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Failed,
+                                queue_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                            })?;
                             (CompletionOutcome::Failed, false)
                         }
                         CompletionStatus::Lost(reason) => {
@@ -1413,17 +1761,14 @@ impl Tuner {
                                     task.retries,
                                     cfg.max_retries
                                 );
-                                jappend(
-                                    &mut journal,
-                                    &JournalEvent::AsyncComplete {
-                                        pid: task.pid,
-                                        task: comp.id,
-                                        retries: task.retries,
-                                        outcome: EventOutcome::Resubmitted(reason),
-                                        queue_ms: comp.queue_wait_ms,
-                                        eval_ms: comp.eval_ms,
-                                    },
-                                )?;
+                                journal.append(&JournalEvent::AsyncComplete {
+                                    pid: task.pid,
+                                    task: comp.id,
+                                    retries: task.retries,
+                                    outcome: EventOutcome::Resubmitted(reason),
+                                    queue_ms: comp.queue_wait_ms,
+                                    eval_ms: comp.eval_ms,
+                                })?;
                                 completion_log.push(CompletionRecord {
                                     task_id: comp.id,
                                     queue_wait_ms: comp.queue_wait_ms,
@@ -1431,10 +1776,27 @@ impl Tuner {
                                     retries: task.retries,
                                     outcome: CompletionOutcome::Resubmitted,
                                 });
+                                // Deterministic retry backoff (0 when the
+                                // knob is off) and a fresh admission
+                                // cutoff — both journaled so a resume
+                                // re-applies them verbatim.
+                                let backoff_ms =
+                                    retry_backoff_ms(cfg, task.pid, task.retries);
+                                let cutoff = if stable { seq.fold_next } else { 0 };
                                 if let Some(pc) = prune_coord {
-                                    pc.register(next_task_id, task.pid);
+                                    pc.register(
+                                        next_task_id,
+                                        task.pid,
+                                        stable.then_some(cutoff),
+                                    );
                                 }
-                                let ids = sched.submit(std::slice::from_ref(&task.config));
+                                let meta = SubmitMeta {
+                                    backoff: Duration::from_secs_f64(backoff_ms / 1e3),
+                                    fate_key: stable
+                                        .then(|| stable_fate_key(task.pid, task.retries)),
+                                };
+                                let ids =
+                                    sched.submit_with(std::slice::from_ref(&task.config), &meta);
                                 anyhow::ensure!(ids.len() == 1, "resubmit must assign one id");
                                 anyhow::ensure!(
                                     prune_coord.is_none() || ids[0] == next_task_id,
@@ -1443,28 +1805,24 @@ impl Tuner {
                                     ids[0]
                                 );
                                 next_task_id = ids[0] + 1;
-                                jappend(
-                                    &mut journal,
-                                    &JournalEvent::AsyncSubmit {
-                                        pid: task.pid,
-                                        task: ids[0],
-                                        retries: task.retries,
-                                    },
-                                )?;
+                                journal.append(&JournalEvent::AsyncSubmit {
+                                    pid: task.pid,
+                                    task: ids[0],
+                                    retries: task.retries,
+                                    cutoff,
+                                    backoff_ms,
+                                })?;
                                 pending.insert(ids[0], task);
                                 continue; // not concluded: no iteration record
                             }
-                            jappend(
-                                &mut journal,
-                                &JournalEvent::AsyncComplete {
-                                    pid: task.pid,
-                                    task: comp.id,
-                                    retries: task.retries,
-                                    outcome: EventOutcome::Lost(reason),
-                                    queue_ms: comp.queue_wait_ms,
-                                    eval_ms: comp.eval_ms,
-                                },
-                            )?;
+                            journal.append(&JournalEvent::AsyncComplete {
+                                pid: task.pid,
+                                task: comp.id,
+                                retries: task.retries,
+                                outcome: EventOutcome::Lost(reason),
+                                queue_ms: comp.queue_wait_ms,
+                                eval_ms: comp.eval_ms,
+                            })?;
                             lost += 1;
                             (CompletionOutcome::Lost, false)
                         }
@@ -1507,10 +1865,8 @@ impl Tuner {
                             // proposals as in-flight and re-run work the
                             // original run cancelled.
                             if let Some(t) = pending.remove(id) {
-                                jappend(
-                                    &mut journal,
-                                    &JournalEvent::AsyncCancel { pid: t.pid, task: *id },
-                                )?;
+                                journal
+                                    .append(&JournalEvent::AsyncCancel { pid: t.pid, task: *id })?;
                                 if let Some(pc) = prune_coord {
                                     pc.conclude(*id);
                                 }
@@ -1547,6 +1903,8 @@ impl Tuner {
             lost,
             pruned: pruned_count,
             reports: reports_count,
+            stalled,
+            journal_degraded: journal.degraded,
             dist_cache: optimizer.dist_cache_stats(),
         })
     }
@@ -1803,6 +2161,10 @@ mod tests {
             pruner: PrunerKind::Asha,
             pruner_warmup: 2,
             asha_reduction: 4.0,
+            replay: ReplayMode::Stable,
+            journal_on_error: JournalPolicy::Degrade,
+            retry_backoff_ms: 12.5,
+            stall_timeout_ms: 1234,
             celery: None,
         };
         let rc = tc.to_run_config();
@@ -1830,6 +2192,10 @@ mod tests {
         assert_eq!(back.pruner, tc.pruner);
         assert_eq!(back.pruner_warmup, tc.pruner_warmup);
         assert_eq!(back.asha_reduction, tc.asha_reduction);
+        assert_eq!(back.replay, tc.replay);
+        assert_eq!(back.journal_on_error, tc.journal_on_error);
+        assert_eq!(back.retry_backoff_ms, tc.retry_backoff_ms);
+        assert_eq!(back.stall_timeout_ms, tc.stall_timeout_ms);
     }
 
     // ---------------- async event-loop tests ----------------
@@ -2007,5 +2373,190 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("maximize"), "got: {err:#}");
         std::fs::remove_file(&path).ok();
+    }
+
+    // ---------------- order-stable replay (`--replay stable`) ----------------
+
+    fn completion(id: TaskId) -> Completion {
+        Completion {
+            id,
+            config: Config::default(),
+            status: CompletionStatus::Done(id as f64),
+            queue_wait_ms: 0.0,
+            eval_ms: 0.0,
+            epoch: 1,
+        }
+    }
+
+    #[test]
+    fn sequencer_fold_order_invariant_to_adversarial_permutations() {
+        // Whatever order (and grouping) completions arrive in, the
+        // sequencer must release them in exactly ascending task id.
+        for seed in 0..16u64 {
+            let mut ids: Vec<u64> = (0..64).collect();
+            let mut rng = Pcg64::new(seed);
+            // Fisher–Yates: an adversarial arrival permutation per seed.
+            for i in (1..ids.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                ids.swap(i, j);
+            }
+            let chunk = 1 + (seed as usize % 7); // vary poll batch sizes too
+            let mut seq = Sequencer::new(0);
+            let mut folded = Vec::new();
+            for arrival in ids.chunks(chunk) {
+                seq.absorb(arrival.iter().map(|&id| completion(id)).collect());
+                while let Some(c) = seq.pop_ready() {
+                    folded.push(c.id);
+                }
+            }
+            assert_eq!(folded, (0..64).collect::<Vec<u64>>(), "seed {seed} chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn sequencer_blocks_until_the_frontier_arrives() {
+        let mut seq = Sequencer::new(5);
+        seq.absorb(vec![completion(7), completion(6)]);
+        assert!(!seq.has_ready(), "frontier (5) has not arrived");
+        assert!(seq.pop_ready().is_none());
+        seq.absorb(vec![completion(5)]);
+        assert!(seq.has_ready());
+        let order: Vec<u64> = std::iter::from_fn(|| seq.pop_ready().map(|c| c.id)).collect();
+        assert_eq!(order, vec![5, 6, 7]);
+        assert!(!seq.has_ready());
+    }
+
+    #[test]
+    fn stable_replay_on_serial_matches_wallclock_exactly() {
+        // The serial scheduler already completes in submission order, so
+        // the reorder buffer must be a no-op there: both replay modes give
+        // the identical trajectory.
+        let run = |replay: ReplayMode| {
+            let space = crate::space::svm_space();
+            let mut t = Tuner::new(
+                space,
+                TunerConfig {
+                    optimizer: OptimizerKind::Hallucination,
+                    num_iterations: 8,
+                    batch_size: 2,
+                    backend: SurrogateBackend::Native,
+                    seed: 11,
+                    mode: ExecutionMode::Async,
+                    replay,
+                    ..Default::default()
+                },
+            );
+            t.maximize(quad).unwrap()
+        };
+        let w = run(ReplayMode::Wallclock);
+        let s = run(ReplayMode::Stable);
+        assert_eq!(s.best_params, w.best_params);
+        assert_eq!(s.best_objective, w.best_objective);
+        assert_eq!(s.history, w.history);
+        assert_eq!(s.best_series, w.best_series);
+    }
+
+    #[test]
+    fn stable_fold_is_scheduler_invariant() {
+        // The tentpole contract, cheapest form: under `--replay stable` a
+        // threaded run with wall-clock-shuffled completions produces the
+        // byte-identical trajectory to the serial reference — and to
+        // itself, run to run.
+        let run = |kind: SchedulerKind, workers: usize| {
+            let space = crate::space::svm_space();
+            let mut t = Tuner::new(
+                space,
+                TunerConfig {
+                    optimizer: OptimizerKind::Hallucination,
+                    num_iterations: 10,
+                    batch_size: 1,
+                    scheduler: kind,
+                    workers,
+                    async_window: 4,
+                    backend: SurrogateBackend::Native,
+                    seed: 5,
+                    mode: ExecutionMode::Async,
+                    replay: ReplayMode::Stable,
+                    ..Default::default()
+                },
+            );
+            // Per-config jitter shuffles threaded completion order without
+            // touching the (deterministic) objective value.
+            t.maximize(|cfg| {
+                let c = cfg.get_f64("c")?;
+                std::thread::sleep(Duration::from_millis((c as u64 % 5) * 4));
+                quad(cfg)
+            })
+            .unwrap()
+        };
+        let serial = run(SchedulerKind::Serial, 1);
+        let threaded_a = run(SchedulerKind::Threaded, 4);
+        let threaded_b = run(SchedulerKind::Threaded, 4);
+        assert_eq!(threaded_a.history, threaded_b.history, "run-to-run identity");
+        assert_eq!(threaded_a.best_series, threaded_b.best_series);
+        assert_eq!(threaded_a.history, serial.history, "cross-scheduler identity");
+        assert_eq!(threaded_a.best_series, serial.best_series);
+        assert_eq!(threaded_a.best_params, serial.best_params);
+        assert_eq!(threaded_a.best_objective, serial.best_objective);
+    }
+
+    #[test]
+    fn async_stall_degrades_to_partial_result() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let space = crate::space::svm_space();
+        let mut t = Tuner::new(
+            space,
+            TunerConfig {
+                optimizer: OptimizerKind::Random,
+                num_iterations: 2,
+                batch_size: 1,
+                scheduler: SchedulerKind::Threaded,
+                workers: 1,
+                backend: SurrogateBackend::Native,
+                mode: ExecutionMode::Async,
+                stall_timeout_ms: 50,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        let r = t
+            .maximize(|_| {
+                if calls.fetch_add(1, Ordering::SeqCst) > 0 {
+                    // The second evaluation goes silent far past the stall
+                    // patience; the run must abandon it, not hang or abort.
+                    std::thread::sleep(Duration::from_millis(600));
+                }
+                Some(1.0)
+            })
+            .unwrap();
+        assert!(r.stalled, "stall must be surfaced on the result");
+        assert_eq!(r.evaluations, 1, "only the first evaluation landed");
+        assert_eq!(r.lost, 1, "the abandoned task counts as lost");
+        assert_eq!(r.best_objective, 1.0);
+    }
+
+    #[test]
+    fn retry_backoff_schedule_is_deterministic_and_bounded() {
+        let cfg = TunerConfig { retry_backoff_ms: 100.0, seed: 9, ..Default::default() };
+        let mut prev = 0.0f64;
+        for attempt in 1..=10usize {
+            let d = retry_backoff_ms(&cfg, 3, attempt);
+            let base = 100.0 * f64::powi(2.0, attempt.saturating_sub(1).min(6) as i32);
+            let lo = base / 2.0;
+            assert!(d >= lo && d < base, "attempt {attempt}: {d} not in [{lo}, {base})");
+            assert_eq!(d, retry_backoff_ms(&cfg, 3, attempt), "same inputs, same delay");
+            if attempt > 7 {
+                // Exponent caps at 2^6: the envelope stops growing.
+                assert!(d < 100.0 * 64.0, "attempt {attempt} exceeded the cap");
+            }
+            prev = d.max(prev);
+        }
+        assert!(prev >= 100.0, "later attempts back off further than the base");
+        // Different (pid, attempt) draw from independent streams.
+        assert_ne!(retry_backoff_ms(&cfg, 3, 1), retry_backoff_ms(&cfg, 4, 1));
+        // Knob off: no delay, no RNG.
+        let off = TunerConfig::default();
+        assert_eq!(retry_backoff_ms(&off, 3, 1), 0.0);
     }
 }

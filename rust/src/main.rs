@@ -73,6 +73,14 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
             .ok_or_else(|| anyhow!("bad --pruner (none | median | asha)"))?,
         pruner_warmup: args.get_usize("pruner-warmup", 1)?,
         asha_reduction: args.get_f64("asha-reduction", 3.0)?,
+        replay: mango::coordinator::ReplayMode::from_str(args.get_or("replay", "wallclock"))
+            .ok_or_else(|| anyhow!("bad --replay (wallclock | stable)"))?,
+        journal_on_error: mango::persist::JournalPolicy::from_str(
+            args.get_or("journal-on-error", "fail-stop"),
+        )
+        .ok_or_else(|| anyhow!("bad --journal-on-error (fail-stop | degrade)"))?,
+        retry_backoff_ms: args.get_f64("retry-backoff-ms", 0.0)?,
+        stall_timeout_ms: args.get_u64("stall-timeout-ms", 3_600_000)?,
         celery: None,
     })
 }
@@ -83,7 +91,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "initial-random", "workers", "mc-samples", "seed", "early-stop",
         "max-surrogate-obs", "mode", "async-window", "max-retries", "proposal-threads",
         "proposal-shards", "kernel-profile", "fsync-every", "journal", "pruner",
-        "pruner-warmup", "asha-reduction",
+        "pruner-warmup", "asha-reduction", "replay", "journal-on-error",
+        "retry-backoff-ms", "stall-timeout-ms",
     ])?;
     let name = args
         .get("workload")
@@ -94,6 +103,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
     // syncs the journal, so without a journal it could only be a no-op.
     if args.get("fsync-every").is_some() && args.get("journal").is_none() {
         return Err(anyhow!("--fsync-every requires --journal (there is no journal to sync)"));
+    }
+    if args.get("journal-on-error").is_some() && args.get("journal").is_none() {
+        return Err(anyhow!(
+            "--journal-on-error requires --journal (there is no journal to fail on)"
+        ));
     }
     let mut tuner = if args.has("resume") {
         // The journal header carries the full run config; only the
@@ -131,6 +145,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
     } else {
         tuner.maximize(move |c| obj(c))?
     };
+    if result.stalled {
+        mango::log_warn!(
+            "run stalled (no completion within --stall-timeout-ms); results are partial \
+             and {} in-flight evaluation(s) were abandoned",
+            result.lost
+        );
+    }
+    if result.journal_degraded {
+        mango::log_warn!(
+            "journal degraded mid-run (--journal-on-error degrade): the file on disk is a \
+             truncated prefix — do not --resume from it"
+        );
+    }
     if args.has("json") {
         println!("{}", result.to_json());
     } else {

@@ -109,6 +109,23 @@ impl ReportBook {
     pub fn is_empty(&self) -> bool {
         self.streams.is_empty()
     }
+
+    /// A copy of the book restricted to `pid`'s own stream plus the
+    /// streams of every other proposal `keep` admits — the stable-replay
+    /// visibility cut: a trial's pruning decisions may only see peers
+    /// whose membership is a pure function of the journaled fold order,
+    /// never of wall-clock arrival timing. Pure and allocation-bounded;
+    /// the same `(book, pid, keep)` always yields the same view.
+    pub fn filtered(&self, pid: u64, keep: impl Fn(u64) -> bool) -> ReportBook {
+        ReportBook {
+            streams: self
+                .streams
+                .iter()
+                .filter(|(p, _)| **p == pid || keep(**p))
+                .map(|(p, v)| (*p, v.clone()))
+                .collect(),
+        }
+    }
 }
 
 /// A trial-level early-stopping rule: a pure function of the report book.
@@ -306,6 +323,25 @@ mod tests {
         b.reset(3);
         assert_eq!(b.reports(3), &[] as &[(u64, f64)]);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn filtered_view_keeps_own_stream_and_admitted_peers() {
+        let b = book(&[(0, &[(1, 0.5)]), (1, &[(1, 1.0)]), (2, &[(1, 2.0)]), (3, &[(1, 3.0)])]);
+        let v = b.filtered(2, |p| p < 2);
+        assert_eq!(v.pids().collect::<Vec<_>>(), vec![0, 1, 2], "own stream always survives");
+        assert_eq!(v.reports(2), &[(1, 2.0)]);
+        assert_eq!(v.reports(3), &[] as &[(u64, f64)]);
+        assert_eq!(b.pids().count(), 4, "the source book is untouched");
+        // The visibility cut can flip a decision: pid 0 (value 0.5) is
+        // below the full-book median of {1.0, 2.0, 3.0}, but a cut that
+        // admits only pid 3 leaves fewer than two peers — no median, no
+        // pruning.
+        let p = MedianRule { warmup: 1 };
+        assert!(p.should_prune(0, &b));
+        let narrow = b.filtered(0, |p| p == 3);
+        assert_eq!(narrow.pids().collect::<Vec<_>>(), vec![0, 3]);
+        assert!(!p.should_prune(0, &narrow), "one peer is below the two-other floor");
     }
 
     #[test]

@@ -10,8 +10,13 @@
 //!   iteration;
 //! * async mode — `async_propose` (stable proposal id + config + rounds),
 //!   `async_submit` (proposal → scheduler task id, including resubmissions
-//!   after a loss), `async_report` (one intermediate metric report plus
-//!   the pruner's decision on it), and `async_complete` (terminal
+//!   after a loss, plus the fold cutoff and retry-backoff the task was
+//!   admitted under), `async_report` (one intermediate metric report plus
+//!   the pruner's decision on it), `async_epoch` (a fold-epoch boundary
+//!   under `--replay stable` — every terminal between one epoch marker
+//!   and the next was folded in canonical ascending-task-id order),
+//!   `async_stalled` (a terminal marker for work abandoned by the stall
+//!   backstop), and `async_complete` (terminal
 //!   `done`/`failed`/`lost`/`pruned` outcomes plus `resubmitted`
 //!   intermediates, with retry counters and queue/eval telemetry).
 //!
@@ -56,7 +61,18 @@ pub const JOURNAL_MAGIC: &str = "mango-run-journal";
 /// v1 and v2 journals fail loudly, as every version mismatch does — a v2
 /// replay under v3 rules could silently resume a pruning run without its
 /// rung state.
-pub const JOURNAL_VERSION: u64 = 3;
+///
+/// v4: order-stable completion folding — `async_submit` grew the `cutoff`
+/// (the stable-mode fold frontier the task was admitted under, which
+/// scopes its pruning comparisons) and `backoff_ms` (the deterministic
+/// retry backoff applied to the submission) fields, and two events were
+/// added: `async_epoch` (a stable-mode fold-epoch boundary) and
+/// `async_stalled` (a terminal marker for in-flight work abandoned when
+/// the stall backstop degrades instead of aborting). v1–v3 journals fail
+/// loudly: a v3 journal replayed under v4 rules would resume a stable
+/// run without its fold frontier and re-derive different pruning
+/// decisions.
+pub const JOURNAL_VERSION: u64 = 4;
 
 /// Objective sense recorded in the header; `Tuner::maximize`/`minimize`
 /// on a resumed run must match it.
@@ -207,8 +223,25 @@ pub enum JournalEvent {
     AsyncPropose { pid: u64, rounds: usize, config: Config },
     /// Async mode: proposal handed to the scheduler as task `task`
     /// (`retries > 0` = a resubmission after a loss, including the
-    /// re-enqueue of in-flight-at-crash work on resume).
-    AsyncSubmit { pid: u64, task: TaskId, retries: usize },
+    /// re-enqueue of in-flight-at-crash work on resume). `cutoff` is the
+    /// stable-mode fold frontier at admission — the task's pruning
+    /// decisions compare only against proposals whose final task id is
+    /// below it (0 and ignored under `--replay wallclock`). `backoff_ms`
+    /// is the deterministic retry backoff the submission was delayed by
+    /// (0 for first submissions and when the knob is off); a resume
+    /// re-applies both so the replayed trajectory matches.
+    AsyncSubmit { pid: u64, task: TaskId, retries: usize, cutoff: TaskId, backoff_ms: f64 },
+    /// Async mode, `--replay stable` only: a fold-epoch boundary. Every
+    /// terminal journaled between this marker and the next one was folded
+    /// in canonical ascending-task-id order; the replay validates that
+    /// instead of trusting raw arrival order.
+    AsyncEpoch { seq: u64 },
+    /// Async mode: terminal marker for a task that was still in flight
+    /// when the stall backstop fired (no completion arrived within
+    /// `stall_timeout_ms`). Terminal for its proposal — a resume does not
+    /// re-enqueue stalled work, mirroring the degraded run that gave up
+    /// on it.
+    AsyncStalled { pid: u64, task: TaskId },
     /// Async mode: a queued (never started) task withdrawn by the early
     /// stop. Terminal for its proposal — without this event a resume would
     /// re-enqueue and evaluate work the original run cancelled.
@@ -272,11 +305,24 @@ impl JournalEvent {
                 ("rounds", Json::Num(*rounds as f64)),
                 ("config", config.to_journal_json()),
             ]),
-            JournalEvent::AsyncSubmit { pid, task, retries } => Json::obj(vec![
-                ("e", Json::Str("async_submit".into())),
+            JournalEvent::AsyncSubmit { pid, task, retries, cutoff, backoff_ms } => {
+                Json::obj(vec![
+                    ("e", Json::Str("async_submit".into())),
+                    ("pid", Json::Num(*pid as f64)),
+                    ("task", Json::Num(*task as f64)),
+                    ("retries", Json::Num(*retries as f64)),
+                    ("cutoff", Json::Num(*cutoff as f64)),
+                    ("backoff_ms", Json::Num(*backoff_ms)),
+                ])
+            }
+            JournalEvent::AsyncEpoch { seq } => Json::obj(vec![
+                ("e", Json::Str("async_epoch".into())),
+                ("seq", Json::Num(*seq as f64)),
+            ]),
+            JournalEvent::AsyncStalled { pid, task } => Json::obj(vec![
+                ("e", Json::Str("async_stalled".into())),
                 ("pid", Json::Num(*pid as f64)),
                 ("task", Json::Num(*task as f64)),
-                ("retries", Json::Num(*retries as f64)),
             ]),
             JournalEvent::AsyncCancel { pid, task } => Json::obj(vec![
                 ("e", Json::Str("async_cancel".into())),
@@ -386,6 +432,13 @@ impl JournalEvent {
                 pid: req_u64(j, "pid")?,
                 task: req_u64(j, "task")?,
                 retries: req_usize(j, "retries")?,
+                cutoff: req_u64(j, "cutoff")?,
+                backoff_ms: req_f64(j, "backoff_ms")?,
+            }),
+            "async_epoch" => Ok(JournalEvent::AsyncEpoch { seq: req_u64(j, "seq")? }),
+            "async_stalled" => Ok(JournalEvent::AsyncStalled {
+                pid: req_u64(j, "pid")?,
+                task: req_u64(j, "task")?,
             }),
             "async_cancel" => Ok(JournalEvent::AsyncCancel {
                 pid: req_u64(j, "pid")?,
@@ -463,6 +516,87 @@ fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
     j.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("event missing string '{k}'"))
 }
 
+/// Structured journal-append failure: every I/O error on the append path
+/// (write, flush, fsync, a short write with no error) surfaces as one of
+/// these instead of an opaque context chain, so the coordinator's
+/// `--journal-on-error` policy can decide between aborting the run
+/// (fail-stop) and continuing without a journal (degrade). Whatever the
+/// policy, the bytes already on disk remain a valid committed prefix —
+/// at worst with one torn, newline-less tail that [`read_journal`] drops.
+#[derive(Debug)]
+pub enum JournalError {
+    /// The OS returned an error from `op` (`"write"`, `"flush"`,
+    /// `"fsync"`) — e.g. ENOSPC mid-run.
+    Io { op: &'static str, path: PathBuf, source: std::io::Error },
+    /// A write made no progress (`Ok(0)`) before the line was fully
+    /// committed: `wrote` of `len` bytes landed, the rest never will.
+    ShortWrite { path: PathBuf, wrote: usize, len: usize },
+}
+
+impl std::fmt::Display for JournalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JournalError::Io { op, path, source } => {
+                write!(f, "journal {op} failed on {}: {source}", path.display())
+            }
+            JournalError::ShortWrite { path, wrote, len } => write!(
+                f,
+                "journal short write on {}: {wrote} of {len} bytes committed",
+                path.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for JournalError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            JournalError::Io { source, .. } => Some(source),
+            JournalError::ShortWrite { .. } => None,
+        }
+    }
+}
+
+/// What the coordinator does when an append fails mid-run
+/// (`--journal-on-error`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JournalPolicy {
+    /// Abort the run with the [`JournalError`] (the default): the journal
+    /// is the only persistent state, so losing it loses resumability.
+    FailStop,
+    /// Keep tuning without a journal: log the error once, stop appending,
+    /// and mark the result non-resumable (`journal_degraded`). The file's
+    /// committed prefix stays replayable up to the failure point.
+    Degrade,
+}
+
+impl JournalPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JournalPolicy::FailStop => "fail-stop",
+            JournalPolicy::Degrade => "degrade",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "fail-stop" => Some(Self::FailStop),
+            "degrade" => Some(Self::Degrade),
+            _ => None,
+        }
+    }
+}
+
+/// Failing-writer test double: which I/O failure to inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JournalFault {
+    /// The write fails outright with ENOSPC; no bytes of the line land.
+    Enospc,
+    /// Half the line's bytes land (a real torn, newline-less tail on
+    /// disk), then the write errors — the committed prefix stays valid.
+    ShortWrite,
+}
+
 /// Append-only writer. Each [`append`](Self::append) writes exactly one
 /// `\n`-terminated line and flushes it to the OS, so a killed process
 /// loses at most the event it was mid-write on (the torn tail the reader
@@ -480,6 +614,9 @@ pub struct JournalWriter {
     fsync_every_n: usize,
     /// Appends since the last fsync barrier.
     unsynced: usize,
+    /// Failing-writer test double: fail the append once `.0` more event
+    /// appends have succeeded, and keep failing (a full disk stays full).
+    fault: Option<(usize, JournalFault)>,
 }
 
 impl JournalWriter {
@@ -488,7 +625,13 @@ impl JournalWriter {
     pub fn create(path: &Path, header: &RunHeader) -> Result<Self> {
         let file = File::create(path)
             .with_context(|| format!("creating run journal {}", path.display()))?;
-        let mut w = Self { file, path: path.to_path_buf(), fsync_every_n: 0, unsynced: 0 };
+        let mut w = Self {
+            file,
+            path: path.to_path_buf(),
+            fsync_every_n: 0,
+            unsynced: 0,
+            fault: None,
+        };
         w.write_line(&header.to_json())?;
         Ok(w)
     }
@@ -504,7 +647,13 @@ impl JournalWriter {
             .with_context(|| format!("reopening run journal {}", path.display()))?;
         file.set_len(valid_len)
             .with_context(|| format!("truncating torn tail of {}", path.display()))?;
-        let mut w = Self { file, path: path.to_path_buf(), fsync_every_n: 0, unsynced: 0 };
+        let mut w = Self {
+            file,
+            path: path.to_path_buf(),
+            fsync_every_n: 0,
+            unsynced: 0,
+            fault: None,
+        };
         w.file.seek(SeekFrom::End(0))?;
         Ok(w)
     }
@@ -521,23 +670,97 @@ impl JournalWriter {
         &self.path
     }
 
-    pub fn append(&mut self, event: &JournalEvent) -> Result<()> {
+    /// Failing-writer test double: let `appends` more event appends
+    /// succeed, then fail every later one with `kind`. Exercises the
+    /// `--journal-on-error` policy at every append site without a real
+    /// full disk.
+    #[doc(hidden)]
+    pub fn inject_fault_after(&mut self, appends: usize, kind: JournalFault) {
+        self.fault = Some((appends, kind));
+    }
+
+    pub fn append(&mut self, event: &JournalEvent) -> std::result::Result<(), JournalError> {
+        let triggered = match &mut self.fault {
+            Some((0, kind)) => Some(*kind),
+            Some((remaining, _)) => {
+                *remaining -= 1;
+                None
+            }
+            None => None,
+        };
+        if let Some(kind) = triggered {
+            return Err(self.injected_failure(event, kind));
+        }
         self.write_line(&event.to_json())
     }
 
-    fn write_line(&mut self, j: &Json) -> Result<()> {
+    /// Simulate the failure mode on the real file so the bytes on disk
+    /// match what the error claims: ENOSPC lands nothing, a short write
+    /// lands a torn newline-less prefix the reader will drop.
+    fn injected_failure(&mut self, event: &JournalEvent, kind: JournalFault) -> JournalError {
+        match kind {
+            JournalFault::Enospc => JournalError::Io {
+                op: "write",
+                path: self.path.clone(),
+                source: std::io::Error::from_raw_os_error(28), // ENOSPC
+            },
+            JournalFault::ShortWrite => {
+                let line = event.to_json().to_string();
+                let torn = &line.as_bytes()[..line.len() / 2];
+                // Best-effort: if even the torn prefix fails to land the
+                // journal is still a committed prefix, just a shorter one.
+                let _ = self.file.write(torn);
+                let _ = self.file.flush();
+                JournalError::ShortWrite {
+                    path: self.path.clone(),
+                    wrote: torn.len(),
+                    len: line.len() + 1,
+                }
+            }
+        }
+    }
+
+    fn write_line(&mut self, j: &Json) -> std::result::Result<(), JournalError> {
         let mut line = j.to_string();
         line.push('\n');
-        self.file
-            .write_all(line.as_bytes())
-            .with_context(|| format!("appending to run journal {}", self.path.display()))?;
-        self.file.flush()?;
+        let bytes = line.as_bytes();
+        let mut wrote = 0usize;
+        // Manual write loop instead of write_all: an Ok(0) from the OS is
+        // a short write with no errno and must surface as a structured
+        // error, not an unreachable-disk panic or a silent truncation.
+        while wrote < bytes.len() {
+            match self.file.write(&bytes[wrote..]) {
+                Ok(0) => {
+                    return Err(JournalError::ShortWrite {
+                        path: self.path.clone(),
+                        wrote,
+                        len: bytes.len(),
+                    })
+                }
+                Ok(n) => wrote += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(JournalError::Io {
+                        op: "write",
+                        path: self.path.clone(),
+                        source: e,
+                    })
+                }
+            }
+        }
+        self.file.flush().map_err(|e| JournalError::Io {
+            op: "flush",
+            path: self.path.clone(),
+            source: e,
+        })?;
         if self.fsync_every_n > 0 {
             self.unsynced += 1;
             if self.unsynced >= self.fsync_every_n {
-                self.file
-                    .sync_data()
-                    .with_context(|| format!("fsync of run journal {}", self.path.display()))?;
+                self.file.sync_data().map_err(|e| JournalError::Io {
+                    op: "fsync",
+                    path: self.path.clone(),
+                    source: e,
+                })?;
                 self.unsynced = 0;
             }
         }
@@ -683,7 +906,9 @@ mod tests {
                 wall_ms: 1.25,
             },
             JournalEvent::AsyncPropose { pid: 3, rounds: 2, config: cfg(4) },
-            JournalEvent::AsyncSubmit { pid: 3, task: 7, retries: 1 },
+            JournalEvent::AsyncSubmit { pid: 3, task: 7, retries: 1, cutoff: 5, backoff_ms: 12.5 },
+            JournalEvent::AsyncEpoch { seq: 2 },
+            JournalEvent::AsyncStalled { pid: 8, task: 14 },
             JournalEvent::AsyncCancel { pid: 6, task: 12 },
             JournalEvent::AsyncComplete {
                 pid: 3,
@@ -895,10 +1120,13 @@ mod tests {
         // Saturating casts would turn these into silently wrong replay
         // state (retries reset / budget exhausted); they must be rejected.
         for bad in [
-            r#"{"e":"async_submit","pid":-1,"task":0,"retries":0}"#,
-            r#"{"e":"async_submit","pid":0,"task":0,"retries":-1}"#,
-            r#"{"e":"async_submit","pid":0,"task":1e300,"retries":0}"#,
-            r#"{"e":"async_submit","pid":0.5,"task":0,"retries":0}"#,
+            r#"{"e":"async_submit","pid":-1,"task":0,"retries":0,"cutoff":0,"backoff_ms":0}"#,
+            r#"{"e":"async_submit","pid":0,"task":0,"retries":-1,"cutoff":0,"backoff_ms":0}"#,
+            r#"{"e":"async_submit","pid":0,"task":1e300,"retries":0,"cutoff":0,"backoff_ms":0}"#,
+            r#"{"e":"async_submit","pid":0.5,"task":0,"retries":0,"cutoff":0,"backoff_ms":0}"#,
+            r#"{"e":"async_submit","pid":0,"task":0,"retries":0,"cutoff":-2,"backoff_ms":0}"#,
+            r#"{"e":"async_epoch","seq":-1}"#,
+            r#"{"e":"async_stalled","pid":1.5,"task":0}"#,
         ] {
             let j = parse(bad).unwrap();
             let err = JournalEvent::from_json(&j).unwrap_err();
@@ -953,11 +1181,12 @@ mod tests {
         std::fs::write(&path, format!("{h}\n")).unwrap();
         let err = read_journal(&path).unwrap_err();
         assert!(err.to_string().contains("version"), "got: {err:#}");
-        // Stale schemas fail loudly too: v1 (pre-celery-header) and v2
-        // (pre-pruning — no async_report events or pruned outcomes). A v2
-        // journal silently replayed under v3 rules would resume a pruning
-        // run without its rung state.
-        for old in [1u64, 2] {
+        // Stale schemas fail loudly too: v1 (pre-celery-header), v2
+        // (pre-pruning — no async_report events or pruned outcomes), and
+        // v3 (pre-stable-replay — no epoch markers, no submit cutoffs). A
+        // v3 journal silently replayed under v4 rules would resume a
+        // stable run without its fold frontier.
+        for old in [1u64, 2, 3] {
             let mut h = header().to_json().to_string();
             h = h.replace(
                 &format!("\"version\":{JOURNAL_VERSION}"),
@@ -1037,5 +1266,73 @@ mod tests {
             Ok(())
         });
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_enospc_fails_every_later_append_and_preserves_the_prefix() {
+        let path = tmp("fault_enospc");
+        let events = sample_events();
+        let mut w = JournalWriter::create(&path, &header()).unwrap();
+        w.inject_fault_after(2, JournalFault::Enospc);
+        w.append(&events[0]).unwrap();
+        w.append(&events[1]).unwrap();
+        let err = w.append(&events[2]).unwrap_err();
+        match &err {
+            JournalError::Io { op, source, .. } => {
+                assert_eq!(*op, "write");
+                assert_eq!(source.raw_os_error(), Some(28), "must be ENOSPC");
+            }
+            other => panic!("expected Io error, got {other:?}"),
+        }
+        assert!(err.to_string().contains("journal write failed"), "got: {err}");
+        // A full disk stays full: later appends keep failing too.
+        assert!(w.append(&events[3]).is_err());
+        drop(w);
+        // Nothing torn: the committed prefix replays and valid_len covers
+        // the whole file.
+        let c = read_journal(&path).unwrap();
+        assert_eq!(c.events, &events[..2]);
+        assert_eq!(c.valid_len, std::fs::metadata(&path).unwrap().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_short_write_leaves_a_droppable_torn_tail() {
+        let path = tmp("fault_short");
+        let events = sample_events();
+        let mut w = JournalWriter::create(&path, &header()).unwrap();
+        w.inject_fault_after(1, JournalFault::ShortWrite);
+        w.append(&events[0]).unwrap();
+        let err = w.append(&events[1]).unwrap_err();
+        match &err {
+            JournalError::ShortWrite { wrote, len, .. } => {
+                assert!(wrote < len, "short write must be partial: {wrote}/{len}")
+            }
+            other => panic!("expected ShortWrite error, got {other:?}"),
+        }
+        drop(w);
+        // The torn newline-less prefix is on disk and the reader drops
+        // exactly it, like any kill-mid-write tail.
+        let file_len = std::fs::metadata(&path).unwrap().len();
+        let c = read_journal(&path).unwrap();
+        assert_eq!(c.events, &events[..1], "torn tail must not become an event");
+        assert!(c.valid_len < file_len, "valid prefix excludes the torn bytes");
+        // And a resume truncates it and appends cleanly.
+        {
+            let mut w = JournalWriter::resume(&path, c.valid_len).unwrap();
+            w.append(&events[1]).unwrap();
+        }
+        assert_eq!(read_journal(&path).unwrap().events, &events[..2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn journal_policy_parses_and_roundtrips() {
+        assert_eq!(JournalPolicy::from_str("fail-stop"), Some(JournalPolicy::FailStop));
+        assert_eq!(JournalPolicy::from_str("degrade"), Some(JournalPolicy::Degrade));
+        assert_eq!(JournalPolicy::from_str("panic"), None);
+        for p in [JournalPolicy::FailStop, JournalPolicy::Degrade] {
+            assert_eq!(JournalPolicy::from_str(p.as_str()), Some(p));
+        }
     }
 }

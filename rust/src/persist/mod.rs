@@ -28,8 +28,8 @@ pub mod journal;
 pub mod recover;
 
 pub use journal::{
-    read_journal, EventOutcome, JournalEvent, JournalWriter, RunHeader, SenseTag,
-    JOURNAL_MAGIC, JOURNAL_VERSION,
+    read_journal, EventOutcome, JournalError, JournalEvent, JournalFault, JournalPolicy,
+    JournalWriter, RunHeader, SenseTag, JOURNAL_MAGIC, JOURNAL_VERSION,
 };
 pub use recover::{
     recover, AsyncReplay, CompletionLogEntry, PartialRound, PendingReplay, RecoveredRun,

@@ -104,6 +104,15 @@ pub struct PendingReplay {
     /// Retries already consumed — the retry budget is honored *across*
     /// restarts, not per process lifetime.
     pub retries: usize,
+    /// The stable-mode fold frontier the task was admitted under (its
+    /// last journaled submit's `cutoff`). A resume re-registers the
+    /// re-enqueued task with this original cutoff, so its pruning
+    /// comparisons match the seed-matched uninterrupted run instead of
+    /// widening to everything folded before the crash.
+    pub cutoff: u64,
+    /// Deterministic retry backoff the last submission carried; a resume
+    /// re-applies it so the replayed execution schedule matches.
+    pub backoff_ms: f64,
 }
 
 /// Replay state for an async-mode journal.
@@ -139,6 +148,17 @@ pub struct AsyncReplay {
     pub reports: Vec<(u64, u64, f64, bool)>,
     /// Trials the crashed run's pruner cancelled, replayed.
     pub pruned: u64,
+    /// Fold-epoch markers seen (`--replay stable`); the resumed loop
+    /// continues its epoch counter from here.
+    pub epochs: u64,
+    /// Final task id of every *concluded* proposal, ascending by pid —
+    /// seeds the stable-mode pruning filter, whose cutoff comparisons
+    /// need each concluded proposal's last task id.
+    pub pid_last_task: Vec<(u64, u64)>,
+    /// The run gave up on in-flight work via the stall backstop. (Its
+    /// `async_stalled` terminals are already folded into `terminals` /
+    /// `lost`; the flag is telemetry.)
+    pub stalled: bool,
 }
 
 /// Mode-specific replay payload.
@@ -178,9 +198,12 @@ impl RecoveredRun {
 /// Read, validate, and replay the journal at `path`.
 pub fn recover(path: &Path) -> Result<RecoveredRun> {
     let contents = read_journal(path)?;
+    let stable = contents.header.run.replay == "stable";
     let replay = match contents.header.run.mode.as_str() {
         "sync" => Replay::Sync(replay_sync(&contents.events)?),
-        "async" => Replay::Async(replay_async(&contents.events, contents.header.sense)?),
+        "async" => {
+            Replay::Async(replay_async(&contents.events, contents.header.sense, stable)?)
+        }
         other => return Err(anyhow!("journal header has unknown mode '{other}'")),
     };
     Ok(RecoveredRun { header: contents.header, valid_len: contents.valid_len, replay })
@@ -258,9 +281,14 @@ struct PidState {
     /// submit — a re-enqueued trial re-reports from scratch, so only the
     /// final attempt's stream may reach `AsyncReplay::reports`.
     reports: Vec<(u64, f64, bool)>,
+    /// Task id of the proposal's latest submit.
+    last_task: Option<u64>,
+    /// Fold cutoff / retry backoff of the latest submit (v4 fields).
+    cutoff: u64,
+    backoff_ms: f64,
 }
 
-fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay> {
+fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Result<AsyncReplay> {
     let to_internal = |v: f64| match sense {
         SenseTag::Maximize => v,
         SenseTag::Minimize => -v,
@@ -272,6 +300,28 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay>
     // Running worst internal-sense history value — the same state the live
     // loop's censoring policy reads, rebuilt in the same push order.
     let mut worst_internal = f64::INFINITY;
+    // Stable-mode canonical-order audit: the last folded/abandoned task
+    // id. Under `--replay stable` the journal's terminal order *is* the
+    // fold order, so it must be globally ascending — a violation means
+    // the journal was not produced by a stable run and replaying it as
+    // one would rebuild different state than the crashed process held.
+    let mut last_fold: Option<u64> = None;
+    let audit_fold = |task: u64, epochs: u64, last: &mut Option<u64>| -> Result<()> {
+        if stable {
+            anyhow::ensure!(
+                epochs > 0,
+                "stable journal concludes task {task} before any async_epoch marker"
+            );
+            anyhow::ensure!(
+                last.map_or(true, |t| task > t),
+                "stable journal folds task {task} after task {:?} — canonical \
+                 ascending-task-id order violated",
+                last
+            );
+        }
+        *last = Some(task);
+        Ok(())
+    };
     for ev in events {
         seq += 1;
         match ev {
@@ -288,13 +338,16 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay>
                         order: seq,
                         concluded: false,
                         reports: Vec::new(),
+                        last_task: None,
+                        cutoff: 0,
+                        backoff_ms: 0.0,
                     },
                 );
                 r.proposals_made = r.proposals_made.max(pid + 1);
                 r.rounds = *rounds;
                 proposed_counter += 1;
             }
-            JournalEvent::AsyncSubmit { pid, task, retries } => {
+            JournalEvent::AsyncSubmit { pid, task, retries, cutoff, backoff_ms } => {
                 let st = pids
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_submit for unknown proposal {pid}"))?;
@@ -302,7 +355,54 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay>
                 st.retries = *retries;
                 st.order = seq;
                 st.reports.clear(); // fresh attempt: any prior stream is stale
+                st.last_task = Some(*task);
+                st.cutoff = *cutoff;
+                st.backoff_ms = *backoff_ms;
                 r.next_task_id = r.next_task_id.max(task + 1);
+            }
+            JournalEvent::AsyncEpoch { seq: epoch_seq } => {
+                anyhow::ensure!(
+                    stable,
+                    "async_epoch marker in a journal whose header says --replay wallclock"
+                );
+                anyhow::ensure!(
+                    *epoch_seq == r.epochs,
+                    "async_epoch out of order: seq {epoch_seq}, expected {}",
+                    r.epochs
+                );
+                r.epochs += 1;
+            }
+            JournalEvent::AsyncStalled { pid, task } => {
+                let st = pids
+                    .get_mut(pid)
+                    .ok_or_else(|| anyhow!("async_stalled for unknown proposal {pid}"))?;
+                anyhow::ensure!(!st.concluded, "async_stalled for concluded proposal {pid}");
+                audit_fold(*task, r.epochs, &mut last_fold)?;
+                st.concluded = true;
+                r.lost += 1;
+                r.stalled = true;
+                // Mirrors the live stall path: a recordless value, a lost
+                // conclusion, zero wall — the trial's reports (already
+                // journaled) replay like any concluded trial's.
+                let outcome = EventOutcome::Lost(crate::scheduler::LossReason::TimedOut);
+                r.completion_log.push(CompletionLogEntry {
+                    task: *task,
+                    retries: st.retries,
+                    outcome,
+                    queue_ms: 0.0,
+                    eval_ms: 0.0,
+                });
+                for &(step, value, pruned) in &st.reports {
+                    r.reports.push((*pid, step, value, pruned));
+                }
+                r.terminals.push(TerminalReplay {
+                    task: *task,
+                    retries: st.retries,
+                    outcome,
+                    wall_ms: 0.0,
+                    proposed_before: std::mem::take(&mut proposed_counter),
+                    contributed: false,
+                });
             }
             JournalEvent::AsyncReport { pid, step, value, pruned, .. } => {
                 let st = pids
@@ -326,6 +426,9 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay>
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_complete for unknown proposal {pid}"))?;
                 anyhow::ensure!(!st.concluded, "async_complete for concluded proposal {pid}");
+                // Every async_complete (terminals *and* resubmitted
+                // intermediates) is one fold of its task.
+                audit_fold(*task, r.epochs, &mut last_fold)?;
                 r.completion_log.push(CompletionLogEntry {
                     task: *task,
                     retries: *retries,
@@ -400,11 +503,25 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag) -> Result<AsyncReplay>
             }
         }
     }
+    r.pid_last_task = pids
+        .iter()
+        .filter(|(_, st)| st.concluded)
+        .filter_map(|(pid, st)| st.last_task.map(|t| (*pid, t)))
+        .collect();
     let mut pending: Vec<(u64, PendingReplay)> = pids
         .into_iter()
         .filter(|(_, st)| !st.concluded)
         .map(|(pid, st)| {
-            (st.order, PendingReplay { pid, config: st.config, retries: st.retries })
+            (
+                st.order,
+                PendingReplay {
+                    pid,
+                    config: st.config,
+                    retries: st.retries,
+                    cutoff: st.cutoff,
+                    backoff_ms: st.backoff_ms,
+                },
+            )
         })
         .collect();
     pending.sort_by_key(|(order, _)| *order);
@@ -428,6 +545,11 @@ mod tests {
 
     fn cfg(i: i64) -> Config {
         Config::new(vec![("i".into(), ParamValue::Int(i))])
+    }
+
+    /// A fresh (retries 0, cutoff 0, no backoff) submit event.
+    fn submit(pid: u64, task: u64) -> JournalEvent {
+        JournalEvent::AsyncSubmit { pid, task, retries: 0, cutoff: 0, backoff_ms: 0.0 }
     }
 
     fn write_journal(path: &Path, mode: &str, events: &[JournalEvent]) {
@@ -515,11 +637,11 @@ mod tests {
             "async",
             &[
                 JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) },
-                JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0 },
+                submit(0, 0),
                 JournalEvent::AsyncPropose { pid: 1, rounds: 0, config: cfg(1) },
-                JournalEvent::AsyncSubmit { pid: 1, task: 1, retries: 0 },
+                submit(1, 1),
                 JournalEvent::AsyncPropose { pid: 2, rounds: 0, config: cfg(2) },
-                JournalEvent::AsyncSubmit { pid: 2, task: 2, retries: 0 },
+                submit(2, 2),
                 // pid 0 is lost once and resubmitted as task 3 → goes to
                 // the back of the pending order.
                 JournalEvent::AsyncComplete {
@@ -530,7 +652,13 @@ mod tests {
                     queue_ms: 0.0,
                     eval_ms: 0.0,
                 },
-                JournalEvent::AsyncSubmit { pid: 0, task: 3, retries: 1 },
+                JournalEvent::AsyncSubmit {
+                    pid: 0,
+                    task: 3,
+                    retries: 1,
+                    cutoff: 2,
+                    backoff_ms: 40.0,
+                },
                 // pid 1 completes.
                 JournalEvent::AsyncComplete {
                     pid: 1,
@@ -561,6 +689,13 @@ mod tests {
         let pids: Vec<u64> = a.pending.iter().map(|p| p.pid).collect();
         assert_eq!(pids, vec![2, 0, 3]);
         assert_eq!(a.pending[1].retries, 1, "retry count survives the crash");
+        // The v4 submit metadata survives too: pid 0's resubmit carried a
+        // cutoff and a backoff, and the concluded pid 1 lands in the
+        // last-task map for the stable-mode pruning filter.
+        assert_eq!(a.pending[1].cutoff, 2);
+        assert_eq!(a.pending[1].backoff_ms, 40.0);
+        assert_eq!(a.pending[0].cutoff, 0);
+        assert_eq!(a.pid_last_task, vec![(1, 1)]);
         std::fs::remove_file(&path).ok();
     }
 
@@ -572,9 +707,9 @@ mod tests {
             "async",
             &[
                 JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) },
-                JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0 },
+                submit(0, 0),
                 JournalEvent::AsyncPropose { pid: 1, rounds: 0, config: cfg(1) },
-                JournalEvent::AsyncSubmit { pid: 1, task: 1, retries: 0 },
+                submit(1, 1),
                 JournalEvent::AsyncReport { pid: 0, task: 0, step: 0, value: 1.0, pruned: false },
                 JournalEvent::AsyncReport { pid: 0, task: 0, step: 1, value: 2.0, pruned: false },
                 JournalEvent::AsyncComplete {
@@ -595,7 +730,7 @@ mod tests {
                     eval_ms: 1.0,
                 },
                 JournalEvent::AsyncPropose { pid: 2, rounds: 2, config: cfg(2) },
-                JournalEvent::AsyncSubmit { pid: 2, task: 2, retries: 0 },
+                submit(2, 2),
                 JournalEvent::AsyncReport { pid: 2, task: 2, step: 0, value: 9.0, pruned: false },
                 // crash: pid 2 in flight with a half-journaled report stream
             ],
@@ -628,7 +763,7 @@ mod tests {
             "async",
             &[
                 JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) },
-                JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0 },
+                submit(0, 0),
                 JournalEvent::AsyncReport {
                     pid: 0,
                     task: 0,
@@ -664,6 +799,133 @@ mod tests {
         );
         let err = recover(&path).unwrap_err();
         assert!(err.to_string().contains("unknown proposal 7"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn write_stable_journal(path: &Path, events: &[JournalEvent]) {
+        let header = RunHeader {
+            space_fp: 42,
+            sense: SenseTag::Maximize,
+            run: RunConfig {
+                mode: "async".into(),
+                replay: "stable".into(),
+                ..Default::default()
+            },
+            celery: None,
+        };
+        let mut w = JournalWriter::create(path, &header).unwrap();
+        for ev in events {
+            w.append(ev).unwrap();
+        }
+    }
+
+    fn propose_and_submit(pid: u64, task: u64, cutoff: u64) -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::AsyncPropose { pid, rounds: 0, config: cfg(pid as i64) },
+            JournalEvent::AsyncSubmit { pid, task, retries: 0, cutoff, backoff_ms: 0.0 },
+        ]
+    }
+
+    fn done(pid: u64, task: u64, v: f64) -> JournalEvent {
+        JournalEvent::AsyncComplete {
+            pid,
+            task,
+            retries: 0,
+            outcome: EventOutcome::Done(v),
+            queue_ms: 0.0,
+            eval_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn stable_journal_replays_epochs_and_validates_canonical_order() {
+        let path = tmp("stable_ok");
+        let mut events = Vec::new();
+        events.extend(propose_and_submit(0, 0, 0));
+        events.extend(propose_and_submit(1, 1, 0));
+        events.push(JournalEvent::AsyncEpoch { seq: 0 });
+        events.push(done(0, 0, 1.0));
+        events.push(JournalEvent::AsyncEpoch { seq: 1 });
+        events.push(done(1, 1, 2.0));
+        write_stable_journal(&path, &events);
+        let rec = recover(&path).unwrap();
+        let Replay::Async(a) = rec.replay else { panic!("expected async replay") };
+        assert_eq!(a.epochs, 2, "resume continues the epoch counter from here");
+        assert_eq!(a.history, vec![(cfg(0), 1.0), (cfg(1), 2.0)]);
+        assert_eq!(a.pid_last_task, vec![(0, 0), (1, 1)]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stable_journal_refuses_non_ascending_folds() {
+        let path = tmp("stable_order");
+        let mut events = Vec::new();
+        events.extend(propose_and_submit(0, 0, 0));
+        events.extend(propose_and_submit(1, 1, 0));
+        events.push(JournalEvent::AsyncEpoch { seq: 0 });
+        events.push(done(1, 1, 2.0));
+        events.push(JournalEvent::AsyncEpoch { seq: 1 });
+        events.push(done(0, 0, 1.0)); // task 0 folded after task 1
+        write_stable_journal(&path, &events);
+        let err = recover(&path).unwrap_err();
+        assert!(err.to_string().contains("canonical"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stable_journal_requires_epoch_markers_with_contiguous_seqs() {
+        // A fold before any epoch marker is refused...
+        let path = tmp("stable_noepoch");
+        let mut events = Vec::new();
+        events.extend(propose_and_submit(0, 0, 0));
+        events.push(done(0, 0, 1.0));
+        write_stable_journal(&path, &events);
+        let err = recover(&path).unwrap_err();
+        assert!(err.to_string().contains("before any async_epoch"), "got: {err:#}");
+        // ...as is a gap in the epoch sequence.
+        let mut events = Vec::new();
+        events.extend(propose_and_submit(0, 0, 0));
+        events.push(JournalEvent::AsyncEpoch { seq: 1 });
+        write_stable_journal(&path, &events);
+        let err = recover(&path).unwrap_err();
+        assert!(err.to_string().contains("out of order"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn epoch_marker_in_a_wallclock_journal_is_refused() {
+        let path = tmp("wallclock_epoch");
+        write_journal(&path, "async", &[JournalEvent::AsyncEpoch { seq: 0 }]);
+        let err = recover(&path).unwrap_err();
+        assert!(err.to_string().contains("wallclock"), "got: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn async_stalled_replays_as_a_lost_terminal() {
+        let path = tmp("stalled");
+        let mut events = Vec::new();
+        events.extend(propose_and_submit(0, 0, 0));
+        events.extend(propose_and_submit(1, 1, 0));
+        events.push(done(0, 0, 3.0));
+        events.push(JournalEvent::AsyncReport {
+            pid: 1,
+            task: 1,
+            step: 0,
+            value: 0.25,
+            pruned: false,
+        });
+        events.push(JournalEvent::AsyncStalled { pid: 1, task: 1 });
+        write_journal(&path, "async", &events);
+        let rec = recover(&path).unwrap();
+        let Replay::Async(a) = rec.replay else { panic!("expected async replay") };
+        assert!(a.stalled);
+        assert_eq!(a.lost, 1, "a stalled trial counts as lost work");
+        assert_eq!(a.history, vec![(cfg(0), 3.0)], "no value from the stalled trial");
+        assert_eq!(a.terminals.len(), 2, "async_stalled is terminal for its proposal");
+        assert!(!a.terminals[1].contributed);
+        assert!(a.pending.is_empty(), "a resume must not re-enqueue stalled work");
+        assert_eq!(a.reports, vec![(1, 0, 0.25, false)], "its reports still replay");
         std::fs::remove_file(&path).ok();
     }
 

@@ -19,8 +19,8 @@
 
 use super::pool::{Fate, Task as PoolTask, WorkerPool};
 use super::{
-    AsyncScheduler, AsyncStats, BatchResult, Completion, Objective, Scheduler, TaskId,
-    TaskObjective,
+    AsyncScheduler, AsyncStats, BatchResult, Completion, Objective, Scheduler, SubmitMeta,
+    TaskId, TaskObjective,
 };
 use crate::config::json::Json;
 use crate::space::{f64_from_json, f64_to_json, Config};
@@ -276,6 +276,10 @@ pub struct CeleryAsyncScheduler {
     pool: WorkerPool,
     config: CelerySimConfig,
     rng: Pcg64,
+    /// The raw user seed, kept alongside the sequential `rng` so keyed
+    /// fate draws ([`SubmitMeta::fate_key`]) can spin up a fresh
+    /// per-attempt stream from it.
+    seed: u64,
     next_id: TaskId,
     /// Celery-specific fault counters (submit-side: fates are pre-rolled).
     pub sim_stats: CeleryStats,
@@ -308,17 +312,14 @@ impl CeleryAsyncScheduler {
             pool: WorkerPool::spawn(scope, objective, workers),
             config,
             rng: Pcg64::new(seed ^ 0xCE1E_27),
+            seed,
             next_id: first_id,
             sim_stats: CeleryStats::default(),
         }
     }
 
-    /// Roll one task's fate — same draw order as the sync collector
-    /// (crash, straggle, latency; the shared
-    /// [`CelerySimConfig::roll_fate`]) so a given seed yields the same
-    /// fault sequence in both modes.
-    fn roll_fate(&mut self) -> Fate {
-        let rolled = self.config.roll_fate(&mut self.rng);
+    /// Record one rolled fate in the submit-side fault counters.
+    fn count_fate(&mut self, rolled: &RolledFate) {
         self.sim_stats.submitted += 1;
         if rolled.straggled {
             self.sim_stats.straggled += 1;
@@ -328,16 +329,54 @@ impl CeleryAsyncScheduler {
             Fate::TimeOut { .. } => self.sim_stats.timed_out += 1,
             Fate::Deliver { .. } => {}
         }
+    }
+
+    /// Roll one task's fate — same draw order as the sync collector
+    /// (crash, straggle, latency; the shared
+    /// [`CelerySimConfig::roll_fate`]) so a given seed yields the same
+    /// fault sequence in both modes.
+    fn roll_fate(&mut self) -> Fate {
+        let rolled = self.config.roll_fate(&mut self.rng);
+        self.count_fate(&rolled);
+        rolled.fate
+    }
+
+    /// Keyed fate draw for `--replay stable`: a fresh RNG per logical
+    /// attempt (`seed ^ key`), so a resumed run re-rolls the same fate
+    /// for the same (proposal, attempt) no matter how many submissions
+    /// the crashed run made before it. The draw order inside the stream
+    /// is the shared fault model's (crash, straggle, latency).
+    fn roll_fate_keyed(&mut self, key: u64) -> Fate {
+        let mut rng =
+            Pcg64::new(self.seed ^ 0xCE1E_27 ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let rolled = self.config.roll_fate(&mut rng);
+        self.count_fate(&rolled);
         rolled.fate
     }
 }
 
 impl AsyncScheduler for CeleryAsyncScheduler {
     fn submit(&mut self, configs: &[Config]) -> Vec<TaskId> {
+        self.submit_with(configs, &SubmitMeta::default())
+    }
+
+    fn submit_with(&mut self, configs: &[Config], meta: &SubmitMeta) -> Vec<TaskId> {
         configs
             .iter()
-            .map(|cfg| {
-                let fate = self.roll_fate();
+            .enumerate()
+            .map(|(i, cfg)| {
+                let fate = match meta.fate_key {
+                    Some(key) => self.roll_fate_keyed(key.wrapping_add(i as u64)),
+                    None => self.roll_fate(),
+                };
+                // Retry backoff delays the fate's own latency: a delivered
+                // or crashing task is noticed that much later. A timeout
+                // already reports at the collector's full patience.
+                let fate = match fate {
+                    Fate::Deliver { delay } => Fate::Deliver { delay: delay + meta.backoff },
+                    Fate::Crash { delay } => Fate::Crash { delay: delay + meta.backoff },
+                    Fate::TimeOut { delay } => Fate::TimeOut { delay },
+                };
                 let id = self.next_id;
                 self.next_id += 1;
                 self.pool.submit_task(PoolTask {
@@ -537,6 +576,30 @@ mod tests {
             // Timed-out tasks report at the timeout, not at their 400x latency.
             assert!(t.elapsed() < Duration::from_secs(5), "took {:?}", t.elapsed());
         });
+    }
+
+    #[test]
+    fn keyed_fates_ignore_submission_history() {
+        // The stable-replay contract: the same fate key re-rolls the same
+        // fate regardless of how many sequential draws preceded it.
+        let mut cfg = reliable_config(2);
+        cfg.crash_prob = 0.5;
+        let objective = |_: TaskId, c: &Config| Some(c.get_i64("i").unwrap() as f64);
+        let fates = |burn: usize| {
+            std::thread::scope(|scope| {
+                let mut s = CeleryAsyncScheduler::spawn(scope, &objective, cfg.clone(), 11);
+                for _ in 0..burn {
+                    s.roll_fate(); // consume the sequential stream
+                }
+                (0..16u64)
+                    .map(|k| matches!(s.roll_fate_keyed(k), Fate::Crash { .. }))
+                    .collect::<Vec<_>>()
+            })
+        };
+        let baseline = fates(0);
+        assert_eq!(baseline, fates(5), "keyed draws must not depend on prior submissions");
+        assert!(baseline.iter().any(|c| *c), "p=0.5 over 16 keys must crash at least once");
+        assert!(!baseline.iter().all(|c| *c), "…but not every one");
     }
 
     #[test]

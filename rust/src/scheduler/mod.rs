@@ -169,6 +169,29 @@ pub struct Completion {
     pub queue_wait_ms: f64,
     /// Time spent inside the objective itself.
     pub eval_ms: f64,
+    /// Scheduler-side drain counter (1-based): which `poll` drain carried
+    /// this completion. Telemetry only — the coordinator's fold order is
+    /// governed by its own journaled epoch markers, never by this stamp.
+    pub epoch: u64,
+}
+
+/// Per-submission metadata for [`AsyncScheduler::submit_with`].
+/// `SubmitMeta::default()` is equivalent to plain
+/// [`submit`](AsyncScheduler::submit) on every implementation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitMeta {
+    /// Execution-side delay applied before the task runs (retry backoff).
+    /// The worker holds the task for this long first, so task-id
+    /// assignment stays submission-ordered regardless of backoff.
+    pub backoff: Duration,
+    /// Stable-replay fate key: when `Some`, fault-injecting schedulers
+    /// (the Celery sim) derive this submission's fate from a fresh RNG
+    /// keyed by `seed ^ key` instead of the sequential submission-order
+    /// stream, so a resumed run re-rolls the same fate for the same
+    /// logical attempt no matter how many submissions the crashed run made
+    /// before it. `None` keeps the legacy sequential draw (the
+    /// `--replay wallclock` path, byte-identical to plain `submit`).
+    pub fate_key: Option<u64>,
 }
 
 /// Counters every async scheduler keeps (telemetry + tests).
@@ -203,6 +226,14 @@ pub struct AsyncStats {
 pub trait AsyncScheduler {
     /// Enqueue configs for evaluation; returns their ids (submission order).
     fn submit(&mut self, configs: &[Config]) -> Vec<TaskId>;
+
+    /// [`submit`](Self::submit) with per-submission metadata (retry
+    /// backoff, stable fate keys). The default implementation ignores the
+    /// metadata — schedulers with latency or fault models override it.
+    fn submit_with(&mut self, configs: &[Config], meta: &SubmitMeta) -> Vec<TaskId> {
+        let _ = meta;
+        self.submit(configs)
+    }
 
     /// Wait up to `timeout` for completions; drain and return all ready.
     fn poll(&mut self, timeout: Duration) -> Vec<Completion>;
@@ -410,6 +441,40 @@ mod tests {
                 values.sort_by(|a, b| a.total_cmp(b));
                 assert_eq!(values, vec![2.0, 3.0], "{kind:?} values");
                 assert_eq!(s.stats().submitted, 2);
+                assert!(
+                    comps.iter().all(|c| c.epoch >= 1),
+                    "{kind:?} must stamp a 1-based drain epoch"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn submit_with_backoff_delays_execution_on_every_kind() {
+        let objective = |_: TaskId, _: &Config| Some(1.0);
+        let batch = vec![Config::default()];
+        let reliable = celery::CelerySimConfig {
+            workers: 1,
+            base_latency_ms: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            crash_prob: 0.0,
+            result_timeout: Duration::from_secs(10),
+        };
+        for kind in [SchedulerKind::Serial, SchedulerKind::Threaded, SchedulerKind::Celery] {
+            std::thread::scope(|scope| {
+                let mut s = build_async(kind, 1, 1, Some(reliable.clone()), scope, &objective);
+                let meta =
+                    SubmitMeta { backoff: Duration::from_millis(40), ..SubmitMeta::default() };
+                let t = std::time::Instant::now();
+                s.submit_with(&batch, &meta);
+                let comps = s.drain(Duration::from_secs(10));
+                assert_eq!(comps.len(), 1, "{kind:?}");
+                assert!(
+                    t.elapsed() >= Duration::from_millis(35),
+                    "{kind:?} completed in {:?} — backoff not applied",
+                    t.elapsed()
+                );
             });
         }
     }

@@ -325,6 +325,9 @@ pub(crate) struct Task {
 /// the scheduler-level [`Completion`] vocabulary.
 pub(crate) struct WorkerPool {
     inner: JobPool<Config, f64>,
+    /// 1-based non-empty-drain counter stamped on each [`Completion`]
+    /// (telemetry: which poll drain carried the result).
+    epoch: u64,
 }
 
 impl WorkerPool {
@@ -333,7 +336,7 @@ impl WorkerPool {
         objective: TaskObjective<'env>,
         workers: usize,
     ) -> Self {
-        Self { inner: JobPool::spawn_tagged(scope, objective, workers) }
+        Self { inner: JobPool::spawn_tagged(scope, objective, workers), epoch: 0 }
     }
 
     pub(crate) fn submit_task(&mut self, task: Task) {
@@ -346,8 +349,13 @@ impl WorkerPool {
     }
 
     pub(crate) fn poll(&mut self, timeout: Duration) -> Vec<Completion> {
-        self.inner
-            .poll(timeout)
+        let drained = self.inner.poll(timeout);
+        if drained.is_empty() {
+            return Vec::new();
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        drained
             .into_iter()
             .map(|d| Completion {
                 id: d.id,
@@ -359,6 +367,7 @@ impl WorkerPool {
                 },
                 queue_wait_ms: d.queue_wait_ms,
                 eval_ms: d.eval_ms,
+                epoch,
             })
             .collect()
     }

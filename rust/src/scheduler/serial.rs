@@ -5,7 +5,7 @@
 
 use super::{
     AsyncScheduler, AsyncStats, BatchResult, Completion, CompletionStatus, Objective, Scheduler,
-    TaskId, TaskObjective,
+    SubmitMeta, TaskId, TaskObjective,
 };
 use crate::space::Config;
 use std::collections::VecDeque;
@@ -35,14 +35,24 @@ impl Scheduler for SerialScheduler {
 /// so every completion is `Done`/`Failed` and runs are deterministic.
 pub struct SerialAsyncScheduler<'a> {
     objective: TaskObjective<'a>,
-    queue: VecDeque<(TaskId, Config, Instant)>,
+    /// `(id, config, submitted_at, backoff)` — backoff is an
+    /// execution-side delay slept out when the task is polled.
+    queue: VecDeque<(TaskId, Config, Instant, Duration)>,
     next_id: TaskId,
+    /// 1-based drain counter stamped on each [`Completion`] (telemetry).
+    epoch: u64,
     stats: AsyncStats,
 }
 
 impl<'a> SerialAsyncScheduler<'a> {
     pub fn new(objective: TaskObjective<'a>) -> Self {
-        Self { objective, queue: VecDeque::new(), next_id: 0, stats: AsyncStats::default() }
+        Self {
+            objective,
+            queue: VecDeque::new(),
+            next_id: 0,
+            epoch: 0,
+            stats: AsyncStats::default(),
+        }
     }
 
     /// Start the task-id counter at `first_id` — a resumed run continues
@@ -56,12 +66,16 @@ impl<'a> SerialAsyncScheduler<'a> {
 
 impl AsyncScheduler for SerialAsyncScheduler<'_> {
     fn submit(&mut self, configs: &[Config]) -> Vec<TaskId> {
+        self.submit_with(configs, &SubmitMeta::default())
+    }
+
+    fn submit_with(&mut self, configs: &[Config], meta: &SubmitMeta) -> Vec<TaskId> {
         configs
             .iter()
             .map(|cfg| {
                 let id = self.next_id;
                 self.next_id += 1;
-                self.queue.push_back((id, cfg.clone(), Instant::now()));
+                self.queue.push_back((id, cfg.clone(), Instant::now(), meta.backoff));
                 self.stats.submitted += 1;
                 self.stats.max_in_flight = self.stats.max_in_flight.max(self.queue.len());
                 id
@@ -70,9 +84,14 @@ impl AsyncScheduler for SerialAsyncScheduler<'_> {
     }
 
     fn poll(&mut self, _timeout: Duration) -> Vec<Completion> {
-        let Some((id, config, submitted_at)) = self.queue.pop_front() else {
+        let Some((id, config, submitted_at, backoff)) = self.queue.pop_front() else {
             return Vec::new();
         };
+        // Retry backoff models the worker holding the task before running
+        // it, so it lands in queue wait, not eval time.
+        if !backoff.is_zero() {
+            std::thread::sleep(backoff);
+        }
         let queue_wait_ms = submitted_at.elapsed().as_secs_f64() * 1e3;
         let t0 = Instant::now();
         let value = (self.objective)(id, &config);
@@ -87,7 +106,8 @@ impl AsyncScheduler for SerialAsyncScheduler<'_> {
                 CompletionStatus::Failed
             }
         };
-        vec![Completion { id, config, status, queue_wait_ms, eval_ms }]
+        self.epoch += 1;
+        vec![Completion { id, config, status, queue_wait_ms, eval_ms, epoch: self.epoch }]
     }
 
     fn in_flight(&self) -> usize {
@@ -95,7 +115,7 @@ impl AsyncScheduler for SerialAsyncScheduler<'_> {
     }
 
     fn cancel_pending(&mut self) -> Vec<TaskId> {
-        let cancelled: Vec<TaskId> = self.queue.drain(..).map(|(id, _, _)| id).collect();
+        let cancelled: Vec<TaskId> = self.queue.drain(..).map(|(id, _, _, _)| id).collect();
         self.stats.cancelled += cancelled.len() as u64;
         cancelled
     }

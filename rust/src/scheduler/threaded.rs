@@ -10,7 +10,7 @@
 use super::pool::{Fate, Task, WorkerPool};
 use super::{
     AsyncScheduler, AsyncStats, BatchResult, Completion, CompletionStatus, Objective, Scheduler,
-    TaskId, TaskObjective,
+    SubmitMeta, TaskId, TaskObjective,
 };
 use crate::space::Config;
 use std::time::{Duration, Instant};
@@ -86,16 +86,23 @@ impl ThreadedAsyncScheduler {
 
 impl AsyncScheduler for ThreadedAsyncScheduler {
     fn submit(&mut self, configs: &[Config]) -> Vec<TaskId> {
+        self.submit_with(configs, &SubmitMeta::default())
+    }
+
+    fn submit_with(&mut self, configs: &[Config], meta: &SubmitMeta) -> Vec<TaskId> {
         configs
             .iter()
             .map(|cfg| {
                 let id = self.next_id;
                 self.next_id += 1;
+                // Retry backoff rides the pool's simulated-latency slot:
+                // the worker sleeps it out before executing. No fault
+                // model here, so the fate key is irrelevant.
                 self.pool.submit_task(Task {
                     id,
                     config: cfg.clone(),
                     submitted_at: Instant::now(),
-                    fate: Fate::Deliver { delay: Duration::ZERO },
+                    fate: Fate::Deliver { delay: meta.backoff },
                 });
                 id
             })

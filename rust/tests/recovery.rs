@@ -12,13 +12,13 @@
 //! `Lost(Crashed)`-in-flight work, and bit-identity of the
 //! recovery-rebuilt GP Cholesky factor.
 
-use mango::coordinator::{ExecutionMode, Tuner, TunerConfig};
+use mango::coordinator::{ExecutionMode, ReplayMode, Tuner, TunerConfig};
 use mango::gp::{fit_posterior, GpParams};
 use mango::linalg::Matrix;
 use mango::optimizer::bayesian::BayesianCore;
 use mango::optimizer::{GpOptions, History, OptimizerKind, SurrogateBackend};
 use mango::optimizer::prune::PrunerKind;
-use mango::persist::{read_journal, EventOutcome, JournalEvent};
+use mango::persist::{read_journal, EventOutcome, JournalEvent, JournalFault, JournalPolicy};
 use mango::scheduler::celery::CelerySimConfig;
 use mango::scheduler::{SchedulerKind, TrialReporter};
 use mango::space::{svm_space, Config, Encoder, SearchSpace};
@@ -77,18 +77,33 @@ fn assert_result_eq(
 /// The acceptance-criterion harness: crash at every event boundary, resume,
 /// and demand the uninterrupted result back.
 fn crash_at_every_boundary(mode: ExecutionMode, label: &str) {
+    crash_at_every_boundary_with(base_config(mode), quad, label);
+}
+
+/// Same sweep, parameterized over the run config and objective — the
+/// `--replay stable` variants reuse it with parallel schedulers and a
+/// wall-clock-jittered objective.
+fn crash_at_every_boundary_with(
+    cfg: TunerConfig,
+    objective: fn(&Config) -> Option<f64>,
+    label: &str,
+) {
     let space = svm_space();
-    let cfg = base_config(mode);
+    let budget = cfg.num_iterations * cfg.batch_size;
 
     // Baseline: un-journaled uninterrupted run.
-    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
-    assert_eq!(baseline.evaluations, 10, "{label}: full budget must complete");
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(objective).unwrap();
+    assert_eq!(
+        baseline.evaluations + baseline.lost as usize,
+        budget,
+        "{label}: every proposal must conclude"
+    );
 
     // Journaled uninterrupted run must be byte-for-byte transparent.
     let full_path = tmp(&format!("{label}_full"));
     let journaled = Tuner::new(space.clone(), cfg.clone())
         .with_journal(&full_path)
-        .maximize(quad)
+        .maximize(objective)
         .unwrap();
     assert_result_eq(&journaled, &baseline, &format!("{label}: journaling changed the run"));
 
@@ -108,7 +123,7 @@ fn crash_at_every_boundary(mode: ExecutionMode, label: &str) {
         let mut resumed_tuner = Tuner::resume_from(space.clone(), &case_path)
             .unwrap_or_else(|e| panic!("{label}: resume at boundary {idx} failed: {e:#}"));
         let resumed = resumed_tuner
-            .maximize(quad)
+            .maximize(objective)
             .unwrap_or_else(|e| panic!("{label}: resumed run at boundary {idx} failed: {e:#}"));
         assert_result_eq(&resumed, &baseline, &format!("{label}: crash at event {idx}"));
     }
@@ -120,7 +135,7 @@ fn crash_at_every_boundary(mode: ExecutionMode, label: &str) {
     std::fs::write(&case_path, &torn).unwrap();
     let resumed = Tuner::resume_from(space.clone(), &case_path)
         .unwrap()
-        .maximize(quad)
+        .maximize(objective)
         .unwrap();
     assert_result_eq(&resumed, &baseline, &format!("{label}: torn trailing line"));
 
@@ -584,7 +599,14 @@ fn resumed_async_run_stays_early_stopped_after_post_stop_improvement() {
         for (pid, c) in [(0u64, 10.0), (1, 20.0), (2, 30.0)] {
             w.append(&JournalEvent::AsyncPropose { pid, rounds: 0, config: cfg_pt(c) })
                 .unwrap();
-            w.append(&JournalEvent::AsyncSubmit { pid, task: pid, retries: 0 }).unwrap();
+            w.append(&JournalEvent::AsyncSubmit {
+                pid,
+                task: pid,
+                retries: 0,
+                cutoff: 0,
+                backoff_ms: 0.0,
+            })
+            .unwrap();
         }
         for (pid, v) in [(0u64, 1.0), (1, 1.0), (2, 2.0)] {
             w.append(&JournalEvent::AsyncComplete {
@@ -707,14 +729,14 @@ fn pruned_async_crash_at_any_point_resumes_to_identical_result() {
     }
 }
 
-/// Pre-pruning (v2) journals predate `async_report` events, the `Pruned`
-/// outcome, and the pruner header knobs — replaying one under v3 rules
-/// could silently mis-censor a resumed history, so the reader must refuse
-/// the version outright instead of guessing.
+/// Pre-v4 journals predate the replay/epoch machinery (v3), the pruning
+/// events (v2), or the celery header (v1) — replaying any of them under v4
+/// rules could silently mis-fold a resumed run, so the reader must refuse
+/// every stale version outright instead of guessing.
 #[test]
-fn v2_journal_is_refused_loudly() {
+fn stale_journal_versions_are_refused_loudly() {
     let space = svm_space();
-    let path = tmp("v2_guard");
+    let path = tmp("stale_version_guard");
     Tuner::new(
         space.clone(),
         TunerConfig {
@@ -728,15 +750,17 @@ fn v2_journal_is_refused_loudly() {
     .maximize(quad)
     .unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    let stale = text.replacen(
-        &format!("\"version\":{}", mango::persist::JOURNAL_VERSION),
-        "\"version\":2",
-        1,
-    );
-    assert_ne!(stale, text, "version literal must be present to corrupt");
-    std::fs::write(&path, stale).unwrap();
-    let err = Tuner::resume_from(space, &path).unwrap_err();
-    assert!(err.to_string().contains("version"), "got: {err:#}");
+    for stale_version in 1..=3u32 {
+        let stale = text.replacen(
+            &format!("\"version\":{}", mango::persist::JOURNAL_VERSION),
+            &format!("\"version\":{stale_version}"),
+            1,
+        );
+        assert_ne!(stale, text, "version literal must be present to corrupt");
+        std::fs::write(&path, stale).unwrap();
+        let err = Tuner::resume_from(space.clone(), &path).unwrap_err();
+        assert!(err.to_string().contains("version"), "v{stale_version}: got: {err:#}");
+    }
     std::fs::remove_file(&path).ok();
 }
 
@@ -777,4 +801,242 @@ fn resume_guards_fire_end_to_end() {
     let err = Tuner::resume_from(svm_space(), &path).unwrap_err();
     assert!(err.to_string().contains("version"), "got: {err:#}");
     std::fs::remove_file(&path).ok();
+}
+
+/// `quad` plus a per-config wall-clock jitter: shuffles parallel completion
+/// order without touching the (deterministic) objective value — exactly the
+/// nondeterminism `--replay stable` must absorb.
+fn jittery_quad(cfg: &Config) -> Option<f64> {
+    let c = cfg.get_f64("c")?;
+    std::thread::sleep(Duration::from_millis(c as u64 % 4));
+    Some(-(c - 60.0) * (c - 60.0))
+}
+
+fn stable_config(scheduler: SchedulerKind, workers: usize) -> TunerConfig {
+    TunerConfig {
+        optimizer: OptimizerKind::Hallucination,
+        num_iterations: 5,
+        batch_size: 2,
+        backend: SurrogateBackend::Native,
+        scheduler,
+        workers,
+        mc_samples: 128,
+        seed: 13,
+        mode: ExecutionMode::Async,
+        replay: ReplayMode::Stable,
+        ..Default::default()
+    }
+}
+
+/// Tentpole acceptance criterion: under `--replay stable` the
+/// crash-at-every-boundary sweep extends to the *threaded* scheduler —
+/// completions arrive in wall-clock order but fold canonically, so every
+/// resumed run reproduces the seed-matched uninterrupted run exactly.
+#[test]
+fn stable_threaded_crash_at_any_point_resumes_to_identical_result() {
+    crash_at_every_boundary_with(
+        stable_config(SchedulerKind::Threaded, 4),
+        jittery_quad,
+        "stable_threaded",
+    );
+}
+
+/// Tentpole acceptance criterion, celery-sim flavor: latency jitter from
+/// the simulated cluster shuffles arrival order; stable folding (with
+/// fate draws keyed by proposal, not by wall-clock draw order) keeps the
+/// trajectory byte-identical across every crash point.
+#[test]
+fn stable_celery_crash_at_any_point_resumes_to_identical_result() {
+    let mut cfg = stable_config(SchedulerKind::Celery, 3);
+    cfg.celery = Some(CelerySimConfig {
+        workers: 3,
+        base_latency_ms: 0.3,
+        straggler_prob: 0.4,
+        straggler_factor: 4.0,
+        crash_prob: 0.0,
+        result_timeout: Duration::from_secs(10),
+    });
+    crash_at_every_boundary_with(cfg, quad, "stable_celery");
+}
+
+/// Stable replay under a *faulty* celery cluster: worker crashes trigger
+/// retries (with a journaled deterministic backoff schedule), and a kill
+/// right after the first `Resubmitted` event — the proposal is mid-retry
+/// and in flight — still resumes to the seed-matched uninterrupted result,
+/// because fates are keyed by (proposal, attempt) and the re-enqueue
+/// reuses the journaled cutoff/backoff instead of re-deriving them.
+#[test]
+fn stable_celery_mid_retry_crash_resumes_to_identical_result() {
+    let space = svm_space();
+    let celery = CelerySimConfig {
+        workers: 3,
+        base_latency_ms: 0.3,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        crash_prob: 0.4,
+        result_timeout: Duration::from_secs(10),
+    };
+    let cfg = TunerConfig {
+        optimizer: OptimizerKind::Random,
+        num_iterations: 7,
+        batch_size: 2,
+        backend: SurrogateBackend::Native,
+        scheduler: SchedulerKind::Celery,
+        workers: 3,
+        max_retries: 2,
+        retry_backoff_ms: 2.0,
+        seed: 21,
+        mode: ExecutionMode::Async,
+        replay: ReplayMode::Stable,
+        celery: Some(celery),
+        ..Default::default()
+    };
+
+    // Under keyed fates the faulty cluster is deterministic: the
+    // un-journaled baseline is the ground truth even with crashes.
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+    assert!(baseline.retried > 0, "crash_prob 0.4 must trigger retries (got none)");
+
+    let full_path = tmp("stable_retry_full");
+    let journaled = Tuner::new(space.clone(), cfg.clone())
+        .with_journal(&full_path)
+        .maximize(quad)
+        .unwrap();
+    assert_result_eq(&journaled, &baseline, "stable faulty celery: journaling changed the run");
+    assert_eq!(journaled.retried, baseline.retried, "retry schedule drifted under journaling");
+
+    // Kill right after the first Resubmitted completion.
+    let bytes = std::fs::read(&full_path).unwrap();
+    let boundaries = event_boundaries(&bytes);
+    let events = read_journal(&full_path).unwrap().events;
+    let first_resub = events
+        .iter()
+        .position(|e| {
+            matches!(e, JournalEvent::AsyncComplete { outcome: EventOutcome::Resubmitted(_), .. })
+        })
+        .expect("a Resubmitted event must exist");
+    let case_path = tmp("stable_retry_case");
+    std::fs::write(&case_path, &bytes[..boundaries[first_resub + 1]]).unwrap();
+    let resumed = Tuner::resume_from(space, &case_path).unwrap().maximize(quad).unwrap();
+    assert_result_eq(&resumed, &baseline, "stable faulty celery: mid-retry crash");
+
+    std::fs::remove_file(&full_path).ok();
+    std::fs::remove_file(&case_path).ok();
+}
+
+/// Stable replay with a pruner active: pruning decisions are filtered by
+/// the journaled per-task visibility cutoff, so the crash sweep holds for
+/// the full trajectory *and* the pruning counters on a parallel scheduler.
+#[test]
+fn stable_threaded_pruned_crash_at_any_point_resumes_to_identical_result() {
+    let space = svm_space();
+    let cfg = TunerConfig {
+        optimizer: OptimizerKind::Hallucination,
+        num_iterations: 5,
+        batch_size: 2,
+        backend: SurrogateBackend::Native,
+        scheduler: SchedulerKind::Threaded,
+        workers: 4,
+        mc_samples: 128,
+        seed: 13,
+        mode: ExecutionMode::Async,
+        replay: ReplayMode::Stable,
+        pruner: PrunerKind::Median,
+        pruner_warmup: 1,
+        ..Default::default()
+    };
+
+    let staged = |cfg: &Config, reporter: &TrialReporter| {
+        std::thread::sleep(Duration::from_millis(cfg.get_f64("c")? as u64 % 4));
+        staged_quad(cfg, reporter)
+    };
+    let baseline =
+        Tuner::new(space.clone(), cfg.clone()).maximize_with_reports(staged).unwrap();
+    assert!(baseline.pruned >= 1, "the staged workload must actually prune");
+
+    let full_path = tmp("stable_pruned_full");
+    let journaled = Tuner::new(space.clone(), cfg.clone())
+        .with_journal(&full_path)
+        .maximize_with_reports(staged)
+        .unwrap();
+    assert_result_eq(&journaled, &baseline, "stable pruned: journaling changed the run");
+    assert_eq!(journaled.pruned, baseline.pruned, "stable pruned: counter drifted");
+
+    let bytes = std::fs::read(&full_path).unwrap();
+    let boundaries = event_boundaries(&bytes);
+    let case_path = tmp("stable_pruned_case");
+    for (idx, &cut) in boundaries.iter().enumerate() {
+        std::fs::write(&case_path, &bytes[..cut]).unwrap();
+        let resumed = Tuner::resume_from(space.clone(), &case_path)
+            .unwrap_or_else(|e| panic!("stable pruned: resume at boundary {idx} failed: {e:#}"))
+            .maximize_with_reports(staged)
+            .unwrap_or_else(|e| panic!("stable pruned: run at boundary {idx} failed: {e:#}"));
+        assert_result_eq(&resumed, &baseline, &format!("stable pruned: crash at event {idx}"));
+        assert_eq!(
+            resumed.pruned, baseline.pruned,
+            "stable pruned: crash at event {idx}: pruned counter drifted"
+        );
+    }
+    std::fs::remove_file(&full_path).ok();
+    std::fs::remove_file(&case_path).ok();
+}
+
+/// Satellite: journal I/O fault injection at *every* append site, for both
+/// fault kinds and both `--journal-on-error` policies. fail-stop must
+/// abort with a structured cause while leaving a readable journal prefix
+/// on disk; degrade must finish the run, flag the result, and match the
+/// un-journaled baseline exactly.
+#[test]
+fn journal_fault_injection_at_every_append_site() {
+    let space = svm_space();
+    let cfg = TunerConfig {
+        optimizer: OptimizerKind::Random,
+        num_iterations: 3,
+        batch_size: 2,
+        backend: SurrogateBackend::Native,
+        seed: 2,
+        ..Default::default()
+    };
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    // A clean journaled run tells us how many appends the run performs
+    // (every line after the header is one append).
+    let full_path = tmp("fault_full");
+    Tuner::new(space.clone(), cfg.clone()).with_journal(&full_path).maximize(quad).unwrap();
+    let appends = event_boundaries(&std::fs::read(&full_path).unwrap()).len() - 1;
+    assert!(appends >= 6, "expected a rich append stream, got {appends}");
+    std::fs::remove_file(&full_path).ok();
+
+    let case_path = tmp("fault_case");
+    for k in 0..appends {
+        for kind in [JournalFault::Enospc, JournalFault::ShortWrite] {
+            // fail-stop (the default): the run aborts with the cause.
+            let err = Tuner::new(space.clone(), cfg.clone())
+                .with_journal(&case_path)
+                .with_journal_fault(k, kind)
+                .maximize(quad)
+                .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("journal"), "append {k} {kind:?}: unhelpful error: {msg}");
+            // The file on disk is a readable prefix — the reader drops at
+            // most the torn trailing line of a short write.
+            let prefix = read_journal(&case_path)
+                .unwrap_or_else(|e| panic!("append {k} {kind:?}: unreadable prefix: {e:#}"));
+            assert!(prefix.events.len() <= appends);
+
+            // degrade: the run finishes without persistence, flags the
+            // result, and is byte-identical to the un-journaled baseline.
+            let mut degrade_cfg = cfg.clone();
+            degrade_cfg.journal_on_error = JournalPolicy::Degrade;
+            let r = Tuner::new(space.clone(), degrade_cfg)
+                .with_journal(&case_path)
+                .with_journal_fault(k, kind)
+                .maximize(quad)
+                .unwrap_or_else(|e| panic!("append {k} {kind:?}: degrade aborted: {e:#}"));
+            assert!(r.journal_degraded, "append {k} {kind:?}: degradation must be flagged");
+            assert!(!r.stalled);
+            assert_result_eq(&r, &baseline, &format!("degrade at append {k} {kind:?}"));
+        }
+    }
+    std::fs::remove_file(&case_path).ok();
 }
