@@ -6,7 +6,8 @@ use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// Flags that take no value.
-const SWITCHES: [&str; 5] = ["json", "verbose", "tune-lengthscale", "help", "resume"];
+const SWITCHES: [&str; 6] =
+    ["json", "verbose", "tune-lengthscale", "help", "resume", "compact-on-resume"];
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
@@ -137,6 +138,18 @@ TUNE OPTIONS:
   --journal-on-error <p>   journal write-error policy: fail-stop (abort
                            with the cause) | degrade (log once, finish the
                            run without persistence)          [fail-stop]
+  --journal-segment-events <n>
+                           seal + rotate the journal to a new segment file
+                           every n events; sealed segments carry a footer
+                           checksum (0 = single-file layout) [0]
+  --journal-keep-segments <n>
+                           sealed segments compaction leaves behind the
+                           active one — the warm tail a resume replays
+                           event-by-event                    [2]
+  --compact-on-resume      fold the sealed segment prefix into one
+                           checkpoint record before reopening the journal
+                           (with --resume; resume cost and disk footprint
+                           become O(active window))
   --resume                 resume the run recorded in --journal (the journal
                            header supplies the config; other tune flags are
                            ignored); with a fixed seed the resumed run

@@ -92,6 +92,16 @@ pub struct RunConfig {
     /// (`stalled: true`) after this many ms without any completion
     /// (0 = wait forever).
     pub stall_timeout_ms: u64,
+    /// Journal segment rotation: seal + rotate to a new segment file
+    /// every n events (0 = single-file layout, byte-identical to the
+    /// pre-segmentation journal apart from the schema version).
+    pub journal_segment_events: usize,
+    /// Sealed segments compaction leaves uncompacted behind the active
+    /// one — the warm tail a resume replays event-by-event.
+    pub journal_keep_segments: usize,
+    /// Run a compaction pass over the sealed prefix before resuming
+    /// (bounds the replay cost of a long-crashed run up front).
+    pub compact_on_resume: bool,
 }
 
 impl Default for RunConfig {
@@ -125,6 +135,9 @@ impl Default for RunConfig {
             journal_on_error: "fail-stop".into(),
             retry_backoff_ms: 0.0,
             stall_timeout_ms: 3_600_000,
+            journal_segment_events: 0,
+            journal_keep_segments: 2,
+            compact_on_resume: false,
         }
     }
 }
@@ -162,6 +175,11 @@ impl RunConfig {
                 "journal_on_error" => c.journal_on_error = str_(v, k)?,
                 "retry_backoff_ms" => c.retry_backoff_ms = num(v, k)?,
                 "stall_timeout_ms" => c.stall_timeout_ms = num(v, k)? as u64,
+                "journal_segment_events" => c.journal_segment_events = num(v, k)? as usize,
+                "journal_keep_segments" => c.journal_keep_segments = num(v, k)? as usize,
+                "compact_on_resume" => {
+                    c.compact_on_resume = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
+                }
                 "tune_lengthscale" => {
                     c.tune_lengthscale = v.as_bool().ok_or_else(|| anyhow!("{k}: bool"))?
                 }
@@ -248,6 +266,11 @@ impl RunConfig {
                 self.retry_backoff_ms
             ));
         }
+        // journal_segment_events / journal_keep_segments / compact_on_resume
+        // carry no standalone invariants: the journal-path coupling is a
+        // CLI-level concern (the journaled header config deliberately
+        // blanks the path, so validating it here would reject every
+        // segmented journal on replay).
         Ok(())
     }
 
@@ -281,6 +304,15 @@ impl RunConfig {
             ("journal_on_error", Json::Str(self.journal_on_error.clone())),
             ("retry_backoff_ms", Json::Num(self.retry_backoff_ms)),
             ("stall_timeout_ms", Json::Num(self.stall_timeout_ms as f64)),
+            (
+                "journal_segment_events",
+                Json::Num(self.journal_segment_events as f64),
+            ),
+            (
+                "journal_keep_segments",
+                Json::Num(self.journal_keep_segments as f64),
+            ),
+            ("compact_on_resume", Json::Bool(self.compact_on_resume)),
         ])
     }
 }
@@ -462,6 +494,35 @@ mod tests {
             &parse(r#"{"mode": "async", "pruner": "asha", "asha_reduction": 1.0}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn segment_fields_parse_validate_and_roundtrip() {
+        let c = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.journal_segment_events, 0, "single-file layout by default");
+        assert_eq!(c.journal_keep_segments, 2);
+        assert!(!c.compact_on_resume);
+        let j = parse(
+            r#"{"journal": "run.jsonl", "journal_segment_events": 64,
+                "journal_keep_segments": 3, "compact_on_resume": true,
+                "resume": true}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.journal_segment_events, 64);
+        assert_eq!(c.journal_keep_segments, 3);
+        assert!(c.compact_on_resume);
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2, "segment knobs survive the json round trip");
+        // A journaled header blanks the journal path, so segment knobs must
+        // stay valid without one (the CLI enforces the flag coupling).
+        let c3 = RunConfig::from_json(
+            &parse(r#"{"journal_segment_events": 4, "journal_keep_segments": 0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c3.journal_segment_events, 4);
+        assert_eq!(c3.journal_keep_segments, 0);
+        assert!(RunConfig::from_json(&parse(r#"{"compact_on_resume": 1}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -40,8 +40,8 @@ use crate::config::settings::RunConfig;
 use crate::optimizer::prune::{self, Pruner, PrunerKind, ReportBook};
 use crate::optimizer::{self, BatchOptimizer, GpOptions, History, OptimizerKind, SurrogateBackend};
 use crate::persist::{
-    self, AsyncReplay, EventOutcome, JournalEvent, JournalFault, JournalPolicy, JournalWriter,
-    RecoveredRun, Replay, RunHeader, SenseTag, SyncReplay,
+    self, AsyncReplay, EventOutcome, JournalEvent, JournalFault, JournalLayout, JournalPolicy,
+    RecoveredRun, Replay, RunHeader, SegmentOpts, SegmentedWriter, SenseTag, SyncReplay,
 };
 use crate::scheduler::{
     self, AsyncScheduler, BatchResult, Completion, CompletionStatus, LossReason, ReportSink,
@@ -204,6 +204,19 @@ pub struct TunerConfig {
     /// [`TuningResult::stalled`] set, instead of aborting. 0 = wait
     /// forever.
     pub stall_timeout_ms: u64,
+    /// Journal segment rotation (`--journal-segment-events`): seal and
+    /// rotate to a new segment file every n events. 0 (default) keeps the
+    /// single-file layout, byte-identical to the pre-segmentation journal
+    /// apart from the schema version.
+    pub journal_segment_events: usize,
+    /// Sealed segments compaction leaves behind the active one
+    /// (`--journal-keep-segments`) — the warm tail a resume replays
+    /// event-by-event instead of from the checkpoint.
+    pub journal_keep_segments: usize,
+    /// Compact the sealed prefix into a checkpoint before reopening the
+    /// journal on resume (`--compact-on-resume`). No-op on single-file
+    /// journals.
+    pub compact_on_resume: bool,
     /// Override the Celery simulator's fault/latency model.
     pub celery: Option<scheduler::celery::CelerySimConfig>,
 }
@@ -237,6 +250,9 @@ impl Default for TunerConfig {
             journal_on_error: JournalPolicy::FailStop,
             retry_backoff_ms: 0.0,
             stall_timeout_ms: 3_600_000,
+            journal_segment_events: 0,
+            journal_keep_segments: 2,
+            compact_on_resume: false,
             celery: None,
         }
     }
@@ -283,6 +299,9 @@ impl TunerConfig {
                 .ok_or_else(|| anyhow!("bad journal_on_error {}", rc.journal_on_error))?,
             retry_backoff_ms: rc.retry_backoff_ms,
             stall_timeout_ms: rc.stall_timeout_ms,
+            journal_segment_events: rc.journal_segment_events,
+            journal_keep_segments: rc.journal_keep_segments,
+            compact_on_resume: rc.compact_on_resume,
             celery: None,
         })
     }
@@ -323,6 +342,9 @@ impl TunerConfig {
             journal_on_error: self.journal_on_error.as_str().into(),
             retry_backoff_ms: self.retry_backoff_ms,
             stall_timeout_ms: self.stall_timeout_ms,
+            journal_segment_events: self.journal_segment_events,
+            journal_keep_segments: self.journal_keep_segments,
+            compact_on_resume: self.compact_on_resume,
             journal: String::new(),
             resume: false,
         }
@@ -369,13 +391,13 @@ struct PendingTask {
 /// resumable prefix — and keeps tuning with `degraded` surfaced as
 /// [`TuningResult::journal_degraded`].
 struct JournalSink {
-    writer: Option<JournalWriter>,
+    writer: Option<SegmentedWriter>,
     policy: JournalPolicy,
     degraded: bool,
 }
 
 impl JournalSink {
-    fn new(writer: Option<JournalWriter>, policy: JournalPolicy) -> Self {
+    fn new(writer: Option<SegmentedWriter>, policy: JournalPolicy) -> Self {
         Self { writer, policy, degraded: false }
     }
 
@@ -672,6 +694,9 @@ pub struct Tuner {
     /// Failing-writer test double: `(appends, kind)` applied to the journal
     /// writer on open ([`with_journal_fault`](Self::with_journal_fault)).
     journal_fault: Option<(usize, JournalFault)>,
+    /// Rotation-seam test double: fail the next segment-seal append with
+    /// this fault ([`with_rotation_fault`](Self::with_rotation_fault)).
+    rotation_fault: Option<JournalFault>,
 }
 
 impl Tuner {
@@ -683,6 +708,7 @@ impl Tuner {
             journal_path: None,
             recovered: None,
             journal_fault: None,
+            rotation_fault: None,
         }
     }
 
@@ -698,6 +724,25 @@ impl Tuner {
     /// requires going through `resume_from`.
     pub fn with_journal(mut self, path: impl Into<PathBuf>) -> Self {
         self.journal_path = Some(path.into());
+        self
+    }
+
+    /// Compact the journal's sealed segment prefix into a checkpoint
+    /// before reopening it on resume (`--compact-on-resume`). Only
+    /// meaningful on a tuner built by [`resume_from`](Self::resume_from)
+    /// over a segmented journal; a no-op everywhere else.
+    pub fn with_compact_on_resume(mut self, on: bool) -> Self {
+        self.config.compact_on_resume = on;
+        self
+    }
+
+    /// Override the sealed-segment retention window for this process: how
+    /// many sealed segments compaction leaves uncompacted behind the
+    /// active one. Normally restored from the journal header on resume;
+    /// this setter lets a resume shrink a long-retention journal
+    /// (`--journal-keep-segments` together with `--resume`).
+    pub fn with_keep_segments(mut self, n: usize) -> Self {
+        self.config.journal_keep_segments = n;
         self
     }
 
@@ -717,6 +762,17 @@ impl Tuner {
     #[doc(hidden)]
     pub fn with_journal_fault(mut self, appends: usize, kind: JournalFault) -> Self {
         self.journal_fault = Some((appends, kind));
+        self
+    }
+
+    /// Failing-writer test double for the rotation seam specifically: make
+    /// the next segment-seal append fail with `kind`, exercising the
+    /// [`TunerConfig::journal_on_error`] policy mid-rotation (the one
+    /// append site a count-based [`with_journal_fault`](Self::with_journal_fault)
+    /// cannot target deterministically). Test hook, not public API.
+    #[doc(hidden)]
+    pub fn with_rotation_fault(mut self, kind: JournalFault) -> Self {
+        self.rotation_fault = Some(kind);
         self
     }
 
@@ -743,6 +799,7 @@ impl Tuner {
             journal_path: Some(path.to_path_buf()),
             recovered: Some(rec),
             journal_fault: None,
+            rotation_fault: None,
         })
     }
 
@@ -791,9 +848,17 @@ impl Tuner {
     }
 
     /// Open the journal writer (fresh or resumed) and take the replay
-    /// state. Refuses a sense that contradicts the journal header.
-    fn prepare_journal(&mut self, sense: Sense) -> Result<(Option<JournalWriter>, Option<Replay>)> {
-        let recovered = self.recovered.take();
+    /// state. Refuses a sense that contradicts the journal header. With
+    /// `compact_on_resume` the sealed segment prefix is folded into a
+    /// checkpoint *before* the writer reopens, and the journal is
+    /// re-recovered so the layout, valid length, and replay all describe
+    /// the compacted on-disk state (the replay itself is unchanged —
+    /// checkpoint equivalence is a journal invariant, not a hope).
+    fn prepare_journal(
+        &mut self,
+        sense: Sense,
+    ) -> Result<(Option<SegmentedWriter>, Option<Replay>)> {
+        let mut recovered = self.recovered.take();
         if let Some(rec) = &recovered {
             anyhow::ensure!(
                 rec.header.sense == sense.tag(),
@@ -801,23 +866,34 @@ impl Tuner {
                 rec.header.sense.as_str()
             );
         }
+        if self.config.compact_on_resume {
+            if let (Some(path), Some(rec)) = (&self.journal_path, &recovered) {
+                if matches!(rec.layout, JournalLayout::Segmented { .. })
+                    && persist::compact(path, self.config.journal_keep_segments)?
+                {
+                    recovered = Some(persist::recover(path)?);
+                }
+            }
+        }
+        let opts = SegmentOpts {
+            segment_events: self.config.journal_segment_events,
+            keep_segments: self.config.journal_keep_segments,
+            fsync_every_n: self.config.fsync_every_n,
+        };
         let mut journal = match (&self.journal_path, &recovered) {
-            (Some(path), Some(rec)) => Some(
-                JournalWriter::resume(path, rec.valid_len)?
-                    .with_fsync_every(self.config.fsync_every_n),
-            ),
-            (Some(path), None) => Some(
-                JournalWriter::create(
-                    path,
-                    &RunHeader {
-                        space_fp: self.space.fingerprint(),
-                        sense: sense.tag(),
-                        run: self.config.to_run_config(),
-                        celery: self.config.celery.clone(),
-                    },
-                )?
-                .with_fsync_every(self.config.fsync_every_n),
-            ),
+            (Some(path), Some(rec)) => {
+                Some(SegmentedWriter::resume(path, &rec.layout, rec.valid_len, opts)?)
+            }
+            (Some(path), None) => Some(SegmentedWriter::create(
+                path,
+                &RunHeader {
+                    space_fp: self.space.fingerprint(),
+                    sense: sense.tag(),
+                    run: self.config.to_run_config(),
+                    celery: self.config.celery.clone(),
+                },
+                opts,
+            )?),
             (None, Some(_)) => {
                 return Err(anyhow!("recovered state without a journal path (use resume_from)"))
             }
@@ -825,6 +901,9 @@ impl Tuner {
         };
         if let (Some((appends, kind)), Some(w)) = (self.journal_fault, journal.as_mut()) {
             w.inject_fault_after(appends, kind);
+        }
+        if let (Some(kind), Some(w)) = (self.rotation_fault, journal.as_mut()) {
+            w.inject_rotation_fault(kind);
         }
         Ok((journal, recovered.map(|r| r.replay)))
     }
@@ -2165,6 +2244,9 @@ mod tests {
             journal_on_error: JournalPolicy::Degrade,
             retry_backoff_ms: 12.5,
             stall_timeout_ms: 1234,
+            journal_segment_events: 64,
+            journal_keep_segments: 3,
+            compact_on_resume: true,
             celery: None,
         };
         let rc = tc.to_run_config();
@@ -2196,6 +2278,9 @@ mod tests {
         assert_eq!(back.journal_on_error, tc.journal_on_error);
         assert_eq!(back.retry_backoff_ms, tc.retry_backoff_ms);
         assert_eq!(back.stall_timeout_ms, tc.stall_timeout_ms);
+        assert_eq!(back.journal_segment_events, tc.journal_segment_events);
+        assert_eq!(back.journal_keep_segments, tc.journal_keep_segments);
+        assert_eq!(back.compact_on_resume, tc.compact_on_resume);
     }
 
     // ---------------- async event-loop tests ----------------

@@ -109,6 +109,9 @@ const R4_EXEMPT: &[&str] = &["util/rng.rs"];
 /// worker threads (where a panic degrades to a silent `Lost`).
 const R5_FILES: &[&str] = &[
     "persist/recover.rs",
+    "persist/segment.rs",
+    "persist/compact.rs",
+    "persist/corpus.rs",
     "scheduler/pool.rs",
     "scheduler/threaded.rs",
     "scheduler/celery.rs",

@@ -81,6 +81,9 @@ fn tuner_config_from_args(args: &Args, batch_default: usize) -> Result<TunerConf
         .ok_or_else(|| anyhow!("bad --journal-on-error (fail-stop | degrade)"))?,
         retry_backoff_ms: args.get_f64("retry-backoff-ms", 0.0)?,
         stall_timeout_ms: args.get_u64("stall-timeout-ms", 3_600_000)?,
+        journal_segment_events: args.get_usize("journal-segment-events", 0)?,
+        journal_keep_segments: args.get_usize("journal-keep-segments", 2)?,
+        compact_on_resume: args.has("compact-on-resume"),
         celery: None,
     })
 }
@@ -92,7 +95,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "max-surrogate-obs", "mode", "async-window", "max-retries", "proposal-threads",
         "proposal-shards", "kernel-profile", "fsync-every", "journal", "pruner",
         "pruner-warmup", "asha-reduction", "replay", "journal-on-error",
-        "retry-backoff-ms", "stall-timeout-ms",
+        "retry-backoff-ms", "stall-timeout-ms", "journal-segment-events",
+        "journal-keep-segments", "compact-on-resume",
     ])?;
     let name = args
         .get("workload")
@@ -109,6 +113,21 @@ fn cmd_tune(args: &Args) -> Result<()> {
             "--journal-on-error requires --journal (there is no journal to fail on)"
         ));
     }
+    if args.get("journal-segment-events").is_some() && args.get("journal").is_none() {
+        return Err(anyhow!(
+            "--journal-segment-events requires --journal (there is no journal to rotate)"
+        ));
+    }
+    if args.get("journal-keep-segments").is_some() && args.get("journal").is_none() {
+        return Err(anyhow!(
+            "--journal-keep-segments requires --journal (there is no journal to compact)"
+        ));
+    }
+    if args.has("compact-on-resume") && !args.has("resume") {
+        return Err(anyhow!(
+            "--compact-on-resume requires --resume (compaction runs on the resume path)"
+        ));
+    }
     let mut tuner = if args.has("resume") {
         // The journal header carries the full run config; only the
         // workload (and thus the space, validated by fingerprint) is
@@ -116,7 +135,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
         let journal = args
             .get("journal")
             .ok_or_else(|| anyhow!("--resume requires --journal <file.jsonl>"))?;
-        let tuner = Tuner::resume_from(workload.space.clone(), std::path::Path::new(journal))?;
+        let mut tuner =
+            Tuner::resume_from(workload.space.clone(), std::path::Path::new(journal))?;
+        if args.has("compact-on-resume") {
+            tuner = tuner.with_compact_on_resume(true);
+        }
+        if args.get("journal-keep-segments").is_some() {
+            tuner = tuner.with_keep_segments(args.get_usize("journal-keep-segments", 2)?);
+        }
         mango::log_info!(
             "resuming {} from journal {journal} (config restored from its header)",
             workload.name

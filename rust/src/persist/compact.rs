@@ -1,0 +1,1046 @@
+//! Journal compaction: fold a sealed segment prefix into one
+//! `checkpoint` record, bounding resume cost and disk footprint to the
+//! active window.
+//!
+//! The checkpoint payload is the *complete* mid-scan state of the replay
+//! fold ([`SyncFold`] / [`AsyncFold`]) — accumulators, the open-proposal
+//! book, the global sequence counter, the running worst-seen censoring
+//! state, the stable-order audit frontier — serialized with the same
+//! canonical codecs the event stream uses ([`f64_to_json`] for values,
+//! the shared outcome codec for terminals, `Config::to_journal_json` for
+//! configurations). Deserializing it and continuing the fold over the
+//! tail segments is therefore *bit-identical* to folding the full event
+//! stream: `recover(checkpoint + tail) == recover(full stream)`, the
+//! property `rust/tests/recovery.rs` exercises end-to-end and the unit
+//! tests here exercise codec-by-codec.
+//!
+//! Compaction is crash-safe by staging + atomic rename:
+//!
+//! 1. fold the candidate prefix (checkpoint-if-any + sealed events);
+//! 2. write `header / checkpoint / seal` to `<seg>.tmp`, fsync it;
+//! 3. rename it over the lowest candidate segment, fsync the directory —
+//!    the checkpoint is now the journal's truth;
+//! 4. delete the remaining candidates (now stale: their index is ≤
+//!    `covers`), fsync the directory.
+//!
+//! A crash before (3) leaves a stray `.tmp` (removed on resume, invisible
+//! to the reader); a crash before (4) leaves stale segments the reader
+//! skips and the next resume or compaction deletes. Both replay to the
+//! same state.
+
+use super::journal::{
+    outcome_fields, outcome_from_json, req_f64, req_str, req_u64, req_usize, SenseTag,
+};
+use super::recover::{
+    AsyncFold, CompletionLogEntry, PartialRound, PidState, RoundRecord, SyncFold, TerminalReplay,
+};
+use super::segment::{
+    self, fnv1a, parent_dir, segment_path, suffixed, CheckpointRecord, SealRecord, FNV_OFFSET,
+};
+use crate::config::json::Json;
+use crate::space::{f64_from_json, f64_to_json, Config};
+use anyhow::{anyhow, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// small JSON helpers (array-element variants of the journal's req_*)
+
+fn req_bool(j: &Json, k: &str) -> Result<bool> {
+    j.get(k).and_then(Json::as_bool).ok_or_else(|| anyhow!("checkpoint missing bool '{k}'"))
+}
+
+fn req_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json]> {
+    j.get(k).and_then(Json::as_arr).ok_or_else(|| anyhow!("checkpoint missing array '{k}'"))
+}
+
+/// Required field in the canonical f64 codec (which `req_f64` cannot
+/// read: non-finite values serialize as bit-pattern strings).
+fn req_codec_f64(j: &Json, k: &str) -> Result<f64> {
+    f64_from_json(j.get(k).ok_or_else(|| anyhow!("checkpoint missing value '{k}'"))?)
+}
+
+fn elem_u64(j: &Json) -> Result<u64> {
+    let n = j.as_f64().ok_or_else(|| anyhow!("checkpoint: expected integer, found {j}"))?;
+    anyhow::ensure!(
+        n.fract() == 0.0 && (0.0..=9_007_199_254_740_992.0).contains(&n),
+        "checkpoint: {n} is not an exactly-representable non-negative integer"
+    );
+    Ok(n as u64)
+}
+
+fn elem_bool(j: &Json) -> Result<bool> {
+    j.as_bool().ok_or_else(|| anyhow!("checkpoint: expected bool, found {j}"))
+}
+
+fn opt_u64(j: &Json, k: &str) -> Result<Option<u64>> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(elem_u64(v)?)),
+    }
+}
+
+fn pair(items: &[Json], n: usize, what: &str) -> Result<&[Json]> {
+    anyhow::ensure!(items.len() == n, "checkpoint: {what} needs {n} elements, found {}", items.len());
+    Ok(items)
+}
+
+// ---------------------------------------------------------------------------
+// sync fold <-> checkpoint state
+
+fn history_to_json(history: &[(Config, f64)]) -> Json {
+    Json::Arr(
+        history
+            .iter()
+            .map(|(c, v)| Json::Arr(vec![c.to_journal_json(), f64_to_json(*v)]))
+            .collect(),
+    )
+}
+
+fn history_from_json(j: &Json, k: &str) -> Result<Vec<(Config, f64)>> {
+    req_arr(j, k)?
+        .iter()
+        .map(|item| {
+            let items =
+                item.as_arr().ok_or_else(|| anyhow!("checkpoint: history entry not a pair"))?;
+            let items = pair(items, 2, "history entry")?;
+            Ok((Config::from_journal_json(&items[0])?, f64_from_json(&items[1])?))
+        })
+        .collect()
+}
+
+/// Serialize a mid-scan [`SyncFold`] into a checkpoint `state` payload.
+pub(crate) fn sync_fold_to_state(fold: &SyncFold) -> Json {
+    let rounds_done = fold
+        .r
+        .rounds_done
+        .iter()
+        .map(|rr| {
+            Json::obj(vec![
+                ("iter", Json::Num(rr.iter as f64)),
+                ("proposed", Json::Num(rr.proposed as f64)),
+                ("returned", Json::Num(rr.returned as f64)),
+                ("best", f64_to_json(rr.best)),
+                ("wall_ms", Json::Num(rr.wall_ms)),
+            ])
+        })
+        .collect();
+    let rng = match fold.r.rng_state {
+        Some(s) => Json::Str(format!("{s:032x}")),
+        None => Json::Null,
+    };
+    let current = match &fold.current {
+        None => Json::Null,
+        Some(p) => Json::obj(vec![
+            ("iter", Json::Num(p.iter as f64)),
+            ("batch", Json::Arr(p.batch.iter().map(Config::to_journal_json).collect())),
+            (
+                "evals",
+                Json::Arr(
+                    p.evals
+                        .iter()
+                        .map(|(c, v)| {
+                            let mut fields = vec![("config", c.to_journal_json())];
+                            match v {
+                                Some(v) => fields.push(("v", f64_to_json(*v))),
+                                None => fields.push(("failed", Json::Bool(true))),
+                            }
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    Json::obj(vec![
+        ("rounds_done", Json::Arr(rounds_done)),
+        ("history", history_to_json(&fold.r.history)),
+        ("rng", rng),
+        ("rounds", Json::Num(fold.r.rounds as f64)),
+        ("current", current),
+    ])
+}
+
+/// Rebuild a [`SyncFold`] from a checkpoint, ready to keep folding the
+/// tail segments.
+pub(crate) fn sync_fold_from_checkpoint(cp: &CheckpointRecord) -> Result<SyncFold> {
+    anyhow::ensure!(
+        cp.mode == "sync",
+        "checkpoint was written for mode '{}' but the journal header says sync",
+        cp.mode
+    );
+    let st = &cp.state;
+    let mut fold = SyncFold::new();
+    for item in req_arr(st, "rounds_done")? {
+        fold.r.rounds_done.push(RoundRecord {
+            iter: req_usize(item, "iter")?,
+            proposed: req_usize(item, "proposed")?,
+            returned: req_usize(item, "returned")?,
+            best: req_codec_f64(item, "best")?,
+            wall_ms: req_f64(item, "wall_ms")?,
+        });
+    }
+    fold.r.history = history_from_json(st, "history")?;
+    fold.r.rng_state = match st.get("rng") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let hex = v.as_str().ok_or_else(|| anyhow!("checkpoint rng is not a string"))?;
+            Some(
+                u128::from_str_radix(hex, 16)
+                    .map_err(|e| anyhow!("checkpoint rng '{hex}': {e}"))?,
+            )
+        }
+    };
+    fold.r.rounds = req_usize(st, "rounds")?;
+    fold.current = match st.get("current") {
+        None | Some(Json::Null) => None,
+        Some(cur) => {
+            let batch = req_arr(cur, "batch")?
+                .iter()
+                .map(Config::from_journal_json)
+                .collect::<Result<Vec<_>>>()?;
+            let evals = req_arr(cur, "evals")?
+                .iter()
+                .map(|e| {
+                    let config = Config::from_journal_json(
+                        e.get("config")
+                            .ok_or_else(|| anyhow!("checkpoint eval missing config"))?,
+                    )?;
+                    let value = match e.get("v") {
+                        Some(v) => Some(f64_from_json(v)?),
+                        None => {
+                            anyhow::ensure!(
+                                e.get("failed").and_then(Json::as_bool) == Some(true),
+                                "checkpoint eval carries neither v nor failed:true"
+                            );
+                            None
+                        }
+                    };
+                    Ok((config, value))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Some(PartialRound { iter: req_usize(cur, "iter")?, batch, evals })
+        }
+    };
+    Ok(fold)
+}
+
+// ---------------------------------------------------------------------------
+// async fold <-> checkpoint state
+
+fn terminal_to_json(t: &TerminalReplay) -> Json {
+    let mut fields = vec![
+        ("task", Json::Num(t.task as f64)),
+        ("retries", Json::Num(t.retries as f64)),
+        ("wall_ms", Json::Num(t.wall_ms)),
+        ("proposed_before", Json::Num(t.proposed_before as f64)),
+        ("contributed", Json::Bool(t.contributed)),
+    ];
+    outcome_fields(&t.outcome, &mut fields);
+    Json::obj(fields)
+}
+
+fn terminal_from_json(j: &Json) -> Result<TerminalReplay> {
+    Ok(TerminalReplay {
+        task: req_u64(j, "task")?,
+        retries: req_usize(j, "retries")?,
+        outcome: outcome_from_json(j)?,
+        wall_ms: req_f64(j, "wall_ms")?,
+        proposed_before: req_usize(j, "proposed_before")?,
+        contributed: req_bool(j, "contributed")?,
+    })
+}
+
+fn completion_to_json(c: &CompletionLogEntry) -> Json {
+    let mut fields = vec![
+        ("task", Json::Num(c.task as f64)),
+        ("retries", Json::Num(c.retries as f64)),
+        ("queue_ms", Json::Num(c.queue_ms)),
+        ("eval_ms", Json::Num(c.eval_ms)),
+    ];
+    outcome_fields(&c.outcome, &mut fields);
+    Json::obj(fields)
+}
+
+fn completion_from_json(j: &Json) -> Result<CompletionLogEntry> {
+    Ok(CompletionLogEntry {
+        task: req_u64(j, "task")?,
+        retries: req_usize(j, "retries")?,
+        outcome: outcome_from_json(j)?,
+        queue_ms: req_f64(j, "queue_ms")?,
+        eval_ms: req_f64(j, "eval_ms")?,
+    })
+}
+
+fn pid_to_json(pid: u64, st: &PidState) -> Json {
+    Json::obj(vec![
+        ("pid", Json::Num(pid as f64)),
+        ("config", st.config.to_journal_json()),
+        ("retries", Json::Num(st.retries as f64)),
+        ("order", Json::Num(st.order as f64)),
+        ("concluded", Json::Bool(st.concluded)),
+        (
+            "reports",
+            Json::Arr(
+                st.reports
+                    .iter()
+                    .map(|&(step, v, pruned)| {
+                        Json::Arr(vec![
+                            Json::Num(step as f64),
+                            f64_to_json(v),
+                            Json::Bool(pruned),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "last_task",
+            match st.last_task {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Null,
+            },
+        ),
+        ("cutoff", Json::Num(st.cutoff as f64)),
+        ("backoff_ms", Json::Num(st.backoff_ms)),
+    ])
+}
+
+fn pid_from_json(j: &Json) -> Result<(u64, PidState)> {
+    let reports = req_arr(j, "reports")?
+        .iter()
+        .map(|item| {
+            let items =
+                item.as_arr().ok_or_else(|| anyhow!("checkpoint: report entry not a triple"))?;
+            let items = pair(items, 3, "report entry")?;
+            Ok((elem_u64(&items[0])?, f64_from_json(&items[1])?, elem_bool(&items[2])?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((
+        req_u64(j, "pid")?,
+        PidState {
+            config: Config::from_journal_json(
+                j.get("config").ok_or_else(|| anyhow!("checkpoint pid missing config"))?,
+            )?,
+            retries: req_usize(j, "retries")?,
+            order: req_u64(j, "order")?,
+            concluded: req_bool(j, "concluded")?,
+            reports,
+            last_task: opt_u64(j, "last_task")?,
+            cutoff: req_u64(j, "cutoff")?,
+            backoff_ms: req_f64(j, "backoff_ms")?,
+        },
+    ))
+}
+
+/// Serialize a mid-scan [`AsyncFold`] into a checkpoint `state` payload.
+/// Everything behavior-affecting is included — the finish-derived views
+/// (`pending`, `pid_last_task`, `trailing_proposed`) are recomputed from
+/// the pid book at `finish()`, exactly as an uncompacted replay would.
+pub(crate) fn async_fold_to_state(fold: &AsyncFold) -> Json {
+    Json::obj(vec![
+        ("history", history_to_json(&fold.r.history)),
+        ("terminals", Json::Arr(fold.r.terminals.iter().map(terminal_to_json).collect())),
+        (
+            "completion_log",
+            Json::Arr(fold.r.completion_log.iter().map(completion_to_json).collect()),
+        ),
+        ("proposals_made", Json::Num(fold.r.proposals_made as f64)),
+        ("rounds", Json::Num(fold.r.rounds as f64)),
+        ("next_task_id", Json::Num(fold.r.next_task_id as f64)),
+        ("retried", Json::Num(fold.r.retried as f64)),
+        ("lost", Json::Num(fold.r.lost as f64)),
+        (
+            "reports",
+            Json::Arr(
+                fold.r
+                    .reports
+                    .iter()
+                    .map(|&(pid, step, v, pruned)| {
+                        Json::Arr(vec![
+                            Json::Num(pid as f64),
+                            Json::Num(step as f64),
+                            f64_to_json(v),
+                            Json::Bool(pruned),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("pruned", Json::Num(fold.r.pruned as f64)),
+        ("epochs", Json::Num(fold.r.epochs as f64)),
+        ("stalled", Json::Bool(fold.r.stalled)),
+        ("pids", Json::Arr(fold.pids.iter().map(|(pid, st)| pid_to_json(*pid, st)).collect())),
+        ("seq", Json::Num(fold.seq as f64)),
+        ("proposed_counter", Json::Num(fold.proposed_counter as f64)),
+        ("worst_internal", f64_to_json(fold.worst_internal)),
+        (
+            "last_fold",
+            match fold.last_fold {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Rebuild an [`AsyncFold`] from a checkpoint, ready to keep folding the
+/// tail segments. `sense` / `stable` come from the journal header (they
+/// are run-level, not checkpoint-level, state).
+pub(crate) fn async_fold_from_checkpoint(
+    cp: &CheckpointRecord,
+    sense: SenseTag,
+    stable: bool,
+) -> Result<AsyncFold> {
+    anyhow::ensure!(
+        cp.mode == "async",
+        "checkpoint was written for mode '{}' but the journal header says async",
+        cp.mode
+    );
+    let st = &cp.state;
+    let mut fold = AsyncFold::new(sense, stable);
+    fold.r.history = history_from_json(st, "history")?;
+    fold.r.terminals =
+        req_arr(st, "terminals")?.iter().map(terminal_from_json).collect::<Result<Vec<_>>>()?;
+    fold.r.completion_log = req_arr(st, "completion_log")?
+        .iter()
+        .map(completion_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    fold.r.proposals_made = req_u64(st, "proposals_made")?;
+    fold.r.rounds = req_usize(st, "rounds")?;
+    fold.r.next_task_id = req_u64(st, "next_task_id")?;
+    fold.r.retried = req_u64(st, "retried")?;
+    fold.r.lost = req_u64(st, "lost")?;
+    fold.r.reports = req_arr(st, "reports")?
+        .iter()
+        .map(|item| {
+            let items =
+                item.as_arr().ok_or_else(|| anyhow!("checkpoint: report entry not a quad"))?;
+            let items = pair(items, 4, "report entry")?;
+            Ok((
+                elem_u64(&items[0])?,
+                elem_u64(&items[1])?,
+                f64_from_json(&items[2])?,
+                elem_bool(&items[3])?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    fold.r.pruned = req_u64(st, "pruned")?;
+    fold.r.epochs = req_u64(st, "epochs")?;
+    fold.r.stalled = req_bool(st, "stalled")?;
+    for item in req_arr(st, "pids")? {
+        let (pid, pst) = pid_from_json(item)?;
+        anyhow::ensure!(
+            fold.pids.insert(pid, pst).is_none(),
+            "checkpoint lists proposal {pid} twice"
+        );
+    }
+    fold.seq = req_u64(st, "seq")?;
+    fold.proposed_counter = req_usize(st, "proposed_counter")?;
+    fold.worst_internal = req_codec_f64(st, "worst_internal")?;
+    fold.last_fold = opt_u64(st, "last_fold")?;
+    Ok(fold)
+}
+
+// ---------------------------------------------------------------------------
+// the compaction pass
+
+/// Compact the sealed prefix of the segmented journal at `base`, leaving
+/// the newest `keep` sealed segments (plus the active one) uncompacted.
+/// Returns `Ok(true)` if a new checkpoint was written. No-op (`Ok(false)`)
+/// for single-file journals and when there is nothing worth folding.
+/// Stale (checkpoint-covered) leftovers of an earlier crashed compaction
+/// are deleted either way.
+pub fn compact(base: &Path, keep: usize) -> Result<bool> {
+    let Some(scan) = segment::scan(base)? else {
+        return Ok(false);
+    };
+
+    // Idempotent cleanup first: stray staging files and checkpoint-covered
+    // segments from a compaction that crashed mid-cleanup. Their content
+    // is dead (the reader skips them) — deleting them re-runs the exact
+    // step the crash interrupted.
+    for tmp in segment::discover_tmp_files(base)? {
+        std::fs::remove_file(&tmp)
+            .with_context(|| format!("removing stale staging file {}", tmp.display()))?;
+    }
+    let mut cleaned = false;
+    for &idx in &scan.stale {
+        let p = segment_path(base, idx);
+        match std::fs::remove_file(&p) {
+            Ok(()) => cleaned = true,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(anyhow!(e))
+                    .with_context(|| format!("removing checkpoint-covered segment {}", p.display()))
+            }
+        }
+    }
+    if cleaned {
+        fsync_dir_ctx(base)?;
+    }
+
+    let Some((_active, below)) = scan.segs.split_last() else {
+        return Ok(false);
+    };
+    if below.len() <= keep {
+        return Ok(false);
+    }
+    let candidates = &below[..below.len() - keep];
+    anyhow::ensure!(
+        candidates.iter().all(|s| s.sealed),
+        "compaction candidates include an unsealed segment — scan invariant broken"
+    );
+    // Re-checkpointing a lone checkpoint segment gains nothing.
+    let no_new_events = candidates.iter().all(|s| s.events.is_empty());
+    let first = candidates
+        .first()
+        .ok_or_else(|| anyhow!("compaction candidate list is empty after the length check"))?;
+    if no_new_events && candidates.len() == 1 && scan.checkpoint_seg == Some(first.idx) {
+        return Ok(false);
+    }
+    let covers = candidates
+        .last()
+        .ok_or_else(|| anyhow!("compaction candidate list is empty after the length check"))?
+        .idx;
+
+    // Fold the candidate prefix: the existing checkpoint (if any — it
+    // lives in the lowest live segment, which is always candidates[0])
+    // plus every candidate's events.
+    let stable = scan.header.run.replay == "stable";
+    let state = match scan.header.run.mode.as_str() {
+        "sync" => {
+            let mut fold = match &scan.checkpoint {
+                Some(cp) => sync_fold_from_checkpoint(cp)?,
+                None => SyncFold::new(),
+            };
+            for seg in candidates {
+                for ev in &seg.events {
+                    fold.fold(ev)?;
+                }
+            }
+            sync_fold_to_state(&fold)
+        }
+        "async" => {
+            let mut fold = match &scan.checkpoint {
+                Some(cp) => async_fold_from_checkpoint(cp, scan.header.sense, stable)?,
+                None => AsyncFold::new(scan.header.sense, stable),
+            };
+            for seg in candidates {
+                for ev in &seg.events {
+                    fold.fold(ev)?;
+                }
+            }
+            async_fold_to_state(&fold)
+        }
+        other => return Err(anyhow!("journal header has unknown mode '{other}'")),
+    };
+    let mode = scan.header.run.mode.clone();
+    let record = CheckpointRecord { covers, mode, state };
+
+    // Stage the replacement segment: header, checkpoint, seal — then make
+    // it the journal's truth with one atomic rename.
+    let header_line = std::str::from_utf8(&scan.header_line)
+        .map_err(|e| anyhow!("journal header line is not utf8: {e}"))?;
+    let mut body = String::new();
+    body.push_str(header_line);
+    body.push('\n');
+    body.push_str(&record.to_json().to_string());
+    body.push('\n');
+    let crc = fnv1a(FNV_OFFSET, body.as_bytes());
+    let seal = SealRecord { seg: first.idx, events: 1, crc };
+    body.push_str(&seal.to_json().to_string());
+    body.push('\n');
+
+    let target = segment_path(base, first.idx);
+    let staging = suffixed(&target, ".tmp");
+    {
+        let mut f = std::fs::File::create(&staging)
+            .with_context(|| format!("creating compaction staging file {}", staging.display()))?;
+        f.write_all(body.as_bytes())
+            .with_context(|| format!("writing {}", staging.display()))?;
+        // Compaction always syncs, independent of --fsync-every: the
+        // rename that follows must never land before the bytes it names.
+        f.sync_all().with_context(|| format!("fsyncing {}", staging.display()))?;
+    }
+    std::fs::rename(&staging, &target).with_context(|| {
+        format!("renaming {} over {}", staging.display(), target.display())
+    })?;
+    fsync_dir_ctx(base)?;
+
+    // The replaced candidates are now stale (idx ≤ covers): delete them.
+    for seg in &candidates[1..] {
+        match std::fs::remove_file(&seg.path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(anyhow!(e))
+                    .with_context(|| format!("removing compacted segment {}", seg.path.display()))
+            }
+        }
+    }
+    fsync_dir_ctx(base)?;
+    Ok(true)
+}
+
+fn fsync_dir_ctx(base: &Path) -> Result<()> {
+    let dir = parent_dir(base);
+    segment::fsync_dir(dir)
+        .with_context(|| format!("fsyncing journal directory {}", dir.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::RunConfig;
+    use crate::persist::journal::{
+        EventOutcome, JournalEvent, JournalWriter, RunHeader, SenseTag,
+    };
+    use crate::persist::recover::{recover, Replay};
+    use crate::persist::segment::{read_run, SegmentOpts, SegmentedWriter};
+    use crate::scheduler::LossReason;
+    use crate::space::{Config, ParamValue};
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mango_compact_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cfg(i: i64) -> Config {
+        Config::new(vec![("i".into(), ParamValue::Int(i))])
+    }
+
+    fn header(mode: &str, segment_events: usize, replay: &str) -> RunHeader {
+        RunHeader {
+            space_fp: 7,
+            sense: SenseTag::Maximize,
+            run: RunConfig {
+                mode: mode.into(),
+                replay: replay.into(),
+                journal_segment_events: segment_events,
+                ..Default::default()
+            },
+            celery: None,
+        }
+    }
+
+    /// An async event stream exercising every outcome kind the codec must
+    /// carry: done, failed, lost, resubmitted, pruned (finite + NaN),
+    /// stalled, cancel, reports, epochs-off (wallclock).
+    fn async_events() -> Vec<JournalEvent> {
+        let mut ev = Vec::new();
+        let ps = |pid: u64, task: u64| {
+            vec![
+                JournalEvent::AsyncPropose { pid, rounds: pid as usize, config: cfg(pid as i64) },
+                JournalEvent::AsyncSubmit { pid, task, retries: 0, cutoff: 0, backoff_ms: 0.0 },
+            ]
+        };
+        ev.extend(ps(0, 0));
+        ev.extend(ps(1, 1));
+        ev.extend(ps(2, 2));
+        ev.extend(ps(3, 3));
+        ev.extend(ps(4, 4));
+        ev.extend(ps(5, 5));
+        ev.push(JournalEvent::AsyncReport { pid: 0, task: 0, step: 0, value: 1.5, pruned: false });
+        ev.push(JournalEvent::AsyncComplete {
+            pid: 0,
+            task: 0,
+            retries: 0,
+            outcome: EventOutcome::Done(2.5),
+            queue_ms: 1.0,
+            eval_ms: 2.0,
+        });
+        ev.push(JournalEvent::AsyncComplete {
+            pid: 1,
+            task: 1,
+            retries: 1,
+            outcome: EventOutcome::Resubmitted(LossReason::Crashed),
+            queue_ms: 0.5,
+            eval_ms: 0.0,
+        });
+        ev.push(JournalEvent::AsyncSubmit { pid: 1, task: 6, retries: 1, cutoff: 3, backoff_ms: 16.0 });
+        ev.push(JournalEvent::AsyncReport { pid: 2, task: 2, step: 0, value: 0.25, pruned: true });
+        ev.push(JournalEvent::AsyncComplete {
+            pid: 2,
+            task: 2,
+            retries: 0,
+            outcome: EventOutcome::Pruned { at_step: 0, last_value: 0.25 },
+            queue_ms: 0.5,
+            eval_ms: 0.5,
+        });
+        ev.push(JournalEvent::AsyncComplete {
+            pid: 3,
+            task: 3,
+            retries: 0,
+            outcome: EventOutcome::Failed,
+            queue_ms: 0.25,
+            eval_ms: 0.25,
+        });
+        ev.push(JournalEvent::AsyncComplete {
+            pid: 4,
+            task: 4,
+            retries: 2,
+            outcome: EventOutcome::Lost(LossReason::TimedOut),
+            queue_ms: 0.125,
+            eval_ms: 0.0,
+        });
+        ev.push(JournalEvent::AsyncReport {
+            pid: 5,
+            task: 5,
+            step: 0,
+            value: f64::NAN,
+            pruned: true,
+        });
+        ev.push(JournalEvent::AsyncComplete {
+            pid: 5,
+            task: 5,
+            retries: 0,
+            outcome: EventOutcome::Pruned { at_step: 0, last_value: f64::NAN },
+            queue_ms: 0.0,
+            eval_ms: 0.0,
+        });
+        ev.extend(ps(6, 7));
+        ev.push(JournalEvent::AsyncStalled { pid: 6, task: 7 });
+        ev.extend(ps(7, 8));
+        ev.push(JournalEvent::AsyncCancel { pid: 7, task: 8 });
+        ev.push(JournalEvent::AsyncPropose { pid: 8, rounds: 9, config: cfg(8) });
+        ev
+    }
+
+    fn sync_events() -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::SyncPropose {
+                iter: 0,
+                rounds: 1,
+                rng: 0xdead_beef_dead_beef_dead_beef_dead_beef,
+                configs: vec![cfg(0), cfg(1)],
+            },
+            JournalEvent::SyncEval { iter: 0, config: cfg(0), value: Some(f64::NEG_INFINITY) },
+            JournalEvent::SyncEval { iter: 0, config: cfg(1), value: None },
+            JournalEvent::SyncRound { iter: 0, proposed: 2, returned: 1, best: -1.0, wall_ms: 3.5 },
+            JournalEvent::SyncPropose { iter: 1, rounds: 2, rng: 77, configs: vec![cfg(2), cfg(3)] },
+            JournalEvent::SyncEval { iter: 1, config: cfg(2), value: Some(4.0) },
+            // crash mid-batch: cfg(3) unevaluated, round uncommitted
+        ]
+    }
+
+    /// Codec equivalence at EVERY cut: fold a prefix, serialize →
+    /// deserialize the fold state, continue folding the tail, and the
+    /// finished replay must equal an uninterrupted fold's — for every
+    /// prefix length, covering every outcome kind incl. NaN payloads.
+    #[test]
+    fn checkpoint_codec_roundtrips_the_async_fold_at_every_cut() {
+        let events = async_events();
+        let full = {
+            let mut f = AsyncFold::new(SenseTag::Maximize, false);
+            for ev in &events {
+                f.fold(ev).unwrap();
+            }
+            f.finish()
+        };
+        for cut in 0..=events.len() {
+            let mut f = AsyncFold::new(SenseTag::Maximize, false);
+            for ev in &events[..cut] {
+                f.fold(ev).unwrap();
+            }
+            // Through the wire: state -> JSON text -> parse -> fold.
+            let state = async_fold_to_state(&f);
+            let wire = crate::config::json::parse(&state.to_string()).unwrap();
+            let cp = CheckpointRecord { covers: 0, mode: "async".into(), state: wire };
+            let mut g =
+                async_fold_from_checkpoint(&cp, SenseTag::Maximize, false).unwrap();
+            for ev in &events[cut..] {
+                g.fold(ev).unwrap();
+            }
+            assert_eq!(g.finish(), full, "async codec roundtrip diverged at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrips_the_sync_fold_at_every_cut() {
+        let events = sync_events();
+        let full = {
+            let mut f = SyncFold::new();
+            for ev in &events {
+                f.fold(ev).unwrap();
+            }
+            f.finish()
+        };
+        for cut in 0..=events.len() {
+            let mut f = SyncFold::new();
+            for ev in &events[..cut] {
+                f.fold(ev).unwrap();
+            }
+            let state = sync_fold_to_state(&f);
+            let wire = crate::config::json::parse(&state.to_string()).unwrap();
+            let cp = CheckpointRecord { covers: 0, mode: "sync".into(), state: wire };
+            let mut g = sync_fold_from_checkpoint(&cp).unwrap();
+            for ev in &events[cut..] {
+                g.fold(ev).unwrap();
+            }
+            assert_eq!(g.finish(), full, "sync codec roundtrip diverged at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrips_stable_mode_state() {
+        let mut events = Vec::new();
+        events.push(JournalEvent::AsyncPropose { pid: 0, rounds: 0, config: cfg(0) });
+        events.push(JournalEvent::AsyncSubmit { pid: 0, task: 0, retries: 0, cutoff: 0, backoff_ms: 0.0 });
+        events.push(JournalEvent::AsyncPropose { pid: 1, rounds: 0, config: cfg(1) });
+        events.push(JournalEvent::AsyncSubmit { pid: 1, task: 1, retries: 0, cutoff: 0, backoff_ms: 0.0 });
+        events.push(JournalEvent::AsyncEpoch { seq: 0 });
+        events.push(JournalEvent::AsyncComplete {
+            pid: 0,
+            task: 0,
+            retries: 0,
+            outcome: EventOutcome::Done(1.0),
+            queue_ms: 0.0,
+            eval_ms: 0.0,
+        });
+        events.push(JournalEvent::AsyncEpoch { seq: 1 });
+        events.push(JournalEvent::AsyncComplete {
+            pid: 1,
+            task: 1,
+            retries: 0,
+            outcome: EventOutcome::Done(2.0),
+            queue_ms: 0.0,
+            eval_ms: 0.0,
+        });
+        let full = {
+            let mut f = AsyncFold::new(SenseTag::Maximize, true);
+            for ev in &events {
+                f.fold(ev).unwrap();
+            }
+            f.finish()
+        };
+        for cut in 0..=events.len() {
+            let mut f = AsyncFold::new(SenseTag::Maximize, true);
+            for ev in &events[..cut] {
+                f.fold(ev).unwrap();
+            }
+            let state = async_fold_to_state(&f);
+            let wire = crate::config::json::parse(&state.to_string()).unwrap();
+            let cp = CheckpointRecord { covers: 0, mode: "async".into(), state: wire };
+            // The epoch counter and fold frontier must survive the wire,
+            // or the stable-order audit would reject the tail.
+            let mut g = async_fold_from_checkpoint(&cp, SenseTag::Maximize, true).unwrap();
+            for ev in &events[cut..] {
+                g.fold(ev).unwrap();
+            }
+            assert_eq!(g.finish(), full, "stable codec roundtrip diverged at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn mode_cross_check_is_loud() {
+        let cp = CheckpointRecord {
+            covers: 0,
+            mode: "async".into(),
+            state: async_fold_to_state(&AsyncFold::new(SenseTag::Maximize, false)),
+        };
+        let err = sync_fold_from_checkpoint(&cp).unwrap_err();
+        assert!(err.to_string().contains("mode 'async'"), "got: {err:#}");
+        let cp = CheckpointRecord {
+            covers: 0,
+            mode: "sync".into(),
+            state: sync_fold_to_state(&SyncFold::new()),
+        };
+        let err = async_fold_from_checkpoint(&cp, SenseTag::Maximize, false).unwrap_err();
+        assert!(err.to_string().contains("mode 'sync'"), "got: {err:#}");
+    }
+
+    /// End-to-end: a rotating writer with live compaction produces a
+    /// checkpointed layout whose recovery equals a single-file journal of
+    /// the same events.
+    #[test]
+    fn compaction_recovery_equals_full_stream_recovery() {
+        let d = tmpdir("equiv");
+        let events = async_events();
+        let single = d.join("single.jsonl");
+        {
+            let mut w = JournalWriter::create(&single, &header("async", 0, "wallclock")).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        let seg = d.join("seg.jsonl");
+        {
+            let o = SegmentOpts { segment_events: 3, keep_segments: 1, fsync_every_n: 0 };
+            let mut w =
+                SegmentedWriter::create(&seg, &header("async", 3, "wallclock"), o).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        let stream = read_run(&seg).unwrap();
+        let cp = stream.checkpoint.expect("live compaction must have checkpointed");
+        assert!(cp.covers >= 1, "checkpoint covers a real prefix");
+        let a = recover(&single).unwrap();
+        let b = recover(&seg).unwrap();
+        assert_eq!(a.replay, b.replay, "checkpointed recovery must bit-equal full-stream");
+        // And the footprint is bounded: only checkpoint seg + keep tail +
+        // active remain on disk.
+        let live = segment::discover_segments(&seg).unwrap();
+        assert!(live.len() <= 3, "expected <= 3 live segments, got {:?}", live.keys());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn compaction_recovery_equals_full_stream_recovery_sync() {
+        let d = tmpdir("equiv_sync");
+        let events = sync_events();
+        let single = d.join("single.jsonl");
+        {
+            let mut w = JournalWriter::create(&single, &header("sync", 0, "wallclock")).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        let seg = d.join("seg.jsonl");
+        {
+            let o = SegmentOpts { segment_events: 2, keep_segments: 0, fsync_every_n: 0 };
+            let mut w =
+                SegmentedWriter::create(&seg, &header("sync", 2, "wallclock"), o).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        let a = recover(&single).unwrap();
+        let b = recover(&seg).unwrap();
+        assert_eq!(a.replay, b.replay);
+        let Replay::Sync(s) = b.replay else { panic!("expected sync replay") };
+        assert!(s.partial.is_some(), "the open batch survives compaction");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn explicit_compact_honors_keep_and_is_idempotent() {
+        let d = tmpdir("keep");
+        let base = d.join("run.jsonl");
+        let events = async_events();
+        {
+            // keep_segments huge: no live compaction, we drive it by hand.
+            let o = SegmentOpts { segment_events: 2, keep_segments: 1000, fsync_every_n: 0 };
+            let mut w =
+                SegmentedWriter::create(&base, &header("async", 2, "wallclock"), o).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        let before = recover(&base).unwrap();
+        let n_before = segment::discover_segments(&base).unwrap().len();
+        assert!(n_before > 4);
+        assert!(compact(&base, 2).unwrap());
+        let after = segment::discover_segments(&base).unwrap();
+        // checkpoint seg + 2 kept sealed + active.
+        assert_eq!(after.len(), 4, "got {:?}", after.keys());
+        let rec = recover(&base).unwrap();
+        assert_eq!(rec.replay, before.replay);
+        // Second pass: the kept tail is still worth folding in (the
+        // checkpoint seg plus 2 sealed candidates at keep=0)...
+        assert!(compact(&base, 0).unwrap());
+        let rec = recover(&base).unwrap();
+        assert_eq!(rec.replay, before.replay);
+        // ...and a third finds a lone checkpoint segment: a no-op.
+        assert!(!compact(&base, 0).unwrap());
+        assert_eq!(recover(&base).unwrap().replay, before.replay);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn crash_mid_compaction_replays_identically_and_cleanup_is_idempotent() {
+        let d = tmpdir("midcrash");
+        let base = d.join("run.jsonl");
+        {
+            let o = SegmentOpts { segment_events: 2, keep_segments: 1000, fsync_every_n: 0 };
+            let mut w =
+                SegmentedWriter::create(&base, &header("async", 2, "wallclock"), o).unwrap();
+            for ev in &async_events() {
+                w.append(ev).unwrap();
+            }
+        }
+        let before = recover(&base).unwrap();
+        // Save a replaced-candidate segment so we can resurrect it as the
+        // "crash between rename and delete" disk state.
+        let seg1 = segment_path(&base, 1);
+        let seg1_bytes = std::fs::read(&seg1).unwrap();
+        assert!(compact(&base, 0).unwrap());
+        // Crash state A: stray staging file (died before rename).
+        let staging = suffixed(&segment_path(&base, 0), ".tmp");
+        std::fs::write(&staging, b"half-written").unwrap();
+        // Crash state B: a replaced candidate was never deleted.
+        std::fs::write(&seg1, &seg1_bytes).unwrap();
+        // The reader sees through both: stale is skipped, .tmp ignored.
+        let rec = recover(&base).unwrap();
+        assert_eq!(rec.replay, before.replay);
+        match &rec.layout {
+            crate::persist::segment::JournalLayout::Segmented { stale, .. } => {
+                assert_eq!(stale, &[1], "resurrected candidate is stale, not replayed");
+            }
+            other => panic!("expected segmented layout, got {other:?}"),
+        }
+        // Re-running compaction finishes the interrupted cleanup.
+        compact(&base, 0).unwrap();
+        assert!(!staging.exists(), "staging file removed");
+        assert!(!seg1.exists(), "stale segment removed");
+        assert_eq!(recover(&base).unwrap().replay, before.replay);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn single_file_journals_are_never_compacted() {
+        let d = tmpdir("singleskip");
+        let base = d.join("run.jsonl");
+        {
+            let mut w = JournalWriter::create(&base, &header("async", 0, "wallclock")).unwrap();
+            for ev in &async_events() {
+                w.append(ev).unwrap();
+            }
+        }
+        let before = std::fs::read(&base).unwrap();
+        assert!(!compact(&base, 0).unwrap());
+        assert_eq!(std::fs::read(&base).unwrap(), before, "single-file bytes untouched");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn resumed_writer_after_compaction_keeps_extending_the_run() {
+        // compact → resume → append → recover: the post-compaction journal
+        // is a first-class run, not a read-only artifact.
+        let d = tmpdir("resume_after");
+        let base = d.join("run.jsonl");
+        let events = async_events();
+        {
+            let o = SegmentOpts { segment_events: 2, keep_segments: 1000, fsync_every_n: 0 };
+            let mut w =
+                SegmentedWriter::create(&base, &header("async", 2, "wallclock"), o).unwrap();
+            for ev in &events {
+                w.append(ev).unwrap();
+            }
+        }
+        assert!(compact(&base, 0).unwrap());
+        let rec = read_run(&base).unwrap();
+        {
+            let o = SegmentOpts { segment_events: 2, keep_segments: 1000, fsync_every_n: 0 };
+            let mut w = SegmentedWriter::resume(&base, &rec.layout, rec.valid_len, o).unwrap();
+            w.append(&JournalEvent::AsyncSubmit {
+                pid: 8,
+                task: 9,
+                retries: 0,
+                cutoff: 0,
+                backoff_ms: 0.0,
+            })
+            .unwrap();
+        }
+        let rec = recover(&base).unwrap();
+        let Replay::Async(a) = rec.replay else { panic!("expected async replay") };
+        assert_eq!(a.next_task_id, 10, "the appended submit folded on top of the checkpoint");
+        assert!(a.pending.iter().any(|p| p.pid == 8));
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,473 @@
+//! The run corpus: a fingerprint-keyed JSONL manifest over accumulated
+//! run journals.
+//!
+//! Every tuning run leaves a journal (single-file or segmented); the
+//! corpus index makes that accumulation queryable: one manifest line per
+//! run, keyed by `SearchSpace::fingerprint()`, recording the layout
+//! (segments / checkpoints), the event and evaluation counts, and the
+//! final best value. Grouping by fingerprint is what makes the corpus a
+//! warm-start substrate: runs that share a fingerprint explored the *same*
+//! space, so their histories are directly transferable.
+//!
+//! Deliberately timestamp-free (pallas-lint R1): records are derived
+//! purely from journal content, so re-indexing the same directory yields
+//! byte-identical manifests — the corpus is reproducible evidence, not a
+//! log.
+
+use super::journal::split_jsonl;
+use super::recover::{recover, Replay};
+use super::segment::{self, JournalLayout};
+use crate::config::json::{parse, Json};
+use crate::persist::journal::RunHeader;
+use crate::space::{f64_from_json, f64_to_json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One manifest line: a single run journal, summarized.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    /// `SearchSpace::fingerprint()` of the space the run explored.
+    pub space_fp: u64,
+    /// Journal base path, as indexed (manifest-relative or absolute,
+    /// whatever the caller handed `scan_journal`).
+    pub journal: String,
+    /// `"sync"` / `"async"`.
+    pub mode: String,
+    /// `"maximize"` / `"minimize"`.
+    pub sense: String,
+    pub seed: u64,
+    /// Live segment files (1 for a single-file journal).
+    pub segments: u64,
+    /// Checkpoint records present (0 or 1 today).
+    pub checkpoints: u64,
+    /// Events in the replayable stream (post-checkpoint tail for a
+    /// compacted journal).
+    pub events: u64,
+    /// History entries the run accumulated (successful + censored).
+    pub evaluations: u64,
+    /// Best objective value over the run's history, user sense
+    /// (`None`: no finite evaluation landed).
+    pub best: Option<f64>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("space_fp", Json::Str(format!("{:016x}", self.space_fp))),
+            ("journal", Json::Str(self.journal.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("sense", Json::Str(self.sense.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("segments", Json::Num(self.segments as f64)),
+            ("checkpoints", Json::Num(self.checkpoints as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("evaluations", Json::Num(self.evaluations as f64)),
+            (
+                "best",
+                match self.best {
+                    Some(v) => f64_to_json(v),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        use super::journal::{req_str, req_u64};
+        let fp_hex = req_str(j, "space_fp")?;
+        let space_fp = u64::from_str_radix(fp_hex, 16)
+            .map_err(|e| anyhow!("bad space fingerprint '{fp_hex}': {e}"))?;
+        let best = match j.get("best") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(f64_from_json(v)?),
+        };
+        Ok(Self {
+            space_fp,
+            journal: req_str(j, "journal")?.to_string(),
+            mode: req_str(j, "mode")?.to_string(),
+            sense: req_str(j, "sense")?.to_string(),
+            seed: req_u64(j, "seed")?,
+            segments: req_u64(j, "segments")?,
+            checkpoints: req_u64(j, "checkpoints")?,
+            events: req_u64(j, "events")?,
+            evaluations: req_u64(j, "evaluations")?,
+            best,
+        })
+    }
+}
+
+/// Summarize the run journal at `path` into a manifest record. Works on
+/// both layouts; a compacted journal's evaluation counts and best come
+/// from the checkpointed replay, identical to what a full-stream replay
+/// would report.
+pub fn scan_journal(path: &Path) -> Result<RunRecord> {
+    let stream = segment::read_run(path)?;
+    let rec = recover(path)?;
+    let segments = match &stream.layout {
+        JournalLayout::Single => 1,
+        JournalLayout::Segmented { sealed, .. } => sealed.len() as u64 + 1,
+    };
+    let history: &[(crate::space::Config, f64)] = match &rec.replay {
+        Replay::Sync(s) => &s.history,
+        Replay::Async(a) => &a.history,
+    };
+    let sense = stream.header.sense;
+    let mut best: Option<f64> = None;
+    for &(_, v) in history {
+        if v.is_nan() {
+            continue;
+        }
+        best = Some(match best {
+            None => v,
+            Some(b) => {
+                let better = match sense {
+                    super::journal::SenseTag::Maximize => v > b,
+                    super::journal::SenseTag::Minimize => v < b,
+                };
+                if better {
+                    v
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    Ok(RunRecord {
+        space_fp: stream.header.space_fp,
+        journal: path.to_string_lossy().into_owned(),
+        mode: stream.header.run.mode.clone(),
+        sense: sense.as_str().to_string(),
+        seed: stream.header.run.seed,
+        segments,
+        checkpoints: u64::from(stream.checkpoint.is_some()),
+        events: stream.events.len() as u64,
+        evaluations: history.len() as u64,
+        best,
+    })
+}
+
+/// Append one record to the manifest (creating it if needed). The
+/// manifest is itself JSONL with the journal's torn-tail contract, so a
+/// crash mid-append costs at most the line being written.
+pub fn append_record(manifest: &Path, rec: &RunRecord) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(manifest)
+        .with_context(|| format!("opening corpus manifest {}", manifest.display()))?;
+    let mut line = rec.to_json().to_string();
+    line.push('\n');
+    f.write_all(line.as_bytes())
+        .with_context(|| format!("appending to corpus manifest {}", manifest.display()))?;
+    f.flush().with_context(|| format!("flushing corpus manifest {}", manifest.display()))?;
+    Ok(())
+}
+
+/// Load the manifest, grouped by space fingerprint (the warm-start
+/// lookup key). A missing manifest is an empty corpus; one unterminated
+/// trailing line is dropped (torn append); a newline-terminated malformed
+/// line is corruption and fails loudly.
+pub fn load(manifest: &Path) -> Result<BTreeMap<u64, Vec<RunRecord>>> {
+    let bytes = match std::fs::read(manifest) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(BTreeMap::new()),
+        Err(e) => {
+            return Err(anyhow!(e))
+                .with_context(|| format!("reading corpus manifest {}", manifest.display()))
+        }
+    };
+    let mut out: BTreeMap<u64, Vec<RunRecord>> = BTreeMap::new();
+    for (idx, (_, raw, terminated)) in split_jsonl(&bytes).iter().enumerate() {
+        if !terminated {
+            crate::log_debug!(
+                "corpus manifest {}: dropping unterminated trailing line (torn append)",
+                manifest.display()
+            );
+            break;
+        }
+        if raw.is_empty() {
+            continue;
+        }
+        let text = std::str::from_utf8(raw)
+            .map_err(|e| anyhow!("corpus manifest line {}: non-utf8: {e}", idx + 1))?;
+        let j = parse(text).with_context(|| {
+            format!(
+                "corpus manifest {} corrupted at line {} (newline-terminated, so not \
+                 a torn append)",
+                manifest.display(),
+                idx + 1
+            )
+        })?;
+        let rec = RunRecord::from_json(&j)
+            .with_context(|| format!("corpus manifest line {}", idx + 1))?;
+        out.entry(rec.space_fp).or_default().push(rec);
+    }
+    Ok(out)
+}
+
+/// Discover the run journals under `dir` (non-recursive): segmented runs
+/// by their `.seg000000` file, single-file runs by a header probe on the
+/// first line. Derived files (`.seg*`, `.tmp`, `.quarantined`) and the
+/// manifest itself are skipped.
+fn discover_journals(dir: &Path, manifest: &Path) -> Result<Vec<PathBuf>> {
+    let mut bases: BTreeMap<PathBuf, ()> = BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing corpus directory {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry
+            .with_context(|| format!("listing corpus directory {}", dir.display()))?;
+        let path = entry.path();
+        if path == manifest {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".tmp") || name.ends_with(".quarantined") {
+            continue;
+        }
+        if let Some(pos) = name.rfind(".seg") {
+            let suffix = &name[pos + 4..];
+            if suffix.len() == 6 && suffix.bytes().all(|b| b.is_ascii_digit()) {
+                if suffix == "000000" {
+                    let mut base = path.clone().into_os_string().to_string_lossy().into_owned();
+                    base.truncate(base.len() - ".seg000000".len());
+                    bases.insert(PathBuf::from(base), ());
+                }
+                continue; // higher segments never name a run by themselves
+            }
+        }
+        // Single-file candidate: probe the first terminated line for a
+        // valid run header; anything else is not a journal, skip quietly.
+        let Ok(bytes) = std::fs::read(&path) else { continue };
+        let Some((_, raw, true)) = split_jsonl(&bytes).first().copied() else { continue };
+        let Ok(text) = std::str::from_utf8(raw) else { continue };
+        let Ok(j) = parse(text) else { continue };
+        if RunHeader::from_json(&j).is_ok() {
+            bases.insert(path, ());
+        }
+    }
+    Ok(bases.into_keys().collect())
+}
+
+/// Rebuild the manifest from the journals under `dir` (deterministic
+/// path order) and return the records. A journal that fails to scan is
+/// skipped with a warning — one corrupt run must not hide the rest of
+/// the corpus.
+pub fn index_dir(dir: &Path, manifest: &Path) -> Result<Vec<RunRecord>> {
+    let mut records = Vec::new();
+    for base in discover_journals(dir, manifest)? {
+        match scan_journal(&base) {
+            Ok(rec) => records.push(rec),
+            Err(e) => {
+                crate::log_warn!(
+                    "corpus index: skipping unreadable journal {}: {e:#}",
+                    base.display()
+                );
+            }
+        }
+    }
+    // Rebuild wholesale: same directory in, same manifest bytes out.
+    let mut body = String::new();
+    for rec in &records {
+        body.push_str(&rec.to_json().to_string());
+        body.push('\n');
+    }
+    std::fs::write(manifest, body.as_bytes())
+        .with_context(|| format!("writing corpus manifest {}", manifest.display()))?;
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::RunConfig;
+    use crate::persist::journal::{EventOutcome, JournalEvent, JournalWriter, SenseTag};
+    use crate::persist::segment::{SegmentOpts, SegmentedWriter};
+    use crate::space::{Config, ParamValue};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mango_corpus_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cfg(i: i64) -> Config {
+        Config::new(vec![("i".into(), ParamValue::Int(i))])
+    }
+
+    fn header(fp: u64, seed: u64, segment_events: usize) -> RunHeader {
+        RunHeader {
+            space_fp: fp,
+            sense: SenseTag::Maximize,
+            run: RunConfig {
+                mode: "async".into(),
+                seed,
+                journal_segment_events: segment_events,
+                ..Default::default()
+            },
+            celery: None,
+        }
+    }
+
+    fn run_events(n: u64) -> Vec<JournalEvent> {
+        let mut ev = Vec::new();
+        for i in 0..n {
+            ev.push(JournalEvent::AsyncPropose { pid: i, rounds: 0, config: cfg(i as i64) });
+            ev.push(JournalEvent::AsyncSubmit {
+                pid: i,
+                task: i,
+                retries: 0,
+                cutoff: 0,
+                backoff_ms: 0.0,
+            });
+            ev.push(JournalEvent::AsyncComplete {
+                pid: i,
+                task: i,
+                retries: 0,
+                outcome: EventOutcome::Done(i as f64),
+                queue_ms: 0.0,
+                eval_ms: 0.0,
+            });
+        }
+        ev
+    }
+
+    #[test]
+    fn record_roundtrips_through_json_including_non_finite_best() {
+        for best in [None, Some(1.5), Some(f64::NEG_INFINITY)] {
+            let rec = RunRecord {
+                space_fp: 0xabcd_ef01_2345_6789,
+                journal: "runs/a.jsonl".into(),
+                mode: "async".into(),
+                sense: "maximize".into(),
+                seed: 42,
+                segments: 3,
+                checkpoints: 1,
+                events: 17,
+                evaluations: 5,
+                best,
+            };
+            let j = parse(&rec.to_json().to_string()).unwrap();
+            assert_eq!(RunRecord::from_json(&j).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn scan_summarizes_single_and_segmented_runs() {
+        let d = tmpdir("scan");
+        let single = d.join("single.jsonl");
+        {
+            let mut w = JournalWriter::create(&single, &header(11, 1, 0)).unwrap();
+            for ev in &run_events(3) {
+                w.append(ev).unwrap();
+            }
+        }
+        let rec = scan_journal(&single).unwrap();
+        assert_eq!(rec.space_fp, 11);
+        assert_eq!(rec.segments, 1);
+        assert_eq!(rec.checkpoints, 0);
+        assert_eq!(rec.events, 9);
+        assert_eq!(rec.evaluations, 3);
+        assert_eq!(rec.best, Some(2.0), "maximize: best of 0,1,2");
+
+        let seg = d.join("seg.jsonl");
+        {
+            let o = SegmentOpts { segment_events: 4, keep_segments: 0, fsync_every_n: 0 };
+            let mut w = SegmentedWriter::create(&seg, &header(11, 2, 4), o).unwrap();
+            for ev in &run_events(4) {
+                w.append(ev).unwrap();
+            }
+        }
+        let rec = scan_journal(&seg).unwrap();
+        assert_eq!(rec.checkpoints, 1, "live compaction checkpointed the prefix");
+        assert_eq!(rec.evaluations, 4, "evaluations count through the checkpoint");
+        assert_eq!(rec.best, Some(3.0));
+        assert!(rec.events < 12, "a compacted journal replays only the tail");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn manifest_appends_load_grouped_by_fingerprint_and_tolerate_torn_tail() {
+        let d = tmpdir("manifest");
+        let manifest = d.join("corpus.jsonl");
+        let rec = |fp: u64, seed: u64| RunRecord {
+            space_fp: fp,
+            journal: format!("run{seed}.jsonl"),
+            mode: "async".into(),
+            sense: "maximize".into(),
+            seed,
+            segments: 1,
+            checkpoints: 0,
+            events: 0,
+            evaluations: 0,
+            best: None,
+        };
+        append_record(&manifest, &rec(1, 10)).unwrap();
+        append_record(&manifest, &rec(2, 20)).unwrap();
+        append_record(&manifest, &rec(1, 11)).unwrap();
+        // Torn append: dropped, everything before it survives.
+        {
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&manifest).unwrap();
+            f.write_all(b"{\"space_fp\":\"00").unwrap();
+        }
+        let by_fp = load(&manifest).unwrap();
+        assert_eq!(by_fp.len(), 2);
+        assert_eq!(by_fp[&1].len(), 2);
+        assert_eq!(by_fp[&1][1].seed, 11);
+        assert_eq!(by_fp[&2].len(), 1);
+        // A terminated malformed line is corruption, not a torn append.
+        {
+            let mut f =
+                std::fs::OpenOptions::new().write(true).truncate(true).open(&manifest).unwrap();
+            f.write_all(b"{\"space_fp\":\"zz\"}\n").unwrap();
+        }
+        assert!(load(&manifest).is_err());
+        // Missing manifest = empty corpus.
+        assert!(load(&d.join("absent.jsonl")).unwrap().is_empty());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn index_dir_discovers_both_layouts_and_is_deterministic() {
+        let d = tmpdir("index");
+        let manifest = d.join("corpus.jsonl");
+        {
+            let mut w = JournalWriter::create(&d.join("a.jsonl"), &header(5, 1, 0)).unwrap();
+            for ev in &run_events(2) {
+                w.append(ev).unwrap();
+            }
+        }
+        {
+            let o = SegmentOpts { segment_events: 3, keep_segments: 100, fsync_every_n: 0 };
+            let mut w =
+                SegmentedWriter::create(&d.join("b.jsonl"), &header(5, 2, 3), o).unwrap();
+            for ev in &run_events(3) {
+                w.append(ev).unwrap();
+            }
+        }
+        // Noise the index must ignore.
+        std::fs::write(d.join("notes.txt"), b"not a journal\n").unwrap();
+        std::fs::write(d.join("b.jsonl.seg000000.tmp"), b"staging").unwrap();
+
+        let records = index_dir(&d, &manifest).unwrap();
+        assert_eq!(records.len(), 2, "got: {records:?}");
+        let names: Vec<&str> = records
+            .iter()
+            .map(|r| r.journal.rsplit('/').next().unwrap_or(&r.journal))
+            .collect();
+        assert_eq!(names, vec!["a.jsonl", "b.jsonl"], "deterministic path order");
+        assert!(records.iter().all(|r| r.space_fp == 5));
+        // The manifest round-trips through load()...
+        let by_fp = load(&manifest).unwrap();
+        assert_eq!(by_fp[&5].len(), 2);
+        // ...and re-indexing is byte-identical (no timestamps, no drift).
+        let bytes = std::fs::read(&manifest).unwrap();
+        index_dir(&d, &manifest).unwrap();
+        assert_eq!(std::fs::read(&manifest).unwrap(), bytes);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -72,7 +72,20 @@ pub const JOURNAL_MAGIC: &str = "mango-run-journal";
 /// loudly: a v3 journal replayed under v4 rules would resume a stable
 /// run without its fold frontier and re-derive different pruning
 /// decisions.
-pub const JOURNAL_VERSION: u64 = 4;
+///
+/// v5: segmented, checkpointed journals — `--journal-segment-events N`
+/// rotates the writer to a numbered segment file every N events, sealing
+/// each finished segment with a `seal` footer (event count + FNV-1a-64
+/// checksum), and compaction replays a sealed prefix into one
+/// `checkpoint` record (the full mid-replay fold state, round-trip exact)
+/// so resume cost and disk footprint stay O(active window). `seal` and
+/// `checkpoint` are *segment-layer* records handled by
+/// [`crate::persist::segment`] / [`crate::persist::compact`] — they never
+/// appear in a single-file journal, whose byte layout is unchanged from
+/// v4 apart from this version number. v1–v4 journals fail loudly: a v4
+/// journal replayed under v5 rules (or vice versa) would mix
+/// segment-layer records into the event stream.
+pub const JOURNAL_VERSION: u64 = 5;
 
 /// Objective sense recorded in the header; `Tuner::maximize`/`minimize`
 /// on a resumed run must match it.
@@ -205,6 +218,53 @@ fn reason_from(s: &str) -> Result<LossReason> {
         "timed_out" => Ok(LossReason::TimedOut),
         other => Err(anyhow!("unknown loss reason '{other}'")),
     }
+}
+
+/// Push the outcome's `"o"` tag + payload fields. Shared between the
+/// `async_complete` event codec and the checkpoint codec
+/// ([`crate::persist::compact`]), so a checkpointed terminal round-trips
+/// through the exact same encoding as the event it replaced.
+pub(crate) fn outcome_fields(outcome: &EventOutcome, fields: &mut Vec<(&'static str, Json)>) {
+    match outcome {
+        EventOutcome::Done(v) => {
+            fields.push(("o", Json::Str("done".into())));
+            fields.push(("v", f64_to_json(*v)));
+        }
+        EventOutcome::Failed => fields.push(("o", Json::Str("failed".into()))),
+        EventOutcome::Lost(r) => {
+            fields.push(("o", Json::Str("lost".into())));
+            fields.push(("reason", Json::Str(reason_str(*r).into())));
+        }
+        EventOutcome::Resubmitted(r) => {
+            fields.push(("o", Json::Str("resubmitted".into())));
+            fields.push(("reason", Json::Str(reason_str(*r).into())));
+        }
+        EventOutcome::Pruned { at_step, last_value } => {
+            fields.push(("o", Json::Str("pruned".into())));
+            fields.push(("at_step", Json::Num(*at_step as f64)));
+            fields.push(("last_v", f64_to_json(*last_value)));
+        }
+    }
+}
+
+/// Parse an outcome from an object carrying the `"o"` tag + payload
+/// fields written by [`outcome_fields`].
+pub(crate) fn outcome_from_json(j: &Json) -> Result<EventOutcome> {
+    Ok(match req_str(j, "o")? {
+        "done" => EventOutcome::Done(f64_from_json(
+            j.get("v").ok_or_else(|| anyhow!("done completion missing v"))?,
+        )?),
+        "failed" => EventOutcome::Failed,
+        "lost" => EventOutcome::Lost(reason_from(req_str(j, "reason")?)?),
+        "resubmitted" => EventOutcome::Resubmitted(reason_from(req_str(j, "reason")?)?),
+        "pruned" => EventOutcome::Pruned {
+            at_step: req_u64(j, "at_step")?,
+            last_value: f64_from_json(
+                j.get("last_v").ok_or_else(|| anyhow!("pruned completion missing last_v"))?,
+            )?,
+        },
+        other => return Err(anyhow!("unknown completion outcome '{other}'")),
+    })
 }
 
 /// One journal line after the header.
@@ -344,26 +404,7 @@ impl JournalEvent {
                     ("task", Json::Num(*task as f64)),
                     ("retries", Json::Num(*retries as f64)),
                 ];
-                match outcome {
-                    EventOutcome::Done(v) => {
-                        fields.push(("o", Json::Str("done".into())));
-                        fields.push(("v", f64_to_json(*v)));
-                    }
-                    EventOutcome::Failed => fields.push(("o", Json::Str("failed".into()))),
-                    EventOutcome::Lost(r) => {
-                        fields.push(("o", Json::Str("lost".into())));
-                        fields.push(("reason", Json::Str(reason_str(*r).into())));
-                    }
-                    EventOutcome::Resubmitted(r) => {
-                        fields.push(("o", Json::Str("resubmitted".into())));
-                        fields.push(("reason", Json::Str(reason_str(*r).into())));
-                    }
-                    EventOutcome::Pruned { at_step, last_value } => {
-                        fields.push(("o", Json::Str("pruned".into())));
-                        fields.push(("at_step", Json::Num(*at_step as f64)));
-                        fields.push(("last_v", f64_to_json(*last_value)));
-                    }
-                }
+                outcome_fields(outcome, &mut fields);
                 fields.push(("queue_ms", Json::Num(*queue_ms)));
                 fields.push(("eval_ms", Json::Num(*eval_ms)));
                 Json::obj(fields)
@@ -457,24 +498,7 @@ impl JournalEvent {
                     .ok_or_else(|| anyhow!("async_report missing bool 'pruned'"))?,
             }),
             "async_complete" => {
-                let outcome = match req_str(j, "o")? {
-                    "done" => EventOutcome::Done(f64_from_json(
-                        j.get("v").ok_or_else(|| anyhow!("done completion missing v"))?,
-                    )?),
-                    "failed" => EventOutcome::Failed,
-                    "lost" => EventOutcome::Lost(reason_from(req_str(j, "reason")?)?),
-                    "resubmitted" => {
-                        EventOutcome::Resubmitted(reason_from(req_str(j, "reason")?)?)
-                    }
-                    "pruned" => EventOutcome::Pruned {
-                        at_step: req_u64(j, "at_step")?,
-                        last_value: f64_from_json(
-                            j.get("last_v")
-                                .ok_or_else(|| anyhow!("pruned completion missing last_v"))?,
-                        )?,
-                    },
-                    other => return Err(anyhow!("unknown completion outcome '{other}'")),
-                };
+                let outcome = outcome_from_json(j)?;
                 Ok(JournalEvent::AsyncComplete {
                     pid: req_u64(j, "pid")?,
                     task: req_u64(j, "task")?,
@@ -490,7 +514,7 @@ impl JournalEvent {
     }
 }
 
-fn req_f64(j: &Json, k: &str) -> Result<f64> {
+pub(crate) fn req_f64(j: &Json, k: &str) -> Result<f64> {
     j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("event missing number '{k}'"))
 }
 
@@ -499,7 +523,7 @@ fn req_f64(j: &Json, k: &str) -> Result<f64> {
 /// fractional) replay as silently wrong state — e.g. `retries: -1`
 /// saturating to 0 resets a retry budget, `1e300` saturating to
 /// `usize::MAX` exhausts it — instead of failing loudly.
-fn req_u64(j: &Json, k: &str) -> Result<u64> {
+pub(crate) fn req_u64(j: &Json, k: &str) -> Result<u64> {
     let n = req_f64(j, k)?;
     anyhow::ensure!(
         n.fract() == 0.0 && (0.0..=9_007_199_254_740_992.0).contains(&n),
@@ -508,11 +532,11 @@ fn req_u64(j: &Json, k: &str) -> Result<u64> {
     Ok(n as u64)
 }
 
-fn req_usize(j: &Json, k: &str) -> Result<usize> {
+pub(crate) fn req_usize(j: &Json, k: &str) -> Result<usize> {
     Ok(req_u64(j, k)? as usize)
 }
 
-fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+pub(crate) fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
     j.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("event missing string '{k}'"))
 }
 
@@ -632,7 +656,7 @@ impl JournalWriter {
             unsynced: 0,
             fault: None,
         };
-        w.write_line(&header.to_json())?;
+        w.append_json_raw(&header.to_json())?;
         Ok(w)
     }
 
@@ -680,6 +704,16 @@ impl JournalWriter {
     }
 
     pub fn append(&mut self, event: &JournalEvent) -> std::result::Result<(), JournalError> {
+        self.append_json(&event.to_json())
+    }
+
+    /// Append one arbitrary JSONL record, subject to the fault countdown.
+    /// The segment layer ([`crate::persist::segment`]) routes its *event*
+    /// appends through here so injected faults hit the same append sites
+    /// in both layouts; its header/seal/checkpoint records bypass the
+    /// countdown via [`Self::append_json_raw`] (the rotation seam has its
+    /// own injection hook).
+    pub(crate) fn append_json(&mut self, j: &Json) -> std::result::Result<(), JournalError> {
         let triggered = match &mut self.fault {
             Some((0, kind)) => Some(*kind),
             Some((remaining, _)) => {
@@ -688,16 +722,36 @@ impl JournalWriter {
             }
             None => None,
         };
+        let mut line = j.to_string();
+        line.push('\n');
         if let Some(kind) = triggered {
-            return Err(self.injected_failure(event, kind));
+            return Err(self.inject_failure_line(&line, kind));
         }
-        self.write_line(&event.to_json())
+        self.write_bytes(line.as_bytes())
+    }
+
+    /// Append one JSONL record, bypassing the fault countdown.
+    pub(crate) fn append_json_raw(&mut self, j: &Json) -> std::result::Result<(), JournalError> {
+        let mut line = j.to_string();
+        line.push('\n');
+        self.write_bytes(line.as_bytes())
+    }
+
+    /// Append a pre-serialized record line (no trailing newline), bypassing
+    /// the fault countdown — the segment layer re-writes the stored header
+    /// line byte-for-byte at the start of every segment.
+    pub(crate) fn append_line_raw(&mut self, line: &str) -> std::result::Result<(), JournalError> {
+        let mut full = String::with_capacity(line.len() + 1);
+        full.push_str(line);
+        full.push('\n');
+        self.write_bytes(full.as_bytes())
     }
 
     /// Simulate the failure mode on the real file so the bytes on disk
     /// match what the error claims: ENOSPC lands nothing, a short write
-    /// lands a torn newline-less prefix the reader will drop.
-    fn injected_failure(&mut self, event: &JournalEvent, kind: JournalFault) -> JournalError {
+    /// lands a torn newline-less prefix the reader will drop. `line` is
+    /// the full record line including its trailing newline.
+    pub(crate) fn inject_failure_line(&mut self, line: &str, kind: JournalFault) -> JournalError {
         match kind {
             JournalFault::Enospc => JournalError::Io {
                 op: "write",
@@ -705,8 +759,8 @@ impl JournalWriter {
                 source: std::io::Error::from_raw_os_error(28), // ENOSPC
             },
             JournalFault::ShortWrite => {
-                let line = event.to_json().to_string();
-                let torn = &line.as_bytes()[..line.len() / 2];
+                let body = line.len().saturating_sub(1); // bytes before the newline
+                let torn = &line.as_bytes()[..body / 2];
                 // Best-effort: if even the torn prefix fails to land the
                 // journal is still a committed prefix, just a shorter one.
                 let _ = self.file.write(torn);
@@ -714,16 +768,37 @@ impl JournalWriter {
                 JournalError::ShortWrite {
                     path: self.path.clone(),
                     wrote: torn.len(),
-                    len: line.len() + 1,
+                    len: line.len(),
                 }
             }
         }
     }
 
-    fn write_line(&mut self, j: &Json) -> std::result::Result<(), JournalError> {
-        let mut line = j.to_string();
-        line.push('\n');
-        let bytes = line.as_bytes();
+    /// Take the remaining fault countdown (the segment layer carries it
+    /// across a rotation into the successor segment's writer).
+    pub(crate) fn remaining_fault(&self) -> Option<(usize, JournalFault)> {
+        self.fault
+    }
+
+    /// Force an fsync barrier now (the rotation seam syncs a sealed
+    /// segment before activating its successor).
+    pub(crate) fn sync_data_now(&mut self) -> std::result::Result<(), JournalError> {
+        self.file.sync_data().map_err(|e| JournalError::Io {
+            op: "fsync",
+            path: self.path.clone(),
+            source: e,
+        })?;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// Wrap an already-open file (the segment layer opens successor
+    /// segments itself so creation failures map to [`JournalError`]).
+    pub(crate) fn from_file(file: File, path: PathBuf) -> Self {
+        Self { file, path, fsync_every_n: 0, unsynced: 0, fault: None }
+    }
+
+    fn write_bytes(&mut self, bytes: &[u8]) -> std::result::Result<(), JournalError> {
         let mut wrote = 0usize;
         // Manual write loop instead of write_all: an Ok(0) from the OS is
         // a short write with no errno and must surface as a structured
@@ -779,15 +854,10 @@ pub struct JournalContents {
     pub valid_len: u64,
 }
 
-/// Read and validate a journal. An *unterminated* final line is a torn
-/// write from the crash and is safely dropped (its bytes are excluded
-/// from `valid_len`); a malformed `\n`-terminated line anywhere, a bad
-/// header, or a magic/version mismatch is corruption and fails loudly.
-pub fn read_journal(path: &Path) -> Result<JournalContents> {
-    let bytes = std::fs::read(path)
-        .with_context(|| format!("reading run journal {}", path.display()))?;
-    // Split into (offset, line, newline-terminated) triples, keeping byte
-    // offsets for valid_len.
+/// Split raw journal bytes into `(offset, line, newline-terminated)`
+/// triples, keeping byte offsets so callers can compute valid prefixes.
+/// Shared with the segment-aware reader ([`crate::persist::segment`]).
+pub(crate) fn split_jsonl(bytes: &[u8]) -> Vec<(usize, &[u8], bool)> {
     let mut lines: Vec<(usize, &[u8], bool)> = Vec::new();
     let mut start = 0usize;
     for (i, &b) in bytes.iter().enumerate() {
@@ -799,6 +869,17 @@ pub fn read_journal(path: &Path) -> Result<JournalContents> {
     if start < bytes.len() {
         lines.push((start, &bytes[start..], false)); // unterminated tail
     }
+    lines
+}
+
+/// Read and validate a journal. An *unterminated* final line is a torn
+/// write from the crash and is safely dropped (its bytes are excluded
+/// from `valid_len`); a malformed `\n`-terminated line anywhere, a bad
+/// header, or a magic/version mismatch is corruption and fails loudly.
+pub fn read_journal(path: &Path) -> Result<JournalContents> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading run journal {}", path.display()))?;
+    let lines = split_jsonl(&bytes);
     anyhow::ensure!(!lines.is_empty(), "journal {} is empty", path.display());
 
     let parse_line = |raw: &[u8]| -> Result<Json> {
@@ -1182,11 +1263,12 @@ mod tests {
         let err = read_journal(&path).unwrap_err();
         assert!(err.to_string().contains("version"), "got: {err:#}");
         // Stale schemas fail loudly too: v1 (pre-celery-header), v2
-        // (pre-pruning — no async_report events or pruned outcomes), and
-        // v3 (pre-stable-replay — no epoch markers, no submit cutoffs). A
-        // v3 journal silently replayed under v4 rules would resume a
-        // stable run without its fold frontier.
-        for old in [1u64, 2, 3] {
+        // (pre-pruning — no async_report events or pruned outcomes), v3
+        // (pre-stable-replay — no epoch markers, no submit cutoffs), and
+        // v4 (pre-segmentation — no seal/checkpoint segment records). A
+        // v4 journal silently replayed under v5 rules would choke on (or
+        // worse, mis-handle) segment-layer records, and vice versa.
+        for old in [1u64, 2, 3, 4] {
             let mut h = header().to_json().to_string();
             h = h.replace(
                 &format!("\"version\":{JOURNAL_VERSION}"),

@@ -16,17 +16,34 @@
 //!   censored entries of pruned trials), report streams, pending set
 //!   (with retry counters), telemetry, and RNG/rounds state without
 //!   calling the objective or fitting anything.
+//! * [`segment`] — bounded-footprint layout: with
+//!   `--journal-segment-events N` the writer rotates through sealed,
+//!   checksummed segment files instead of one unbounded log; recovery
+//!   becomes segment-aware (one torn trailing line tolerated only in the
+//!   newest active segment — a damaged *sealed* segment is corruption).
+//! * [`compact`] — folds a sealed segment prefix into one `checkpoint`
+//!   record (the complete replay-fold state, round-trip exact), so resume
+//!   cost and disk footprint are O(active window), not O(run length).
+//! * [`corpus`] — a fingerprint-keyed JSONL manifest over accumulated
+//!   journals: runs → segments/checkpoints → final best, the queryable
+//!   substrate the warm-start direction builds on.
 //!
 //! `Tuner::with_journal` turns journaling on; `Tuner::resume_from` builds
 //! a tuner from a journal and continues the run where it died. With a
 //! fixed seed and a deterministic scheduler, crash-at-any-point + resume
 //! reproduces the uninterrupted run's best config and `History` exactly —
 //! the property `rust/tests/recovery.rs` enforces for every event-boundary
-//! crash point in both execution modes.
+//! crash point (including mid-rotation and mid-compaction kills) in both
+//! execution modes.
 
+pub mod compact;
+pub mod corpus;
 pub mod journal;
 pub mod recover;
+pub mod segment;
 
+pub use compact::compact;
+pub use corpus::RunRecord;
 pub use journal::{
     read_journal, EventOutcome, JournalError, JournalEvent, JournalFault, JournalPolicy,
     JournalWriter, RunHeader, SenseTag, JOURNAL_MAGIC, JOURNAL_VERSION,
@@ -34,4 +51,7 @@ pub use journal::{
 pub use recover::{
     recover, AsyncReplay, CompletionLogEntry, PartialRound, PendingReplay, RecoveredRun,
     Replay, RoundRecord, SyncReplay, TerminalReplay,
+};
+pub use segment::{
+    read_run, CheckpointRecord, JournalLayout, RunStream, SegmentOpts, SegmentedWriter,
 };

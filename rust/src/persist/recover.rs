@@ -24,8 +24,19 @@
 //! uninterrupted run: everything behavior-affecting is either journaled
 //! (RNG state, rounds, in-flight set and order) or recomputed from
 //! journaled data by the same arithmetic.
+//!
+//! Replay is implemented as *streaming folds* ([`SyncFold`] /
+//! [`AsyncFold`]): one event at a time into an explicit state struct,
+//! finished into the public [`SyncReplay`] / [`AsyncReplay`] views only at
+//! the end. The mid-scan fold state is exactly what journal compaction
+//! ([`crate::persist::compact`]) snapshots into a `checkpoint` record —
+//! recovery of a compacted journal deserializes the checkpoint back into
+//! a fold and keeps folding the tail segments, which is why
+//! `recover(checkpoint + tail)` is bit-identical to `recover(full
+//! stream)`.
 
-use super::journal::{read_journal, EventOutcome, JournalEvent, RunHeader, SenseTag};
+use super::journal::{EventOutcome, JournalEvent, RunHeader, SenseTag};
+use super::segment::{self, JournalLayout};
 use crate::optimizer::prune;
 use crate::space::{Config, SearchSpace};
 use anyhow::{anyhow, Result};
@@ -33,7 +44,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 /// One completed sync iteration, as journaled.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     pub iter: usize,
     pub proposed: usize,
@@ -44,7 +55,7 @@ pub struct RoundRecord {
 
 /// The partially evaluated batch at crash time (sync mode): the proposed
 /// configs plus whichever evaluations were journaled before the kill.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PartialRound {
     pub iter: usize,
     pub batch: Vec<Config>,
@@ -53,7 +64,7 @@ pub struct PartialRound {
 }
 
 /// Replay state for a sync-mode journal.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SyncReplay {
     /// Completed iterations, in order.
     pub rounds_done: Vec<RoundRecord>,
@@ -70,7 +81,7 @@ pub struct SyncReplay {
 }
 
 /// One completion event, replayed for the telemetry log.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompletionLogEntry {
     pub task: u64,
     pub retries: usize,
@@ -80,7 +91,7 @@ pub struct CompletionLogEntry {
 }
 
 /// One concluded proposal (terminal completion), in conclusion order.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TerminalReplay {
     pub task: u64,
     pub retries: usize,
@@ -97,7 +108,7 @@ pub struct TerminalReplay {
 }
 
 /// A proposal in flight at the crash, to be re-enqueued on resume.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PendingReplay {
     pub pid: u64,
     pub config: Config,
@@ -116,7 +127,7 @@ pub struct PendingReplay {
 }
 
 /// Replay state for an async-mode journal.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct AsyncReplay {
     /// Done completions in arrival order, user objective sense.
     pub history: Vec<(Config, f64)>,
@@ -162,7 +173,7 @@ pub struct AsyncReplay {
 }
 
 /// Mode-specific replay payload.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Replay {
     Sync(SyncReplay),
     Async(AsyncReplay),
@@ -172,9 +183,13 @@ pub enum Replay {
 #[derive(Debug)]
 pub struct RecoveredRun {
     pub header: RunHeader,
-    /// Valid byte prefix (a torn trailing line is excluded; the resumed
-    /// writer truncates to this before appending).
+    /// Valid byte prefix of the *active* file — the single journal file,
+    /// or the newest live segment (a torn trailing line is excluded; the
+    /// resumed writer truncates to this before appending).
     pub valid_len: u64,
+    /// On-disk layout the journal was recovered from; the resumed writer
+    /// reopens the matching file(s).
+    pub layout: JournalLayout,
     pub replay: Replay,
 }
 
@@ -195,43 +210,83 @@ impl RecoveredRun {
     }
 }
 
-/// Read, validate, and replay the journal at `path`.
+/// Read, validate, and replay the journal at `path` — a single file or a
+/// set of `<path>.segNNNNNN` segment files (discovered automatically).
+/// Segmented journals resume from their newest `checkpoint` record, if
+/// any: segments it covers are skipped entirely, so replay cost is
+/// O(events since the checkpoint), not O(run length).
 pub fn recover(path: &Path) -> Result<RecoveredRun> {
-    let contents = read_journal(path)?;
-    let stable = contents.header.run.replay == "stable";
-    let replay = match contents.header.run.mode.as_str() {
-        "sync" => Replay::Sync(replay_sync(&contents.events)?),
+    let stream = segment::read_run(path)?;
+    let stable = stream.header.run.replay == "stable";
+    let replay = match stream.header.run.mode.as_str() {
+        "sync" => {
+            let mut fold = match &stream.checkpoint {
+                Some(cp) => super::compact::sync_fold_from_checkpoint(cp)?,
+                None => SyncFold::new(),
+            };
+            for ev in &stream.events {
+                fold.fold(ev)?;
+            }
+            Replay::Sync(fold.finish())
+        }
         "async" => {
-            Replay::Async(replay_async(&contents.events, contents.header.sense, stable)?)
+            let sense = stream.header.sense;
+            let mut fold = match &stream.checkpoint {
+                Some(cp) => super::compact::async_fold_from_checkpoint(cp, sense, stable)?,
+                None => AsyncFold::new(sense, stable),
+            };
+            for ev in &stream.events {
+                fold.fold(ev)?;
+            }
+            Replay::Async(fold.finish())
         }
         other => return Err(anyhow!("journal header has unknown mode '{other}'")),
     };
-    Ok(RecoveredRun { header: contents.header, valid_len: contents.valid_len, replay })
+    Ok(RecoveredRun {
+        header: stream.header,
+        valid_len: stream.valid_len,
+        layout: stream.layout,
+        replay,
+    })
 }
 
-fn replay_sync(events: &[JournalEvent]) -> Result<SyncReplay> {
-    let mut r = SyncReplay::default();
-    let mut current: Option<PartialRound> = None;
-    for ev in events {
+/// Streaming fold for a sync-mode journal: feed events one at a time,
+/// [`finish`](Self::finish) into the [`SyncReplay`] view. The mid-scan
+/// state (accumulators + the open partial round) is what a `checkpoint`
+/// record snapshots.
+#[derive(Clone, Debug)]
+pub(crate) struct SyncFold {
+    pub(crate) r: SyncReplay,
+    /// The currently open (un-committed) iteration, if any.
+    pub(crate) current: Option<PartialRound>,
+}
+
+impl SyncFold {
+    pub(crate) fn new() -> Self {
+        Self { r: SyncReplay::default(), current: None }
+    }
+
+    pub(crate) fn fold(&mut self, ev: &JournalEvent) -> Result<()> {
         match ev {
             JournalEvent::SyncPropose { iter, rounds, rng, configs } => {
                 anyhow::ensure!(
-                    current.is_none(),
+                    self.current.is_none(),
                     "sync_propose for iter {iter} before iter {} closed",
-                    current.as_ref().map(|p| p.iter).unwrap_or(0)
+                    self.current.as_ref().map(|p| p.iter).unwrap_or(0)
                 );
                 anyhow::ensure!(
-                    *iter == r.rounds_done.len(),
+                    *iter == self.r.rounds_done.len(),
                     "sync_propose iter {iter} out of order (expected {})",
-                    r.rounds_done.len()
+                    self.r.rounds_done.len()
                 );
-                r.rng_state = Some(*rng);
-                r.rounds = *rounds;
-                current =
+                self.r.rng_state = Some(*rng);
+                self.r.rounds = *rounds;
+                self.current =
                     Some(PartialRound { iter: *iter, batch: configs.clone(), evals: Vec::new() });
             }
             JournalEvent::SyncEval { iter, config, value } => {
-                let cur = current
+                let cur = self
+                    .current
                     .as_mut()
                     .ok_or_else(|| anyhow!("sync_eval for iter {iter} without a propose"))?;
                 anyhow::ensure!(cur.iter == *iter, "sync_eval iter {iter} != open {}", cur.iter);
@@ -242,16 +297,17 @@ fn replay_sync(events: &[JournalEvent]) -> Result<SyncReplay> {
                 cur.evals.push((config.clone(), *value));
             }
             JournalEvent::SyncRound { iter, proposed, returned, best, wall_ms } => {
-                let cur = current
+                let cur = self
+                    .current
                     .take()
                     .ok_or_else(|| anyhow!("sync_round for iter {iter} without a propose"))?;
                 anyhow::ensure!(cur.iter == *iter, "sync_round iter {iter} != open {}", cur.iter);
                 for (cfg, v) in cur.evals {
                     if let Some(v) = v {
-                        r.history.push((cfg, v));
+                        self.r.history.push((cfg, v));
                     }
                 }
-                r.rounds_done.push(RoundRecord {
+                self.r.rounds_done.push(RoundRecord {
                     iter: *iter,
                     proposed: *proposed,
                     returned: *returned,
@@ -263,79 +319,114 @@ fn replay_sync(events: &[JournalEvent]) -> Result<SyncReplay> {
                 return Err(anyhow!("async event {other:?} in a sync-mode journal"));
             }
         }
+        Ok(())
     }
-    r.partial = current;
-    Ok(r)
+
+    pub(crate) fn finish(mut self) -> SyncReplay {
+        self.r.partial = self.current;
+        self.r
+    }
 }
 
 /// Per-proposal bookkeeping while scanning an async journal.
-struct PidState {
-    config: Config,
-    retries: usize,
+#[derive(Clone, Debug)]
+pub(crate) struct PidState {
+    pub(crate) config: Config,
+    pub(crate) retries: usize,
     /// Sequence number of the proposal's latest submit (or its propose,
     /// if the crash landed between propose and submit).
-    order: u64,
-    concluded: bool,
+    pub(crate) order: u64,
+    pub(crate) concluded: bool,
     /// Intermediate reports of the proposal's *current* attempt:
     /// `(step, user-sense value, pruned decision)`. Cleared on every
     /// submit — a re-enqueued trial re-reports from scratch, so only the
     /// final attempt's stream may reach `AsyncReplay::reports`.
-    reports: Vec<(u64, f64, bool)>,
+    pub(crate) reports: Vec<(u64, f64, bool)>,
     /// Task id of the proposal's latest submit.
-    last_task: Option<u64>,
+    pub(crate) last_task: Option<u64>,
     /// Fold cutoff / retry backoff of the latest submit (v4 fields).
-    cutoff: u64,
-    backoff_ms: f64,
+    pub(crate) cutoff: u64,
+    pub(crate) backoff_ms: f64,
 }
 
-fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Result<AsyncReplay> {
-    let to_internal = |v: f64| match sense {
-        SenseTag::Maximize => v,
-        SenseTag::Minimize => -v,
-    };
-    let mut r = AsyncReplay::default();
-    let mut pids: BTreeMap<u64, PidState> = BTreeMap::new();
-    let mut seq = 0u64; // global event order for pending-order reconstruction
-    let mut proposed_counter = 0usize;
-    // Running worst internal-sense history value — the same state the live
-    // loop's censoring policy reads, rebuilt in the same push order.
-    let mut worst_internal = f64::INFINITY;
-    // Stable-mode canonical-order audit: the last folded/abandoned task
-    // id. Under `--replay stable` the journal's terminal order *is* the
-    // fold order, so it must be globally ascending — a violation means
-    // the journal was not produced by a stable run and replaying it as
-    // one would rebuild different state than the crashed process held.
-    let mut last_fold: Option<u64> = None;
-    let audit_fold = |task: u64, epochs: u64, last: &mut Option<u64>| -> Result<()> {
-        if stable {
+/// Streaming fold for an async-mode journal. Every field — including the
+/// open-proposal map, the global sequence counter, and the running
+/// worst-seen censoring state — is part of the checkpoint snapshot;
+/// omitting any of them would make `recover(checkpoint + tail)` diverge
+/// from `recover(full stream)`.
+#[derive(Clone, Debug)]
+pub(crate) struct AsyncFold {
+    pub(crate) sense: SenseTag,
+    pub(crate) stable: bool,
+    pub(crate) r: AsyncReplay,
+    pub(crate) pids: BTreeMap<u64, PidState>,
+    /// Global event order for pending-order reconstruction.
+    pub(crate) seq: u64,
+    /// Proposals journaled since the last terminal conclusion.
+    pub(crate) proposed_counter: usize,
+    /// Running worst internal-sense history value — the same state the
+    /// live loop's censoring policy reads, rebuilt in the same push order.
+    pub(crate) worst_internal: f64,
+    /// Stable-mode canonical-order audit: the last folded/abandoned task
+    /// id. Under `--replay stable` the journal's terminal order *is* the
+    /// fold order, so it must be globally ascending — a violation means
+    /// the journal was not produced by a stable run and replaying it as
+    /// one would rebuild different state than the crashed process held.
+    pub(crate) last_fold: Option<u64>,
+}
+
+impl AsyncFold {
+    pub(crate) fn new(sense: SenseTag, stable: bool) -> Self {
+        Self {
+            sense,
+            stable,
+            r: AsyncReplay::default(),
+            pids: BTreeMap::new(),
+            seq: 0,
+            proposed_counter: 0,
+            worst_internal: f64::INFINITY,
+            last_fold: None,
+        }
+    }
+
+    fn to_internal(&self, v: f64) -> f64 {
+        match self.sense {
+            SenseTag::Maximize => v,
+            SenseTag::Minimize => -v,
+        }
+    }
+
+    fn audit_fold(&mut self, task: u64) -> Result<()> {
+        if self.stable {
             anyhow::ensure!(
-                epochs > 0,
+                self.r.epochs > 0,
                 "stable journal concludes task {task} before any async_epoch marker"
             );
             anyhow::ensure!(
-                last.map_or(true, |t| task > t),
+                self.last_fold.map_or(true, |t| task > t),
                 "stable journal folds task {task} after task {:?} — canonical \
                  ascending-task-id order violated",
-                last
+                self.last_fold
             );
         }
-        *last = Some(task);
+        self.last_fold = Some(task);
         Ok(())
-    };
-    for ev in events {
-        seq += 1;
+    }
+
+    pub(crate) fn fold(&mut self, ev: &JournalEvent) -> Result<()> {
+        self.seq += 1;
         match ev {
             JournalEvent::AsyncPropose { pid, rounds, config } => {
                 anyhow::ensure!(
-                    !pids.contains_key(pid),
+                    !self.pids.contains_key(pid),
                     "duplicate async_propose for proposal {pid}"
                 );
-                pids.insert(
+                self.pids.insert(
                     *pid,
                     PidState {
                         config: config.clone(),
                         retries: 0,
-                        order: seq,
+                        order: self.seq,
                         concluded: false,
                         reports: Vec::new(),
                         last_task: None,
@@ -343,76 +434,84 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Resul
                         backoff_ms: 0.0,
                     },
                 );
-                r.proposals_made = r.proposals_made.max(pid + 1);
-                r.rounds = *rounds;
-                proposed_counter += 1;
+                self.r.proposals_made = self.r.proposals_made.max(pid + 1);
+                self.r.rounds = *rounds;
+                self.proposed_counter += 1;
             }
             JournalEvent::AsyncSubmit { pid, task, retries, cutoff, backoff_ms } => {
-                let st = pids
+                let st = self
+                    .pids
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_submit for unknown proposal {pid}"))?;
                 anyhow::ensure!(!st.concluded, "async_submit for concluded proposal {pid}");
                 st.retries = *retries;
-                st.order = seq;
+                st.order = self.seq;
                 st.reports.clear(); // fresh attempt: any prior stream is stale
                 st.last_task = Some(*task);
                 st.cutoff = *cutoff;
                 st.backoff_ms = *backoff_ms;
-                r.next_task_id = r.next_task_id.max(task + 1);
+                self.r.next_task_id = self.r.next_task_id.max(task + 1);
             }
             JournalEvent::AsyncEpoch { seq: epoch_seq } => {
                 anyhow::ensure!(
-                    stable,
+                    self.stable,
                     "async_epoch marker in a journal whose header says --replay wallclock"
                 );
                 anyhow::ensure!(
-                    *epoch_seq == r.epochs,
+                    *epoch_seq == self.r.epochs,
                     "async_epoch out of order: seq {epoch_seq}, expected {}",
-                    r.epochs
+                    self.r.epochs
                 );
-                r.epochs += 1;
+                self.r.epochs += 1;
             }
             JournalEvent::AsyncStalled { pid, task } => {
-                let st = pids
+                let epochs = self.r.epochs;
+                let st = self
+                    .pids
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_stalled for unknown proposal {pid}"))?;
                 anyhow::ensure!(!st.concluded, "async_stalled for concluded proposal {pid}");
-                audit_fold(*task, r.epochs, &mut last_fold)?;
+                let _ = epochs;
+                let retries = st.retries;
+                let reports = st.reports.clone();
                 st.concluded = true;
-                r.lost += 1;
-                r.stalled = true;
+                self.audit_fold(*task)?;
+                self.r.lost += 1;
+                self.r.stalled = true;
                 // Mirrors the live stall path: a recordless value, a lost
                 // conclusion, zero wall — the trial's reports (already
                 // journaled) replay like any concluded trial's.
                 let outcome = EventOutcome::Lost(crate::scheduler::LossReason::TimedOut);
-                r.completion_log.push(CompletionLogEntry {
+                self.r.completion_log.push(CompletionLogEntry {
                     task: *task,
-                    retries: st.retries,
+                    retries,
                     outcome,
                     queue_ms: 0.0,
                     eval_ms: 0.0,
                 });
-                for &(step, value, pruned) in &st.reports {
-                    r.reports.push((*pid, step, value, pruned));
+                for &(step, value, pruned) in &reports {
+                    self.r.reports.push((*pid, step, value, pruned));
                 }
-                r.terminals.push(TerminalReplay {
+                self.r.terminals.push(TerminalReplay {
                     task: *task,
-                    retries: st.retries,
+                    retries,
                     outcome,
                     wall_ms: 0.0,
-                    proposed_before: std::mem::take(&mut proposed_counter),
+                    proposed_before: std::mem::take(&mut self.proposed_counter),
                     contributed: false,
                 });
             }
             JournalEvent::AsyncReport { pid, step, value, pruned, .. } => {
-                let st = pids
+                let st = self
+                    .pids
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_report for unknown proposal {pid}"))?;
                 anyhow::ensure!(!st.concluded, "async_report for concluded proposal {pid}");
                 st.reports.push((*step, *value, *pruned));
             }
             JournalEvent::AsyncCancel { pid, .. } => {
-                let st = pids
+                let st = self
+                    .pids
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_cancel for unknown proposal {pid}"))?;
                 anyhow::ensure!(!st.concluded, "async_cancel for concluded proposal {pid}");
@@ -422,14 +521,31 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Resul
                 st.concluded = true;
             }
             JournalEvent::AsyncComplete { pid, task, retries, outcome, queue_ms, eval_ms } => {
-                let st = pids
+                let st = self
+                    .pids
                     .get_mut(pid)
                     .ok_or_else(|| anyhow!("async_complete for unknown proposal {pid}"))?;
                 anyhow::ensure!(!st.concluded, "async_complete for concluded proposal {pid}");
+                let seq = self.seq;
+                let config = st.config.clone();
+                let reports = st.reports.clone();
+                match outcome {
+                    EventOutcome::Resubmitted(_) => {
+                        st.retries = *retries;
+                        st.order = seq;
+                        // Not terminal: the proposal stays pending. `order`
+                        // moves to this event (and again at the follow-up
+                        // async_submit, if it was journaled before the
+                        // crash): the resubmission would have received a
+                        // fresh, highest task id, so the proposal belongs
+                        // at the back of the pending order either way.
+                    }
+                    _ => st.concluded = true,
+                }
                 // Every async_complete (terminals *and* resubmitted
                 // intermediates) is one fold of its task.
-                audit_fold(*task, r.epochs, &mut last_fold)?;
-                r.completion_log.push(CompletionLogEntry {
+                self.audit_fold(*task)?;
+                self.r.completion_log.push(CompletionLogEntry {
                     task: *task,
                     retries: *retries,
                     outcome: *outcome,
@@ -438,23 +554,14 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Resul
                 });
                 match outcome {
                     EventOutcome::Resubmitted(_) => {
-                        st.retries = *retries;
-                        st.order = seq;
-                        r.retried += 1;
-                        // Not terminal: the proposal stays pending. `order`
-                        // moves to this event (and again at the follow-up
-                        // async_submit, if it was journaled before the
-                        // crash): the resubmission would have received a
-                        // fresh, highest task id, so the proposal belongs
-                        // at the back of the pending order either way.
+                        self.r.retried += 1;
                     }
                     terminal => {
-                        st.concluded = true;
                         let contributed = match terminal {
                             EventOutcome::Done(v) => {
-                                let internal = to_internal(*v);
-                                worst_internal = worst_internal.min(internal);
-                                r.history.push((st.config.clone(), *v));
+                                let internal = self.to_internal(*v);
+                                self.worst_internal = self.worst_internal.min(internal);
+                                self.r.history.push((config, *v));
                                 true
                             }
                             EventOutcome::Pruned { last_value, .. } => {
@@ -462,37 +569,41 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Resul
                                 // exact policy (and running state) the live
                                 // loop applied, instead of journaling a
                                 // second derived value that could drift.
-                                r.pruned += 1;
-                                let worst =
-                                    worst_internal.is_finite().then_some(worst_internal);
-                                match prune::censored_value(to_internal(*last_value), worst) {
+                                self.r.pruned += 1;
+                                let worst = self
+                                    .worst_internal
+                                    .is_finite()
+                                    .then_some(self.worst_internal);
+                                let internal = self.to_internal(*last_value);
+                                match prune::censored_value(internal, worst) {
                                     Some(censored) => {
-                                        worst_internal = worst_internal.min(censored);
-                                        let user = match sense {
+                                        self.worst_internal =
+                                            self.worst_internal.min(censored);
+                                        let user = match self.sense {
                                             SenseTag::Maximize => censored,
                                             SenseTag::Minimize => -censored,
                                         };
-                                        r.history.push((st.config.clone(), user));
+                                        self.r.history.push((config, user));
                                         true
                                     }
                                     None => false,
                                 }
                             }
                             EventOutcome::Lost(_) => {
-                                r.lost += 1;
+                                self.r.lost += 1;
                                 false
                             }
                             _ => false,
                         };
-                        for &(step, value, pruned) in &st.reports {
-                            r.reports.push((*pid, step, value, pruned));
+                        for &(step, value, pruned) in &reports {
+                            self.r.reports.push((*pid, step, value, pruned));
                         }
-                        r.terminals.push(TerminalReplay {
+                        self.r.terminals.push(TerminalReplay {
                             task: *task,
                             retries: *retries,
                             outcome: *outcome,
                             wall_ms: *queue_ms + *eval_ms,
-                            proposed_before: std::mem::take(&mut proposed_counter),
+                            proposed_before: std::mem::take(&mut self.proposed_counter),
                             contributed,
                         });
                     }
@@ -502,32 +613,38 @@ fn replay_async(events: &[JournalEvent], sense: SenseTag, stable: bool) -> Resul
                 return Err(anyhow!("sync event {other:?} in an async-mode journal"));
             }
         }
+        Ok(())
     }
-    r.pid_last_task = pids
-        .iter()
-        .filter(|(_, st)| st.concluded)
-        .filter_map(|(pid, st)| st.last_task.map(|t| (*pid, t)))
-        .collect();
-    let mut pending: Vec<(u64, PendingReplay)> = pids
-        .into_iter()
-        .filter(|(_, st)| !st.concluded)
-        .map(|(pid, st)| {
-            (
-                st.order,
-                PendingReplay {
-                    pid,
-                    config: st.config,
-                    retries: st.retries,
-                    cutoff: st.cutoff,
-                    backoff_ms: st.backoff_ms,
-                },
-            )
-        })
-        .collect();
-    pending.sort_by_key(|(order, _)| *order);
-    r.pending = pending.into_iter().map(|(_, p)| p).collect();
-    r.trailing_proposed = proposed_counter;
-    Ok(r)
+
+    pub(crate) fn finish(mut self) -> AsyncReplay {
+        self.r.pid_last_task = self
+            .pids
+            .iter()
+            .filter(|(_, st)| st.concluded)
+            .filter_map(|(pid, st)| st.last_task.map(|t| (*pid, t)))
+            .collect();
+        let mut pending: Vec<(u64, PendingReplay)> = self
+            .pids
+            .into_iter()
+            .filter(|(_, st)| !st.concluded)
+            .map(|(pid, st)| {
+                (
+                    st.order,
+                    PendingReplay {
+                        pid,
+                        config: st.config,
+                        retries: st.retries,
+                        cutoff: st.cutoff,
+                        backoff_ms: st.backoff_ms,
+                    },
+                )
+            })
+            .collect();
+        pending.sort_by_key(|(order, _)| *order);
+        self.r.pending = pending.into_iter().map(|(_, p)| p).collect();
+        self.r.trailing_proposed = self.proposed_counter;
+        self.r
+    }
 }
 
 #[cfg(test)]
@@ -598,6 +715,7 @@ mod tests {
             ],
         );
         let rec = recover(&path).unwrap();
+        assert_eq!(rec.layout, JournalLayout::Single);
         let Replay::Sync(s) = rec.replay else { panic!("expected sync replay") };
         assert_eq!(s.rounds_done.len(), 1);
         assert_eq!(s.rounds_done[0].returned, 1);
@@ -938,5 +1056,56 @@ mod tests {
         let err = rec.validate_space(&space).unwrap_err();
         assert!(err.to_string().contains("different search space"), "got: {err:#}");
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Folding a prefix, snapshotting nothing, and continuing must equal a
+    /// single uninterrupted fold — the in-crate statement of the
+    /// checkpoint-equivalence property (the cross-codec version lives in
+    /// `persist::compact`). Split at *every* prefix length.
+    #[test]
+    fn async_fold_is_splittable_at_every_event_boundary() {
+        let mut events = Vec::new();
+        events.extend(propose_and_submit(0, 0, 0));
+        events.extend(propose_and_submit(1, 1, 0));
+        events.push(JournalEvent::AsyncReport { pid: 0, task: 0, step: 0, value: 1.0, pruned: false });
+        events.push(JournalEvent::AsyncComplete {
+            pid: 0,
+            task: 0,
+            retries: 1,
+            outcome: EventOutcome::Resubmitted(LossReason::Crashed),
+            queue_ms: 0.5,
+            eval_ms: 0.0,
+        });
+        events.push(JournalEvent::AsyncSubmit { pid: 0, task: 2, retries: 1, cutoff: 1, backoff_ms: 8.0 });
+        events.push(done(1, 1, 4.0));
+        events.push(JournalEvent::AsyncReport { pid: 0, task: 2, step: 0, value: 0.5, pruned: true });
+        events.push(JournalEvent::AsyncComplete {
+            pid: 0,
+            task: 2,
+            retries: 1,
+            outcome: EventOutcome::Pruned { at_step: 0, last_value: 0.5 },
+            queue_ms: 0.25,
+            eval_ms: 0.75,
+        });
+        events.push(JournalEvent::AsyncPropose { pid: 2, rounds: 3, config: cfg(2) });
+        let full = {
+            let mut f = AsyncFold::new(SenseTag::Maximize, false);
+            for ev in &events {
+                f.fold(ev).unwrap();
+            }
+            f.finish()
+        };
+        for cut in 0..=events.len() {
+            let mut f = AsyncFold::new(SenseTag::Maximize, false);
+            for ev in &events[..cut] {
+                f.fold(ev).unwrap();
+            }
+            // A clone at the cut stands in for snapshot+restore.
+            let mut g = f.clone();
+            for ev in &events[cut..] {
+                g.fold(ev).unwrap();
+            }
+            assert_eq!(g.finish(), full, "split at {cut} diverged");
+        }
     }
 }

@@ -11,6 +11,14 @@
 //! torn trailing lines, retry budgets across restarts for
 //! `Lost(Crashed)`-in-flight work, and bit-identity of the
 //! recovery-rebuilt GP Cholesky factor.
+//!
+//! With `--journal-segment-events` the journal is a directory of sealed,
+//! checksummed segment files plus one active tail, and "kill after event
+//! k" gains new shapes: mid-rotation (seal written, successor absent or
+//! embryonic; torn seal line) and mid-compaction (stray staging file;
+//! checkpoint renamed in but covered segments not yet deleted). The
+//! segmented sweeps below reconstruct every one of those disk states from
+//! a finished run and demand the identical result back.
 
 use mango::coordinator::{ExecutionMode, ReplayMode, Tuner, TunerConfig};
 use mango::gp::{fit_posterior, GpParams};
@@ -18,11 +26,14 @@ use mango::linalg::Matrix;
 use mango::optimizer::bayesian::BayesianCore;
 use mango::optimizer::{GpOptions, History, OptimizerKind, SurrogateBackend};
 use mango::optimizer::prune::PrunerKind;
-use mango::persist::{read_journal, EventOutcome, JournalEvent, JournalFault, JournalPolicy};
+use mango::persist::{
+    compact, read_journal, read_run, recover, EventOutcome, JournalEvent, JournalFault,
+    JournalLayout, JournalPolicy, Replay,
+};
 use mango::scheduler::celery::CelerySimConfig;
 use mango::scheduler::{SchedulerKind, TrialReporter};
 use mango::space::{svm_space, Config, Encoder, SearchSpace};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 fn tmp(name: &str) -> PathBuf {
@@ -729,10 +740,11 @@ fn pruned_async_crash_at_any_point_resumes_to_identical_result() {
     }
 }
 
-/// Pre-v4 journals predate the replay/epoch machinery (v3), the pruning
-/// events (v2), or the celery header (v1) — replaying any of them under v4
-/// rules could silently mis-fold a resumed run, so the reader must refuse
-/// every stale version outright instead of guessing.
+/// Pre-v5 journals predate the segment/checkpoint layout (v4), the
+/// replay/epoch machinery (v3), the pruning events (v2), or the celery
+/// header (v1) — replaying any of them under v5 rules could silently
+/// mis-fold a resumed run, so the reader must refuse every stale version
+/// outright instead of guessing.
 #[test]
 fn stale_journal_versions_are_refused_loudly() {
     let space = svm_space();
@@ -750,7 +762,7 @@ fn stale_journal_versions_are_refused_loudly() {
     .maximize(quad)
     .unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    for stale_version in 1..=3u32 {
+    for stale_version in 1..=4u32 {
         let stale = text.replacen(
             &format!("\"version\":{}", mango::persist::JOURNAL_VERSION),
             &format!("\"version\":{stale_version}"),
@@ -1039,4 +1051,734 @@ fn journal_fault_injection_at_every_append_site() {
         }
     }
     std::fs::remove_file(&case_path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Segmented journal: rotation, sealing, compaction, and the corpus of crash
+// shapes those add. Test names carry `segmented_` / `checkpoint_` /
+// `compaction_` / `rotation_` so CI can run exactly this block.
+// ---------------------------------------------------------------------------
+
+/// `<base>.seg{idx:06}` — the writer's segment naming scheme.
+fn seg_file(base: &Path, idx: u64) -> PathBuf {
+    let name = base.file_name().unwrap().to_string_lossy().into_owned();
+    base.with_file_name(format!("{name}.seg{idx:06}"))
+}
+
+/// Remove the base file and every `<base>.seg*` sibling (segments, staging,
+/// quarantine) so reconstructed crash states start from a clean slate.
+fn remove_run_files(base: &Path) {
+    std::fs::remove_file(base).ok();
+    let name = base.file_name().unwrap().to_string_lossy().into_owned();
+    let prefix = format!("{name}.seg");
+    let Some(dir) = base.parent() else { return };
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        if e.file_name().to_string_lossy().starts_with(&prefix) {
+            std::fs::remove_file(e.path()).ok();
+        }
+    }
+}
+
+/// The live segment files of `base` as `(index, bytes)`, ascending — the
+/// same exact-6-digit-suffix rule the reader uses, so `.tmp` staging and
+/// `.quarantined` files are excluded.
+fn live_segments(base: &Path) -> Vec<(u64, Vec<u8>)> {
+    let name = base.file_name().unwrap().to_string_lossy().into_owned();
+    let prefix = format!("{name}.seg");
+    let mut out = Vec::new();
+    for e in std::fs::read_dir(base.parent().unwrap()).unwrap().flatten() {
+        let fname = e.file_name().to_string_lossy().into_owned();
+        if let Some(suffix) = fname.strip_prefix(&prefix) {
+            if suffix.len() == 6 && suffix.bytes().all(|b| b.is_ascii_digit()) {
+                out.push((suffix.parse().unwrap(), std::fs::read(e.path()).unwrap()));
+            }
+        }
+    }
+    out.sort_by_key(|&(idx, _)| idx);
+    out
+}
+
+/// The segmented flavor of the acceptance-criterion harness. The journaled
+/// run keeps every segment (`keep_segments` absurdly high, so live
+/// compaction never fires) — every historical disk state of the run is
+/// then a *prefix of the files left behind*, and the sweep reconstructs
+/// "killed after event k" for every k in every segment. That includes the
+/// mid-rotation shapes: sealed newest segment with no successor (crash
+/// between seal and create), an embryonic zero-byte successor (crash
+/// between create and header write), and a header-only successor. Torn
+/// tails — a half-written event line in the active segment and a
+/// half-written *seal* line — are exercised on top.
+fn segmented_crash_at_every_boundary_with(
+    cfg: TunerConfig,
+    objective: fn(&Config) -> Option<f64>,
+    segment_events: usize,
+    label: &str,
+) {
+    let space = svm_space();
+
+    // Baseline: un-journaled uninterrupted run.
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(objective).unwrap();
+
+    // Segmented journaling must be transparent.
+    let mut seg_cfg = cfg;
+    seg_cfg.journal_segment_events = segment_events;
+    seg_cfg.journal_keep_segments = 1000;
+    let full_path = tmp(&format!("{label}_full"));
+    remove_run_files(&full_path);
+    let journaled = Tuner::new(space.clone(), seg_cfg)
+        .with_journal(&full_path)
+        .maximize(objective)
+        .unwrap();
+    assert_result_eq(&journaled, &baseline, &format!("{label}: segmentation changed the run"));
+    assert!(
+        !full_path.exists(),
+        "{label}: the segmented layout must not leave a base-path file"
+    );
+
+    let segs = live_segments(&full_path);
+    assert!(segs.len() >= 3, "{label}: expected >= 3 segments, got {}", segs.len());
+
+    let case_path = tmp(&format!("{label}_case"));
+    let restore_prefix = |upto: usize| {
+        remove_run_files(&case_path);
+        for (idx, bytes) in &segs[..upto] {
+            std::fs::write(seg_file(&case_path, *idx), bytes).unwrap();
+        }
+    };
+
+    for i in 0..segs.len() {
+        let (idx, bytes) = &segs[i];
+        let mut cuts = event_boundaries(bytes);
+        if *idx > 0 {
+            // Crash between successor creation and its header write: the
+            // newest segment exists but is empty (embryonic).
+            cuts.insert(0, 0);
+        }
+        for (ci, &cut) in cuts.iter().enumerate() {
+            restore_prefix(i);
+            std::fs::write(seg_file(&case_path, *idx), &bytes[..cut]).unwrap();
+            let context = format!("{label}: crash in segment {idx} at boundary {ci}");
+            let resumed = Tuner::resume_from(space.clone(), &case_path)
+                .unwrap_or_else(|e| panic!("{context}: resume failed: {e:#}"))
+                .maximize(objective)
+                .unwrap_or_else(|e| panic!("{context}: resumed run failed: {e:#}"));
+            assert_result_eq(&resumed, &baseline, &context);
+        }
+    }
+
+    // A torn half-written event line in the active segment changes nothing.
+    let (last_idx, last_bytes) = segs.last().unwrap();
+    let lb = event_boundaries(last_bytes);
+    let mid = lb[lb.len() / 2];
+    restore_prefix(segs.len() - 1);
+    let mut torn = last_bytes[..mid].to_vec();
+    torn.extend_from_slice(br#"{"e":"sync_eval","iter":9,"conf"#);
+    std::fs::write(seg_file(&case_path, *last_idx), &torn).unwrap();
+    let resumed = Tuner::resume_from(space.clone(), &case_path)
+        .unwrap()
+        .maximize(objective)
+        .unwrap();
+    assert_result_eq(&resumed, &baseline, &format!("{label}: torn trailing event line"));
+
+    // A torn *seal* line: the crash landed mid-rotation, half-way through
+    // the seal append. The segment reads back unsealed (the torn tail is
+    // the newest segment's one tolerated torn line) and resume re-seals it.
+    let (seal_idx, seal_bytes) = &segs[1];
+    let sb = event_boundaries(seal_bytes);
+    let seal_start = sb[sb.len() - 2];
+    let half_seal = seal_start + (seal_bytes.len() - seal_start) / 2;
+    restore_prefix(1);
+    std::fs::write(seg_file(&case_path, *seal_idx), &seal_bytes[..half_seal]).unwrap();
+    let resumed = Tuner::resume_from(space.clone(), &case_path)
+        .unwrap()
+        .maximize(objective)
+        .unwrap();
+    assert_result_eq(&resumed, &baseline, &format!("{label}: torn seal line"));
+
+    remove_run_files(&full_path);
+    remove_run_files(&case_path);
+}
+
+/// Tentpole acceptance criterion, segmented: crash at every event boundary
+/// of every segment — including the mid-rotation shapes — and resume to the
+/// uninterrupted result, sync mode.
+#[test]
+fn segmented_sync_crash_at_any_point_resumes_to_identical_result() {
+    segmented_crash_at_every_boundary_with(base_config(ExecutionMode::Sync), quad, 4, "seg_sync");
+}
+
+/// Same sweep, async event loop.
+#[test]
+fn segmented_async_crash_at_any_point_resumes_to_identical_result() {
+    segmented_crash_at_every_boundary_with(
+        base_config(ExecutionMode::Async),
+        quad,
+        4,
+        "seg_async",
+    );
+}
+
+/// Same sweep under `--replay stable` on the threaded scheduler with a
+/// wall-clock-jittered objective: rotation points interleave with
+/// nondeterministic completion arrival, and the canonical fold still
+/// reproduces the seed-matched run from every reconstructed crash state.
+#[test]
+fn segmented_stable_threaded_crash_at_any_point_resumes_to_identical_result() {
+    segmented_crash_at_every_boundary_with(
+        stable_config(SchedulerKind::Threaded, 4),
+        jittery_quad,
+        5,
+        "seg_stable_threaded",
+    );
+}
+
+/// Same sweep, celery-sim flavor with stragglers.
+#[test]
+fn segmented_stable_celery_crash_at_any_point_resumes_to_identical_result() {
+    let mut cfg = stable_config(SchedulerKind::Celery, 3);
+    cfg.celery = Some(CelerySimConfig {
+        workers: 3,
+        base_latency_ms: 0.3,
+        straggler_prob: 0.4,
+        straggler_factor: 4.0,
+        crash_prob: 0.0,
+        result_timeout: Duration::from_secs(10),
+    });
+    segmented_crash_at_every_boundary_with(cfg, quad, 5, "seg_stable_celery");
+}
+
+/// Tentpole acceptance criterion: `--journal-segment-events 0` (the
+/// default) keeps the single-file layout — one file at the base path, no
+/// segment siblings, readable by the plain reader — and the crash/resume
+/// contract is untouched. Compaction never applies to a single-file
+/// journal, even when asked for explicitly.
+#[test]
+fn segmented_zero_segment_events_keeps_the_single_file_layout() {
+    assert_eq!(mango::persist::JOURNAL_VERSION, 5);
+    let space = svm_space();
+    let cfg = base_config(ExecutionMode::Sync); // journal_segment_events: 0
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    let path = tmp("seg_zero");
+    remove_run_files(&path);
+    let journaled =
+        Tuner::new(space.clone(), cfg).with_journal(&path).maximize(quad).unwrap();
+    assert_result_eq(&journaled, &baseline, "segment_events=0: journaling changed the run");
+
+    assert!(path.exists(), "segment_events=0 must write the single base file");
+    assert!(live_segments(&path).is_empty(), "segment_events=0 must not create segments");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        text.contains(&format!("\"version\":{}", mango::persist::JOURNAL_VERSION)),
+        "header must carry the current schema version"
+    );
+    let stream = read_run(&path).unwrap();
+    assert_eq!(stream.layout, JournalLayout::Single);
+    assert!(stream.checkpoint.is_none());
+
+    // Explicit compaction of a single-file journal is a no-op, bytes and all.
+    let before = std::fs::read(&path).unwrap();
+    assert!(!compact(&path, 1).unwrap(), "single-file journals must never compact");
+    assert_eq!(std::fs::read(&path).unwrap(), before);
+
+    // And the crash/resume contract is exactly the v4-era one.
+    let boundaries = event_boundaries(&before);
+    let cut = boundaries[boundaries.len() / 2];
+    std::fs::write(&path, &before[..cut]).unwrap();
+    let resumed = Tuner::resume_from(space, &path).unwrap().maximize(quad).unwrap();
+    assert_result_eq(&resumed, &baseline, "segment_events=0: mid-run crash");
+    remove_run_files(&path);
+}
+
+/// Satellites 1 + 2: a journal write fault injected at the *rotation*
+/// append site (the seal write). fail-stop must abort with the cause and
+/// leave a consistent, resumable sealed prefix — the full segment's events
+/// with no seal (ENOSPC) or a torn seal line (short write), and crucially
+/// *no half-activated successor*. degrade must finish the run flagged,
+/// byte-identical to the un-journaled baseline, with the same consistent
+/// single-segment disk state.
+#[test]
+fn rotation_fault_leaves_a_consistent_sealed_prefix() {
+    let space = svm_space();
+    let mut cfg = base_config(ExecutionMode::Sync);
+    cfg.journal_segment_events = 3;
+    cfg.journal_keep_segments = 1000;
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    let path = tmp("rotation_fault");
+    for kind in [JournalFault::Enospc, JournalFault::ShortWrite] {
+        // fail-stop (the default): the run aborts when the first rotation's
+        // seal append fails.
+        remove_run_files(&path);
+        let err = Tuner::new(space.clone(), cfg.clone())
+            .with_journal(&path)
+            .with_rotation_fault(kind)
+            .maximize(quad)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("journal"), "{kind:?}: unhelpful rotation-fault error: {msg}");
+
+        // Disk state: exactly one segment, unsealed, holding the three
+        // events that triggered the rotation — no successor was created.
+        let segs = live_segments(&path);
+        assert_eq!(segs.len(), 1, "{kind:?}: rotation fault must not half-activate a successor");
+        assert_eq!(segs[0].0, 0);
+        let stream = read_run(&path)
+            .unwrap_or_else(|e| panic!("{kind:?}: post-fault journal unreadable: {e:#}"));
+        assert_eq!(stream.events.len(), 3, "{kind:?}: the sealed prefix must hold 3 events");
+        assert_eq!(
+            stream.layout,
+            JournalLayout::Segmented {
+                active: 0,
+                active_sealed: false,
+                next_index: 1,
+                sealed: vec![],
+                stale: vec![],
+            },
+            "{kind:?}: a torn/absent seal must read back as an unsealed active segment"
+        );
+
+        // And that prefix resumes to the uninterrupted result.
+        let resumed =
+            Tuner::resume_from(space.clone(), &path).unwrap().maximize(quad).unwrap();
+        assert_result_eq(&resumed, &baseline, &format!("rotation fault {kind:?}"));
+
+        // degrade: the run survives the rotation fault without persistence.
+        remove_run_files(&path);
+        let mut degrade_cfg = cfg.clone();
+        degrade_cfg.journal_on_error = JournalPolicy::Degrade;
+        let r = Tuner::new(space.clone(), degrade_cfg)
+            .with_journal(&path)
+            .with_rotation_fault(kind)
+            .maximize(quad)
+            .unwrap_or_else(|e| panic!("{kind:?}: degrade aborted: {e:#}"));
+        assert!(r.journal_degraded, "{kind:?}: degradation must be flagged");
+        assert_result_eq(&r, &baseline, &format!("degrade at rotation {kind:?}"));
+        let segs = live_segments(&path);
+        assert_eq!(segs.len(), 1, "{kind:?}: degrade must leave a consistent sealed prefix");
+        assert!(read_run(&path).is_ok(), "{kind:?}: the degraded prefix must stay readable");
+    }
+    remove_run_files(&path);
+}
+
+/// Tentpole: a sealed segment whose bytes rot is *corruption*, not a torn
+/// tail — fail-stop refuses loudly on the checksum, and a sealed segment
+/// that lost its seal line entirely (yet is not the newest) is refused
+/// too. Under `--journal-on-error degrade` (journaled in the header) the
+/// bad segment and everything after it are quarantined and the run resumes
+/// from the intact sealed prefix.
+#[test]
+fn segmented_corrupt_sealed_segment_fails_loudly_and_quarantines_under_degrade() {
+    let space = svm_space();
+    let mut cfg = base_config(ExecutionMode::Sync);
+    cfg.journal_segment_events = 3;
+    cfg.journal_keep_segments = 1000;
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    // Flip one hex digit of a seal's crc field.
+    let corrupt_crc = |bytes: &[u8]| -> Vec<u8> {
+        let text = String::from_utf8(bytes.to_vec()).unwrap();
+        let at = text.rfind("\"crc\":\"").expect("sealed segment must carry a crc") + 7;
+        let mut out = text.into_bytes();
+        out[at] = if out[at] == b'0' { b'1' } else { b'0' };
+        out
+    };
+
+    for degrade in [false, true] {
+        let mut run_cfg = cfg.clone();
+        if degrade {
+            run_cfg.journal_on_error = JournalPolicy::Degrade;
+        }
+        let path = tmp(if degrade { "seg_corrupt_degrade" } else { "seg_corrupt" });
+        remove_run_files(&path);
+        Tuner::new(space.clone(), run_cfg).with_journal(&path).maximize(quad).unwrap();
+        let segs = live_segments(&path);
+        assert!(segs.len() >= 3, "need a sealed middle segment, got {}", segs.len());
+        let (bad_idx, bad_bytes) = &segs[1];
+        std::fs::write(seg_file(&path, *bad_idx), corrupt_crc(bad_bytes)).unwrap();
+
+        if degrade {
+            // Quarantine + resume from the sealed prefix below the damage.
+            let resumed = Tuner::resume_from(space.clone(), &path)
+                .unwrap_or_else(|e| panic!("degrade must quarantine, not refuse: {e:#}"))
+                .maximize(quad)
+                .unwrap();
+            assert_result_eq(&resumed, &baseline, "resume from quarantined journal");
+            let quarantined =
+                PathBuf::from(format!("{}.quarantined", seg_file(&path, *bad_idx).display()));
+            assert!(quarantined.exists(), "the corrupt segment must be quarantined, not lost");
+        } else {
+            let err = Tuner::resume_from(space.clone(), &path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("checksum mismatch"), "got: {msg}");
+
+            // A sealed non-newest segment with its seal line chopped off is
+            // equally corrupt: rotations never complete without sealing.
+            std::fs::write(seg_file(&path, *bad_idx), bad_bytes).unwrap();
+            let sb = event_boundaries(bad_bytes);
+            std::fs::write(seg_file(&path, *bad_idx), &bad_bytes[..sb[sb.len() - 2]]).unwrap();
+            let err = Tuner::resume_from(space.clone(), &path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("no seal"), "got: {msg}");
+        }
+        remove_run_files(&path);
+    }
+}
+
+/// Tentpole: live compaction during a run bounds the disk footprint to
+/// O(active window) — checkpoint segment + kept sealed tail + active —
+/// while staying invisible to the trajectory, and a crash in the active
+/// segment resumes from (checkpoint + tail segments) to the identical
+/// result.
+#[test]
+fn compaction_during_run_bounds_live_segments_and_resumes_from_checkpoint_plus_tail() {
+    let space = svm_space();
+    let cfg = base_config(ExecutionMode::Async);
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    let mut seg_cfg = cfg;
+    seg_cfg.journal_segment_events = 3;
+    seg_cfg.journal_keep_segments = 1;
+    let path = tmp("compaction_live");
+    remove_run_files(&path);
+    let journaled =
+        Tuner::new(space.clone(), seg_cfg).with_journal(&path).maximize(quad).unwrap();
+    assert_result_eq(&journaled, &baseline, "live compaction changed the run");
+
+    let segs = live_segments(&path);
+    assert!(
+        segs.len() <= 3,
+        "keep=1 steady state is checkpoint + 1 sealed + active, got {} segments",
+        segs.len()
+    );
+    let stream = read_run(&path).unwrap();
+    let cp = stream.checkpoint.expect("a run this long must have compacted");
+    assert!(cp.covers >= 1, "the checkpoint must actually cover folded segments");
+
+    // Resume from the finished compacted journal: pure replay, same result.
+    let resumed = Tuner::resume_from(space.clone(), &path).unwrap().maximize(quad).unwrap();
+    assert_result_eq(&resumed, &baseline, "resume from finished compacted journal");
+
+    // Crash at every boundary of the *active* segment: resume folds the
+    // checkpoint, replays the kept sealed tail, and re-runs the rest.
+    let segs = live_segments(&path);
+    let (active_idx, active_bytes) = segs.last().unwrap().clone();
+    for (ci, &cut) in event_boundaries(&active_bytes).iter().enumerate() {
+        remove_run_files(&path);
+        for (idx, bytes) in &segs[..segs.len() - 1] {
+            std::fs::write(seg_file(&path, *idx), bytes).unwrap();
+        }
+        std::fs::write(seg_file(&path, active_idx), &active_bytes[..cut]).unwrap();
+        let context = format!("checkpoint+tail crash at active boundary {ci}");
+        let resumed = Tuner::resume_from(space.clone(), &path)
+            .unwrap_or_else(|e| panic!("{context}: resume failed: {e:#}"))
+            .maximize(quad)
+            .unwrap_or_else(|e| panic!("{context}: resumed run failed: {e:#}"));
+        assert_result_eq(&resumed, &baseline, &context);
+    }
+    remove_run_files(&path);
+}
+
+/// Tentpole: the two crash windows *inside* compaction itself. (a) Crash
+/// before the atomic rename: a stray staging file sits next to the intact
+/// segments — reads ignore it, resume deletes it. (b) Crash after the
+/// rename but before the covered segments are deleted: checkpoint and
+/// covered segments coexist — reads skip the stale segments (their events
+/// are already folded), resume deletes them. In every state the recovered
+/// replay is bit-identical to the uncompacted stream's.
+#[test]
+fn compaction_crash_states_replay_identically_and_are_cleaned_on_resume() {
+    let space = svm_space();
+    let mut cfg = base_config(ExecutionMode::Sync);
+    cfg.journal_segment_events = 3;
+    cfg.journal_keep_segments = 1000; // no live compaction: we drive it by hand
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    let path = tmp("compaction_crash");
+    remove_run_files(&path);
+    Tuner::new(space.clone(), cfg).with_journal(&path).maximize(quad).unwrap();
+    let segs = live_segments(&path);
+    assert!(segs.len() >= 5, "need enough segments to fold, got {}", segs.len());
+    let full_replay = recover(&path).unwrap().replay;
+
+    // (a) Crash before the rename: only the staging file exists.
+    let staging = PathBuf::from(format!("{}.tmp", seg_file(&path, 0).display()));
+    std::fs::write(&staging, b"half-written checkpoint garbage").unwrap();
+    assert_eq!(
+        recover(&path).unwrap().replay,
+        full_replay,
+        "a stray staging file must not perturb recovery"
+    );
+    let resumed = Tuner::resume_from(space.clone(), &path).unwrap().maximize(quad).unwrap();
+    assert_result_eq(&resumed, &baseline, "resume over a stray staging file");
+    assert!(!staging.exists(), "resume must clean up crashed-compaction staging");
+
+    // Restore the pristine uncompacted layout, then compact for real.
+    remove_run_files(&path);
+    for (idx, bytes) in &segs {
+        std::fs::write(seg_file(&path, *idx), bytes).unwrap();
+    }
+    assert!(compact(&path, 1).unwrap(), "explicit compaction must fire");
+    let stream = read_run(&path).unwrap();
+    let covers = stream.checkpoint.as_ref().expect("compaction must leave a checkpoint").covers;
+    assert!(covers >= 2);
+    assert_eq!(
+        recover(&path).unwrap().replay,
+        full_replay,
+        "recover(checkpoint + tail) must bit-equal recover(full event stream)"
+    );
+
+    // (b) Crash after the rename: resurrect the covered segments compaction
+    // had deleted. They are stale — skipped on read, deleted on resume.
+    for (idx, bytes) in &segs {
+        if *idx >= 1 && *idx <= covers {
+            std::fs::write(seg_file(&path, *idx), bytes).unwrap();
+        }
+    }
+    assert_eq!(
+        recover(&path).unwrap().replay,
+        full_replay,
+        "checkpoint-covered leftovers must not be double-folded"
+    );
+    let resumed = Tuner::resume_from(space.clone(), &path).unwrap().maximize(quad).unwrap();
+    assert_result_eq(&resumed, &baseline, "resume over checkpoint-covered leftovers");
+    for idx in 1..=covers {
+        assert!(
+            !seg_file(&path, idx).exists(),
+            "resume must delete stale segment {idx}"
+        );
+    }
+    remove_run_files(&path);
+}
+
+/// Satellite: `--compact-on-resume` folds the sealed prefix into one
+/// checkpoint *before* reopening the journal — the resumed run matches the
+/// uninterrupted one and the disk footprint shrinks to checkpoint + kept
+/// tail + active.
+#[test]
+fn compaction_on_resume_shrinks_the_journal_to_checkpoint_plus_tail() {
+    let space = svm_space();
+    let cfg = base_config(ExecutionMode::Sync);
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+
+    let mut seg_cfg = cfg;
+    seg_cfg.journal_segment_events = 3;
+    seg_cfg.journal_keep_segments = 1000; // the run itself never compacts
+    let path = tmp("compaction_on_resume");
+    remove_run_files(&path);
+    Tuner::new(space.clone(), seg_cfg).with_journal(&path).maximize(quad).unwrap();
+    let segs = live_segments(&path);
+    assert!(segs.len() >= 5, "need an uncompacted pile of segments, got {}", segs.len());
+
+    // Crash mid-way through the active segment, then resume with
+    // compaction requested and a tighter retention override.
+    let (active_idx, active_bytes) = segs.last().unwrap();
+    let ab = event_boundaries(active_bytes);
+    std::fs::write(seg_file(&path, *active_idx), &active_bytes[..ab[ab.len() / 2]]).unwrap();
+    let resumed = Tuner::resume_from(space.clone(), &path)
+        .unwrap()
+        .with_keep_segments(1)
+        .with_compact_on_resume(true)
+        .maximize(quad)
+        .unwrap();
+    assert_result_eq(&resumed, &baseline, "compact-on-resume");
+    assert!(
+        read_run(&path).unwrap().checkpoint.is_some(),
+        "resume-time compaction must leave a checkpoint"
+    );
+    assert!(
+        live_segments(&path).len() <= 3,
+        "keep=1 after compact-on-resume is checkpoint + 1 sealed + active, got {}",
+        live_segments(&path).len()
+    );
+    remove_run_files(&path);
+}
+
+/// Satellite: the GP Cholesky factor rehydrated from a *compacted* journal
+/// is bit-identical to the one rehydrated from the full event stream, and
+/// both match a scratch fit over the same rows — the checkpoint codec
+/// loses nothing the surrogate can see.
+#[test]
+fn checkpoint_rehydrated_cholesky_factor_is_bit_identical_through_compaction() {
+    let space = svm_space();
+    let mut cfg = base_config(ExecutionMode::Async);
+    cfg.journal_segment_events = 3;
+    cfg.journal_keep_segments = 1000;
+    let path = tmp("checkpoint_cholesky");
+    remove_run_files(&path);
+    Tuner::new(space.clone(), cfg).with_journal(&path).maximize(quad).unwrap();
+
+    let full_replay = recover(&path).unwrap().replay;
+    assert!(compact(&path, 1).unwrap(), "compaction must fire");
+    let compact_replay = recover(&path).unwrap().replay;
+    assert_eq!(
+        full_replay, compact_replay,
+        "the replay folded through a checkpoint must bit-equal the full-stream fold"
+    );
+
+    let (Replay::Async(full), Replay::Async(folded)) = (&full_replay, &compact_replay) else {
+        panic!("async run must recover an async replay");
+    };
+    let rehydrated = |rows: &[(Config, f64)], rounds: usize| {
+        let opts = GpOptions {
+            backend: SurrogateBackend::Native,
+            fixed_beta: Some(2.0),
+            ..Default::default()
+        };
+        let mut history = History::new();
+        for (c, v) in rows {
+            history.push(c.clone(), *v);
+        }
+        let mut core = BayesianCore::new(space.clone(), opts).unwrap();
+        core.rehydrate(&history, rounds).unwrap();
+        core
+    };
+    let a = rehydrated(&full.history, full.rounds);
+    let b = rehydrated(&folded.history, folded.rounds);
+    let d = Encoder::new(&space).dims();
+    let mut params = GpParams::new(d);
+    params.noise = 1e-3; // GpOptions::default().noise
+    let fa = a.cached_state(&params).expect("full-stream rehydration must cache a state");
+    let fb = b.cached_state(&params).expect("checkpoint rehydration must cache a state");
+    assert_eq!(
+        fa.factor(),
+        fb.factor(),
+        "Cholesky factor must be bit-identical through a compaction"
+    );
+
+    // Ground truth: a scratch fit over the same rows.
+    let encoder = Encoder::new(&space);
+    let configs: Vec<Config> = full.history.iter().map(|(c, _)| c.clone()).collect();
+    let flat = encoder.encode_batch(&configs);
+    let x = Matrix::from_vec(configs.len(), d, flat);
+    let y = vec![0.0; configs.len()]; // y never enters the factor
+    let (truth, _) = fit_posterior(&x, &y, &params, None).unwrap();
+    assert_eq!(fb.factor(), &truth.chol, "factor must match a scratch fit exactly");
+    remove_run_files(&path);
+}
+
+/// Satellite: compaction folds `Pruned` terminals and intermediate-report
+/// state losslessly — stable replay, threaded scheduler, median pruner.
+/// The compacted journal's replay bit-equals the full stream's, and a
+/// crash in the active segment resumes to the uninterrupted result with
+/// the pruning counters intact.
+#[test]
+fn segmented_compaction_preserves_pruned_trials_on_stable_threaded() {
+    let space = svm_space();
+    let mut cfg = stable_config(SchedulerKind::Threaded, 4);
+    cfg.pruner = PrunerKind::Median;
+    cfg.pruner_warmup = 1;
+    let staged = |cfg: &Config, reporter: &TrialReporter| {
+        std::thread::sleep(Duration::from_millis(cfg.get_f64("c")? as u64 % 4));
+        staged_quad(cfg, reporter)
+    };
+    let baseline =
+        Tuner::new(space.clone(), cfg.clone()).maximize_with_reports(staged).unwrap();
+    assert!(baseline.pruned >= 1, "the staged workload must actually prune");
+
+    cfg.journal_segment_events = 4;
+    cfg.journal_keep_segments = 1000;
+    let path = tmp("seg_pruned");
+    remove_run_files(&path);
+    let journaled = Tuner::new(space.clone(), cfg)
+        .with_journal(&path)
+        .maximize_with_reports(staged)
+        .unwrap();
+    assert_result_eq(&journaled, &baseline, "segmented pruned: journaling changed the run");
+    assert_eq!(journaled.pruned, baseline.pruned, "segmented pruned: counter drifted");
+
+    let full_replay = recover(&path).unwrap().replay;
+    assert!(compact(&path, 1).unwrap(), "compaction must fire");
+    assert_eq!(
+        recover(&path).unwrap().replay,
+        full_replay,
+        "pruned/report state must fold through the checkpoint bit-exactly"
+    );
+
+    let segs = live_segments(&path);
+    let (active_idx, active_bytes) = segs.last().unwrap().clone();
+    for (ci, &cut) in event_boundaries(&active_bytes).iter().enumerate() {
+        remove_run_files(&path);
+        for (idx, bytes) in &segs[..segs.len() - 1] {
+            std::fs::write(seg_file(&path, *idx), bytes).unwrap();
+        }
+        std::fs::write(seg_file(&path, active_idx), &active_bytes[..cut]).unwrap();
+        let context = format!("segmented pruned: crash at active boundary {ci}");
+        let resumed = Tuner::resume_from(space.clone(), &path)
+            .unwrap_or_else(|e| panic!("{context}: resume failed: {e:#}"))
+            .maximize_with_reports(staged)
+            .unwrap_or_else(|e| panic!("{context}: resumed run failed: {e:#}"));
+        assert_result_eq(&resumed, &baseline, &context);
+        assert_eq!(resumed.pruned, baseline.pruned, "{context}: pruned counter drifted");
+    }
+    remove_run_files(&path);
+}
+
+/// Satellite: compaction folds `Lost`/`Resubmitted` terminals and the
+/// journaled retry schedule losslessly — stable replay on a faulty
+/// celery-sim cluster. Replay equality through the checkpoint, plus the
+/// active-segment crash sweep with the retry counter intact.
+#[test]
+fn segmented_compaction_preserves_lost_trials_on_stable_celery() {
+    let space = svm_space();
+    let mut cfg = TunerConfig {
+        optimizer: OptimizerKind::Random,
+        num_iterations: 7,
+        batch_size: 2,
+        backend: SurrogateBackend::Native,
+        scheduler: SchedulerKind::Celery,
+        workers: 3,
+        max_retries: 2,
+        retry_backoff_ms: 2.0,
+        seed: 21,
+        mode: ExecutionMode::Async,
+        replay: ReplayMode::Stable,
+        celery: Some(CelerySimConfig {
+            workers: 3,
+            base_latency_ms: 0.3,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            crash_prob: 0.4,
+            result_timeout: Duration::from_secs(10),
+        }),
+        ..Default::default()
+    };
+    let baseline = Tuner::new(space.clone(), cfg.clone()).maximize(quad).unwrap();
+    assert!(baseline.retried > 0, "crash_prob 0.4 must trigger retries (got none)");
+
+    cfg.journal_segment_events = 4;
+    cfg.journal_keep_segments = 1000;
+    let path = tmp("seg_lost");
+    remove_run_files(&path);
+    let journaled =
+        Tuner::new(space.clone(), cfg).with_journal(&path).maximize(quad).unwrap();
+    assert_result_eq(&journaled, &baseline, "segmented lost: journaling changed the run");
+    assert_eq!(journaled.retried, baseline.retried, "segmented lost: retry schedule drifted");
+
+    let full_replay = recover(&path).unwrap().replay;
+    assert!(compact(&path, 1).unwrap(), "compaction must fire");
+    assert_eq!(
+        recover(&path).unwrap().replay,
+        full_replay,
+        "lost/retry state must fold through the checkpoint bit-exactly"
+    );
+
+    let segs = live_segments(&path);
+    let (active_idx, active_bytes) = segs.last().unwrap().clone();
+    for (ci, &cut) in event_boundaries(&active_bytes).iter().enumerate() {
+        remove_run_files(&path);
+        for (idx, bytes) in &segs[..segs.len() - 1] {
+            std::fs::write(seg_file(&path, *idx), bytes).unwrap();
+        }
+        std::fs::write(seg_file(&path, active_idx), &active_bytes[..cut]).unwrap();
+        let context = format!("segmented lost: crash at active boundary {ci}");
+        let resumed = Tuner::resume_from(space.clone(), &path)
+            .unwrap_or_else(|e| panic!("{context}: resume failed: {e:#}"))
+            .maximize(quad)
+            .unwrap_or_else(|e| panic!("{context}: resumed run failed: {e:#}"));
+        assert_result_eq(&resumed, &baseline, &context);
+        assert_eq!(resumed.retried, baseline.retried, "{context}: retry schedule drifted");
+    }
+    remove_run_files(&path);
 }
